@@ -1,0 +1,81 @@
+//! End-to-end driver (the EXPERIMENTS.md §e2e run): proves every layer
+//! composes on a real small workload.
+//!
+//! 1. pre-trains the FP baseline *through the AOT train_step artifact*
+//!    (Rust coordinator ⇄ XLA/PJRT ⇄ the JAX model that calls the Pallas
+//!    kernels), logging the loss curve;
+//! 2. evaluates the FP model on the synthetic CSR/MMLU/PPL suite;
+//! 3. quantizes it with RTN, SmoothQuant, FlexRound, and LRQ under
+//!    W8A8(static)KV8 via the block-wise PTQ pipeline;
+//! 4. prints the Table-1/3-shaped comparison and writes reports/e2e.md.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example e2e_pipeline
+//! # faster smoke: --train-steps 120 --steps 60 --tasks 60
+//! ```
+
+use std::path::Path;
+
+use anyhow::Result;
+use lrq::config::{Args, Method, Scheme};
+use lrq::coordinator::pretrain;
+use lrq::data::{Corpus, CorpusConfig};
+use lrq::report::{pct, Table};
+use lrq::runtime::Runtime;
+use lrq::tables::Lab;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cfg = args.get_or("cfg", "tiny");
+    let dir = args.get_or("artifacts", "artifacts");
+    let seed: u64 = args.parse_as("seed", 1234)?;
+    let train_steps: usize = args.parse_as("train-steps", 700)?;
+
+    // --- 1. pre-train through the AOT train_step artifact -----------------
+    let rt = Runtime::load(Path::new(&dir))?;
+    let dim = rt.dim(&cfg)?;
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    let wpath_s = args.get_or("weights", &format!("weights_{cfg}.bin"));
+    let wpath = Path::new(&wpath_s);
+    if !wpath.exists() {
+        println!("=== pre-training {cfg} ({:.1}M params) for {train_steps} \
+                  steps ===", dim.param_count() as f64 / 1e6);
+        let out = pretrain(&rt, &cfg, &corpus, train_steps, 1e-3, seed, 25)?;
+        println!("loss curve:");
+        for (s, l) in &out.losses {
+            let bar = "#".repeat((l * 8.0) as usize);
+            println!("  step {s:>5}  {l:.4}  {bar}");
+        }
+        println!("({:.1}s, {:.1} steps/s)", out.wall_secs,
+                 train_steps as f64 / out.wall_secs);
+        out.weights.save(wpath)?;
+    } else {
+        println!("=== using cached {wpath:?} (delete to retrain) ===");
+    }
+    drop(rt); // Lab opens its own runtime
+
+    // --- 2..4. evaluate FP + all methods ---------------------------------
+    let lab = Lab::new(&args, &cfg)?;
+    let scheme = Scheme::w8a8_static();
+    let mut table = Table::new(
+        "e2e — CSR / MMLU / PPL after W8A8(static)KV8 quantization",
+        &["Method", "#Bits", "CSR %", "MMLU %", "PPL"],
+    );
+    for m in [Method::Fp16, Method::Rtn, Method::SmoothQuant,
+              Method::FlexRound, Method::Lrq] {
+        let t0 = std::time::Instant::now();
+        let s = lab.run_method(m, scheme)?;
+        let bits = if m == Method::Fp16 { "16/16/16".into() }
+                   else { scheme.label() };
+        println!("{:<14} CSR {:>6.2}%  MMLU {:>6.2}%  PPL {:>7.3}   ({:.0}s)",
+                 m.paper_name(), s.csr_acc * 100.0, s.mmlu_acc * 100.0,
+                 s.ppl, t0.elapsed().as_secs_f64());
+        table.row(vec![m.paper_name().into(), bits, pct(s.csr_acc),
+                       pct(s.mmlu_acc), format!("{:.3}", s.ppl)]);
+    }
+    table.note("end-to-end: train_step (L2+L1) -> PTQ pipeline (L3 driving \
+                recon_* artifacts) -> eval via embed/block/head artifacts");
+    table.emit(&lab.reports, "e2e")?;
+    println!("\nwrote reports/e2e.md");
+    Ok(())
+}

@@ -1,0 +1,40 @@
+//! Quickstart: load the AOT artifacts, pre-train (or load) a tiny FP
+//! baseline, quantize it with LRQ under W8A8(static)KV8, and evaluate.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use lrq::config::{Args, Method, Scheme};
+use lrq::tables::Lab;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let lab = Lab::new(&args, "tiny")?;
+
+    println!("FP16 baseline:");
+    let fp = lab.fp_summary()?;
+    println!("  CSR {:.2}%  MMLU {:.2}%  PPL {:.3}", fp.csr_acc * 100.0,
+             fp.mmlu_acc * 100.0, fp.ppl);
+
+    let scheme = Scheme::w8a8_static();
+    println!("\nquantizing with LRQ (W/A/KV {})…", scheme.label());
+    let out = lab.quantize(Method::Lrq, scheme, lab.recon)?;
+    println!("  done in {:.1}s, {} blocks", out.wall.as_secs_f64(),
+             out.model.blocks.len());
+    for (b, trace) in out.loss_traces.iter().enumerate() {
+        if let (Some(f), Some(l)) = (trace.first(), trace.last()) {
+            println!("  block {b}: recon loss {f:.6} -> {l:.6}");
+        }
+    }
+
+    let s = lab.summary_of(&out, scheme)?;
+    println!("\nLRQ ({}):", scheme.label());
+    println!("  CSR {:.2}%  MMLU {:.2}%  PPL {:.3}", s.csr_acc * 100.0,
+             s.mmlu_acc * 100.0, s.ppl);
+    println!("\nmodel size {:.2} MB vs FP {:.2} MB",
+             out.model.storage_bytes() as f64 / 1e6,
+             out.model.fp_equivalent_bytes() as f64 / 1e6);
+    Ok(())
+}

@@ -1,0 +1,39 @@
+//! Rank study (Fig. 4a): sweep the LRQ rank r over the artifact set and
+//! print CSR/MMLU accuracy plus the learnable-parameter ratio, showing the
+//! interior sweet spot the paper reports.
+//!
+//! ```bash
+//! cargo run --release --example rank_study -- --steps 150 --tasks 100
+//! ```
+
+use anyhow::Result;
+use lrq::config::{Args, Method, ReconConfig, Scheme};
+use lrq::quant::lrq::block_param_ratio;
+use lrq::tables::Lab;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cfg = args.get_or("cfg", "tiny");
+    let lab = Lab::new(&args, &cfg)?;
+    let ranks = lab.rt.ranks(&cfg);
+    let dim = &lab.engine.dim;
+    let scheme = Scheme::w8a8_static();
+
+    println!("{:<10} {:>8} {:>8} {:>10}", "rank", "CSR %", "MMLU %",
+             "ratio %");
+    let fp = lab.fp_summary()?;
+    println!("{:<10} {:>8.2} {:>8.2} {:>10}", "FP16", fp.csr_acc * 100.0,
+             fp.mmlu_acc * 100.0, "-");
+    for r in &ranks {
+        let recon = ReconConfig { rank: *r, ..lab.recon };
+        let out = lab.quantize(Method::Lrq, scheme, recon)?;
+        let s = lab.summary_of(&out, scheme)?;
+        let ratio = block_param_ratio(dim.d, dim.ff, *r) * 100.0;
+        println!("{:<10} {:>8.2} {:>8.2} {:>10.1}", r, s.csr_acc * 100.0,
+                 s.mmlu_acc * 100.0, ratio);
+    }
+    let fr = lab.run_method(Method::FlexRound, scheme)?;
+    println!("{:<10} {:>8.2} {:>8.2} {:>10.1}", "FR (full)",
+             fr.csr_acc * 100.0, fr.mmlu_acc * 100.0, 100.0);
+    Ok(())
+}

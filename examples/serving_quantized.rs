@@ -1,0 +1,36 @@
+//! Serving example: stand up the batch-scoring server on a 4-bit LRQ model
+//! and drive concurrent load, reporting latency percentiles / throughput /
+//! model size — the Fig. 5 workload.
+//!
+//! ```bash
+//! cargo run --release --example serving_quantized -- --requests 200
+//! # FP16 baseline for comparison:
+//! cargo run --release --example serving_quantized -- --fp
+//! ```
+
+use anyhow::Result;
+use lrq::config::Args;
+use lrq::tables;
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1))?;
+    let cfg = args.get_or("cfg", "tiny");
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let weights = args.get_or("weights", &format!("weights_{cfg}.bin"));
+    let requests: usize = args.parse_as("requests", 200)?;
+    let seed: u64 = args.parse_as("seed", 1234)?;
+    let bits: u32 = args.parse_as("wbits", 4)?;
+
+    // ensure the FP baseline exists (Lab trains + caches it)
+    let _ = lrq::tables::Lab::new(&args, &cfg)?;
+
+    if args.flag("fp") {
+        println!("serving FP16 {cfg}…");
+        tables::serving_run(&artifacts, &cfg, &weights, None, 16, requests,
+                            seed)
+    } else {
+        println!("serving {bits}-bit LRQ {cfg} (quantizing first)…");
+        tables::serving_run(&artifacts, &cfg, &weights, Some("lrq"), bits,
+                            requests, seed)
+    }
+}

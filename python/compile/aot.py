@@ -1,0 +1,362 @@
+"""AOT lowering: every L1/L2 computation -> HLO **text** + a manifest the Rust
+runtime parses (rust/src/runtime/manifest.rs).
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax >= 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 rejects;
+the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Every artifact function takes FLAT positional array arguments so the input
+order is unambiguous; the manifest records (name, dtype, dims) per input and
+output in exactly that order.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts [--cfg tiny,small]
+"""
+
+import argparse
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import CONFIGS, ModelConfig, block_weight_shapes, ACT_POINTS
+from . import model as M
+from . import recon as R
+from . import train as T
+from .kernels.lrq_fakequant import lrq_fakequant_kernel
+from .kernels.quant_matmul import quant_matmul
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dt(s):
+    return "i32" if s.dtype == jnp.int32 else "f32"
+
+
+class Artifact:
+    def __init__(self, name, fn, inputs, outputs):
+        """inputs: [(name, ShapeDtypeStruct)], outputs: [(name, dims)]."""
+        self.name = name
+        self.fn = fn
+        self.inputs = inputs
+        self.outputs = outputs
+
+    def lower(self):
+        args = [s for _, s in self.inputs]
+        return to_hlo_text(jax.jit(self.fn).lower(*args))
+
+
+# ---------------------------------------------------------------------------
+# builders — each returns an Artifact with flat, documented I/O
+# ---------------------------------------------------------------------------
+
+def build_train_step(cfg: ModelConfig):
+    pspec = T.param_spec(cfg)
+    step = T.make_train_step(cfg)
+    n = len(pspec)
+
+    def fn(*args):
+        flat_p = args[:n]
+        flat_m = args[n:2 * n]
+        flat_v = args[2 * n:3 * n]
+        ids, targets, t, lr = args[3 * n:]
+        p = T.params_from_flat(cfg, flat_p)
+        m = T.params_from_flat(cfg, flat_m)
+        v = T.params_from_flat(cfg, flat_v)
+        loss, p2, m2, v2 = step(p, m, v, ids, targets, t, lr)
+        out = [loss]
+        out += list(jax.tree_util.tree_leaves(p2))
+        out += list(jax.tree_util.tree_leaves(m2))
+        out += list(jax.tree_util.tree_leaves(v2))
+        return tuple(out)
+
+    b, s = cfg.train_batch, cfg.seq
+    inputs = []
+    for prefix in ("p", "m", "v"):
+        inputs += [(f"{prefix}.{nm}", spec(sh)) for nm, sh in pspec]
+    inputs += [("ids", spec((b, s), I32)), ("targets", spec((b, s), I32)),
+               ("t", spec(())), ("lr", spec(()))]
+    outputs = [("loss", ())]
+    for prefix in ("p", "m", "v"):
+        outputs += [(f"{prefix}.{nm}", sh) for nm, sh in pspec]
+    return Artifact(f"train_step_{cfg.name}", fn, inputs, outputs)
+
+
+def build_embed(cfg: ModelConfig):
+    b, s = cfg.calib_batch, cfg.seq
+
+    def fn(emb, ids):
+        return (M.embed(emb, ids),)
+
+    return Artifact(
+        f"embed_{cfg.name}", fn,
+        [("emb", spec((cfg.vocab, cfg.d))), ("ids", spec((b, s), I32))],
+        [("x", (b, s, cfg.d))])
+
+
+def build_head_loss(cfg: ModelConfig):
+    b, s = cfg.calib_batch, cfg.seq
+
+    def fn(x, final_norm, head, targets):
+        loss, logp = M.head_logprobs(x, final_norm, head, targets)
+        return (loss, logp)
+
+    return Artifact(
+        f"head_loss_{cfg.name}", fn,
+        [("x", spec((b, s, cfg.d))), ("final_norm", spec((cfg.d,))),
+         ("head", spec((cfg.vocab, cfg.d))), ("targets", spec((b, s), I32))],
+        [("loss", ()), ("logp", (b, s))])
+
+
+def _weight_inputs(cfg, prefix="w"):
+    return [(f"{prefix}.{nm}", spec(sh)) for nm, sh in block_weight_shapes(cfg)]
+
+
+def _norm_inputs(cfg):
+    return [("norm_attn", spec((cfg.d,))), ("norm_ffn", spec((cfg.d,)))]
+
+
+def build_block_fwd(cfg: ModelConfig):
+    """FP block forward + activation stats at the 4 quant points."""
+    b, s = cfg.calib_batch, cfg.seq
+    from .configs import act_point_dims
+    dims = act_point_dims(cfg)
+
+    def fn(x, *wn):
+        ws, norms = wn[:7], wn[7:9]
+        nq = M.NoQuant()
+        y = M.block_fwd(cfg, ws, norms, x, nq)
+        out = [y]
+        for p in ACT_POINTS:
+            mn, mx, amax = nq.stats[p]
+            out += [mn, mx, amax, nq.acts[p]]
+        return tuple(out)
+
+    inputs = [("x", spec((b, s, cfg.d)))] + _weight_inputs(cfg) + _norm_inputs(cfg)
+    outputs = [("y", (b, s, cfg.d))]
+    for p in ACT_POINTS:
+        outputs += [(f"{p}.min", ()), (f"{p}.max", ()), (f"{p}.amax", (dims[p],)),
+                    (f"{p}.act", (b, s, dims[p]))]
+    return Artifact(f"block_fwd_{cfg.name}", fn, inputs, outputs)
+
+
+def _actq_inputs():
+    ins = []
+    for p in ACT_POINTS:
+        ins += [(f"scale.{p}", spec(())), (f"zp.{p}", spec(()))]
+    ins += [("act_on", spec(())), ("per_token", spec(())), ("kv_on", spec(())),
+            ("qmax_a", spec(())), ("qmax_kv", spec(()))]
+    return ins
+
+
+def build_block_fwd_q(cfg: ModelConfig):
+    """Quantized block forward: weights arrive already fake-quantized (Ŵ);
+    activation/KV quantization is runtime-flag dispatched."""
+    b, s = cfg.calib_batch, cfg.seq
+
+    def fn(x, *rest):
+        ws, norms = rest[:7], rest[7:9]
+        rest = rest[9:]
+        static = {}
+        for i, p in enumerate(ACT_POINTS):
+            static[p] = (rest[2 * i], rest[2 * i + 1])
+        act_on, per_token, kv_on, qmax_a, qmax_kv = rest[8:]
+        aq = M.ActQuant(static, (act_on, per_token, kv_on), qmax_a, qmax_kv)
+        return (M.block_fwd(cfg, ws, norms, x, aq),)
+
+    inputs = ([("x", spec((b, s, cfg.d)))] + _weight_inputs(cfg, "what")
+              + _norm_inputs(cfg) + _actq_inputs())
+    return Artifact(f"block_fwd_q_{cfg.name}", fn, inputs,
+                    [("y", (b, s, cfg.d))])
+
+
+def build_recon(cfg: ModelConfig, method: str, rank: int):
+    b, s = cfg.recon_batch, cfg.seq
+    step = R.make_recon_step(cfg, method, rank)
+    shapes = block_weight_shapes(cfg)
+    # learnable bundle spec per layer
+    theta_names, theta_specs = [], []
+    for nm, (cout, cin) in shapes:
+        for tn, tsh in R.theta_spec(method, cout, cin, rank):
+            theta_names.append(f"{nm}.{tn}")
+            theta_specs.append(spec(tsh))
+    nt = len(theta_specs)
+    bundle_sizes = [len(R.theta_spec(method, co, ci, rank))
+                    for _, (co, ci) in shapes]
+
+    def unflatten_theta(flat):
+        out, i = [], 0
+        for sz in bundle_sizes:
+            out.append(tuple(flat[i:i + sz]))
+            i += sz
+        return tuple(out)
+
+    def fn(*args):
+        i = 0
+        x_q, y_t = args[0], args[1]; i = 2
+        ws = args[i:i + 7]; i += 7
+        norms = args[i:i + 2]; i += 2
+        s1_inits = args[i:i + 7]; i += 7
+        zs = args[i:i + 7]; i += 7
+        theta = unflatten_theta(args[i:i + nt]); i += nt
+        m = unflatten_theta(args[i:i + nt]); i += nt
+        v = unflatten_theta(args[i:i + nt]); i += nt
+        t, lr = args[i], args[i + 1]; i += 2
+        static = tuple((args[i + 2 * j], args[i + 2 * j + 1])
+                       for j in range(4)); i += 8
+        act_on, per_token, kv_on, qmax_w, qmax_a, qmax_kv = args[i:i + 6]
+        loss, th2, m2, v2 = step(
+            x_q, y_t, ws, norms, s1_inits, zs, theta, m, v, t, lr,
+            static, (act_on, per_token, kv_on), qmax_w, qmax_a, qmax_kv)
+        out = [loss]
+        for tree in (th2, m2, v2):
+            out += list(jax.tree_util.tree_leaves(tree))
+        return tuple(out)
+
+    inputs = [("x_q", spec((b, s, cfg.d))), ("y_t", spec((b, s, cfg.d)))]
+    inputs += _weight_inputs(cfg)
+    inputs += _norm_inputs(cfg)
+    inputs += [(f"s1.{nm}", spec((sh[0],))) for nm, sh in shapes]
+    inputs += [(f"z.{nm}", spec((sh[0],))) for nm, sh in shapes]
+    for prefix in ("theta", "m", "v"):
+        inputs += [(f"{prefix}.{tn}", ts)
+                   for tn, ts in zip(theta_names, theta_specs)]
+    inputs += [("t", spec(())), ("lr", spec(()))]
+    for p in ACT_POINTS:
+        inputs += [(f"scale.{p}", spec(())), (f"zp.{p}", spec(()))]
+    inputs += [("act_on", spec(())), ("per_token", spec(())),
+               ("kv_on", spec(())), ("qmax_w", spec(())),
+               ("qmax_a", spec(())), ("qmax_kv", spec(()))]
+
+    outputs = [("loss", ())]
+    for prefix in ("theta", "m", "v"):
+        outputs += [(f"{prefix}.{tn}", tuple(ts.shape))
+                    for tn, ts in zip(theta_names, theta_specs)]
+    suffix = f"_r{rank}" if method in ("lrq", "lrq_nobias") else ""
+    return Artifact(f"recon_{method}_{cfg.name}{suffix}", fn, inputs, outputs)
+
+
+def build_kernel_fakequant(cfg: ModelConfig):
+    """Standalone L1 LRQ fake-quant kernel (bench + cross-layer golden test).
+    Shape: the gate projection (ff x d), default rank."""
+    cout, cin, r = cfg.ff, cfg.d, cfg.rank
+
+    def fn(w, s1, z, l2, u2, r2, c2, qmax):
+        return (lrq_fakequant_kernel(w, s1, z, l2, u2, r2, c2, qmax),)
+
+    return Artifact(
+        f"kernel_fakequant_{cfg.name}", fn,
+        [("w", spec((cout, cin))), ("s1", spec((cout,))), ("z", spec((cout,))),
+         ("l2", spec((cout, r))), ("u2", spec((r, cin))),
+         ("r2", spec((cout,))), ("c2", spec((cin,))), ("qmax", spec(()))],
+        [("what", (cout, cin))])
+
+
+def build_kernel_qmm(cfg: ModelConfig):
+    """Standalone L1 dequant-matmul kernel (serving GEMM bench)."""
+    t = cfg.calib_batch * cfg.seq
+    k, n = cfg.d, cfg.ff
+
+    def fn(x, wq, s1, z):
+        return (quant_matmul(x, wq, s1, z),)
+
+    return Artifact(
+        f"kernel_qmm_{cfg.name}", fn,
+        [("x", spec((t, k))), ("wq", spec((n, k))),
+         ("s1", spec((n,))), ("z", spec((n,)))],
+        [("y", (t, n))])
+
+
+def artifacts_for(cfg: ModelConfig):
+    arts = [
+        build_train_step(cfg),
+        build_embed(cfg),
+        build_head_loss(cfg),
+        build_block_fwd(cfg),
+        build_block_fwd_q(cfg),
+        build_recon(cfg, "fr", 0),
+        build_recon(cfg, "lrq_nobias", cfg.rank),
+        build_kernel_fakequant(cfg),
+        build_kernel_qmm(cfg),
+    ]
+    for r in cfg.ranks:
+        arts.append(build_recon(cfg, "lrq", r))
+    return arts
+
+
+# ---------------------------------------------------------------------------
+# manifest + driver
+# ---------------------------------------------------------------------------
+
+def manifest_lines(cfgs, arts_by_cfg):
+    lines = ["version 1"]
+    for cfg in cfgs:
+        lines.append(
+            f"config {cfg.name} vocab {cfg.vocab} d {cfg.d} heads {cfg.heads}"
+            f" layers {cfg.layers} ff {cfg.ff} seq {cfg.seq}"
+            f" train_batch {cfg.train_batch} calib_batch {cfg.calib_batch}"
+            f" recon_batch {cfg.recon_batch} rank {cfg.rank}")
+        lines.append("ranks " + cfg.name + " "
+                     + " ".join(str(r) for r in cfg.ranks))
+    for cfg in cfgs:
+        for art in arts_by_cfg[cfg.name]:
+            lines.append(f"artifact {art.name} {art.name}.hlo.txt")
+            for nm, s in art.inputs:
+                dims = " ".join(str(d) for d in s.shape)
+                lines.append(f"in {nm} {_dt(s)} {dims}".rstrip())
+            for nm, dims in art.outputs:
+                ds = " ".join(str(d) for d in dims)
+                lines.append(f"out {nm} f32 {ds}".rstrip())
+            lines.append("end")
+    return lines
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--cfg", default="tiny,small")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-name substrings to rebuild")
+    args = ap.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    cfgs = [CONFIGS[c] for c in args.cfg.split(",")]
+    arts_by_cfg = {}
+    for cfg in cfgs:
+        arts_by_cfg[cfg.name] = artifacts_for(cfg)
+
+    only = args.only.split(",") if args.only else None
+    for cfg in cfgs:
+        for art in arts_by_cfg[cfg.name]:
+            path = os.path.join(args.out, f"{art.name}.hlo.txt")
+            if only and not any(o in art.name for o in only):
+                continue
+            text = art.lower()
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {art.name}: {len(text)} chars, "
+                  f"{len(art.inputs)} in / {len(art.outputs)} out",
+                  flush=True)
+
+    mpath = os.path.join(args.out, "manifest.txt")
+    with open(mpath, "w") as f:
+        f.write("\n".join(manifest_lines(cfgs, arts_by_cfg)) + "\n")
+    print(f"wrote {mpath}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Model configurations shared by the AOT compile path and (via the manifest)
+the Rust coordinator.
+
+Every artifact is lowered with fixed shapes taken from one of these configs.
+The Rust side never imports this file; `aot.py` serializes everything the
+runtime needs into ``artifacts/manifest.txt``.
+"""
+
+from dataclasses import dataclass, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d: int          # model width
+    heads: int
+    layers: int
+    ff: int         # gated-FFN inner width (~8/3 * d, Llama-style)
+    seq: int
+    train_batch: int
+    calib_batch: int   # batch used by block_fwd / block_fwd_q streaming
+    recon_batch: int   # batch per reconstruction Adam step (paper uses 2)
+    rank: int          # default LRQ rank (~40% learnable-param ratio, Table 29)
+    ranks: List[int] = field(default_factory=list)  # ranks emitted for Fig. 4(a)
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d % self.heads == 0
+        return self.d // self.heads
+
+
+CONFIGS = {
+    # ~1.6M params / block quantities sized so interpret-mode Pallas on CPU
+    # stays fast; used by tests and the rank/calibration studies.
+    "tiny": ModelConfig(
+        name="tiny", vocab=512, d=128, heads=4, layers=4, ff=352, seq=64,
+        train_batch=16, calib_batch=8, recon_batch=4,
+        rank=32, ranks=[4, 8, 16, 32, 64, 128],
+    ),
+    # the e2e / headline-table model (~26M params)
+    "small": ModelConfig(
+        name="small", vocab=2048, d=256, heads=8, layers=8, ff=704, seq=64,
+        train_batch=8, calib_batch=8, recon_batch=4,
+        rank=64, ranks=[64],
+    ),
+}
+
+# Canonical per-block weight order — the layout contract with rust/src/model/layout.rs.
+BLOCK_WEIGHTS = ["wq", "wk", "wv", "wo", "wg", "wu", "wd"]
+BLOCK_NORMS = ["norm_attn", "norm_ffn"]
+
+# The four activation-quantization points of Figure 8 (inputs of the 7 linears,
+# deduplicated: qkv share one input, gate/up share one input).
+ACT_POINTS = ["attn_in", "o_in", "ffn_in", "down_in"]
+
+
+def block_weight_shapes(cfg: ModelConfig):
+    """[(name, (Cout, Cin))] in canonical order. y = x @ W.T convention."""
+    d, f = cfg.d, cfg.ff
+    return [
+        ("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)), ("wo", (d, d)),
+        ("wg", (f, d)), ("wu", (f, d)), ("wd", (d, f)),
+    ]
+
+
+def act_point_dims(cfg: ModelConfig):
+    """Feature dim at each activation-quant point."""
+    return {"attn_in": cfg.d, "o_in": cfg.d, "ffn_in": cfg.d, "down_in": cfg.ff}

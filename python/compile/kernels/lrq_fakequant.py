@@ -1,0 +1,106 @@
+"""L1 Pallas kernel: fused LRQ fake-quantization.
+
+Computes ``Ŵ = s1 ⊙ (clip(round(W / (s1 ⊙ exp(L2U2 + r2 + c2)) + z), 0, qmax) - z)``
+tile-by-tile **without ever materializing the full scale matrix S = L2U2+r2+c2**
+— this is the memory saving the paper reports in Table 13 (23.5 GB for LRQ vs
+25.4 GB for FlexRound on Llama-7B).
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid walks ``(Cout/bm,
+Cin/bn)`` weight tiles; each step holds a ``(bm, r)`` slice of L2 and an
+``(r, bn)`` slice of U2 in VMEM, forms the ``(bm, bn)`` scale tile on the MXU,
+then applies exp/div/round/clip/mul on the VPU. Lowered with
+``interpret=True`` — CPU PJRT cannot execute Mosaic custom-calls; real-TPU
+performance is estimated analytically (EXPERIMENTS.md §Perf).
+
+The wrapper carries a ``jax.custom_vjp`` whose backward pass replays the
+straight-through-estimator gradients of the jnp oracle, so the kernel sits on
+the *forward hot path of the reconstruction step* while staying differentiable
+w.r.t. ``s1, L2, U2, r2, c2``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _pick_block(n: int, cap: int) -> int:
+    """Largest divisor of n that is <= cap (keeps BlockSpecs exact)."""
+    for b in range(min(n, cap), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _kernel(w_ref, s1_ref, z_ref, l2_ref, u2_ref, r2_ref, c2_ref, qmax_ref,
+            o_ref):
+    # (bm, r) @ (r, bn) on the MXU, biases broadcast on the VPU.
+    s = l2_ref[...] @ u2_ref[...] + r2_ref[...] + c2_ref[...]
+    s1 = s1_ref[...]          # (bm, 1)
+    z = z_ref[...]            # (bm, 1)
+    qmax = qmax_ref[0, 0]
+    div = s1 * jnp.exp(s)
+    q = jnp.clip(jnp.round(w_ref[...] / div + z), 0.0, qmax)
+    o_ref[...] = (q - z) * s1
+
+
+def lrq_fakequant_kernel(w, s1, z, l2, u2, r2, c2, qmax, *,
+                         bm: int = 128, bn: int = 128):
+    """Raw (non-differentiable) tiled kernel. qmax is a scalar array."""
+    cout, cin = w.shape
+    r = l2.shape[1]
+    bm = _pick_block(cout, bm)
+    bn = _pick_block(cin, bn)
+    grid = (cout // bm, cin // bn)
+    s1c = s1.reshape(cout, 1)
+    zc = z.reshape(cout, 1)
+    r2c = r2.reshape(cout, 1)
+    c2r = c2.reshape(1, cin)
+    qm = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bn), lambda i, j: (i, j)),      # W tile
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),       # s1
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),       # z
+            pl.BlockSpec((bm, r), lambda i, j: (i, 0)),       # L2 slice
+            pl.BlockSpec((r, bn), lambda i, j: (0, j)),       # U2 slice
+            pl.BlockSpec((bm, 1), lambda i, j: (i, 0)),       # r2
+            pl.BlockSpec((1, bn), lambda i, j: (0, j)),       # c2
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),        # qmax
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((cout, cin), w.dtype),
+        interpret=True,
+    )(w, s1c, zc, l2, u2, r2c, c2r, qm)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def lrq_fakequant(w, s1, z, l2, u2, r2, c2, qmax):
+    """Differentiable fused fake-quant: Pallas forward, STE-oracle backward."""
+    return lrq_fakequant_kernel(w, s1, z, l2, u2, r2, c2, qmax)
+
+
+def _fwd(w, s1, z, l2, u2, r2, c2, qmax):
+    out = lrq_fakequant_kernel(w, s1, z, l2, u2, r2, c2, qmax)
+    return out, (w, s1, z, l2, u2, r2, c2, qmax)
+
+
+def _bwd(res, g):
+    w, s1, z, l2, u2, r2, c2, qmax = res
+    # Replay the STE gradients of the jnp oracle. w/z/qmax are frozen at
+    # reconstruction time; their cotangents are still produced for
+    # completeness (custom_vjp requires one per primal).
+    _, vjp = jax.vjp(
+        lambda w_, s1_, z_, l2_, u2_, r2_, c2_:
+            ref.lrq_fakequant_ref(w_, s1_, z_, l2_, u2_, r2_, c2_, qmax),
+        w, s1, z, l2, u2, r2, c2)
+    gw, gs1, gz, gl2, gu2, gr2, gc2 = vjp(g)
+    return gw, gs1, gz, gl2, gu2, gr2, gc2, jnp.zeros_like(qmax)
+
+
+lrq_fakequant.defvjp(_fwd, _bwd)

@@ -1,0 +1,80 @@
+"""L1 Pallas kernel: asymmetric per-token fake-quantization.
+
+Used for per-token activation quantization (Tables 5-6) and per-token KV-cache
+quantization (all W/A/KV8 tables). One grid step owns a ``(bt, D)`` stripe of
+tokens: min/max reductions along the feature dim stay in VMEM, the quant /
+dequant is pure VPU work. The trailing dim is never split so each token's
+grid lives entirely in one tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+EPS = 1e-9
+
+
+def _pick_block(n: int, cap: int) -> int:
+    for b in range(min(n, cap), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _kernel(x_ref, qmax_ref, o_ref):
+    x = x_ref[...]
+    qmax = qmax_ref[0, 0]
+    xmin = jnp.minimum(x.min(axis=-1, keepdims=True), 0.0)
+    xmax = jnp.maximum(x.max(axis=-1, keepdims=True), 0.0)
+    scale = jnp.maximum((xmax - xmin) / qmax, EPS)
+    zp = jnp.clip(jnp.round(-xmin / scale), 0.0, qmax)
+    q = jnp.clip(jnp.round(x / scale + zp), 0.0, qmax)
+    o_ref[...] = (q - zp) * scale
+
+
+def per_token_quant_kernel(x, qmax, *, bt: int = 256):
+    """Raw kernel over x[..., D] flattened to (T, D) token stripes."""
+    shape = x.shape
+    d = shape[-1]
+    t = 1
+    for s in shape[:-1]:
+        t *= s
+    x2 = x.reshape(t, d)
+    bt = _pick_block(t, bt)
+    qm = jnp.asarray(qmax, jnp.float32).reshape(1, 1)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(t // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), x.dtype),
+        interpret=True,
+    )(x2, qm)
+    return out.reshape(shape)
+
+
+@jax.custom_vjp
+def per_token_quant(x, qmax):
+    """Differentiable per-token fake-quant: Pallas forward, STE backward."""
+    return per_token_quant_kernel(x, qmax)
+
+
+def _fwd(x, qmax):
+    return per_token_quant_kernel(x, qmax), (x, qmax)
+
+
+def _bwd(res, g):
+    x, qmax = res
+    _, vjp = jax.vjp(lambda x_: ref.per_token_quant_ref(x_, qmax), x)
+    (gx,) = vjp(g)
+    return gx, jnp.zeros_like(qmax)
+
+
+per_token_quant.defvjp(_fwd, _bwd)

@@ -1,0 +1,57 @@
+"""L1 Pallas kernel: weight-only dequantize-and-matmul (the serving GEMM).
+
+``y[T, N] = x[T, K] @ ((wq[N, K] - z[N]) * s1[N]).T``
+
+This is the TPU analogue of the LUT-GEMM kernel the paper uses for Figure 5 /
+Table 15: integer weight codes are dequantized *inside* the kernel, tile by
+tile in VMEM, immediately before the MXU contraction — HBM only ever holds the
+packed codes. On CPU-PJRT the codes are carried as integer-valued f32 (the
+Rust side stores the true packed int3/4/8 buffers and unpacks per call).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_block(n: int, cap: int) -> int:
+    for b in range(min(n, cap), 0, -1):
+        if n % b == 0:
+            return b
+    return n
+
+
+def _kernel(x_ref, wq_ref, s1_ref, z_ref, o_ref):
+    w = (wq_ref[...] - z_ref[...]) * s1_ref[...]   # dequant in VMEM (VPU)
+    o_ref[...] = x_ref[...] @ w.T                  # MXU contraction
+
+
+def quant_matmul(x, wq, s1, z, *, bt: int = 256, bn: int = 128):
+    """x[T,K] (or [..., K]) times per-channel-quantized wq[N,K]."""
+    shape = x.shape
+    k = shape[-1]
+    t = 1
+    for s in shape[:-1]:
+        t *= s
+    x2 = x.reshape(t, k)
+    n = wq.shape[0]
+    bt = _pick_block(t, bt)
+    bn = _pick_block(n, bn)
+    s1c = s1.reshape(n, 1)
+    zc = z.reshape(n, 1)
+    out = pl.pallas_call(
+        _kernel,
+        grid=(t // bt, n // bn),
+        in_specs=[
+            pl.BlockSpec((bt, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((bn, k), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+            pl.BlockSpec((bn, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bt, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((t, n), x.dtype),
+        interpret=True,
+    )(x2, wq, s1c, zc)
+    return out.reshape(shape[:-1] + (n,))

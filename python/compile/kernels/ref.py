@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for every Pallas kernel (the build-time correctness
+contract: pytest asserts kernel == ref under assert_allclose)."""
+
+import jax.numpy as jnp
+
+from .. import quant
+
+
+def lrq_fakequant_ref(w, s1, z, l2, u2, r2, c2, qmax):
+    """Ŵ for LRQ (Eq. 2): s1 ⊙ round(W / (s1 ⊙ exp(L2U2 + r2 + c2)))."""
+    s_exp = quant.lrq_exponent(l2, u2, r2, c2)
+    return quant.fakequant_weight(w, s1, z, s_exp, qmax)
+
+
+def flexround_fakequant_ref(w, s1, z, s2, qmax):
+    """Ŵ for FlexRound (Eq. 1): full weight-scaling matrix S2."""
+    return quant.fakequant_weight(w, s1, z, s2, qmax)
+
+
+def per_token_quant_ref(x, qmax):
+    """Asymmetric per-token fake-quant over the trailing dim."""
+    return quant.fakequant_per_token(x, qmax)
+
+
+def quant_matmul_ref(x, wq, s1, z):
+    """Dequantize-then-matmul: y = x @ ((wq - z) * s1).T.
+
+    ``wq`` holds integer codes carried in f32 (CPU-PJRT simulation of the
+    packed int3/4/8 weights the Rust side stores).
+    """
+    w = (wq - z[:, None]) * s1[:, None]
+    return x @ w.T
+
+
+def lrq_scale_ref(l2, u2, r2, c2):
+    """The exponent matrix S = L2U2 + r2 + c2 itself (App. M broadcasting)."""
+    return quant.lrq_exponent(l2, u2, r2, c2)

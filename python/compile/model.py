@@ -1,0 +1,155 @@
+"""L2: Llama-architecture model (RMSNorm, RoPE, causal attention, SiLU-gated
+FFN) with runtime-switchable activation/KV fake-quantization.
+
+Everything here is lowered once by ``aot.py`` to HLO text; the Rust
+coordinator feeds weights/activations as PJRT literals at runtime. The
+per-token quantization path calls the L1 Pallas kernel so it lowers into the
+same HLO module.
+
+Weight convention: ``W[Cout, Cin]``, ``y = x @ W.T`` (matches
+rust/src/model/layout.rs).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .configs import ModelConfig, ACT_POINTS
+from .kernels.per_token_quant import per_token_quant
+
+
+def rmsnorm(x, g, eps=1e-5):
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(ms + eps) * g
+
+
+def rope(x):
+    """Rotary embedding over x[B, S, H, Hd] (half-split convention)."""
+    b, s, h, hd = x.shape
+    half = hd // 2
+    pos = jnp.arange(s, dtype=jnp.float32)[:, None]
+    inv = 1.0 / (10000.0 ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = pos * inv[None, :]                     # [S, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _act_stats(x):
+    """Per-tensor (min, max) + per-channel amax — calibration food for the L3
+    static-scale pass and for SmoothQuant."""
+    flat = x.reshape(-1, x.shape[-1])
+    return (jnp.minimum(flat.min(), 0.0), jnp.maximum(flat.max(), 0.0),
+            jnp.abs(flat).max(axis=0))
+
+
+class ActQuant:
+    """Branchless runtime-dispatched activation quantizer.
+
+    ``flags = (act_on, per_token, kv_on)`` are f32 0/1 scalars;
+    ``static`` maps point name -> (scale, zp) f32 scalars.
+    """
+
+    def __init__(self, static, flags, qmax_a, qmax_kv):
+        self.static = static
+        self.act_on, self.per_token, self.kv_on = flags
+        self.qmax_a = qmax_a
+        self.qmax_kv = qmax_kv
+
+    def __call__(self, point, x):
+        scale, zp = self.static[point]
+        x_tok = per_token_quant(x, self.qmax_a)
+        x_st = quant.fakequant_static(x, scale, zp, self.qmax_a)
+        x_q = jnp.where(self.per_token > 0.5, x_tok, x_st)
+        return jnp.where(self.act_on > 0.5, x_q, x)
+
+    def kv(self, x):
+        x_q = per_token_quant(x, self.qmax_kv)
+        return jnp.where(self.kv_on > 0.5, x_q, x)
+
+
+class NoQuant:
+    """FP path; records activation stats and the raw activations at the four
+    quant points (the L3 calibration pass feeds these to static-scale
+    calibration, SmoothQuant/AWQ statistics, and GPTQ Hessians)."""
+
+    def __init__(self):
+        self.stats = {}
+        self.acts = {}
+
+    def __call__(self, point, x):
+        self.stats[point] = _act_stats(x)
+        self.acts[point] = x
+        return x
+
+    def kv(self, x):
+        return x
+
+
+def block_fwd(cfg: ModelConfig, ws, norms, x, aq):
+    """One Transformer block. ``ws`` = (wq,wk,wv,wo,wg,wu,wd), ``norms`` =
+    (norm_attn, norm_ffn), ``aq`` an ActQuant or NoQuant."""
+    wq_, wk_, wv_, wo_, wg_, wu_, wd_ = ws
+    na, nf = norms
+    b, s, d = x.shape
+    h, hd = cfg.heads, cfg.head_dim
+
+    xa = aq("attn_in", rmsnorm(x, na))
+    q = (xa @ wq_.T).reshape(b, s, h, hd)
+    k = (xa @ wk_.T).reshape(b, s, h, hd)
+    v = (xa @ wv_.T).reshape(b, s, h, hd)
+    q, k = rope(q), rope(k)
+    # per-token asymmetric KV-cache quantization (Fig. 8), post-RoPE
+    k = aq.kv(k.reshape(b, s, d)).reshape(b, s, h, hd)
+    v = aq.kv(v.reshape(b, s, d)).reshape(b, s, h, hd)
+
+    qt = q.transpose(0, 2, 1, 3)                     # [B,H,S,hd]
+    kt = k.transpose(0, 2, 3, 1)                     # [B,H,hd,S]
+    scores = (qt @ kt) / jnp.sqrt(jnp.float32(hd))
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    scores = jnp.where(mask[None, None] > 0.5, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)          # softmax input stays FP
+    attn = (probs @ v.transpose(0, 2, 1, 3)).transpose(0, 2, 1, 3)
+    attn = attn.reshape(b, s, d)
+
+    o = aq("o_in", attn) @ wo_.T
+    hidd = x + o
+
+    xf = aq("ffn_in", rmsnorm(hidd, nf))
+    gate = jax.nn.silu(xf @ wg_.T) * (xf @ wu_.T)
+    y = hidd + aq("down_in", gate) @ wd_.T
+    return y
+
+
+def embed(emb, ids):
+    """ids[B,S] int32 -> x[B,S,D]."""
+    return emb[ids]
+
+
+def head_logprobs(x, final_norm, head_w, targets):
+    """Final norm + logits; returns (mean NLL, per-position logprob of
+    ``targets``). Rust masks/sums slices of the per-position array to score
+    multiple-choice continuations (lm-eval-harness rule)."""
+    xn = rmsnorm(x, final_norm)
+    logits = xn @ head_w.T
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    logp = tgt - logz
+    return -logp.mean(), logp
+
+
+def model_fwd(cfg: ModelConfig, params, ids):
+    """Full FP forward: params = (emb, tuple_of_blocks, final_norm, head_w),
+    each block = (ws7, norms2)."""
+    emb, blocks, final_norm, head_w = params
+    x = embed(emb, ids)
+    for (ws, norms) in blocks:
+        x = block_fwd(cfg, ws, norms, x, NoQuant())
+    return x, final_norm, head_w
+
+
+def lm_loss(cfg: ModelConfig, params, ids, targets):
+    x, final_norm, head_w = model_fwd(cfg, params, ids)
+    loss, _ = head_logprobs(x, final_norm, head_w, targets)
+    return loss

@@ -1,0 +1,103 @@
+"""Fake-quantization math shared by the L2 model, the reconstruction step, and
+the pure-jnp kernel oracles (kernels/ref.py).
+
+Conventions
+-----------
+* Weights are ``W[Cout, Cin]`` with ``y = x @ W.T``.
+* Weight quantization is per-channel (per-Cout-row) **asymmetric** over an
+  unsigned grid ``[0, qmax]`` (``qmax = 2^bits - 1``): step ``s1[Cout]``,
+  zero-point ``z[Cout]`` (frozen after RTN init, as in FlexRound/LRQ).
+* ``round``/``clip`` use the straight-through estimator so that
+  ``s1, L2, U2, r2, c2`` (and ``S2`` for FlexRound) receive gradients.
+* Activations/KV use asymmetric fake-quant, either per-token (reduce over the
+  trailing feature dim) or per-tensor static with calibrated scale/zero-point.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-9
+
+
+def ste(hard, soft):
+    """Straight-through: value of ``hard``, gradient of ``soft``."""
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+# ---------------------------------------------------------------------------
+# weight-side
+# ---------------------------------------------------------------------------
+
+def rtn_range(w, qmax):
+    """Per-channel asymmetric RTN grid: (s1, z), both [Cout]."""
+    wmin = jnp.minimum(w.min(axis=1), 0.0)
+    wmax = jnp.maximum(w.max(axis=1), 0.0)
+    s1 = (wmax - wmin) / qmax
+    s1 = jnp.maximum(s1, EPS)
+    z = jnp.clip(jnp.round(-wmin / s1), 0.0, qmax)
+    return s1, z
+
+
+def lrq_exponent(l2, u2, r2, c2):
+    """S = L2 @ U2 + r2 + c2 with numpy-style broadcasting (paper App. M)."""
+    return l2 @ u2 + r2[:, None] + c2[None, :]
+
+
+def fakequant_weight(w, s1, z, s_exp, qmax):
+    """``Ŵ = s1 ⊙ (clip(round(W/(s1·exp(S)) + z), 0, qmax) - z)`` with STE.
+
+    ``s_exp`` is the exponent matrix: ``S2`` (FlexRound) or
+    ``L2U2 + r2 + c2`` (LRQ); zeros recover plain RTN.
+    """
+    div = s1[:, None] * jnp.exp(s_exp)
+    q_soft = w / div + z[:, None]
+    q = ste(jnp.clip(jnp.round(q_soft), 0.0, qmax), q_soft)
+    return (q - z[:, None]) * s1[:, None]
+
+
+def quantize_weight_int(w, s1, z, s_exp, qmax):
+    """Integer codes (no STE) — what is stored/packed at inference time."""
+    div = s1[:, None] * jnp.exp(s_exp)
+    return jnp.clip(jnp.round(w / div + z[:, None]), 0.0, qmax)
+
+
+# ---------------------------------------------------------------------------
+# activation / KV-cache side
+# ---------------------------------------------------------------------------
+
+def per_token_range(x, qmax):
+    """Asymmetric per-token (trailing-dim) grid: scale/zp with shape x[..., :1]."""
+    xmin = jnp.minimum(x.min(axis=-1, keepdims=True), 0.0)
+    xmax = jnp.maximum(x.max(axis=-1, keepdims=True), 0.0)
+    scale = jnp.maximum((xmax - xmin) / qmax, EPS)
+    zp = jnp.clip(jnp.round(-xmin / scale), 0.0, qmax)
+    return scale, zp
+
+
+def fakequant_act(x, scale, zp, qmax):
+    """Asymmetric fake-quant with given grid (static or per-token), STE."""
+    q_soft = x / scale + zp
+    q = ste(jnp.clip(jnp.round(q_soft), 0.0, qmax), q_soft)
+    return (q - zp) * scale
+
+
+def fakequant_per_token(x, qmax):
+    scale, zp = per_token_range(x, qmax)
+    return fakequant_act(x, scale, zp, qmax)
+
+
+def fakequant_static(x, scale, zp, qmax):
+    """Per-tensor static: scalar scale/zp calibrated offline by the L3 pass."""
+    return fakequant_act(x, scale, zp, qmax)
+
+
+def select_act_quant(x, static_scale, static_zp, act_on, per_token, qmax):
+    """Runtime-flag dispatch (flags are f32 0/1 scalars fed by the Rust side).
+
+    Computes both paths and selects — branchless so a single HLO artifact
+    serves FP / per-tensor-static / per-token rows of every table.
+    """
+    x_tok = fakequant_per_token(x, qmax)
+    x_st = fakequant_static(x, static_scale, static_zp, qmax)
+    x_q = jnp.where(per_token > 0.5, x_tok, x_st)
+    return jnp.where(act_on > 0.5, x_q, x)

@@ -1,0 +1,134 @@
+"""L2: block-wise reconstruction step (the learning core of LRQ/FlexRound).
+
+One artifact = one Adam step over a block's learnable quantization parameters:
+
+    loss = || block_q(x_q; θ) − y_target ||²  ,   θ ← Adam(θ, ∇loss)
+
+where ``y_target = block_fp(x_fp)`` is precomputed by the Rust coordinator via
+the ``block_fwd`` artifact (BRECQ recipe: x_fp streams through FP blocks, x_q
+through already-quantized ones).
+
+Methods
+-------
+* ``lrq``        θ = {s1, L2, U2, r2, c2} per linear  (Eq. 2) — forward runs
+                 the fused Pallas fake-quant kernel (L1 on the hot path).
+* ``lrq_nobias`` θ = {s1, L2, U2}  (Appendix B ablation, S2 = L2U2)
+* ``fr``         θ = {s1, S2} full scaling matrix      (Eq. 1, FlexRound)
+
+Zero-points ``z`` are frozen after RTN init (inputs, not learnables).
+Adam state (m, v, t) is threaded through the artifact by the coordinator.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from . import quant
+from .configs import ModelConfig, block_weight_shapes, ACT_POINTS
+from .model import ActQuant, block_fwd
+from .kernels.lrq_fakequant import lrq_fakequant
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+
+
+def fakequant_layer(method, w, s1_init, z, theta, qmax_w):
+    """Ŵ for one linear given its learnable bundle ``theta``.
+
+    The quantization step is parameterized multiplicatively,
+    ``s1 = s1_init · exp(ds1)`` with learnable ``ds1`` (init 0): Adam's
+    step magnitude is ~lr regardless of gradient scale, so learning ``s1``
+    directly would move it by O(lr) *absolute* — a 50 % jump for typical
+    steps — whereas ``ds1`` moves it by O(lr) *relative* and keeps it
+    positive. At init (``ds1 = 0``) this is exactly the paper's RTN start.
+    """
+    if method == "lrq":
+        ds1, l2, u2, r2, c2 = theta
+        s1 = s1_init * jnp.exp(ds1)
+        return lrq_fakequant(w, s1, z, l2, u2, r2, c2, qmax_w)
+    if method == "lrq_nobias":
+        ds1, l2, u2 = theta
+        s1 = s1_init * jnp.exp(ds1)
+        zeros_r = jnp.zeros((w.shape[0],), w.dtype)
+        zeros_c = jnp.zeros((w.shape[1],), w.dtype)
+        return lrq_fakequant(w, s1, z, l2, u2, zeros_r, zeros_c, qmax_w)
+    if method == "fr":
+        ds1, s2 = theta
+        s1 = s1_init * jnp.exp(ds1)
+        return quant.fakequant_weight(w, s1, z, s2, qmax_w)
+    raise ValueError(method)
+
+
+def theta_spec(method, cout, cin, rank):
+    """(name, shape) list for one linear's learnable bundle — the layout
+    contract mirrored in rust/src/methods/."""
+    if method == "lrq":
+        return [("ds1", (cout,)), ("l2", (cout, rank)), ("u2", (rank, cin)),
+                ("r2", (cout,)), ("c2", (cin,))]
+    if method == "lrq_nobias":
+        return [("ds1", (cout,)), ("l2", (cout, rank)), ("u2", (rank, cin))]
+    if method == "fr":
+        return [("ds1", (cout,)), ("s2", (cout, cin))]
+    raise ValueError(method)
+
+
+def make_recon_step(cfg: ModelConfig, method: str, rank: int):
+    """Returns step(x_q, y_t, ws, norms, s1_inits, zs, theta, m, v, t, lr,
+    static_scales, flags, qmaxes) -> (loss, theta', m', v')."""
+
+    def step(x_q, y_t, ws, norms, s1_inits, zs, theta, m, v, t, lr,
+             static_scales, flags, qmax_w, qmax_a, qmax_kv):
+
+        def loss_fn(theta_):
+            whats = tuple(
+                fakequant_layer(method, w, s1i, z, th, qmax_w)
+                for w, s1i, z, th in zip(ws, s1_inits, zs, theta_))
+            static = {p: static_scales[i] for i, p in enumerate(ACT_POINTS)}
+            aq = ActQuant(static, flags, qmax_a, qmax_kv)
+            y = block_fwd(cfg, whats, norms, x_q, aq)
+            diff = y - y_t
+            return jnp.mean(diff * diff)
+
+        loss, grads = jax.value_and_grad(loss_fn)(theta)
+
+        tn = t + 1.0
+        bc1 = 1.0 - ADAM_B1 ** tn
+        bc2 = 1.0 - ADAM_B2 ** tn
+        tree_map = jax.tree_util.tree_map
+        m2 = tree_map(lambda m_, g: ADAM_B1 * m_ + (1.0 - ADAM_B1) * g,
+                      m, grads)
+        v2 = tree_map(lambda v_, g: ADAM_B2 * v_ + (1.0 - ADAM_B2) * g * g,
+                      v, grads)
+        theta2 = tree_map(
+            lambda p, m_, v_: p - lr * (m_ / bc1)
+            / (jnp.sqrt(v_ / bc2) + ADAM_EPS),
+            theta, m2, v2)
+        return loss, theta2, m2, v2
+
+    return step
+
+
+def init_theta(method, cfg: ModelConfig, rank: int, seed: int = 0):
+    """Reference initializer (mirrored in rust/src/methods/): ds1 = 0
+    (i.e. s1 = s1_init from RTN), L2 = 0, U2 ~ N(0, 0.01), r2 = c2 = 0 —
+    so L2U2 + r2 + c2 = 0 and learning starts exactly from RTN (paper §2.3)."""
+    key = jax.random.PRNGKey(seed)
+    thetas = []
+    for name, (cout, cin) in block_weight_shapes(cfg):
+        key, sub = jax.random.split(key)
+        if method == "lrq":
+            thetas.append((jnp.zeros((cout,), jnp.float32),
+                           jnp.zeros((cout, rank), jnp.float32),
+                           0.01 * jax.random.normal(sub, (rank, cin), jnp.float32),
+                           jnp.zeros((cout,), jnp.float32),
+                           jnp.zeros((cin,), jnp.float32)))
+        elif method == "lrq_nobias":
+            thetas.append((jnp.zeros((cout,), jnp.float32),
+                           jnp.zeros((cout, rank), jnp.float32),
+                           0.01 * jax.random.normal(sub, (rank, cin), jnp.float32)))
+        elif method == "fr":
+            thetas.append((jnp.zeros((cout,), jnp.float32),
+                           jnp.zeros((cout, cin), jnp.float32)))
+        else:
+            raise ValueError(method)
+    return tuple(thetas)

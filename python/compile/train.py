@@ -1,0 +1,73 @@
+"""L2: full-model pre-training step (AdamW) — produces the FP baseline that the
+PTQ pipeline quantizes, and the e2e driver's loss curve.
+
+The Rust coordinator owns all state (params, Adam moments, step counter) and
+threads it through this artifact; Python never runs at training time.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .model import lm_loss
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.999
+ADAM_EPS = 1e-8
+WEIGHT_DECAY = 0.01
+
+
+def make_train_step(cfg: ModelConfig):
+    """step(params, m, v, ids, targets, t, lr) -> (loss, params', m', v')."""
+
+    def step(params, m, v, ids, targets, t, lr):
+        loss, grads = jax.value_and_grad(
+            lambda p: lm_loss(cfg, p, ids, targets))(params)
+
+        tn = t + 1.0
+        bc1 = 1.0 - ADAM_B1 ** tn
+        bc2 = 1.0 - ADAM_B2 ** tn
+        tree_map = jax.tree_util.tree_map
+        m2 = tree_map(lambda m_, g: ADAM_B1 * m_ + (1.0 - ADAM_B1) * g,
+                      m, grads)
+        v2 = tree_map(lambda v_, g: ADAM_B2 * v_ + (1.0 - ADAM_B2) * g * g,
+                      v, grads)
+        params2 = tree_map(
+            lambda p, m_, v_: p - lr * ((m_ / bc1)
+            / (jnp.sqrt(v_ / bc2) + ADAM_EPS) + WEIGHT_DECAY * p),
+            params, m2, v2)
+        return loss, params2, m2, v2
+
+    return step
+
+
+def param_spec(cfg: ModelConfig):
+    """(name, shape) list for the full-model parameter vector, in the canonical
+    flatten order — the layout contract with rust/src/model/layout.rs."""
+    spec = [("emb", (cfg.vocab, cfg.d))]
+    d, f = cfg.d, cfg.ff
+    for i in range(cfg.layers):
+        for nm, shape in [
+            ("wq", (d, d)), ("wk", (d, d)), ("wv", (d, d)), ("wo", (d, d)),
+            ("wg", (f, d)), ("wu", (f, d)), ("wd", (d, f)),
+            ("norm_attn", (d,)), ("norm_ffn", (d,)),
+        ]:
+            spec.append((f"blocks.{i}.{nm}", shape))
+    spec.append(("final_norm", (d,)))
+    spec.append(("head", (cfg.vocab, d)))
+    return spec
+
+
+def params_from_flat(cfg: ModelConfig, flat):
+    """Rebuild the nested (emb, blocks, final_norm, head) pytree from the flat
+    canonical-order list (the order of param_spec)."""
+    it = iter(flat)
+    emb = next(it)
+    blocks = []
+    for _ in range(cfg.layers):
+        ws = tuple(next(it) for _ in range(7))
+        norms = tuple(next(it) for _ in range(2))
+        blocks.append((ws, norms))
+    final_norm = next(it)
+    head = next(it)
+    return (emb, tuple(blocks), final_norm, head)

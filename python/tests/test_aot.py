@@ -1,0 +1,62 @@
+"""AOT contract tests: artifact I/O specs match the lowered HLO entry layout,
+and the manifest grammar round-trips."""
+
+import re
+
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile.configs import CONFIGS
+
+
+CFG = CONFIGS["tiny"]
+
+
+def _entry_param_count(hlo_text):
+    m = re.search(r"entry_computation_layout=\{\((.*?)\)->", hlo_text,
+                  re.DOTALL)
+    assert m, "no entry layout"
+    inner = m.group(1)
+    # count top-level f32[...]/s32[...] params
+    return len(re.findall(r"(?:f32|s32)\[", inner))
+
+
+@pytest.mark.parametrize("build", [
+    aot.build_embed, aot.build_head_loss, aot.build_block_fwd,
+    aot.build_block_fwd_q, aot.build_kernel_fakequant, aot.build_kernel_qmm,
+])
+def test_input_count_matches_hlo(build):
+    art = build(CFG)
+    text = art.lower()
+    assert _entry_param_count(text) == len(art.inputs), art.name
+
+
+def test_recon_input_count_matches_hlo():
+    art = aot.build_recon(CFG, "lrq", 8)
+    text = art.lower()
+    assert _entry_param_count(text) == len(art.inputs)
+
+
+def test_manifest_grammar():
+    arts = {CFG.name: [aot.build_embed(CFG), aot.build_block_fwd(CFG)]}
+    lines = aot.manifest_lines([CFG], arts)
+    assert lines[0] == "version 1"
+    assert any(l.startswith("config tiny ") for l in lines)
+    n_art = sum(1 for l in lines if l.startswith("artifact "))
+    n_end = sum(1 for l in lines if l == "end")
+    assert n_art == n_end == 2
+    # every in/out line: name dtype dims...
+    for l in lines:
+        if l.startswith(("in ", "out ")):
+            parts = l.split()
+            assert parts[2] in ("f32", "i32")
+            for d in parts[3:]:
+                assert d.isdigit()
+
+
+def test_scalar_dims_empty():
+    art = aot.build_head_loss(CFG)
+    lines = aot.manifest_lines([CFG], {CFG.name: [art]})
+    loss_lines = [l for l in lines if l.startswith("out loss")]
+    assert loss_lines == ["out loss f32"]

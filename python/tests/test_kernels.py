@@ -1,0 +1,179 @@
+"""L1 correctness: every Pallas kernel against its pure-jnp oracle, including
+hypothesis sweeps over shapes / ranks / bit-widths and gradient agreement.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile import quant
+from compile.kernels import ref
+from compile.kernels.lrq_fakequant import lrq_fakequant, lrq_fakequant_kernel
+from compile.kernels.per_token_quant import per_token_quant, per_token_quant_kernel
+from compile.kernels.quant_matmul import quant_matmul
+
+
+def _lrq_inputs(rng, cout, cin, r, bits, scale=0.02):
+    w = jnp.asarray(rng.normal(size=(cout, cin)), jnp.float32)
+    qmax = jnp.float32(2.0 ** bits - 1.0)
+    s1, z = quant.rtn_range(w, qmax)
+    l2 = jnp.asarray(rng.normal(size=(cout, r)) * scale, jnp.float32)
+    u2 = jnp.asarray(rng.normal(size=(r, cin)) * scale, jnp.float32)
+    r2 = jnp.asarray(rng.normal(size=(cout,)) * scale, jnp.float32)
+    c2 = jnp.asarray(rng.normal(size=(cin,)) * scale, jnp.float32)
+    return w, s1, z, l2, u2, r2, c2, qmax
+
+
+class TestLrqFakequant:
+    def test_matches_ref_exact(self, rng):
+        args = _lrq_inputs(rng, 96, 160, 16, 8)
+        out_k = lrq_fakequant_kernel(*args)
+        out_r = ref.lrq_fakequant_ref(*args)
+        assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        cout=st.sampled_from([8, 32, 96, 128, 352]),
+        cin=st.sampled_from([8, 24, 128, 352]),
+        r=st.sampled_from([1, 2, 8, 32]),
+        bits=st.sampled_from([3, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shapes_bits(self, cout, cin, r, bits, seed):
+        rng = np.random.default_rng(seed)
+        args = _lrq_inputs(rng, cout, cin, r, bits)
+        out_k = lrq_fakequant_kernel(*args)
+        out_r = ref.lrq_fakequant_ref(*args)
+        assert_allclose(np.asarray(out_k), np.asarray(out_r), atol=1e-5)
+
+    @settings(max_examples=10, deadline=None)
+    @given(bm=st.sampled_from([16, 32, 48, 96]),
+           bn=st.sampled_from([20, 40, 80, 160]))
+    def test_tile_invariance(self, bm, bn):
+        """Output must not depend on the BlockSpec tiling."""
+        rng = np.random.default_rng(7)
+        args = _lrq_inputs(rng, 96, 160, 8, 8)
+        base = lrq_fakequant_kernel(*args)
+        tiled = lrq_fakequant_kernel(*args, bm=bm, bn=bn)
+        assert_allclose(np.asarray(tiled), np.asarray(base), atol=1e-6)
+
+    def test_zero_exponent_is_rtn(self, rng):
+        """L2=U2=r2=c2=0 must reduce LRQ (Eq. 2) to plain RTN."""
+        w = jnp.asarray(rng.normal(size=(64, 48)), jnp.float32)
+        qmax = jnp.float32(255.0)
+        s1, z = quant.rtn_range(w, qmax)
+        zeros = _lrq_inputs(np.random.default_rng(0), 64, 48, 4, 8, scale=0.0)
+        out = lrq_fakequant_kernel(w, s1, z, zeros[3], zeros[4],
+                                   zeros[5], zeros[6], qmax)
+        rtn = quant.fakequant_weight(w, s1, z, jnp.zeros_like(w), qmax)
+        assert_allclose(np.asarray(out), np.asarray(rtn), atol=1e-6)
+
+    def test_grads_match_ste_oracle(self, rng):
+        args = _lrq_inputs(rng, 64, 96, 8, 8)
+        w, s1, z, l2, u2, r2, c2, qmax = args
+
+        def loss_k(p):
+            return (lrq_fakequant(w, p[0], z, p[1], p[2], p[3], p[4], qmax) ** 2).sum()
+
+        def loss_r(p):
+            return (ref.lrq_fakequant_ref(w, p[0], z, p[1], p[2], p[3], p[4], qmax) ** 2).sum()
+
+        gk = jax.grad(loss_k)((s1, l2, u2, r2, c2))
+        gr = jax.grad(loss_r)((s1, l2, u2, r2, c2))
+        for a, b in zip(gk, gr):
+            assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+    def test_quantized_values_on_grid(self, rng):
+        """Every Ŵ entry must equal s1[c] * k for integer k in [-z, qmax-z]."""
+        args = _lrq_inputs(rng, 32, 40, 4, 4)
+        w, s1, z, *_ , qmax = args
+        out = np.asarray(lrq_fakequant_kernel(*args))
+        codes = out / np.asarray(s1)[:, None]
+        assert_allclose(codes, np.round(codes), atol=1e-4)
+        assert codes.max() <= float(qmax) + 1e-4
+        assert (codes + np.asarray(z)[:, None]).min() >= -1e-4
+
+
+class TestPerTokenQuant:
+    def test_matches_ref(self, rng):
+        x = jnp.asarray(rng.normal(size=(4, 16, 96)), jnp.float32)
+        qmax = jnp.float32(255.0)
+        assert_allclose(np.asarray(per_token_quant_kernel(x, qmax)),
+                        np.asarray(ref.per_token_quant_ref(x, qmax)),
+                        atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t=st.sampled_from([1, 3, 8, 64, 256]),
+        d=st.sampled_from([4, 32, 128, 352]),
+        bits=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, t, d, bits, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(t, d)) * 3.0, jnp.float32)
+        qmax = jnp.float32(2.0 ** bits - 1.0)
+        assert_allclose(np.asarray(per_token_quant_kernel(x, qmax)),
+                        np.asarray(ref.per_token_quant_ref(x, qmax)),
+                        atol=1e-5)
+
+    def test_error_bound(self, rng):
+        """|x - q(x)| <= scale/2 per token (asymmetric grid covers range)."""
+        x = jnp.asarray(rng.normal(size=(32, 64)), jnp.float32)
+        qmax = jnp.float32(255.0)
+        out = np.asarray(per_token_quant_kernel(x, qmax))
+        xn = np.asarray(x)
+        span = (np.maximum(xn.max(1), 0) - np.minimum(xn.min(1), 0))
+        bound = span / 255.0 / 2.0 + 1e-6
+        assert (np.abs(out - xn).max(axis=1) <= bound).all()
+
+    def test_grad_is_ste(self, rng):
+        x = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+        qmax = jnp.float32(255.0)
+        gk = jax.grad(lambda x_: (per_token_quant(x_, qmax) ** 2).sum())(x)
+        gr = jax.grad(lambda x_: (ref.per_token_quant_ref(x_, qmax) ** 2).sum())(x)
+        assert_allclose(np.asarray(gk), np.asarray(gr), rtol=1e-4, atol=1e-4)
+
+
+class TestQuantMatmul:
+    def test_matches_ref(self, rng):
+        x = jnp.asarray(rng.normal(size=(24, 64)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(96, 64)), jnp.float32)
+        qmax = jnp.float32(15.0)
+        s1, z = quant.rtn_range(w, qmax)
+        wq = quant.quantize_weight_int(w, s1, z, jnp.zeros_like(w), qmax)
+        assert_allclose(np.asarray(quant_matmul(x, wq, s1, z)),
+                        np.asarray(ref.quant_matmul_ref(x, wq, s1, z)),
+                        rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        t=st.sampled_from([1, 7, 64]),
+        k=st.sampled_from([16, 128]),
+        n=st.sampled_from([8, 96, 352]),
+        bits=st.sampled_from([3, 4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis(self, t, k, n, bits, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.normal(size=(t, k)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(n, k)), jnp.float32)
+        qmax = jnp.float32(2.0 ** bits - 1.0)
+        s1, z = quant.rtn_range(w, qmax)
+        wq = quant.quantize_weight_int(w, s1, z, jnp.zeros_like(w), qmax)
+        assert_allclose(np.asarray(quant_matmul(x, wq, s1, z)),
+                        np.asarray(ref.quant_matmul_ref(x, wq, s1, z)),
+                        rtol=1e-3, atol=1e-3)
+
+    def test_dequant_equals_fp_matmul_of_dequant_weights(self, rng):
+        x = jnp.asarray(rng.normal(size=(8, 32)), jnp.float32)
+        w = jnp.asarray(rng.normal(size=(16, 32)), jnp.float32)
+        qmax = jnp.float32(255.0)
+        s1, z = quant.rtn_range(w, qmax)
+        wq = quant.quantize_weight_int(w, s1, z, jnp.zeros_like(w), qmax)
+        wd = (wq - z[:, None]) * s1[:, None]
+        assert_allclose(np.asarray(quant_matmul(x, wq, s1, z)),
+                        np.asarray(x @ wd.T), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,149 @@
+"""L2 model-level tests: shapes, quant-flag dispatch, loss behaviour."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model as M
+from compile import quant
+from compile.configs import CONFIGS, block_weight_shapes, ACT_POINTS
+from compile.train import param_spec, params_from_flat, make_train_step
+
+CFG = CONFIGS["tiny"]
+
+
+def make_block_weights(rng, cfg, scale=0.05):
+    ws = tuple(jnp.asarray(rng.normal(size=sh) * scale, jnp.float32)
+               for _, sh in block_weight_shapes(cfg))
+    norms = (jnp.ones((cfg.d,), jnp.float32), jnp.ones((cfg.d,), jnp.float32))
+    return ws, norms
+
+
+def make_params(rng, cfg, scale=0.05):
+    flat = []
+    for _, sh in param_spec(cfg):
+        if len(sh) == 1:
+            flat.append(jnp.ones(sh, jnp.float32))
+        else:
+            flat.append(jnp.asarray(rng.normal(size=sh) * scale, jnp.float32))
+    return params_from_flat(cfg, flat)
+
+
+def fp_actq():
+    static = {p: (jnp.float32(1.0), jnp.float32(0.0)) for p in ACT_POINTS}
+    flags = (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+    return M.ActQuant(static, flags, jnp.float32(255.0), jnp.float32(255.0))
+
+
+class TestBlock:
+    def test_shapes(self, rng):
+        ws, norms = make_block_weights(rng, CFG)
+        x = jnp.asarray(rng.normal(size=(2, CFG.seq, CFG.d)), jnp.float32)
+        y = M.block_fwd(CFG, ws, norms, x, M.NoQuant())
+        assert y.shape == x.shape
+
+    def test_flags_off_equals_fp(self, rng):
+        """ActQuant with all flags 0 must equal the NoQuant path exactly."""
+        ws, norms = make_block_weights(rng, CFG)
+        x = jnp.asarray(rng.normal(size=(2, CFG.seq, CFG.d)), jnp.float32)
+        y_fp = M.block_fwd(CFG, ws, norms, x, M.NoQuant())
+        y_q = M.block_fwd(CFG, ws, norms, x, fp_actq())
+        assert_allclose(np.asarray(y_q), np.asarray(y_fp), atol=1e-6)
+
+    def test_act_quant_8bit_is_close(self, rng):
+        ws, norms = make_block_weights(rng, CFG)
+        x = jnp.asarray(rng.normal(size=(2, CFG.seq, CFG.d)), jnp.float32)
+        y_fp = M.block_fwd(CFG, ws, norms, x, M.NoQuant())
+        static = {p: (jnp.float32(1.0), jnp.float32(0.0)) for p in ACT_POINTS}
+        aq = M.ActQuant(static, (jnp.float32(1.0), jnp.float32(1.0),
+                                 jnp.float32(1.0)),
+                        jnp.float32(255.0), jnp.float32(255.0))
+        y_q = M.block_fwd(CFG, ws, norms, x, aq)
+        rel = float(jnp.linalg.norm(y_q - y_fp) / jnp.linalg.norm(y_fp))
+        assert 0.0 < rel < 0.05
+
+    def test_per_token_worse_when_4bit(self, rng):
+        """Lower activation bits must increase output error (monotone sanity)."""
+        ws, norms = make_block_weights(rng, CFG)
+        x = jnp.asarray(rng.normal(size=(2, CFG.seq, CFG.d)), jnp.float32)
+        y_fp = M.block_fwd(CFG, ws, norms, x, M.NoQuant())
+        errs = []
+        for bits in (8.0, 4.0):
+            static = {p: (jnp.float32(1.0), jnp.float32(0.0)) for p in ACT_POINTS}
+            aq = M.ActQuant(static, (jnp.float32(1.0), jnp.float32(1.0),
+                                     jnp.float32(0.0)),
+                            jnp.float32(2.0 ** bits - 1.0), jnp.float32(255.0))
+            y_q = M.block_fwd(CFG, ws, norms, x, aq)
+            errs.append(float(jnp.linalg.norm(y_q - y_fp)))
+        assert errs[1] > errs[0]
+
+    def test_stats_recorded(self, rng):
+        ws, norms = make_block_weights(rng, CFG)
+        x = jnp.asarray(rng.normal(size=(2, CFG.seq, CFG.d)), jnp.float32)
+        nq = M.NoQuant()
+        M.block_fwd(CFG, ws, norms, x, nq)
+        assert set(nq.stats) == set(ACT_POINTS)
+        for p in ACT_POINTS:
+            mn, mx, amax = nq.stats[p]
+            assert float(mn) <= 0.0 <= float(mx)
+            assert amax.ndim == 1
+
+    def test_causality(self, rng):
+        """Changing a future token must not affect past outputs."""
+        ws, norms = make_block_weights(rng, CFG)
+        x = jnp.asarray(rng.normal(size=(1, CFG.seq, CFG.d)), jnp.float32)
+        y1 = M.block_fwd(CFG, ws, norms, x, M.NoQuant())
+        x2 = x.at[0, -1].set(x[0, -1] + 10.0)
+        y2 = M.block_fwd(CFG, ws, norms, x2, M.NoQuant())
+        assert_allclose(np.asarray(y1[0, :-1]), np.asarray(y2[0, :-1]),
+                        atol=1e-5)
+
+
+class TestRope:
+    def test_norm_preserved(self, rng):
+        x = jnp.asarray(rng.normal(size=(2, 8, 4, 32)), jnp.float32)
+        y = M.rope(x)
+        assert_allclose(np.asarray(jnp.linalg.norm(y, axis=-1)),
+                        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-5)
+
+    def test_position_zero_identity(self, rng):
+        x = jnp.asarray(rng.normal(size=(1, 4, 2, 16)), jnp.float32)
+        y = M.rope(x)
+        assert_allclose(np.asarray(y[:, 0]), np.asarray(x[:, 0]), atol=1e-6)
+
+
+class TestHead:
+    def test_logprobs_are_logprobs(self, rng):
+        b, s = 2, 8
+        x = jnp.asarray(rng.normal(size=(b, s, CFG.d)), jnp.float32)
+        head = jnp.asarray(rng.normal(size=(CFG.vocab, CFG.d)) * 0.1,
+                           jnp.float32)
+        tgt = jnp.asarray(rng.integers(0, CFG.vocab, size=(b, s)), jnp.int32)
+        loss, logp = M.head_logprobs(x, jnp.ones((CFG.d,), jnp.float32),
+                                     head, tgt)
+        assert logp.shape == (b, s)
+        assert (np.asarray(logp) <= 1e-5).all()
+        assert_allclose(float(loss), -float(logp.mean()), rtol=1e-5)
+
+
+class TestTrainStep:
+    def test_loss_decreases(self, rng):
+        cfg = CFG
+        step = make_train_step(cfg)
+        params = make_params(rng, cfg)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+        m, v = zeros, zeros
+        ids = jnp.asarray(rng.integers(0, cfg.vocab,
+                                       size=(cfg.train_batch, cfg.seq)),
+                          jnp.int32)
+        # learnable: repeat same batch; loss must drop
+        tgt = jnp.roll(ids, -1, axis=1)
+        losses = []
+        t = jnp.float32(0.0)
+        lr = jnp.float32(1e-3)
+        for i in range(5):
+            loss, params, m, v = step(params, m, v, ids, tgt, t + i, lr)
+            losses.append(float(loss))
+        assert losses[-1] < losses[0]

@@ -1,0 +1,142 @@
+"""Reconstruction-step tests: RTN start point, loss decrease for every method,
+LRQ-vs-FlexRound parameter counting, ablation wiring."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import quant
+from compile import recon as R
+from compile import model as M
+from compile.configs import CONFIGS, block_weight_shapes, ACT_POINTS
+
+CFG = CONFIGS["tiny"]
+QMAXW = jnp.float32(15.0)   # 4-bit: big enough error for learning to matter
+
+
+def make_block(rng, scale=0.05):
+    ws = tuple(jnp.asarray(rng.normal(size=sh) * scale, jnp.float32)
+               for _, sh in block_weight_shapes(CFG))
+    norms = (jnp.ones((CFG.d,), jnp.float32), jnp.ones((CFG.d,), jnp.float32))
+    return ws, norms
+
+
+def rtn_init(ws, qmax):
+    s1s, zs = [], []
+    for w in ws:
+        s1, z = quant.rtn_range(w, qmax)
+        s1s.append(s1)
+        zs.append(z)
+    return s1s, zs
+
+
+def make_theta(method, ws, rank, rng):
+    thetas = []
+    for w in ws:
+        cout, cin = w.shape
+        ds1 = jnp.zeros((cout,), jnp.float32)
+        if method == "lrq":
+            thetas.append((ds1,
+                           jnp.zeros((cout, rank), jnp.float32),
+                           jnp.asarray(rng.normal(size=(rank, cin)) * 0.01,
+                                       jnp.float32),
+                           jnp.zeros((cout,), jnp.float32),
+                           jnp.zeros((cin,), jnp.float32)))
+        elif method == "lrq_nobias":
+            thetas.append((ds1,
+                           jnp.zeros((cout, rank), jnp.float32),
+                           jnp.asarray(rng.normal(size=(rank, cin)) * 0.01,
+                                       jnp.float32)))
+        elif method == "fr":
+            thetas.append((ds1, jnp.zeros((cout, cin), jnp.float32)))
+    return tuple(thetas)
+
+
+def fp_flags():
+    return (jnp.float32(0.0), jnp.float32(0.0), jnp.float32(0.0))
+
+
+def static_scales():
+    return tuple((jnp.float32(1.0), jnp.float32(0.0)) for _ in ACT_POINTS)
+
+
+@pytest.mark.parametrize("method,rank", [("lrq", 8), ("lrq_nobias", 8),
+                                         ("fr", 0)])
+def test_recon_loss_decreases(method, rank, rng):
+    ws, norms = make_block(rng)
+    s1s, zs = rtn_init(ws, QMAXW)
+    theta = make_theta(method, ws, rank, rng)
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, theta)
+    m, v = zeros, zeros
+
+    x = jnp.asarray(rng.normal(size=(CFG.recon_batch, CFG.seq, CFG.d)),
+                    jnp.float32)
+    y_t = M.block_fwd(CFG, ws, norms, x, M.NoQuant())
+
+    step = jax.jit(R.make_recon_step(CFG, method, rank))
+    losses = []
+    for i in range(30):
+        loss, theta, m, v = step(
+            x, y_t, ws, norms, tuple(s1s), tuple(zs), theta, m, v,
+            jnp.float32(i), jnp.float32(3e-3), static_scales(), fp_flags(),
+            QMAXW, jnp.float32(255.0), jnp.float32(255.0))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.9, losses
+
+
+def test_zero_theta_step0_equals_rtn_loss(rng):
+    """At init (S terms zero) LRQ and FlexRound start from the same RTN loss."""
+    ws, norms = make_block(rng)
+    s1s, zs = rtn_init(ws, QMAXW)
+    x = jnp.asarray(rng.normal(size=(CFG.recon_batch, CFG.seq, CFG.d)),
+                    jnp.float32)
+    y_t = M.block_fwd(CFG, ws, norms, x, M.NoQuant())
+
+    losses = {}
+    for method, rank in [("lrq", 8), ("fr", 0)]:
+        theta = make_theta(method, ws, rank, np.random.default_rng(0))
+        if method == "lrq":
+            # zero U2 so L2U2 == 0 exactly at init
+            theta = tuple((t[0], t[1], jnp.zeros_like(t[2]), t[3], t[4])
+                          for t in theta)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, theta)
+        step = R.make_recon_step(CFG, method, rank)
+        loss, *_ = step(x, y_t, ws, norms, tuple(s1s), tuple(zs), theta,
+                        zeros, zeros,
+                        jnp.float32(0.0), jnp.float32(0.0), static_scales(),
+                        fp_flags(), QMAXW, jnp.float32(255.0),
+                        jnp.float32(255.0))
+        losses[method] = float(loss)
+    assert_allclose(losses["lrq"], losses["fr"], rtol=1e-5)
+
+
+def test_theta_spec_param_counts():
+    """Table 29: LRQ learnable-parameter ratio ~40% of weights at the default
+    rank; FlexRound ratio > 100% (full S2 + s1)."""
+    def count(method, rank):
+        total = 0
+        for _, (co, ci) in block_weight_shapes(CFG):
+            for _, sh in R.theta_spec(method, co, ci, rank):
+                n = 1
+                for d in sh:
+                    n *= d
+                total += n
+        return total
+
+    weights = sum(co * ci for _, (co, ci) in block_weight_shapes(CFG))
+    lrq_ratio = count("lrq", CFG.rank) / weights
+    fr_ratio = count("fr", 0) / weights
+    assert 0.2 < lrq_ratio < 0.6
+    assert fr_ratio > 1.0
+    assert count("lrq_nobias", CFG.rank) < count("lrq", CFG.rank)
+
+
+def test_lrq_fewer_params_than_fr_all_ranks():
+    for r in CFG.ranks:
+        for _, (co, ci) in block_weight_shapes(CFG):
+            lrq = sum(int(np.prod(sh)) for _, sh in R.theta_spec("lrq", co, ci, r))
+            fr = sum(int(np.prod(sh)) for _, sh in R.theta_spec("fr", co, ci, r))
+            if r <= 32:
+                assert lrq < fr

@@ -1,0 +1,113 @@
+//! Coordinator hot-path benches: per-step latency of the AOT executables the
+//! PTQ pipeline drives (block_fwd, block_fwd_q, recon step, train step) and
+//! the L3 overhead around them (literal construction, input assembly).
+//! Run: `cargo bench --bench coordinator`.
+
+use std::path::Path;
+use std::time::Duration;
+
+use lrq::bench::Bench;
+use lrq::config::{Method, ReconConfig, Scheme};
+use lrq::coordinator::Engine;
+use lrq::data::{Corpus, CorpusConfig};
+use lrq::methods::recon_driver;
+use lrq::methods::BlockContext;
+use lrq::model::Weights;
+use lrq::rng::Rng;
+use lrq::runtime::{to_lit, Runtime};
+use lrq::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::env::var("LRQ_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if !Path::new(&dir).join("manifest.txt").exists() {
+        println!("(artifacts missing — run `make artifacts` first)");
+        return Ok(());
+    }
+    let rt = Runtime::load(Path::new(&dir))?;
+    let cfg = "tiny";
+    let dim = rt.dim(cfg)?;
+    let engine = Engine::new(&rt, cfg)?;
+    let mut rng = Rng::new(11);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    let mut b = Bench {
+        budget: Duration::from_secs(3),
+        ..Bench::default()
+    };
+
+    // embed + block_fwd + head: the eval/serving chain pieces
+    let ids = corpus.calib_batch(dim.calib_batch, dim.seq, &mut rng);
+    let toks = (dim.calib_batch * dim.seq) as f64;
+    let x = engine.embed(&weights.emb, &ids)?;
+    b.run_units("engine::embed (8x64)", Some(toks), &mut || {
+        std::hint::black_box(engine.embed(&weights.emb, &ids).unwrap());
+    });
+    b.run_units("engine::block_fp (8x64x128)", Some(toks), &mut || {
+        std::hint::black_box(
+            engine.block_fp(&x, &weights.blocks[0]).unwrap());
+    });
+    let scheme = Scheme::w8a8_static();
+    let out0 = engine.block_fp(&x, &weights.blocks[0])?;
+    let whats: Vec<Tensor> = weights.blocks[0].ws.clone();
+    b.run_units("engine::block_q (8x64x128, W8A8KV8)", Some(toks), &mut || {
+        std::hint::black_box(
+            engine
+                .block_q(&x, &whats, &weights.blocks[0].norm_attn,
+                         &weights.blocks[0].norm_ffn, &out0.stats, &scheme)
+                .unwrap());
+    });
+    let tgt: Vec<i32> = {
+        let mut t: Vec<i32> = ids[1..].to_vec();
+        t.push(0);
+        t
+    };
+    b.run_units("engine::head_logp (8x64)", Some(toks), &mut || {
+        std::hint::black_box(
+            engine
+                .head_logp(&x, &weights.final_norm, &weights.head, &tgt)
+                .unwrap());
+    });
+    b.run_units("engine::fp_forward full chain", Some(toks), &mut || {
+        std::hint::black_box(
+            engine.fp_forward(&weights, &ids, &tgt).unwrap());
+    });
+
+    // one reconstruction Adam step (the PTQ hot loop) per method
+    let y_t = vec![out0.y.clone()];
+    let x_q = vec![x.clone()];
+    for (method, rank, label) in [
+        (Method::Lrq, dim.rank, "recon step LRQ r32"),
+        (Method::FlexRound, 0usize, "recon step FlexRound"),
+    ] {
+        let recon = ReconConfig { steps: 5, calib_samples: 8,
+                                  ..ReconConfig::default() };
+        let ctx = BlockContext {
+            dim: &dim,
+            weights: &weights.blocks[0],
+            x_q: &x_q,
+            y_t: &y_t,
+            acts_q: None,
+            stats: &out0.stats,
+            scheme,
+            recon,
+            block_index: 0,
+        };
+        // measure per-step cost by running 5-step recon and dividing
+        b.run_units(&format!("{label} (5 steps, amortized)"), Some(5.0),
+                    &mut || {
+            std::hint::black_box(
+                recon_driver::run_recon(&rt, &engine, method, &ctx,
+                                        &weights.blocks[0], rank)
+                    .unwrap());
+        });
+    }
+
+    // L3-side literal overhead: weight -> literal conversion
+    let w = &weights.blocks[0].ws[4];
+    b.run_units("runtime::to_lit 352x128", Some(w.len() as f64), &mut || {
+        std::hint::black_box(to_lit(w).unwrap());
+    });
+
+    Ok(())
+}

@@ -1,0 +1,122 @@
+//! L1/L3 kernel microbenches: the AOT Pallas kernels (fused LRQ fake-quant,
+//! dequant-matmul) through PJRT, and their native Rust counterparts (the
+//! finalize path), plus packing. Run: `cargo bench --bench kernels`.
+//!
+//! criterion is unavailable offline; this uses the in-repo harness
+//! (`lrq::bench`) with mean/p50/p95/min + throughput.
+
+use std::path::Path;
+
+use lrq::bench::Bench;
+use lrq::quant::{self, fakequant_lrq, rtn_grid, LrqParams, PackedMatrix};
+use lrq::rng::Rng;
+use lrq::runtime::{to_lit, Runtime};
+use lrq::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::default();
+    let mut rng = Rng::new(7);
+
+    // ---- native tensor substrate -----------------------------------------
+    {
+        let x = Tensor::randn(&mut rng, &[512, 128], 1.0);
+        let w = Tensor::randn(&mut rng, &[352, 128], 1.0);
+        let flops = 2.0 * 512.0 * 128.0 * 352.0;
+        b.run_units("tensor::matmul_bt 512x128 @ 352x128T",
+                    Some(flops), &mut || {
+            std::hint::black_box(x.matmul_bt(&w));
+        });
+    }
+
+    // ---- native LRQ fake-quant (finalize path) ---------------------------
+    {
+        let w = Tensor::randn(&mut rng, &[352, 128], 0.05);
+        let grid = rtn_grid(&w, 255.0);
+        let mut p = LrqParams::init(&mut rng, 352, 128, 32);
+        p.l2 = Tensor::randn(&mut rng, &[352, 32], 0.02);
+        let elems = (352 * 128) as f64;
+        b.run_units("quant::fakequant_lrq 352x128 r32", Some(elems),
+                    &mut || {
+            std::hint::black_box(fakequant_lrq(&w, &grid, &p));
+        });
+    }
+
+    // ---- packing ----------------------------------------------------------
+    for bits in [3u32, 4, 8] {
+        let w = Tensor::randn(&mut rng, &[352, 128], 0.05);
+        let grid = rtn_grid(&w, quant::qmax(bits));
+        let codes = quant::quantize_int_codes(&w, &grid, None);
+        let pm = PackedMatrix::from_codes(&codes, &grid.scale, &grid.zp, bits)?;
+        let elems = (352 * 128) as f64;
+        b.run_units(&format!("pack::from_codes {bits}-bit 352x128"),
+                    Some(elems), &mut || {
+            std::hint::black_box(
+                PackedMatrix::from_codes(&codes, &grid.scale, &grid.zp, bits)
+                    .unwrap());
+        });
+        b.run_units(&format!("pack::dequant {bits}-bit 352x128"),
+                    Some(elems), &mut || {
+            std::hint::black_box(pm.dequant());
+        });
+    }
+
+    // ---- AOT Pallas kernels through PJRT ----------------------------------
+    let dir = std::env::var("LRQ_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if !Path::new(&dir).join("manifest.txt").exists() {
+        println!("(artifacts missing — run `make artifacts` for the AOT \
+                  kernel benches)");
+        return Ok(());
+    }
+    let rt = Runtime::load(Path::new(&dir))?;
+    for cfg in ["tiny", "small"] {
+        let dim = match rt.dim(cfg) {
+            Ok(d) => d,
+            Err(_) => continue,
+        };
+        // fused LRQ fake-quant kernel (gate projection shape)
+        {
+            let exec = rt.exec(&format!("kernel_fakequant_{cfg}"))?;
+            let (co, ci, r) = (dim.ff, dim.d, dim.rank);
+            let w = Tensor::randn(&mut rng, &[co, ci], 0.05);
+            let grid = rtn_grid(&w, 255.0);
+            let inputs = vec![
+                to_lit(&w)?,
+                to_lit(&Tensor::new(vec![co], grid.scale.clone()))?,
+                to_lit(&Tensor::new(vec![co], grid.zp.clone()))?,
+                to_lit(&Tensor::zeros(&[co, r]))?,
+                to_lit(&Tensor::randn(&mut rng, &[r, ci], 0.01))?,
+                to_lit(&Tensor::zeros(&[co]))?,
+                to_lit(&Tensor::zeros(&[ci]))?,
+                to_lit(&Tensor::scalar(255.0))?,
+            ];
+            let elems = (co * ci) as f64;
+            b.run_units(&format!("pjrt kernel_fakequant_{cfg} {co}x{ci} r{r}"),
+                        Some(elems), &mut || {
+                std::hint::black_box(exec.run(&inputs).unwrap());
+            });
+        }
+        // dequant-matmul serving kernel
+        {
+            let exec = rt.exec(&format!("kernel_qmm_{cfg}"))?;
+            let t = dim.calib_batch * dim.seq;
+            let (k, n) = (dim.d, dim.ff);
+            let x = Tensor::randn(&mut rng, &[t, k], 1.0);
+            let w = Tensor::randn(&mut rng, &[n, k], 0.05);
+            let grid = rtn_grid(&w, 15.0);
+            let codes = quant::quantize_int_codes(&w, &grid, None);
+            let inputs = vec![
+                to_lit(&x)?,
+                to_lit(&codes)?,
+                to_lit(&Tensor::new(vec![n], grid.scale.clone()))?,
+                to_lit(&Tensor::new(vec![n], grid.zp.clone()))?,
+            ];
+            let flops = 2.0 * t as f64 * k as f64 * n as f64;
+            b.run_units(&format!("pjrt kernel_qmm_{cfg} {t}x{k} @ {n}x{k}T"),
+                        Some(flops), &mut || {
+                std::hint::black_box(exec.run(&inputs).unwrap());
+            });
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Serving-path benches: batcher overhead with a mock scorer (pure L3), and
+//! end-to-end request latency with the real PJRT engine (FP16 vs quantized
+//! weights — the Fig. 5 measurement). Run: `cargo bench --bench serving`.
+
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use lrq::bench::Bench;
+use lrq::rng::Rng;
+use lrq::serve::{BatchScorer, MockScorer, Server, ServerConfig};
+
+fn drive(server: &Server, requests: usize, threads: usize) -> Duration {
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for k in 0..threads {
+        let c = server.client();
+        let per = requests / threads;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(k as u64 ^ 0xABCD);
+            for _ in 0..per {
+                let len = rng.range(4, 16);
+                let ids: Vec<i32> =
+                    (0..len).map(|_| rng.below(100) as i32).collect();
+                c.score(ids).unwrap();
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    t0.elapsed()
+}
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::quick();
+
+    // pure batcher overhead (mock scorer: no model work)
+    for max_batch in [1usize, 4, 8] {
+        let server = Server::start(
+            ServerConfig {
+                max_batch,
+                max_wait: Duration::from_micros(200),
+            },
+            move || {
+                Ok(Box::new(MockScorer { batch: 8, seq: 64, calls: 0 })
+                    as Box<dyn BatchScorer>)
+            },
+        )?;
+        let client = server.client();
+        b.run_units(&format!("batcher roundtrip (mock, max_batch={max_batch})"),
+                    Some(1.0), &mut || {
+            std::hint::black_box(client.score(vec![1, 2, 3]).unwrap());
+        });
+    }
+
+    // concurrent-load throughput with the mock scorer
+    {
+        let server = Server::start(ServerConfig::default(), move || {
+            Ok(Box::new(MockScorer { batch: 8, seq: 64, calls: 0 })
+                as Box<dyn BatchScorer>)
+        })?;
+        let n = 2000usize;
+        let wall = drive(&server, n, 4);
+        let m = server.metrics.lock().unwrap();
+        println!(
+            "mock load: {n} reqs in {:?} -> {:.0} req/s, p50 {:?}, p95 {:?}, \
+             mean batch {:.2}",
+            wall,
+            n as f64 / wall.as_secs_f64(),
+            m.p50_latency(),
+            m.p95_latency(),
+            m.mean_batch()
+        );
+    }
+
+    // real engine (only when artifacts + cached weights exist)
+    let dir = std::env::var("LRQ_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    let wpath = "weights_tiny.bin".to_string();
+    if Path::new(&dir).join("manifest.txt").exists()
+        && Path::new(&wpath).exists()
+    {
+        use lrq::config::Args;
+        let mut args = Args::default();
+        args.options.insert("artifacts".into(), dir.clone());
+        args.options.insert("weights".into(), wpath.clone());
+        println!("\nreal-engine serving (FP16, tiny):");
+        lrq::tables::serving_run(&dir, "tiny", &wpath, None, 16, 64, 1)?;
+    } else {
+        println!("(skipping real-engine serving bench: need artifacts/ and \
+                  weights_tiny.bin)");
+    }
+    Ok(())
+}

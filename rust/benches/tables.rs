@@ -1,0 +1,52 @@
+//! Paper-table regeneration smoke bench: times the cheap closed-form tables
+//! and one fast end-to-end method run, and points at `lrq report` for the
+//! full set (DESIGN.md §5). Run: `cargo bench --bench tables`.
+
+use std::path::Path;
+
+use lrq::bench::Bench;
+use lrq::config::{Args, Method, ReconConfig, Scheme};
+use lrq::quant::lrq::block_param_ratio;
+use lrq::tables::Lab;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::quick();
+
+    // Table 29 is pure arithmetic — verify + time it
+    b.run("table29 param-ratio (4 Llama sizes)", || {
+        for (d, f, r) in [(4096usize, 11008usize, 1024usize),
+                          (5120, 13824, 1024), (6656, 17920, 2048),
+                          (8192, 22016, 2048)] {
+            std::hint::black_box(block_param_ratio(d, f, r));
+        }
+    });
+    let r7b = block_param_ratio(4096, 11008, 1024);
+    println!("  Llama-7B ratio = {:.2}% (paper: 39.51%)", r7b * 100.0);
+
+    // one fast quantize+eval pass (RTN, tiny) if the testbed is set up
+    let dir = std::env::var("LRQ_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".to_string());
+    if Path::new(&dir).join("manifest.txt").exists()
+        && Path::new("weights_tiny.bin").exists()
+    {
+        let mut args = Args::default();
+        args.options.insert("artifacts".into(), dir);
+        args.options.insert("tasks".into(), "40".into());
+        let lab = Lab::new(&args, "tiny")?;
+        let recon = ReconConfig { steps: 0, calib_samples: 16,
+                                  ..lab.recon };
+        let t0 = std::time::Instant::now();
+        let out = lab.quantize(Method::Rtn, Scheme::w8a8_static(), recon)?;
+        let s = lab.summary_of(&out, Scheme::w8a8_static())?;
+        println!("RTN tiny quantize+eval: {:.2}s (CSR {:.1}%, MMLU {:.1}%)",
+                 t0.elapsed().as_secs_f64(), s.csr_acc * 100.0,
+                 s.mmlu_acc * 100.0);
+    } else {
+        println!("(skipping e2e table bench: need artifacts/ and \
+                  weights_tiny.bin)");
+    }
+    println!("\nfull regeneration: `cargo run --release -- report` \
+              (writes reports/*.md)");
+    let _ = b;
+    Ok(())
+}

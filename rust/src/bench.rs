@@ -1,0 +1,167 @@
+//! Micro-benchmark harness (criterion is unavailable in the offline build
+//! image): warmup + timed iterations with mean / p50 / p95 / min reporting,
+//! used by every `cargo bench` target (`harness = false`).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// optional throughput unit count per iteration (elements, tokens, ...)
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        let mut s = format!(
+            "{:<44} {:>10} iters  mean {:>12}  p50 {:>12}  p95 {:>12}  min {:>12}",
+            self.name,
+            self.iters,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            fmt_dur(self.min),
+        );
+        if let Some(u) = self.units_per_iter {
+            let per_sec = u / self.mean.as_secs_f64();
+            s.push_str(&format!("  {:>12}/s", fmt_rate(per_sec)));
+        }
+        s
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.3}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+fn fmt_rate(r: f64) -> String {
+    if r >= 1e9 {
+        format!("{:.2}G", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2}M", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2}k", r / 1e3)
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+/// Bench runner: target wall budget per case, auto-scaled iteration count.
+pub struct Bench {
+    pub warmup: Duration,
+    pub budget: Duration,
+    pub max_iters: usize,
+    pub results: Vec<BenchStats>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: Duration::from_millis(200),
+            budget: Duration::from_secs(2),
+            max_iters: 10_000,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn quick() -> Self {
+        Bench {
+            warmup: Duration::from_millis(50),
+            budget: Duration::from_millis(500),
+            max_iters: 2_000,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f`, which must do one unit of work per call.
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchStats {
+        self.run_units(name, None, &mut f)
+    }
+
+    /// Time `f` with a units-per-iteration annotation for throughput.
+    pub fn run_units<F: FnMut()>(
+        &mut self,
+        name: &str,
+        units_per_iter: Option<f64>,
+        f: &mut F,
+    ) -> &BenchStats {
+        // warmup
+        let w0 = Instant::now();
+        let mut warm_iters = 0usize;
+        while w0.elapsed() < self.warmup && warm_iters < self.max_iters {
+            f();
+            warm_iters += 1;
+        }
+        // measure
+        let mut samples = Vec::new();
+        let b0 = Instant::now();
+        while b0.elapsed() < self.budget && samples.len() < self.max_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        samples.sort_unstable();
+        let iters = samples.len().max(1);
+        let total: Duration = samples.iter().sum();
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters,
+            mean: total / iters as u32,
+            p50: samples.get(iters / 2).copied().unwrap_or_default(),
+            p95: samples
+                .get((iters as f64 * 0.95) as usize)
+                .copied()
+                .unwrap_or_else(|| *samples.last().unwrap()),
+            min: samples.first().copied().unwrap_or_default(),
+            units_per_iter,
+        };
+        println!("{}", stats.report());
+        self.results.push(stats);
+        self.results.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let mut b = Bench {
+            warmup: Duration::from_millis(1),
+            budget: Duration::from_millis(20),
+            max_iters: 1000,
+            results: Vec::new(),
+        };
+        let mut acc = 0u64;
+        b.run("noop-ish", || {
+            acc = acc.wrapping_add(1);
+        });
+        let s = &b.results[0];
+        assert!(s.iters > 0);
+        assert!(s.min <= s.p50 && s.p50 <= s.p95);
+    }
+
+    #[test]
+    fn formats() {
+        assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
+        assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
+        assert_eq!(fmt_rate(2_500_000.0), "2.50M");
+    }
+}

@@ -1,0 +1,263 @@
+//! Run configuration: the quantization scheme / method / pipeline knobs that
+//! parameterize every experiment, plus a dependency-free CLI argument parser
+//! (clap is unavailable in the offline build image — see Cargo.toml note).
+
+use std::collections::HashMap;
+use std::fmt;
+use std::str::FromStr;
+
+use anyhow::{anyhow, bail, Result};
+
+/// Quantization method under test (paper baselines + ours).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Method {
+    Fp16,
+    Rtn,
+    SmoothQuant,
+    Gptq,
+    Awq,
+    FlexRound,
+    LrqNoBias, // Appendix B ablation: S2 = L2U2 (no r2/c2)
+    Lrq,
+    /// SmoothQuant preprocessing + reconstruction (Appendix L)
+    SqFlexRound,
+    SqLrq,
+}
+
+impl Method {
+    pub fn all() -> &'static [Method] {
+        use Method::*;
+        &[Fp16, Rtn, SmoothQuant, Gptq, Awq, FlexRound, LrqNoBias, Lrq,
+          SqFlexRound, SqLrq]
+    }
+
+    pub fn paper_name(&self) -> &'static str {
+        match self {
+            Method::Fp16 => "FP16",
+            Method::Rtn => "RTN",
+            Method::SmoothQuant => "SmoothQuant",
+            Method::Gptq => "GPTQ",
+            Method::Awq => "AWQ",
+            Method::FlexRound => "FlexRound",
+            Method::LrqNoBias => "LRQ (S2=L2U2)",
+            Method::Lrq => "LRQ (Ours)",
+            Method::SqFlexRound => "SQ+FlexRound",
+            Method::SqLrq => "SQ+LRQ",
+        }
+    }
+
+    /// Does this method run block-wise reconstruction (gradient-based)?
+    pub fn uses_recon(&self) -> bool {
+        matches!(self, Method::FlexRound | Method::LrqNoBias | Method::Lrq
+                 | Method::SqFlexRound | Method::SqLrq)
+    }
+
+    /// Does this method apply SmoothQuant preprocessing first?
+    pub fn uses_smooth(&self) -> bool {
+        matches!(self, Method::SmoothQuant | Method::SqFlexRound
+                 | Method::SqLrq)
+    }
+}
+
+impl FromStr for Method {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "fp16" | "fp" => Method::Fp16,
+            "rtn" => Method::Rtn,
+            "smoothquant" | "sq" => Method::SmoothQuant,
+            "gptq" => Method::Gptq,
+            "awq" => Method::Awq,
+            "flexround" | "fr" => Method::FlexRound,
+            "lrq_nobias" | "lrq-nobias" => Method::LrqNoBias,
+            "lrq" => Method::Lrq,
+            "sq+flexround" | "sq_fr" => Method::SqFlexRound,
+            "sq+lrq" | "sq_lrq" => Method::SqLrq,
+            other => bail!("unknown method {other}"),
+        })
+    }
+}
+
+impl fmt::Display for Method {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.paper_name())
+    }
+}
+
+/// Activation quantization scheme (paper §3.2 vs §3.3).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ActScheme {
+    /// weight-only: activations stay FP16
+    None,
+    /// per-tensor asymmetric static (calibrated scales) — Tables 1-4
+    PerTensorStatic,
+    /// per-token asymmetric dynamic — Tables 5-6
+    PerToken,
+}
+
+impl FromStr for ActScheme {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "none" | "fp16" | "off" => ActScheme::None,
+            "static" | "per-tensor" | "per_tensor" => ActScheme::PerTensorStatic,
+            "token" | "per-token" | "per_token" => ActScheme::PerToken,
+            other => bail!("unknown act scheme {other}"),
+        })
+    }
+}
+
+/// Full quantization scheme: the W/A/KV triple of every table header.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Scheme {
+    pub w_bits: u32,
+    pub act: ActScheme,
+    pub a_bits: u32,
+    pub kv_quant: bool,
+    pub kv_bits: u32,
+}
+
+impl Scheme {
+    /// W8A8(static)KV8 — Tables 1-4.
+    pub fn w8a8_static() -> Self {
+        Scheme { w_bits: 8, act: ActScheme::PerTensorStatic, a_bits: 8,
+                 kv_quant: true, kv_bits: 8 }
+    }
+
+    /// W4A8(per-token)KV8 — Tables 5-6.
+    pub fn w4a8_token() -> Self {
+        Scheme { w_bits: 4, act: ActScheme::PerToken, a_bits: 8,
+                 kv_quant: true, kv_bits: 8 }
+    }
+
+    /// Weight-only (Tables 7-8, Fig. 5).
+    pub fn weight_only(bits: u32) -> Self {
+        Scheme { w_bits: bits, act: ActScheme::None, a_bits: 16,
+                 kv_quant: false, kv_bits: 16 }
+    }
+
+    pub fn without_kv_quant(mut self) -> Self {
+        self.kv_quant = false;
+        self.kv_bits = 16;
+        self
+    }
+
+    /// "8/8/8"-style label used in every paper table.
+    pub fn label(&self) -> String {
+        let a = match self.act {
+            ActScheme::None => "16".to_string(),
+            _ => self.a_bits.to_string(),
+        };
+        let kv = if self.kv_quant { self.kv_bits.to_string() }
+                 else { "16".to_string() };
+        format!("{}/{}/{}", self.w_bits, a, kv)
+    }
+}
+
+/// Reconstruction hyper-parameters (paper Appendix I).
+#[derive(Clone, Copy, Debug)]
+pub struct ReconConfig {
+    pub steps: usize,
+    pub lr: f32,
+    pub calib_samples: usize,
+    pub rank: usize,
+    pub seed: u64,
+}
+
+impl Default for ReconConfig {
+    fn default() -> Self {
+        // 5000 steps in the paper; scaled to the synthetic models.
+        ReconConfig { steps: 250, lr: 3e-4, calib_samples: 64, rank: 0,
+                      seed: 1234 }
+    }
+}
+
+/// Minimal CLI argument parser: positional commands + `--key value` /
+/// `--flag` options.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: HashMap<String, String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl Iterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut argv = argv.peekable();
+        while let Some(a) = argv.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = match argv.peek() {
+                    Some(v) if !v.starts_with("--") => argv.next().unwrap(),
+                    _ => "true".to_string(),
+                };
+                out.options.insert(key.to_string(), val);
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn parse_as<T: FromStr>(&self, key: &str, default: T) -> Result<T>
+    where
+        T::Err: fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(default),
+            Some(s) => s
+                .parse()
+                .map_err(|e| anyhow!("bad --{key} value {s:?}: {e}")),
+        }
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn method_parse_roundtrip() {
+        for m in Method::all() {
+            // every method has a paper name; selected ones parse back
+            assert!(!m.paper_name().is_empty());
+        }
+        assert_eq!("lrq".parse::<Method>().unwrap(), Method::Lrq);
+        assert_eq!("FR".parse::<Method>().unwrap(), Method::FlexRound);
+        assert!("nope".parse::<Method>().is_err());
+    }
+
+    #[test]
+    fn scheme_labels() {
+        assert_eq!(Scheme::w8a8_static().label(), "8/8/8");
+        assert_eq!(Scheme::w4a8_token().label(), "4/8/8");
+        assert_eq!(Scheme::weight_only(3).label(), "3/16/16");
+        assert_eq!(Scheme::w8a8_static().without_kv_quant().label(), "8/8/16");
+    }
+
+    #[test]
+    fn args_parse() {
+        let a = Args::parse(
+            ["quantize", "--method", "lrq", "--steps", "100", "--verbose"]
+                .iter()
+                .map(|s| s.to_string()),
+        )
+        .unwrap();
+        assert_eq!(a.positional, vec!["quantize"]);
+        assert_eq!(a.get("method"), Some("lrq"));
+        assert_eq!(a.parse_as::<usize>("steps", 0).unwrap(), 100);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.parse_as::<usize>("missing", 7).unwrap(), 7);
+    }
+}

@@ -1,0 +1,187 @@
+//! Execution engine: chains the AOT artifacts (`embed → block × L →
+//! head_loss`) for FP and quantized forward passes. This is the request-path
+//! core shared by the PTQ pipeline, the evaluator, and the serving engine.
+
+use std::rc::Rc;
+
+use anyhow::{bail, Result};
+use xla::Literal;
+
+use crate::config::{ActScheme, Scheme};
+use crate::model::{BlockWeights, ModelDim, QuantizedModel, Weights};
+use crate::quant::{qmax, ActRange};
+use crate::runtime::{flag_lit, from_lit, ids_lit, scalar_from_lit, scalar_lit,
+                     to_lit, Exec, Runtime};
+use crate::tensor::Tensor;
+
+/// Calibrated statistics at one activation-quant point.
+#[derive(Clone, Debug, Default)]
+pub struct PointStats {
+    pub range: ActRange,
+    pub amax: Vec<f32>,
+}
+
+impl PointStats {
+    pub fn merge(&mut self, mn: f32, mx: f32, amax: &[f32]) {
+        self.range.update(mn, mx);
+        if self.amax.is_empty() {
+            self.amax = amax.to_vec();
+        } else {
+            for (a, &b) in self.amax.iter_mut().zip(amax) {
+                *a = a.max(b);
+            }
+        }
+    }
+}
+
+/// Per-block activation ranges for the 4 quant points (Fig. 8).
+pub type BlockStats = [PointStats; 4];
+
+/// Output of an FP block forward: next activations + stats + the raw
+/// activations at each quant point (GPTQ/AWQ food).
+pub struct BlockFwdOut {
+    pub y: Tensor,
+    pub stats: BlockStats,
+    pub acts: [Tensor; 4],
+}
+
+pub struct Engine {
+    pub dim: ModelDim,
+    embed: Rc<Exec>,
+    head: Rc<Exec>,
+    block_fwd: Rc<Exec>,
+    block_fwd_q: Rc<Exec>,
+}
+
+impl Engine {
+    pub fn new(rt: &Runtime, cfg: &str) -> Result<Engine> {
+        Ok(Engine {
+            dim: rt.dim(cfg)?,
+            embed: rt.exec(&format!("embed_{cfg}"))?,
+            head: rt.exec(&format!("head_loss_{cfg}"))?,
+            block_fwd: rt.exec(&format!("block_fwd_{cfg}"))?,
+            block_fwd_q: rt.exec(&format!("block_fwd_q_{cfg}"))?,
+        })
+    }
+
+    /// ids (calib_batch × seq) → embeddings.
+    pub fn embed(&self, emb: &Tensor, ids: &[i32]) -> Result<Tensor> {
+        let d = &self.dim;
+        let lits = vec![to_lit(emb)?,
+                        ids_lit(ids, &[d.calib_batch, d.seq])?];
+        let out = self.embed.run(&lits)?;
+        from_lit(&out[0], &[d.calib_batch, d.seq, d.d])
+    }
+
+    /// FP block forward with stats + act capture.
+    pub fn block_fp(&self, x: &Tensor, bw: &BlockWeights) -> Result<BlockFwdOut> {
+        let mut lits = vec![to_lit(x)?];
+        for w in &bw.ws {
+            lits.push(to_lit(w)?);
+        }
+        lits.push(to_lit(&bw.norm_attn)?);
+        lits.push(to_lit(&bw.norm_ffn)?);
+        let out = self.block_fwd.run(&lits)?;
+        let spec = &self.block_fwd.spec.outputs;
+        let y = from_lit(&out[0], &spec[0].dims)?;
+        let mut stats: BlockStats = Default::default();
+        let mut acts: Vec<Tensor> = Vec::with_capacity(4);
+        for p in 0..4 {
+            let base = 1 + p * 4;
+            let mn = scalar_from_lit(&out[base])?;
+            let mx = scalar_from_lit(&out[base + 1])?;
+            let amax = from_lit(&out[base + 2], &spec[base + 2].dims)?;
+            stats[p].merge(mn, mx, &amax.data);
+            acts.push(from_lit(&out[base + 3], &spec[base + 3].dims)?);
+        }
+        let acts: [Tensor; 4] = acts.try_into().map_err(|_| {
+            anyhow::anyhow!("act count")
+        })?;
+        Ok(BlockFwdOut { y, stats, acts })
+    }
+
+    /// Literal bundle for the activation-quant tail of block_fwd_q / recon
+    /// inputs: 4×(scale, zp) then act_on, per_token, kv_on[, qmax_w], qmax_a,
+    /// qmax_kv.
+    pub fn act_tail(&self, stats: &BlockStats, scheme: &Scheme,
+                    include_qmax_w: bool) -> Result<Vec<Literal>> {
+        let qmax_a = qmax(scheme.a_bits);
+        let qmax_kv = qmax(scheme.kv_bits);
+        let mut lits = Vec::new();
+        for p in stats.iter() {
+            let (s, z) = p.range.grid(qmax_a);
+            lits.push(scalar_lit(s));
+            lits.push(scalar_lit(z));
+        }
+        lits.push(flag_lit(!matches!(scheme.act, ActScheme::None)));
+        lits.push(flag_lit(matches!(scheme.act, ActScheme::PerToken)));
+        lits.push(flag_lit(scheme.kv_quant));
+        if include_qmax_w {
+            lits.push(scalar_lit(qmax(scheme.w_bits)));
+        }
+        lits.push(scalar_lit(qmax_a));
+        lits.push(scalar_lit(qmax_kv));
+        Ok(lits)
+    }
+
+    /// Quantized block forward: `whats` are the dequantized Ŵ tensors.
+    pub fn block_q(&self, x: &Tensor, whats: &[Tensor], norm_attn: &Tensor,
+                   norm_ffn: &Tensor, stats: &BlockStats, scheme: &Scheme)
+                   -> Result<Tensor> {
+        if whats.len() != 7 {
+            bail!("block_q needs 7 weight tensors");
+        }
+        let mut lits = vec![to_lit(x)?];
+        for w in whats {
+            lits.push(to_lit(w)?);
+        }
+        lits.push(to_lit(norm_attn)?);
+        lits.push(to_lit(norm_ffn)?);
+        lits.extend(self.act_tail(stats, scheme, false)?);
+        let out = self.block_fwd_q.run(&lits)?;
+        from_lit(&out[0], &self.block_fwd_q.spec.outputs[0].dims)
+    }
+
+    /// Final norm + head: (mean NLL, per-position log-prob of targets).
+    pub fn head_logp(&self, x: &Tensor, final_norm: &Tensor, head: &Tensor,
+                     targets: &[i32]) -> Result<(f32, Tensor)> {
+        let d = &self.dim;
+        let lits = vec![
+            to_lit(x)?,
+            to_lit(final_norm)?,
+            to_lit(head)?,
+            ids_lit(targets, &[d.calib_batch, d.seq])?,
+        ];
+        let out = self.head.run(&lits)?;
+        let loss = scalar_from_lit(&out[0])?;
+        let logp = from_lit(&out[1], &[d.calib_batch, d.seq])?;
+        Ok((loss, logp))
+    }
+
+    /// Full FP forward: (mean NLL, per-position target log-probs).
+    pub fn fp_forward(&self, w: &Weights, ids: &[i32], targets: &[i32])
+                      -> Result<(f32, Tensor)> {
+        let mut x = self.embed(&w.emb, ids)?;
+        for bw in &w.blocks {
+            x = self.block_fp(&x, bw)?.y;
+        }
+        self.head_logp(&x, &w.final_norm, &w.head, targets)
+    }
+
+    /// Full quantized forward (per-block dequantized weights + calibrated
+    /// ranges + scheme flags).
+    pub fn q_forward(&self, qm: &QuantizedModel, ranges: &[BlockStats],
+                     scheme: &Scheme, ids: &[i32], targets: &[i32])
+                     -> Result<(f32, Tensor)> {
+        if ranges.len() != qm.blocks.len() {
+            bail!("ranges/blocks mismatch");
+        }
+        let mut x = self.embed(&qm.emb, ids)?;
+        for (qb, st) in qm.blocks.iter().zip(ranges) {
+            let whats = qb.dequant_ws();
+            x = self.block_q(&x, &whats, &qb.norm_attn, &qb.norm_ffn, st,
+                             scheme)?;
+        }
+        self.head_logp(&x, &qm.final_norm, &qm.head, targets)
+    }
+}

@@ -1,0 +1,12 @@
+//! The L3 coordinator — the paper's system contribution: the block-wise PTQ
+//! pipeline (calibration streaming, reconstruction driving, finalization),
+//! the pre-training driver that produces the FP baseline, and the execution
+//! engine they share.
+
+pub mod engine;
+pub mod pipeline;
+pub mod trainer;
+
+pub use engine::{BlockFwdOut, BlockStats, Engine, PointStats};
+pub use pipeline::{quantize_model, QuantizeOutcome};
+pub use trainer::{pretrain, TrainOutcome};

@@ -1,0 +1,169 @@
+//! The block-wise PTQ pipeline (BRECQ recipe, paper §2.1):
+//!
+//! 1. stream calibration batches through the FP blocks (`X` stream), caching
+//!    stats and the reconstruction targets `Y = block_fp(X)`;
+//! 2. maintain the parallel quantized-input stream `X̃` through already-
+//!    quantized blocks;
+//! 3. per block, hand a [`BlockContext`] to the method driver;
+//! 4. re-calibrate activation ranges on the *quantized* block (the ranges the
+//!    runtime will actually see), then advance `X̃`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::config::{Method, ReconConfig, Scheme};
+use crate::data::Corpus;
+use crate::methods::{needs_acts, quantize_block, BlockContext};
+use crate::model::{BlockWeights, ModelDim, QuantizedBlock, QuantizedModel,
+                   Weights};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+use super::engine::{BlockStats, Engine};
+
+/// Everything the pipeline produces for one (method, scheme) run.
+pub struct QuantizeOutcome {
+    pub model: QuantizedModel,
+    /// runtime activation ranges per block (calibrated on the quantized net)
+    pub stats: Vec<BlockStats>,
+    /// reconstruction loss traces per block (empty for learning-free methods)
+    pub loss_traces: Vec<Vec<f32>>,
+    pub wall: Duration,
+    /// rough working-set estimate: bytes of cached activations + weights
+    pub mem_bytes: usize,
+}
+
+fn merge_stats(dst: &mut BlockStats, src: &BlockStats) {
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        d.range.update(s.range.min, s.range.max);
+        if d.amax.is_empty() {
+            d.amax = s.amax.clone();
+        } else {
+            for (a, &b) in d.amax.iter_mut().zip(&s.amax) {
+                *a = a.max(b);
+            }
+        }
+    }
+}
+
+/// Build calibration id batches: `samples` sequences from the calibration
+/// domains, grouped into [calib_batch × seq] rows (paper: 512 C4 samples).
+pub fn calib_ids(dim: &ModelDim, corpus: &Corpus, samples: usize, seed: u64)
+                 -> Vec<Vec<i32>> {
+    let mut rng = Rng::new(seed);
+    let n_batches = samples.div_ceil(dim.calib_batch);
+    (0..n_batches)
+        .map(|_| corpus.calib_batch(dim.calib_batch, dim.seq, &mut rng))
+        .collect()
+}
+
+/// Quantize a full model with `method` under `scheme`.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_model(rt: &Runtime, engine: &Engine, weights: &Weights,
+                      corpus: &Corpus, method: Method, scheme: Scheme,
+                      recon: ReconConfig) -> Result<QuantizeOutcome> {
+    if method == Method::Fp16 {
+        bail!("FP16 is the baseline, not a quantization method");
+    }
+    let t0 = Instant::now();
+    let dim = &engine.dim;
+    let id_batches = calib_ids(dim, corpus, recon.calib_samples, recon.seed);
+
+    // embed calibration batches once; FP and quant streams start equal
+    let mut x_fp: Vec<Tensor> = id_batches
+        .iter()
+        .map(|ids| engine.embed(&weights.emb, ids))
+        .collect::<Result<_>>()?;
+    let mut x_q: Vec<Tensor> = x_fp.clone();
+
+    let mut mem_bytes = x_fp.iter().map(|t| t.len() * 8).sum::<usize>();
+    let mut out_blocks = Vec::with_capacity(dim.layers);
+    let mut out_stats = Vec::with_capacity(dim.layers);
+    let mut loss_traces = Vec::with_capacity(dim.layers);
+
+    for (bi, bw) in weights.blocks.iter().enumerate() {
+        // (1) FP stream: targets + FP-calibrated stats
+        let mut stats: BlockStats = Default::default();
+        let mut y_t = Vec::with_capacity(x_fp.len());
+        for x in &x_fp {
+            let o = engine.block_fp(x, bw)?;
+            merge_stats(&mut stats, &o.stats);
+            y_t.push(o.y);
+        }
+        // (2) quant-stream activations for Hessian/saliency methods
+        let acts_q: Option<Vec<[Tensor; 4]>> = if needs_acts(method) {
+            let mut all = Vec::with_capacity(x_q.len());
+            for x in &x_q {
+                all.push(engine.block_fp(x, bw)?.acts);
+            }
+            mem_bytes = mem_bytes.max(
+                all.iter()
+                    .map(|a| a.iter().map(|t| t.len() * 4).sum::<usize>())
+                    .sum::<usize>());
+            Some(all)
+        } else {
+            None
+        };
+
+        // (3) method driver
+        let ctx = BlockContext {
+            dim,
+            weights: bw,
+            x_q: &x_q,
+            y_t: &y_t,
+            acts_q: acts_q.as_deref(),
+            stats: &stats,
+            scheme,
+            recon,
+            block_index: bi,
+        };
+        let res = quantize_block(rt, engine, method, &ctx)?;
+        let whats = res.whats();
+
+        // (4) runtime re-calibration on the quantized block
+        let qbw = BlockWeights {
+            ws: whats.clone(),
+            norm_attn: res.norm_attn.clone(),
+            norm_ffn: res.norm_ffn.clone(),
+        };
+        let mut fstats: BlockStats = Default::default();
+        for x in &x_q {
+            let o = engine.block_fp(x, &qbw)?;
+            merge_stats(&mut fstats, &o.stats);
+        }
+
+        // (5) advance the quantized-input stream
+        for x in x_q.iter_mut() {
+            *x = engine.block_q(x, &whats, &res.norm_attn, &res.norm_ffn,
+                                &fstats, &scheme)?;
+        }
+        x_fp = y_t;
+
+        out_blocks.push(QuantizedBlock {
+            ws: res.packed(scheme.w_bits)?,
+            norm_attn: res.norm_attn,
+            norm_ffn: res.norm_ffn,
+        });
+        out_stats.push(fstats);
+        loss_traces.push(res.loss_trace);
+    }
+
+    let model = QuantizedModel {
+        dim: dim.clone(),
+        bits: scheme.w_bits,
+        emb: weights.emb.clone(),
+        blocks: out_blocks,
+        final_norm: weights.final_norm.clone(),
+        head: weights.head.clone(),
+    };
+    mem_bytes += model.storage_bytes();
+    Ok(QuantizeOutcome {
+        model,
+        stats: out_stats,
+        loss_traces,
+        wall: t0.elapsed(),
+        mem_bytes,
+    })
+}

@@ -1,0 +1,121 @@
+//! Pre-training driver: produces the FP baseline that PTQ quantizes, by
+//! threading (params, m, v) literals through the `train_step` AOT artifact.
+//! This is the e2e requirement's loss-curve run (EXPERIMENTS.md §e2e).
+
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::data::Corpus;
+use crate::model::Weights;
+use crate::rng::Rng;
+use crate::runtime::{from_lit, ids_lit, scalar_from_lit, scalar_lit, to_lit,
+                     Runtime};
+
+pub struct TrainOutcome {
+    pub weights: Weights,
+    /// (step, loss) pairs at the logging cadence
+    pub losses: Vec<(usize, f32)>,
+    pub wall_secs: f64,
+}
+
+/// Linear warmup then cosine decay to 10% — computed host-side, fed as a
+/// scalar input each step.
+pub fn lr_at(step: usize, total: usize, base: f32) -> f32 {
+    let warmup = (total / 20).max(1);
+    if step < warmup {
+        return base * (step + 1) as f32 / warmup as f32;
+    }
+    let t = (step - warmup) as f32 / (total - warmup).max(1) as f32;
+    let cos = 0.5 * (1.0 + (std::f32::consts::PI * t).cos());
+    base * (0.1 + 0.9 * cos)
+}
+
+/// Train for `steps` on the synthetic corpus; logs every `log_every` steps.
+pub fn pretrain(rt: &Runtime, cfg: &str, corpus: &Corpus, steps: usize,
+                base_lr: f32, seed: u64, log_every: usize)
+                -> Result<TrainOutcome> {
+    let dim = rt.dim(cfg)?;
+    let exec = rt.exec(&format!("train_step_{cfg}"))?;
+    let mut rng = Rng::new(seed);
+    let t0 = Instant::now();
+
+    // initial state as literals
+    let init = Weights::init(&dim, &mut rng);
+    let flat = init.flat();
+    let n = flat.len();
+    let mut params: Vec<Literal> =
+        flat.iter().map(|t| to_lit(t)).collect::<Result<_>>()?;
+    let zeros = |src: &[&crate::tensor::Tensor]| -> Result<Vec<Literal>> {
+        src.iter()
+            .map(|t| to_lit(&crate::tensor::Tensor::zeros(&t.dims)))
+            .collect()
+    };
+    let mut m = zeros(&flat)?;
+    let mut v = zeros(&flat)?;
+
+    let mut losses = Vec::new();
+    for step in 0..steps {
+        let (ids, tgt) = corpus.train_batch(dim.train_batch, dim.seq, &mut rng);
+        let ids_l = ids_lit(&ids, &[dim.train_batch, dim.seq])?;
+        let tgt_l = ids_lit(&tgt, &[dim.train_batch, dim.seq])?;
+        let t_l = scalar_lit(step as f32);
+        let lr_l = scalar_lit(lr_at(step, steps, base_lr));
+
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(3 * n + 4);
+        inputs.extend(params.iter());
+        inputs.extend(m.iter());
+        inputs.extend(v.iter());
+        inputs.push(&ids_l);
+        inputs.push(&tgt_l);
+        inputs.push(&t_l);
+        inputs.push(&lr_l);
+        let mut outs = exec.run(&inputs)
+            .with_context(|| format!("train step {step}"))?;
+        if outs.len() != 1 + 3 * n {
+            bail!("train_step output count {}", outs.len());
+        }
+        let loss = scalar_from_lit(&outs[0])?;
+        if !loss.is_finite() {
+            bail!("training diverged at step {step} (loss {loss})");
+        }
+        if step % log_every == 0 || step + 1 == steps {
+            losses.push((step, loss));
+        }
+        let rest = outs.split_off(1);
+        let mut it = rest.into_iter();
+        params = (&mut it).take(n).collect();
+        m = (&mut it).take(n).collect();
+        v = (&mut it).take(n).collect();
+    }
+
+    // read back final params
+    let dims: Vec<Vec<usize>> = flat.iter().map(|t| t.dims.clone()).collect();
+    let tensors: Result<Vec<_>> = params
+        .iter()
+        .zip(&dims)
+        .map(|(l, d)| from_lit(l, d))
+        .collect();
+    let weights = Weights::from_flat(&dim, tensors?)?;
+    Ok(TrainOutcome { weights, losses, wall_secs: t0.elapsed().as_secs_f64() })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let base = 1e-3;
+        // warmup rises
+        assert!(lr_at(0, 1000, base) < lr_at(20, 1000, base));
+        // decays later
+        assert!(lr_at(900, 1000, base) < lr_at(100, 1000, base));
+        // never exceeds base, never hits 0
+        for s in 0..1000 {
+            let lr = lr_at(s, 1000, base);
+            assert!(lr > 0.0 && lr <= base + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic data substrate — the stand-in for C4 (calibration), common-sense
+//! reasoning benchmarks, MMLU, and WikiText-2 (DESIGN.md §2 substitutions).
+//!
+//! A corpus is a mixture of *domains*, each an affine-map language over the
+//! shared vocabulary. Calibration draws from a fixed subset of domains; the
+//! "CSR-like" benchmark uses in-calibration domains, the "MMLU-like" benchmark
+//! uses domains that were seen at pre-training time but are absent from
+//! calibration — reproducing the distribution-shift axis on which FlexRound
+//! overfits and LRQ generalizes (paper Figs. 1, 3).
+
+pub mod corpus;
+pub mod tasks;
+
+pub use corpus::{Corpus, CorpusConfig};
+pub use tasks::{McTask, TaskKind, TaskSet};

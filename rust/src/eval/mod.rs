@@ -1,0 +1,174 @@
+//! Evaluation harness: perplexity, multiple-choice accuracy (lm-eval-harness
+//! scoring rule), and the accumulated-RMSE diagnostic of Figs. 3/6/7.
+
+use anyhow::{bail, Result};
+
+use crate::config::Scheme;
+use crate::coordinator::engine::{BlockStats, Engine};
+use crate::data::{Corpus, TaskSet};
+use crate::model::{QuantizedModel, Weights};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// A model to evaluate: FP baseline or a quantized checkpoint with its
+/// runtime activation ranges + scheme flags.
+pub enum ModelView<'a> {
+    Fp(&'a Weights),
+    Quant {
+        model: &'a QuantizedModel,
+        stats: &'a [BlockStats],
+        scheme: Scheme,
+    },
+}
+
+impl<'a> ModelView<'a> {
+    fn forward(&self, engine: &Engine, ids: &[i32], targets: &[i32])
+               -> Result<(f32, Tensor)> {
+        match self {
+            ModelView::Fp(w) => engine.fp_forward(w, ids, targets),
+            ModelView::Quant { model, stats, scheme } =>
+                engine.q_forward(model, stats, scheme, ids, targets),
+        }
+    }
+}
+
+/// Mean perplexity over a held-out LM stream (the WikiText-2 analogue).
+pub fn perplexity(engine: &Engine, view: &ModelView, corpus: &Corpus,
+                  n_batches: usize, seed: u64) -> Result<f64> {
+    let dim = &engine.dim;
+    let mut rng = Rng::new(seed);
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for _ in 0..n_batches {
+        let (ids, tgt) = corpus.eval_stream(dim.calib_batch, dim.seq, &mut rng);
+        let (loss, _) = view.forward(engine, &ids, &tgt)?;
+        nll += loss as f64;
+        count += 1;
+    }
+    Ok((nll / count.max(1) as f64).exp())
+}
+
+/// Multiple-choice accuracy: per item, pick the choice maximizing the summed
+/// log-prob of its continuation tokens given the prefix.
+pub fn mc_accuracy(engine: &Engine, view: &ModelView, tasks: &TaskSet)
+                   -> Result<f64> {
+    let dim = &engine.dim;
+    if tasks.is_empty() {
+        bail!("empty task set");
+    }
+    // flatten (task, choice) into scoring rows
+    struct Row {
+        score_from: usize, // first predicted position of the continuation
+        score_to: usize,
+    }
+    let mut rows = Vec::new();
+    let mut ids_rows: Vec<Vec<i32>> = Vec::new();
+    for t in tasks.tasks.iter() {
+        let plen = t.prefix.len();
+        for ch in t.choices.iter() {
+            let mut seq: Vec<i32> = Vec::with_capacity(dim.seq);
+            seq.extend_from_slice(&t.prefix);
+            seq.extend_from_slice(ch);
+            if seq.len() > dim.seq {
+                bail!("task longer than model seq ({} > {})", seq.len(),
+                      dim.seq);
+            }
+            seq.resize(dim.seq, 0);
+            // target[pos] = token at pos+1 is scored at pos; the first
+            // continuation token sits at index plen → scored at plen-1
+            rows.push(Row {
+                score_from: plen - 1,
+                score_to: plen - 1 + ch.len(),
+            });
+            ids_rows.push(seq);
+        }
+    }
+
+    // batch rows through the engine
+    let b = dim.calib_batch;
+    let mut scores = vec![0.0f32; rows.len()];
+    let mut i = 0usize;
+    while i < rows.len() {
+        let hi = (i + b).min(rows.len());
+        let mut ids = Vec::with_capacity(b * dim.seq);
+        let mut tgt = Vec::with_capacity(b * dim.seq);
+        for r in i..hi {
+            let row = &ids_rows[r];
+            ids.extend_from_slice(row);
+            let mut t: Vec<i32> = row[1..].to_vec();
+            t.push(0);
+            tgt.extend(t);
+        }
+        // pad the final partial batch by repeating the last row
+        for _ in hi..(i + b) {
+            let row = &ids_rows[hi - 1];
+            ids.extend_from_slice(row);
+            let mut t: Vec<i32> = row[1..].to_vec();
+            t.push(0);
+            tgt.extend(t);
+        }
+        let (_, logp) = view.forward(engine, &ids, &tgt)?;
+        for r in i..hi {
+            let within = r - i;
+            let rowp = &logp.data[within * dim.seq..(within + 1) * dim.seq];
+            let s: f32 = rowp[rows[r].score_from..rows[r].score_to].iter()
+                .sum();
+            scores[r] = s;
+        }
+        i = hi;
+    }
+
+    // argmax per task
+    let mut correct = 0usize;
+    let n_choices = tasks.tasks[0].choices.len();
+    for (ti, t) in tasks.tasks.iter().enumerate() {
+        let base = ti * n_choices;
+        let mut best = 0usize;
+        for c in 1..n_choices {
+            if scores[base + c] > scores[base + best] {
+                best = c;
+            }
+        }
+        if best == t.answer {
+            correct += 1;
+        }
+    }
+    Ok(correct as f64 / tasks.len() as f64)
+}
+
+/// Accumulated RMSE between the FP stream and the quantized stream, per block
+/// (Fig. 3): run the same ids through both and record
+/// `RMSE(X_fp[b+1], X̃[b+1])` for every block.
+pub fn rmse_curve(engine: &Engine, weights: &Weights, qm: &QuantizedModel,
+                  stats: &[BlockStats], scheme: &Scheme, ids: &[i32])
+                  -> Result<Vec<f64>> {
+    let mut x_fp = engine.embed(&weights.emb, ids)?;
+    let mut x_q = engine.embed(&qm.emb, ids)?;
+    let mut out = Vec::with_capacity(weights.blocks.len());
+    for (bw, (qb, st)) in weights.blocks.iter()
+        .zip(qm.blocks.iter().zip(stats)) {
+        x_fp = engine.block_fp(&x_fp, bw)?.y;
+        let whats = qb.dequant_ws();
+        x_q = engine.block_q(&x_q, &whats, &qb.norm_attn, &qb.norm_ffn, st,
+                             scheme)?;
+        out.push(x_fp.rmse(&x_q));
+    }
+    Ok(out)
+}
+
+/// Paper-style CSR/MMLU summary for one model view.
+pub struct EvalSummary {
+    pub csr_acc: f64,
+    pub mmlu_acc: f64,
+    pub ppl: f64,
+}
+
+pub fn evaluate(engine: &Engine, view: &ModelView, corpus: &Corpus,
+                csr: &TaskSet, mmlu: &TaskSet, ppl_batches: usize,
+                seed: u64) -> Result<EvalSummary> {
+    Ok(EvalSummary {
+        csr_acc: mc_accuracy(engine, view, csr)?,
+        mmlu_acc: mc_accuracy(engine, view, mmlu)?,
+        ppl: perplexity(engine, view, corpus, ppl_batches, seed)?,
+    })
+}

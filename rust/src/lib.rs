@@ -1,0 +1,38 @@
+//! # LRQ — Low-Rank Quantization for LLMs (NAACL 2025) in Rust + JAX/Pallas
+//!
+//! Reproduction of *"LRQ: Optimizing Post-Training Quantization for Large
+//! Language Models by Learning Low-Rank Weight-Scaling Matrices"* as a
+//! three-layer stack:
+//!
+//! * **L3 (this crate)** — the coordinator: block-wise PTQ pipeline,
+//!   calibration, method drivers (RTN / SmoothQuant / GPTQ / AWQ / FlexRound /
+//!   LRQ), evaluation harness, batch-scoring server, benchmark tables.
+//!   Python never runs on this path.
+//! * **L2 (python/compile, build-time)** — JAX model / reconstruction /
+//!   training steps, AOT-lowered to HLO text in `artifacts/`.
+//! * **L1 (python/compile/kernels, build-time)** — Pallas kernels (fused LRQ
+//!   fake-quant, per-token quant, dequant-matmul) lowered into the same HLO.
+//!
+//! The [`runtime`] module loads the artifacts through the PJRT C API (`xla`
+//! crate) and exposes typed executables the coordinator drives.
+//!
+//! See `DESIGN.md` for the full system inventory and the experiment index
+//! mapping every paper table/figure to a module and bench target.
+
+pub mod bench;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod methods;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod rng;
+pub mod runtime;
+pub mod serve;
+pub mod tables;
+pub mod tensor;
+pub mod testutil;
+
+pub use anyhow::{anyhow, bail, Context, Result};

@@ -1,0 +1,289 @@
+//! `lrq` — coordinator CLI.
+//!
+//! ```text
+//! lrq info                              # artifacts + configs
+//! lrq train     --cfg tiny --steps 600 --lr 1e-3 --out weights.bin
+//! lrq quantize  --cfg tiny --weights weights.bin --method lrq --wbits 8 \
+//!               --act static --steps 200 --calib 64
+//! lrq eval      --cfg tiny --weights weights.bin [--method ...]
+//! lrq serve     --cfg tiny --weights weights.bin [--method lrq]
+//! lrq bench-table <id>                  # regenerate a paper table/figure
+//! lrq report                            # regenerate everything
+//! ```
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use anyhow::{Context, Result};
+use lrq::config::{ActScheme, Args, Method, ReconConfig, Scheme};
+use lrq::coordinator::{pretrain, quantize_model, Engine};
+use lrq::data::{Corpus, CorpusConfig, TaskKind, TaskSet};
+use lrq::eval::{evaluate, ModelView};
+use lrq::model::Weights;
+use lrq::rng::Rng;
+use lrq::runtime::Runtime;
+use lrq::tables;
+
+fn main() -> ExitCode {
+    let args = match Args::parse(std::env::args().skip(1)) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("argument error: {e:#}");
+            return ExitCode::FAILURE;
+        }
+    };
+    match dispatch(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "info" => info(args),
+        "train" => train(args),
+        "quantize" => quantize(args),
+        "eval" => eval_cmd(args),
+        "serve" => serve(args),
+        "bench-table" => {
+            let id = args
+                .positional
+                .get(1)
+                .context("bench-table needs an id (e.g. t1, fig3)")?;
+            tables::run_table(id, args)
+        }
+        "report" => tables::run_all(args),
+        "debug-loss" => debug_loss(args),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+lrq — LRQ (NAACL 2025) reproduction: Rust coordinator + JAX/Pallas AOT compute
+
+commands:
+  info                               show artifact manifest + configs
+  train    --cfg C --steps N --lr F --out PATH [--seed S]
+  quantize --cfg C --weights PATH --method M --wbits B
+           [--act none|static|token] [--abits B] [--no-kv] [--steps N]
+           [--calib N] [--rank R] [--lr F]
+  eval     --cfg C --weights PATH [--method M ...quantize flags]
+  serve    --cfg C --weights PATH [--method M] [--requests N] [--wbits B]
+  bench-table ID                     regenerate one paper table/figure
+                                     (fig1 fig2 fig3 fig4a fig4b fig5
+                                      t1 t3 t5 t7 t9 t13 t29 t30 t31 kvq)
+  report                             regenerate all tables/figures
+
+common flags: --artifacts DIR (default ./artifacts), --seed S";
+
+fn scheme_from(args: &Args) -> Result<Scheme> {
+    let w_bits: u32 = args.parse_as("wbits", 8)?;
+    let act: ActScheme = args.parse_as("act", ActScheme::PerTensorStatic)?;
+    let a_bits: u32 = args.parse_as("abits", 8)?;
+    let kv = !args.flag("no-kv") && !matches!(act, ActScheme::None);
+    Ok(Scheme { w_bits, act, a_bits, kv_quant: kv, kv_bits: 8 })
+}
+
+fn recon_from(args: &Args) -> Result<ReconConfig> {
+    Ok(ReconConfig {
+        steps: args.parse_as("steps", 200)?,
+        lr: args.parse_as("lr", 3e-4)?,
+        calib_samples: args.parse_as("calib", 64)?,
+        rank: args.parse_as("rank", 0)?,
+        seed: args.parse_as("seed", 1234)?,
+    })
+}
+
+fn load_runtime(args: &Args) -> Result<Runtime> {
+    let dir = args.get_or("artifacts", "artifacts");
+    Runtime::load(Path::new(&dir))
+}
+
+fn info(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    println!("platform: {} ({} devices)", rt.client.platform_name(),
+             rt.client.device_count());
+    println!("configs:");
+    let mut cfgs: Vec<_> = rt.manifest.configs.values().collect();
+    cfgs.sort_by(|a, b| a.name.cmp(&b.name));
+    for c in cfgs {
+        println!("  {}: vocab={} d={} heads={} layers={} ff={} seq={} \
+                  rank={} (~{:.1}M params)",
+                 c.name, c.vocab, c.d, c.heads, c.layers, c.ff, c.seq, c.rank,
+                 c.param_count() as f64 / 1e6);
+    }
+    println!("artifacts ({}):", rt.manifest.artifacts.len());
+    let mut names: Vec<_> = rt.manifest.artifacts.keys().collect();
+    names.sort();
+    for n in names {
+        let a = &rt.manifest.artifacts[n];
+        println!("  {n}: {} in / {} out", a.inputs.len(), a.outputs.len());
+    }
+    Ok(())
+}
+
+fn train(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let cfg = args.get_or("cfg", "tiny");
+    let steps: usize = args.parse_as("steps", 600)?;
+    let lr: f32 = args.parse_as("lr", 1e-3)?;
+    let seed: u64 = args.parse_as("seed", 7)?;
+    let out = args.get_or("out", &format!("weights_{cfg}.bin"));
+    let dim = rt.dim(&cfg)?;
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+
+    println!("pre-training {cfg} ({:.1}M params) for {steps} steps…",
+             dim.param_count() as f64 / 1e6);
+    let outcome = pretrain(&rt, &cfg, &corpus, steps, lr, seed, 20)?;
+    for (s, l) in &outcome.losses {
+        println!("  step {s:>5}  loss {l:.4}");
+    }
+    println!("trained in {:.1}s", outcome.wall_secs);
+    outcome.weights.save(Path::new(&out))?;
+    println!("saved {out}");
+    Ok(())
+}
+
+fn quantize(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let cfg = args.get_or("cfg", "tiny");
+    let method: Method = args.parse_as("method", Method::Lrq)?;
+    let scheme = scheme_from(args)?;
+    let recon = recon_from(args)?;
+    let dim = rt.dim(&cfg)?;
+    let wpath = args.get_or("weights", &format!("weights_{cfg}.bin"));
+    let weights = Weights::load(&dim, Path::new(&wpath))?;
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    let engine = Engine::new(&rt, &cfg)?;
+
+    println!("quantizing {cfg} with {} (W/A/KV {})…", method.paper_name(),
+             scheme.label());
+    let out = quantize_model(&rt, &engine, &weights, &corpus, method, scheme,
+                             recon)?;
+    println!("done in {:.1}s; model {:.2} MB (fp {:.2} MB, {:.2}x)",
+             out.wall.as_secs_f64(),
+             out.model.storage_bytes() as f64 / 1e6,
+             out.model.fp_equivalent_bytes() as f64 / 1e6,
+             out.model.fp_equivalent_bytes() as f64
+                 / out.model.storage_bytes() as f64);
+    for (b, trace) in out.loss_traces.iter().enumerate() {
+        if let (Some(first), Some(last)) = (trace.first(), trace.last()) {
+            println!("  block {b}: recon loss {first:.5} -> {last:.5}");
+        }
+    }
+
+    // quick eval
+    let mut rng = Rng::new(recon.seed ^ 0x5EED);
+    let csr = TaskSet::generate(&corpus, TaskKind::Csr, 100, dim.seq / 2,
+                                8, 4, &mut rng);
+    let mmlu = TaskSet::generate(&corpus, TaskKind::Mmlu, 100, dim.seq / 2,
+                                 8, 4, &mut rng);
+    let view = ModelView::Quant {
+        model: &out.model,
+        stats: &out.stats,
+        scheme,
+    };
+    let s = evaluate(&engine, &view, &corpus, &csr, &mmlu, 8, recon.seed)?;
+    println!("CSR {:.2}%  MMLU {:.2}%  PPL {:.3}", s.csr_acc * 100.0,
+             s.mmlu_acc * 100.0, s.ppl);
+    Ok(())
+}
+
+fn eval_cmd(args: &Args) -> Result<()> {
+    let rt = load_runtime(args)?;
+    let cfg = args.get_or("cfg", "tiny");
+    let dim = rt.dim(&cfg)?;
+    let wpath = args.get_or("weights", &format!("weights_{cfg}.bin"));
+    let weights = Weights::load(&dim, Path::new(&wpath))?;
+    let seed: u64 = args.parse_as("seed", 1234)?;
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    let engine = Engine::new(&rt, &cfg)?;
+    let mut rng = Rng::new(seed ^ 0x5EED);
+    let csr = TaskSet::generate(&corpus, TaskKind::Csr, 200, dim.seq / 2, 8,
+                                4, &mut rng);
+    let mmlu = TaskSet::generate(&corpus, TaskKind::Mmlu, 200, dim.seq / 2, 8,
+                                 4, &mut rng);
+
+    if let Some(m) = args.get("method") {
+        let method: Method = m.parse()?;
+        let scheme = scheme_from(args)?;
+        let recon = recon_from(args)?;
+        let out = quantize_model(&rt, &engine, &weights, &corpus, method,
+                                 scheme, recon)?;
+        let view = ModelView::Quant {
+            model: &out.model,
+            stats: &out.stats,
+            scheme,
+        };
+        let s = evaluate(&engine, &view, &corpus, &csr, &mmlu, 8, seed)?;
+        println!("{} ({}): CSR {:.2}%  MMLU {:.2}%  PPL {:.3}",
+                 method.paper_name(), scheme.label(), s.csr_acc * 100.0,
+                 s.mmlu_acc * 100.0, s.ppl);
+    } else {
+        let view = ModelView::Fp(&weights);
+        let s = evaluate(&engine, &view, &corpus, &csr, &mmlu, 8, seed)?;
+        println!("FP16: CSR {:.2}%  MMLU {:.2}%  PPL {:.3}",
+                 s.csr_acc * 100.0, s.mmlu_acc * 100.0, s.ppl);
+    }
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let cfg = args.get_or("cfg", "tiny");
+    let wpath = args.get_or("weights", &format!("weights_{cfg}.bin"));
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let method = args.get("method").map(|s| s.to_string());
+    let requests: usize = args.parse_as("requests", 200)?;
+    let seed: u64 = args.parse_as("seed", 1234)?;
+    let w_bits: u32 = args.parse_as("wbits", 4)?;
+    tables::serving_run(&artifacts, &cfg, &wpath, method.as_deref(), w_bits,
+                        requests, seed)
+}
+
+/// Consistency probe: loss reported by the train_step artifact (lr=0) vs the
+/// chained embed→block→head engine on the same weights and batch.
+fn debug_loss(args: &Args) -> Result<()> {
+    use lrq::runtime::{ids_lit, scalar_from_lit, scalar_lit, to_lit};
+    let rt = load_runtime(args)?;
+    let cfg = args.get_or("cfg", "tiny");
+    let dim = rt.dim(&cfg)?;
+    let wpath = args.get_or("weights", &format!("weights_{cfg}.bin"));
+    let weights = Weights::load(&dim, Path::new(&wpath))?;
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    let mut rng = Rng::new(42);
+    let (ids, tgt) = corpus.train_batch(dim.train_batch, dim.seq, &mut rng);
+
+    // (a) loss via train_step with lr = 0
+    let exec = rt.exec(&format!("train_step_{cfg}"))?;
+    let flat = weights.flat();
+    let mut inputs: Vec<xla::Literal> = Vec::new();
+    for t in &flat {
+        inputs.push(to_lit(t)?);
+    }
+    for t in &flat {
+        inputs.push(to_lit(&lrq::tensor::Tensor::zeros(&t.dims))?);
+    }
+    for t in &flat {
+        inputs.push(to_lit(&lrq::tensor::Tensor::zeros(&t.dims))?);
+    }
+    inputs.push(ids_lit(&ids, &[dim.train_batch, dim.seq])?);
+    inputs.push(ids_lit(&tgt, &[dim.train_batch, dim.seq])?);
+    inputs.push(scalar_lit(0.0));
+    inputs.push(scalar_lit(0.0));
+    let outs = exec.run(&inputs)?;
+    println!("train_step loss: {:.4}", scalar_from_lit(&outs[0])?);
+
+    // (b) loss via the chained engine on the first calib_batch rows
+    let engine = Engine::new(&rt, &cfg)?;
+    let rows = dim.calib_batch * dim.seq;
+    let (loss, _) = engine.fp_forward(&weights, &ids[..rows], &tgt[..rows])?;
+    println!("engine chain loss: {loss:.4}");
+    Ok(())
+}

@@ -1,0 +1,220 @@
+//! Per-channel input-scaling folds — the algebra behind SmoothQuant and AWQ.
+//!
+//! Scaling the activation at a quant point by `1/s_j` per channel while
+//! keeping the block function *exactly* identical requires compensating
+//! transforms on the surrounding weights:
+//!
+//! | point     | activation           | divide by s folds into | multiply back |
+//! |-----------|----------------------|------------------------|---------------|
+//! | `attn_in` | rmsnorm(x, na)       | `na ·= 1/s`            | wq/wk/wv cols ×s |
+//! | `o_in`    | attention output     | `wv` rows ·= 1/s       | `wo` cols ×s  |
+//! | `ffn_in`  | rmsnorm(h, nf)       | `nf ·= 1/s`            | wg/wu cols ×s |
+//! | `down_in` | silu(g)·u            | `wu` rows ·= 1/s       | `wd` cols ×s  |
+//!
+//! (`o_in` works because attention mixes across *positions*, not channels;
+//! `down_in` works because the gated product is linear in the `up` branch.)
+
+use anyhow::{bail, Result};
+
+use crate::model::BlockWeights;
+use crate::tensor::Tensor;
+
+fn scale_cols(w: &mut Tensor, s: &[f32]) {
+    let (rows, cols) = w.rc();
+    assert_eq!(cols, s.len());
+    for r in 0..rows {
+        let row = w.row_mut(r);
+        for (x, &sv) in row.iter_mut().zip(s) {
+            *x *= sv;
+        }
+    }
+}
+
+fn scale_rows(w: &mut Tensor, s_inv: &[f32]) {
+    let (rows, _cols) = w.rc();
+    assert_eq!(rows, s_inv.len());
+    for r in 0..rows {
+        let sv = s_inv[r];
+        for x in w.row_mut(r) {
+            *x *= sv;
+        }
+    }
+}
+
+/// Apply per-point smoothing scales (length = point dim, all > 0) to a block.
+/// `scales[p][j]` divides the activation channel j at point p.
+pub fn fold_block(bw: &BlockWeights, scales: &[Vec<f32>; 4])
+                  -> Result<BlockWeights> {
+    let mut out = bw.clone();
+    for (p, s) in scales.iter().enumerate() {
+        if s.iter().any(|&v| !(v > 0.0) || !v.is_finite()) {
+            bail!("fold point {p}: non-positive scale");
+        }
+    }
+    let inv = |s: &[f32]| -> Vec<f32> { s.iter().map(|&v| 1.0 / v).collect() };
+
+    // attn_in: na /= s ; wq/wk/wv columns ×= s
+    {
+        let s = &scales[0];
+        let si = inv(s);
+        for (x, &v) in out.norm_attn.data.iter_mut().zip(&si) {
+            *x *= v;
+        }
+        for i in 0..3 {
+            scale_cols(&mut out.ws[i], s);
+        }
+    }
+    // o_in: wv rows /= s ; wo columns ×= s
+    {
+        let s = &scales[1];
+        scale_rows(&mut out.ws[2], &inv(s));
+        scale_cols(&mut out.ws[3], s);
+    }
+    // ffn_in: nf /= s ; wg/wu columns ×= s
+    {
+        let s = &scales[2];
+        let si = inv(s);
+        for (x, &v) in out.norm_ffn.data.iter_mut().zip(&si) {
+            *x *= v;
+        }
+        scale_cols(&mut out.ws[4], s);
+        scale_cols(&mut out.ws[5], s);
+    }
+    // down_in: wu rows /= s ; wd columns ×= s
+    {
+        let s = &scales[3];
+        scale_rows(&mut out.ws[5], &inv(s));
+        scale_cols(&mut out.ws[6], s);
+    }
+    Ok(out)
+}
+
+/// SmoothQuant-style scales from activation/weight channel magnitudes:
+/// `s_j = amax_act_j^α / amax_w_j^(1-α)`, clamped away from 0.
+pub fn smooth_scales(amax_act: &[f32], amax_w: &[f32], alpha: f32) -> Vec<f32> {
+    amax_act
+        .iter()
+        .zip(amax_w)
+        .map(|(&a, &w)| {
+            let a = a.max(1e-5);
+            let w = w.max(1e-5);
+            (a.powf(alpha) / w.powf(1.0 - alpha)).max(1e-5)
+        })
+        .collect()
+}
+
+/// Per-input-channel |W| max across a set of consumer weights (columns).
+pub fn weight_col_amax(consumers: &[&Tensor]) -> Vec<f32> {
+    let cols = consumers[0].rc().1;
+    let mut out = vec![0.0f32; cols];
+    for w in consumers {
+        let (rows, c) = w.rc();
+        assert_eq!(c, cols);
+        for r in 0..rows {
+            for (o, &x) in out.iter_mut().zip(w.row(r)) {
+                *o = o.max(x.abs());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{BlockWeights, ModelDim};
+    use crate::rng::Rng;
+
+    fn block(rng: &mut Rng) -> BlockWeights {
+        let d = 16;
+        let f = 24;
+        BlockWeights {
+            ws: vec![
+                Tensor::randn(rng, &[d, d], 0.1),
+                Tensor::randn(rng, &[d, d], 0.1),
+                Tensor::randn(rng, &[d, d], 0.1),
+                Tensor::randn(rng, &[d, d], 0.1),
+                Tensor::randn(rng, &[f, d], 0.1),
+                Tensor::randn(rng, &[f, d], 0.1),
+                Tensor::randn(rng, &[d, f], 0.1),
+            ],
+            norm_attn: Tensor::ones(&[d]),
+            norm_ffn: Tensor::ones(&[d]),
+        }
+    }
+
+    fn unit_scales() -> [Vec<f32>; 4] {
+        [vec![1.0; 16], vec![1.0; 16], vec![1.0; 16], vec![1.0; 24]]
+    }
+
+    #[test]
+    fn identity_fold_is_noop() {
+        let mut rng = Rng::new(1);
+        let bw = block(&mut rng);
+        let out = fold_block(&bw, &unit_scales()).unwrap();
+        for i in 0..7 {
+            assert!(out.ws[i].rmse(&bw.ws[i]) < 1e-7);
+        }
+        assert!(out.norm_attn.rmse(&bw.norm_attn) < 1e-7);
+    }
+
+    #[test]
+    fn fold_unfold_roundtrip() {
+        // folding by s then by 1/s must restore the block
+        let mut rng = Rng::new(2);
+        let bw = block(&mut rng);
+        let mut scales = unit_scales();
+        for s in scales.iter_mut() {
+            for v in s.iter_mut() {
+                *v = 0.5 + rng.next_f32();
+            }
+        }
+        let inv: [Vec<f32>; 4] = [
+            scales[0].iter().map(|v| 1.0 / v).collect(),
+            scales[1].iter().map(|v| 1.0 / v).collect(),
+            scales[2].iter().map(|v| 1.0 / v).collect(),
+            scales[3].iter().map(|v| 1.0 / v).collect(),
+        ];
+        let once = fold_block(&bw, &scales).unwrap();
+        let back = fold_block(&once, &inv).unwrap();
+        for i in 0..7 {
+            assert!(back.ws[i].rmse(&bw.ws[i]) < 1e-6, "w{i}");
+        }
+        assert!(back.norm_attn.rmse(&bw.norm_attn) < 1e-6);
+        assert!(back.norm_ffn.rmse(&bw.norm_ffn) < 1e-6);
+    }
+
+    #[test]
+    fn rejects_bad_scales() {
+        let mut rng = Rng::new(3);
+        let bw = block(&mut rng);
+        let mut scales = unit_scales();
+        scales[1][3] = 0.0;
+        assert!(fold_block(&bw, &scales).is_err());
+    }
+
+    #[test]
+    fn smooth_scales_interpolate() {
+        let act = vec![8.0, 2.0];
+        let w = vec![2.0, 2.0];
+        // alpha=0 -> 1/w^1 ; alpha=1 -> act
+        let s0 = smooth_scales(&act, &w, 0.0);
+        assert!((s0[0] - 0.5).abs() < 1e-6);
+        let s1 = smooth_scales(&act, &w, 1.0);
+        assert!((s1[0] - 8.0).abs() < 1e-6);
+        // alpha=0.5 geometric mean behaviour: sqrt(8)/sqrt(2) = 2
+        let sh = smooth_scales(&act, &w, 0.5);
+        assert!((sh[0] - 2.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn weight_col_amax_across_consumers() {
+        let a = Tensor::new(vec![1, 2], vec![1.0, -3.0]);
+        let b = Tensor::new(vec![2, 2], vec![0.5, 4.0, -2.0, 0.1]);
+        assert_eq!(weight_col_amax(&[&a, &b]), vec![2.0, 4.0]);
+        let _ = ModelDim {
+            name: "x".into(), vocab: 1, d: 1, heads: 1, layers: 1, ff: 1,
+            seq: 1, train_batch: 1, calib_batch: 1, recon_batch: 1, rank: 1,
+        };
+    }
+}

@@ -1,0 +1,146 @@
+//! Quantization method drivers. Learning-free methods (RTN, SmoothQuant,
+//! GPTQ, AWQ) run natively on the [`crate::tensor`] substrate; learned
+//! methods (FlexRound, LRQ and ablations) drive the AOT `recon_*` artifacts
+//! through [`recon_driver`].
+//!
+//! Every driver consumes a [`BlockContext`] and produces a
+//! [`BlockQuantResult`]: per-linear grids + integer codes (+ possibly
+//! transformed norm weights, for the smoothing-based methods).
+
+pub mod awq;
+pub mod fold;
+pub mod gptq;
+pub mod recon_driver;
+pub mod rtn;
+pub mod smoothquant;
+
+use anyhow::Result;
+
+use crate::config::{Method, ReconConfig, Scheme};
+use crate::coordinator::engine::{BlockStats, Engine};
+use crate::model::{BlockWeights, ModelDim};
+use crate::quant::{ChannelGrid, PackedMatrix};
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+
+/// Everything a method needs to quantize one Transformer block.
+pub struct BlockContext<'a> {
+    pub dim: &'a ModelDim,
+    pub weights: &'a BlockWeights,
+    /// quant-stream block inputs (x̃), one [B,S,D] tensor per calib batch
+    pub x_q: &'a [Tensor],
+    /// FP block outputs on the FP stream (the reconstruction target)
+    pub y_t: &'a [Tensor],
+    /// activations at the 4 quant points, computed on the quant stream
+    /// (only present when the method asked for them)
+    pub acts_q: Option<&'a [[Tensor; 4]]>,
+    /// calibrated FP activation stats (static scales)
+    pub stats: &'a BlockStats,
+    pub scheme: Scheme,
+    pub recon: ReconConfig,
+    pub block_index: usize,
+}
+
+/// Which act point feeds each of the 7 linears (canonical order).
+pub const LINEAR_ACT_POINT: [usize; 7] = [0, 0, 0, 1, 2, 2, 3];
+
+/// Result of quantizing one block.
+pub struct BlockQuantResult {
+    /// per-linear (grid, integer codes) in canonical order
+    pub grids: Vec<ChannelGrid>,
+    pub codes: Vec<Tensor>,
+    /// norm weights (transformed for smoothing-based methods)
+    pub norm_attn: Tensor,
+    pub norm_ffn: Tensor,
+    /// reconstruction loss trace (empty for learning-free methods)
+    pub loss_trace: Vec<f32>,
+}
+
+impl BlockQuantResult {
+    /// Dequantized Ŵ per linear.
+    pub fn whats(&self) -> Vec<Tensor> {
+        self.grids
+            .iter()
+            .zip(&self.codes)
+            .map(|(g, c)| {
+                let (rows, cols) = c.rc();
+                let mut data = Vec::with_capacity(rows * cols);
+                for r in 0..rows {
+                    let s = g.scale[r];
+                    let z = g.zp[r];
+                    for cc in 0..cols {
+                        data.push((c.data[r * cols + cc] - z) * s);
+                    }
+                }
+                Tensor::new(vec![rows, cols], data)
+            })
+            .collect()
+    }
+
+    /// Pack into the storage format.
+    pub fn packed(&self, bits: u32) -> Result<Vec<PackedMatrix>> {
+        self.grids
+            .iter()
+            .zip(&self.codes)
+            .map(|(g, c)| PackedMatrix::from_codes(c, &g.scale, &g.zp, bits))
+            .collect()
+    }
+}
+
+/// Does this method need per-point activations (`acts_q`) captured?
+pub fn needs_acts(method: Method) -> bool {
+    matches!(method, Method::Gptq | Method::Awq) || method.uses_smooth()
+}
+
+#[cfg(test)]
+pub(crate) mod testsupport {
+    use crate::model::{BlockWeights, ModelDim};
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    pub fn test_dim() -> ModelDim {
+        ModelDim {
+            name: "t".into(), vocab: 64, d: 16, heads: 2, layers: 2, ff: 24,
+            seq: 8, train_batch: 2, calib_batch: 2, recon_batch: 2, rank: 4,
+        }
+    }
+
+    pub fn test_block(rng: &mut Rng, dim: &ModelDim) -> BlockWeights {
+        let shapes = dim.block_weight_shapes();
+        BlockWeights {
+            ws: shapes
+                .iter()
+                .map(|(co, ci)| Tensor::randn(rng, &[*co, *ci], 0.1))
+                .collect(),
+            norm_attn: Tensor::ones(&[dim.d]),
+            norm_ffn: Tensor::ones(&[dim.d]),
+        }
+    }
+}
+
+/// Dispatch a method over one block.
+#[allow(clippy::too_many_arguments)]
+pub fn quantize_block(rt: &Runtime, engine: &Engine, method: Method,
+                      ctx: &BlockContext) -> Result<BlockQuantResult> {
+    match method {
+        Method::Fp16 => unreachable!("FP16 is not a quantization method"),
+        Method::Rtn => rtn::quantize_block(ctx),
+        Method::SmoothQuant => smoothquant::quantize_block(ctx),
+        Method::Gptq => gptq::quantize_block(ctx),
+        Method::Awq => awq::quantize_block(ctx),
+        Method::FlexRound | Method::Lrq | Method::LrqNoBias =>
+            recon_driver::quantize_block(rt, engine, method, ctx, None),
+        Method::SqFlexRound | Method::SqLrq => {
+            // Appendix L: SmoothQuant preprocessing, then reconstruction
+            // starts from the smoothed weights.
+            let (smoothed, _scales) = smoothquant::smooth_block(ctx)?;
+            let inner = if method == Method::SqLrq {
+                Method::Lrq
+            } else {
+                Method::FlexRound
+            };
+            recon_driver::quantize_block(rt, engine, inner, ctx,
+                                         Some(&smoothed))
+        }
+    }
+}

@@ -1,0 +1,256 @@
+//! Driver for the learned methods (FlexRound / LRQ / LRQ-no-bias): owns the
+//! Adam state threading through the `recon_*` AOT artifact, the minibatch
+//! rotation, and the finalize step that folds learned parameters into integer
+//! codes (Appendix G: inference keeps only `(s1, z, codes)`).
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::config::Method;
+use crate::coordinator::engine::Engine;
+use crate::model::BlockWeights;
+use crate::quant::{grid_search_scales, qmax, quantize_int_codes, ChannelGrid,
+                   LrqParams};
+use crate::rng::Rng;
+use crate::runtime::{scalar_from_lit, scalar_lit, to_lit, Exec, Runtime};
+use crate::tensor::Tensor;
+
+use super::{BlockContext, BlockQuantResult};
+
+/// Learnable bundle layout per linear (mirrors python theta_spec).
+fn theta_leaves(method: Method) -> usize {
+    match method {
+        Method::Lrq => 5,        // ds1 l2 u2 r2 c2
+        Method::LrqNoBias => 3,  // ds1 l2 u2
+        Method::FlexRound => 2,  // ds1 s2
+        _ => unreachable!(),
+    }
+}
+
+fn artifact_name(method: Method, cfg: &str, rank: usize) -> String {
+    match method {
+        Method::Lrq => format!("recon_lrq_{cfg}_r{rank}"),
+        Method::LrqNoBias => format!("recon_lrq_nobias_{cfg}_r{rank}"),
+        Method::FlexRound => format!("recon_fr_{cfg}"),
+        _ => unreachable!(),
+    }
+}
+
+/// Initial theta literals for one linear (RTN start — see recon.py).
+fn init_theta(method: Method, rng: &mut Rng, cout: usize, cin: usize,
+              rank: usize) -> Result<Vec<Literal>> {
+    let z = |d: &[usize]| to_lit(&Tensor::zeros(d));
+    Ok(match method {
+        Method::Lrq => vec![
+            z(&[cout])?,
+            z(&[cout, rank])?,
+            to_lit(&Tensor::randn(rng, &[rank, cin], 0.01))?,
+            z(&[cout])?,
+            z(&[cin])?,
+        ],
+        Method::LrqNoBias => vec![
+            z(&[cout])?,
+            z(&[cout, rank])?,
+            to_lit(&Tensor::randn(rng, &[rank, cin], 0.01))?,
+        ],
+        Method::FlexRound => vec![z(&[cout])?, z(&[cout, cin])?],
+        _ => unreachable!(),
+    })
+}
+
+/// Split a [B,S,D] calib batch into recon_batch-sized minibatch literals.
+fn minibatches(x_q: &[Tensor], y_t: &[Tensor], rb: usize)
+               -> Result<Vec<(Literal, Literal)>> {
+    let mut out = Vec::new();
+    for (x, y) in x_q.iter().zip(y_t) {
+        let b = x.dims[0];
+        let mut lo = 0;
+        while lo + rb <= b {
+            out.push((to_lit(&x.slice_outer(lo, lo + rb))?,
+                      to_lit(&y.slice_outer(lo, lo + rb))?));
+            lo += rb;
+        }
+    }
+    if out.is_empty() {
+        bail!("no reconstruction minibatches (batch < recon_batch?)");
+    }
+    Ok(out)
+}
+
+pub struct ReconOutcome {
+    pub grids: Vec<ChannelGrid>,
+    pub codes: Vec<Tensor>,
+    pub loss_trace: Vec<f32>,
+}
+
+/// Run `steps` of block reconstruction and finalize integer codes.
+#[allow(clippy::too_many_arguments)]
+pub fn run_recon(rt: &Runtime, engine: &Engine, method: Method,
+                 ctx: &BlockContext, weights: &BlockWeights,
+                 rank: usize) -> Result<ReconOutcome> {
+    let dim = ctx.dim;
+    let exec: std::rc::Rc<Exec> =
+        rt.exec(&artifact_name(method, &dim.name, rank))?;
+    let qm = qmax(ctx.scheme.w_bits);
+    let mut rng = Rng::new(ctx.recon.seed ^ (ctx.block_index as u64) << 32);
+
+    // frozen inputs: ws, norms, s1_init (grid-searched), z
+    let grids0: Vec<ChannelGrid> = weights
+        .ws
+        .iter()
+        .map(|w| grid_search_scales(w, qm, 40))
+        .collect();
+    let mut frozen: Vec<Literal> = Vec::new();
+    for w in &weights.ws {
+        frozen.push(to_lit(w)?);
+    }
+    frozen.push(to_lit(&weights.norm_attn)?);
+    frozen.push(to_lit(&weights.norm_ffn)?);
+    for g in &grids0 {
+        frozen.push(to_lit(&Tensor::new(vec![g.rows()], g.scale.clone()))?);
+    }
+    for g in &grids0 {
+        frozen.push(to_lit(&Tensor::new(vec![g.rows()], g.zp.clone()))?);
+    }
+
+    // learnable state: theta, m, v (literals threaded through the artifact)
+    let nleaves = theta_leaves(method);
+    let mut theta: Vec<Literal> = Vec::new();
+    for (w, _g) in weights.ws.iter().zip(&grids0) {
+        let (co, ci) = w.rc();
+        theta.extend(init_theta(method, &mut rng, co, ci, rank)?);
+    }
+    let zeros_like = |lits: &[Literal]| -> Result<Vec<Literal>> {
+        lits.iter()
+            .map(|l| {
+                let n = l.element_count();
+                // shape doesn't matter to XLA beyond element count + layout;
+                // reuse the literal's own shape via manifest-free path:
+                let shape = l.array_shape()?;
+                let dims: Vec<usize> =
+                    shape.dims().iter().map(|&d| d as usize).collect();
+                let _ = n;
+                to_lit(&Tensor::zeros(&dims))
+            })
+            .collect()
+    };
+    let mut m = zeros_like(&theta)?;
+    let mut v = zeros_like(&theta)?;
+
+    // act-quant tail (static scales from calibrated stats + scheme flags)
+    let tail = engine.act_tail(ctx.stats, &ctx.scheme, true)?;
+
+    let batches = minibatches(ctx.x_q, ctx.y_t, dim.recon_batch)?;
+    let mut loss_trace = Vec::with_capacity(ctx.recon.steps);
+    for step in 0..ctx.recon.steps {
+        let (x_lit, y_lit) = &batches[step % batches.len()];
+        let t_lit = scalar_lit(step as f32);
+        // warmup + cosine decay (same schedule as pre-training) keeps the
+        // higher paper-style peak learning rates stable
+        let lr = scalar_lit(crate::coordinator::trainer::lr_at(
+            step, ctx.recon.steps, ctx.recon.lr));
+        let mut inputs: Vec<&Literal> = Vec::with_capacity(
+            2 + frozen.len() + 3 * theta.len() + 2 + tail.len());
+        inputs.push(x_lit);
+        inputs.push(y_lit);
+        inputs.extend(frozen.iter());
+        inputs.extend(theta.iter());
+        inputs.extend(m.iter());
+        inputs.extend(v.iter());
+        inputs.push(&t_lit);
+        inputs.push(&lr);
+        inputs.extend(tail.iter());
+        let mut outs = exec.run(&inputs)
+            .with_context(|| format!("recon step {step}"))?;
+        let nt = theta.len();
+        if outs.len() != 1 + 3 * nt {
+            bail!("recon output count {} != {}", outs.len(), 1 + 3 * nt);
+        }
+        loss_trace.push(scalar_from_lit(&outs[0])?);
+        // rotate state: outputs replace theta/m/v
+        let rest = outs.split_off(1);
+        let mut it = rest.into_iter();
+        theta = (&mut it).take(nt).collect();
+        m = (&mut it).take(nt).collect();
+        v = (&mut it).take(nt).collect();
+    }
+
+    // finalize: read back theta, fold into integer codes (Appendix G)
+    let mut grids = Vec::with_capacity(7);
+    let mut codes = Vec::with_capacity(7);
+    let spec = &exec.spec.outputs; // theta dims start at output index 1
+    let mut li = 0usize;
+    for (wi, w) in weights.ws.iter().enumerate() {
+        let (co, ci) = w.rc();
+        let read = |k: usize, dims: &[usize]| -> Result<Tensor> {
+            crate::runtime::from_lit(&theta[k], dims)
+        };
+        let _ = &spec;
+        let (ds1, s_exp) = match method {
+            Method::Lrq => {
+                let ds1 = read(li, &[co])?;
+                let p = LrqParams {
+                    ds1: ds1.data.clone(),
+                    l2: read(li + 1, &[co, rank])?,
+                    u2: read(li + 2, &[rank, ci])?,
+                    r2: read(li + 3, &[co])?.data,
+                    c2: read(li + 4, &[ci])?.data,
+                };
+                (ds1, p.exponent())
+            }
+            Method::LrqNoBias => {
+                let ds1 = read(li, &[co])?;
+                let p = LrqParams {
+                    ds1: ds1.data.clone(),
+                    l2: read(li + 1, &[co, rank])?,
+                    u2: read(li + 2, &[rank, ci])?,
+                    r2: vec![0.0; co],
+                    c2: vec![0.0; ci],
+                };
+                (ds1, p.exponent())
+            }
+            Method::FlexRound => {
+                (read(li, &[co])?, read(li + 1, &[co, ci])?)
+            }
+            _ => unreachable!(),
+        };
+        li += nleaves;
+        let grid = ChannelGrid {
+            scale: grids0[wi]
+                .scale
+                .iter()
+                .zip(&ds1.data)
+                .map(|(&s, &d)| s * d.exp())
+                .collect(),
+            zp: grids0[wi].zp.clone(),
+            qmax: qm,
+        };
+        codes.push(quantize_int_codes(w, &grid, Some(&s_exp)));
+        grids.push(grid);
+    }
+    Ok(ReconOutcome { grids, codes, loss_trace })
+}
+
+/// Method entry point used by the dispatcher.
+pub fn quantize_block(rt: &Runtime, engine: &Engine, method: Method,
+                      ctx: &BlockContext,
+                      smoothed: Option<&BlockWeights>)
+                      -> Result<BlockQuantResult> {
+    let weights = smoothed.unwrap_or(ctx.weights);
+    let rank = match method {
+        Method::FlexRound => 0,
+        _ => {
+            let r = if ctx.recon.rank > 0 { ctx.recon.rank }
+                    else { ctx.dim.rank };
+            r
+        }
+    };
+    let out = run_recon(rt, engine, method, ctx, weights, rank)?;
+    Ok(BlockQuantResult {
+        grids: out.grids,
+        codes: out.codes,
+        norm_attn: weights.norm_attn.clone(),
+        norm_ffn: weights.norm_ffn.clone(),
+        loss_trace: out.loss_trace,
+    })
+}

@@ -1,0 +1,73 @@
+//! RTN (round-to-nearest) baseline: per-channel asymmetric grids straight
+//! from the weight ranges — no calibration, no learning. The starting point
+//! of every other method.
+
+use anyhow::Result;
+
+use crate::quant::{qmax, quantize_int_codes, rtn_grid};
+
+use super::{BlockContext, BlockQuantResult};
+
+pub fn quantize_block(ctx: &BlockContext) -> Result<BlockQuantResult> {
+    let qm = qmax(ctx.scheme.w_bits);
+    let mut grids = Vec::with_capacity(7);
+    let mut codes = Vec::with_capacity(7);
+    for w in &ctx.weights.ws {
+        let g = rtn_grid(w, qm);
+        codes.push(quantize_int_codes(w, &g, None));
+        grids.push(g);
+    }
+    Ok(BlockQuantResult {
+        grids,
+        codes,
+        norm_attn: ctx.weights.norm_attn.clone(),
+        norm_ffn: ctx.weights.norm_ffn.clone(),
+        loss_trace: Vec::new(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ReconConfig, Scheme};
+    use crate::coordinator::engine::BlockStats;
+
+    use crate::rng::Rng;
+
+
+    use crate::methods::testsupport::{test_block, test_dim};
+
+    #[test]
+    fn rtn_block_roundtrip() {
+        let dim = test_dim();
+        let mut rng = Rng::new(1);
+        let bw = test_block(&mut rng, &dim);
+        let stats: BlockStats = Default::default();
+        let ctx = BlockContext {
+            dim: &dim,
+            weights: &bw,
+            x_q: &[],
+            y_t: &[],
+            acts_q: None,
+            stats: &stats,
+            scheme: Scheme::weight_only(8),
+            recon: ReconConfig::default(),
+            block_index: 0,
+        };
+        let res = quantize_block(&ctx).unwrap();
+        assert_eq!(res.grids.len(), 7);
+        let whats = res.whats();
+        for (i, w) in bw.ws.iter().enumerate() {
+            // 8-bit RTN error per element bounded by scale/2
+            let g = &res.grids[i];
+            let (rows, cols) = w.rc();
+            for r in 0..rows {
+                for c in 0..cols {
+                    let d = (whats[i].data[r * cols + c] - w.data[r * cols + c])
+                        .abs();
+                    assert!(d <= g.scale[r] * 0.5 + 1e-6);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,191 @@
+//! SmoothQuant (Xiao et al., 2022): migrate activation-quantization
+//! difficulty into the weights with a uniform per-channel smoothing
+//! transform, then RTN-quantize the smoothed weights.
+//!
+//! `s_j = amax_act_j^α / amax_w_j^(1-α)` per input channel of each quant
+//! point; the transform is folded exactly into the surrounding weights/norms
+//! ([`super::fold`]), so the FP block function is unchanged while activations
+//! become flatter. α follows the paper's Appendix I (0.8 for Llama-style
+//! models).
+
+use anyhow::{bail, Result};
+
+use crate::model::BlockWeights;
+use crate::quant::{qmax, quantize_int_codes, rtn_grid};
+use crate::tensor::Tensor;
+
+use super::fold::{fold_block, smooth_scales, weight_col_amax};
+use super::{BlockContext, BlockQuantResult};
+
+pub const DEFAULT_ALPHA: f32 = 0.8;
+
+/// Per-channel activation amax at each of the 4 points, from the captured
+/// quant-stream activations.
+fn act_amax(ctx: &BlockContext) -> Result<[Vec<f32>; 4]> {
+    let acts = match ctx.acts_q {
+        Some(a) if !a.is_empty() => a,
+        _ => bail!("SmoothQuant needs captured activations (acts_q)"),
+    };
+    let mut out: [Vec<f32>; 4] = Default::default();
+    for batch in acts {
+        for (p, t) in batch.iter().enumerate() {
+            let amax = t.col_amax();
+            if out[p].is_empty() {
+                out[p] = amax;
+            } else {
+                for (o, a) in out[p].iter_mut().zip(amax) {
+                    *o = o.max(a);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Compute the smoothing transform for a block: returns the smoothed weights
+/// and the per-point scales used.
+pub fn smooth_block(ctx: &BlockContext)
+                    -> Result<(BlockWeights, [Vec<f32>; 4])> {
+    smooth_block_alpha(ctx, DEFAULT_ALPHA)
+}
+
+pub fn smooth_block_alpha(ctx: &BlockContext, alpha: f32)
+                          -> Result<(BlockWeights, [Vec<f32>; 4])> {
+    let amax_a = act_amax(ctx)?;
+    let bw = ctx.weights;
+    // weight-side amax per input channel, consumers per point
+    let w_amax: [Vec<f32>; 4] = [
+        weight_col_amax(&[&bw.ws[0], &bw.ws[1], &bw.ws[2]]), // attn_in: qkv
+        weight_col_amax(&[&bw.ws[3]]),                       // o_in: wo
+        weight_col_amax(&[&bw.ws[4], &bw.ws[5]]),            // ffn_in: g/u
+        weight_col_amax(&[&bw.ws[6]]),                       // down_in: wd
+    ];
+    let scales: [Vec<f32>; 4] = [
+        smooth_scales(&amax_a[0], &w_amax[0], alpha),
+        smooth_scales(&amax_a[1], &w_amax[1], alpha),
+        smooth_scales(&amax_a[2], &w_amax[2], alpha),
+        smooth_scales(&amax_a[3], &w_amax[3], alpha),
+    ];
+    // fold divides the activation by s — i.e. multiplies consumer weight
+    // columns by s — exactly SmoothQuant's W ← W·diag(s), X ← X·diag(1/s).
+    let smoothed = fold_block(bw, &scales)?;
+    Ok((smoothed, scales))
+}
+
+pub fn quantize_block(ctx: &BlockContext) -> Result<BlockQuantResult> {
+    let (smoothed, _scales) = smooth_block(ctx)?;
+    let qm = qmax(ctx.scheme.w_bits);
+    let mut grids = Vec::with_capacity(7);
+    let mut codes = Vec::with_capacity(7);
+    for w in &smoothed.ws {
+        let g = rtn_grid(w, qm);
+        codes.push(quantize_int_codes(w, &g, None));
+        grids.push(g);
+    }
+    Ok(BlockQuantResult {
+        grids,
+        codes,
+        norm_attn: smoothed.norm_attn,
+        norm_ffn: smoothed.norm_ffn,
+        loss_trace: Vec::new(),
+    })
+}
+
+/// Quantize a pre-smoothed block with RTN (used by SQ+recon variants to
+/// produce the *weights* the reconstruction starts from).
+pub fn rtn_on(bw: &BlockWeights, w_bits: u32) -> (Vec<crate::quant::ChannelGrid>, Vec<Tensor>) {
+    let qm = qmax(w_bits);
+    let mut grids = Vec::with_capacity(7);
+    let mut codes = Vec::with_capacity(7);
+    for w in &bw.ws {
+        let g = rtn_grid(w, qm);
+        codes.push(quantize_int_codes(w, &g, None));
+        grids.push(g);
+    }
+    (grids, codes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ReconConfig, Scheme};
+    use crate::coordinator::engine::BlockStats;
+    use crate::model::ModelDim;
+    use crate::rng::Rng;
+
+    fn dim() -> ModelDim {
+        ModelDim {
+            name: "t".into(), vocab: 64, d: 16, heads: 2, layers: 2, ff: 24,
+            seq: 8, train_batch: 2, calib_batch: 2, recon_batch: 2, rank: 4,
+        }
+    }
+
+    fn acts(rng: &mut Rng, d: usize, f: usize, outlier: bool)
+            -> [Tensor; 4] {
+        let mut make = |dimn: usize| {
+            let mut t = Tensor::randn(rng, &[6, dimn], 1.0);
+            if outlier {
+                // channel 0 is a big outlier — the SmoothQuant motivation
+                for r in 0..6 {
+                    t.data[r * dimn] *= 50.0;
+                }
+            }
+            t
+        };
+        [make(d), make(d), make(d), make(f)]
+    }
+
+    #[test]
+    fn smoothing_flattens_outlier_channels() {
+        let dim = dim();
+        let mut rng = Rng::new(1);
+        let bw = crate::methods::testsupport::test_block(&mut rng, &dim);
+        let a = [acts(&mut rng, 16, 24, true)];
+        let stats: BlockStats = Default::default();
+        let ctx = BlockContext {
+            dim: &dim, weights: &bw, x_q: &[], y_t: &[], acts_q: Some(&a),
+            stats: &stats, scheme: Scheme::w8a8_static(),
+            recon: ReconConfig::default(), block_index: 0,
+        };
+        let (_sm, scales) = smooth_block(&ctx).unwrap();
+        // the outlier channel gets the largest divisor at every point
+        for p in 0..4 {
+            let s = &scales[p];
+            let max = s.iter().cloned().fold(0.0f32, f32::max);
+            assert!((s[0] - max).abs() < 1e-6,
+                    "point {p}: outlier channel not maximal: {s:?}");
+        }
+    }
+
+    #[test]
+    fn quantize_block_produces_grids() {
+        let dim = dim();
+        let mut rng = Rng::new(2);
+        let bw = crate::methods::testsupport::test_block(&mut rng, &dim);
+        let a = [acts(&mut rng, 16, 24, false)];
+        let stats: BlockStats = Default::default();
+        let ctx = BlockContext {
+            dim: &dim, weights: &bw, x_q: &[], y_t: &[], acts_q: Some(&a),
+            stats: &stats, scheme: Scheme::w8a8_static(),
+            recon: ReconConfig::default(), block_index: 0,
+        };
+        let res = quantize_block(&ctx).unwrap();
+        assert_eq!(res.grids.len(), 7);
+        // smoothed norms differ from the originals
+        assert!(res.norm_attn.rmse(&bw.norm_attn) > 1e-6);
+    }
+
+    #[test]
+    fn needs_acts() {
+        let dim = dim();
+        let mut rng = Rng::new(3);
+        let bw = crate::methods::testsupport::test_block(&mut rng, &dim);
+        let stats: BlockStats = Default::default();
+        let ctx = BlockContext {
+            dim: &dim, weights: &bw, x_q: &[], y_t: &[], acts_q: None,
+            stats: &stats, scheme: Scheme::w8a8_static(),
+            recon: ReconConfig::default(), block_index: 0,
+        };
+        assert!(quantize_block(&ctx).is_err());
+    }
+}

@@ -1,0 +1,140 @@
+//! The layout contract with `python/compile/configs.py` / `train.py`:
+//! canonical weight order, shapes, and the activation-quant points.
+//!
+//! Per-block order: `wq wk wv wo wg wu wd norm_attn norm_ffn`;
+//! full model: `emb, blocks[0..L], final_norm, head` — exactly the flatten
+//! order of the `train_step` / `recon_*` artifacts.
+
+/// The 7 quantized linear projections of one block, in canonical order.
+pub const BLOCK_WEIGHT_NAMES: [&str; 7] =
+    ["wq", "wk", "wv", "wo", "wg", "wu", "wd"];
+
+/// The 4 activation-quantization points of Fig. 8 (inputs of the linears,
+/// deduplicated: qkv share, gate/up share).
+pub const ACT_POINTS: [&str; 4] = ["attn_in", "o_in", "ffn_in", "down_in"];
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightKind {
+    Wq,
+    Wk,
+    Wv,
+    Wo,
+    Wg,
+    Wu,
+    Wd,
+}
+
+impl WeightKind {
+    pub fn all() -> [WeightKind; 7] {
+        use WeightKind::*;
+        [Wq, Wk, Wv, Wo, Wg, Wu, Wd]
+    }
+
+    pub fn name(&self) -> &'static str {
+        BLOCK_WEIGHT_NAMES[*self as usize]
+    }
+}
+
+/// Model dimensions (parsed from `artifacts/manifest.txt` at runtime).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ModelDim {
+    pub name: String,
+    pub vocab: usize,
+    pub d: usize,
+    pub heads: usize,
+    pub layers: usize,
+    pub ff: usize,
+    pub seq: usize,
+    pub train_batch: usize,
+    pub calib_batch: usize,
+    pub recon_batch: usize,
+    pub rank: usize,
+}
+
+impl ModelDim {
+    pub fn head_dim(&self) -> usize {
+        self.d / self.heads
+    }
+
+    /// (Cout, Cin) of each block linear, canonical order.
+    pub fn block_weight_shapes(&self) -> [(usize, usize); 7] {
+        let (d, f) = (self.d, self.ff);
+        [(d, d), (d, d), (d, d), (d, d), (f, d), (f, d), (d, f)]
+    }
+
+    /// Feature dim at each activation-quant point.
+    pub fn act_point_dim(&self, point: &str) -> usize {
+        match point {
+            "attn_in" | "o_in" | "ffn_in" => self.d,
+            "down_in" => self.ff,
+            _ => panic!("unknown act point {point}"),
+        }
+    }
+
+    /// Total parameter count (embeddings + blocks + head).
+    pub fn param_count(&self) -> usize {
+        let block: usize = self
+            .block_weight_shapes()
+            .iter()
+            .map(|(a, b)| a * b)
+            .sum::<usize>()
+            + 2 * self.d;
+        2 * self.vocab * self.d + self.layers * block + self.d
+    }
+
+    /// Weights quantized by PTQ (block linears only, as in the paper).
+    pub fn quantized_weight_count(&self) -> usize {
+        self.layers
+            * self
+                .block_weight_shapes()
+                .iter()
+                .map(|(a, b)| a * b)
+                .sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelDim {
+        ModelDim {
+            name: "tiny".into(),
+            vocab: 512,
+            d: 128,
+            heads: 4,
+            layers: 4,
+            ff: 352,
+            seq: 64,
+            train_batch: 16,
+            calib_batch: 8,
+            recon_batch: 4,
+            rank: 32,
+        }
+    }
+
+    #[test]
+    fn shapes_consistent() {
+        let m = tiny();
+        assert_eq!(m.head_dim(), 32);
+        let shapes = m.block_weight_shapes();
+        assert_eq!(shapes[0], (128, 128));
+        assert_eq!(shapes[4], (352, 128));
+        assert_eq!(shapes[6], (128, 352));
+    }
+
+    #[test]
+    fn param_count_tiny() {
+        let m = tiny();
+        // emb + head: 2*512*128 = 131072; block: 4*128^2 + 3*352*128 + 256
+        let block = 4 * 128 * 128 + 3 * 352 * 128 + 256;
+        assert_eq!(m.param_count(), 131072 + 4 * block + 128);
+    }
+
+    #[test]
+    fn act_point_dims() {
+        let m = tiny();
+        assert_eq!(m.act_point_dim("attn_in"), 128);
+        assert_eq!(m.act_point_dim("down_in"), 352);
+    }
+}

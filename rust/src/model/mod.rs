@@ -1,0 +1,9 @@
+//! Model substrate: Llama-architecture dimensions, the weight store, init,
+//! and binary checkpoint I/O. The layout contract with the Python compile
+//! path lives in [`layout`].
+
+pub mod layout;
+pub mod store;
+
+pub use layout::{ModelDim, WeightKind, BLOCK_WEIGHT_NAMES};
+pub use store::{BlockWeights, QuantizedBlock, QuantizedModel, Weights};

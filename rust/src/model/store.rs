@@ -1,0 +1,277 @@
+//! Weight store: FP weights, quantized checkpoints, init, and binary I/O.
+//!
+//! Checkpoint format (little-endian): magic `LRQW`, version u32, then for each
+//! tensor: name-len u32, name bytes, rank u32, dims u64…, f32 data. Quantized
+//! checkpoints (`LRQQ`) store packed integer codes + per-channel grids.
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::quant::PackedMatrix;
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+use super::layout::ModelDim;
+
+/// One Transformer block's FP weights (canonical order).
+#[derive(Clone, Debug)]
+pub struct BlockWeights {
+    pub ws: Vec<Tensor>, // wq wk wv wo wg wu wd
+    pub norm_attn: Tensor,
+    pub norm_ffn: Tensor,
+}
+
+impl BlockWeights {
+    pub fn norms(&self) -> [&Tensor; 2] {
+        [&self.norm_attn, &self.norm_ffn]
+    }
+}
+
+/// Full FP model weights.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    pub dim: ModelDim,
+    pub emb: Tensor,
+    pub blocks: Vec<BlockWeights>,
+    pub final_norm: Tensor,
+    pub head: Tensor,
+}
+
+impl Weights {
+    /// GPT-style init: N(0, 0.02) embeddings/projections, residual-out
+    /// projections scaled by 1/sqrt(2L), unit norms.
+    pub fn init(dim: &ModelDim, rng: &mut Rng) -> Self {
+        let std = 0.02f32;
+        let resid = std / ((2 * dim.layers) as f32).sqrt();
+        let mut blocks = Vec::with_capacity(dim.layers);
+        for _ in 0..dim.layers {
+            let shapes = dim.block_weight_shapes();
+            let mut ws = Vec::with_capacity(7);
+            for (i, (co, ci)) in shapes.iter().enumerate() {
+                // wo (3) and wd (6) write into the residual stream
+                let s = if i == 3 || i == 6 { resid } else { std };
+                ws.push(Tensor::randn(rng, &[*co, *ci], s));
+            }
+            blocks.push(BlockWeights {
+                ws,
+                norm_attn: Tensor::ones(&[dim.d]),
+                norm_ffn: Tensor::ones(&[dim.d]),
+            });
+        }
+        Weights {
+            dim: dim.clone(),
+            emb: Tensor::randn(rng, &[dim.vocab, dim.d], std),
+            blocks,
+            final_norm: Tensor::ones(&[dim.d]),
+            head: Tensor::randn(rng, &[dim.vocab, dim.d], std),
+        }
+    }
+
+    /// Flat canonical-order view matching the train_step artifact inputs:
+    /// emb, per-block (7 ws + 2 norms), final_norm, head.
+    pub fn flat(&self) -> Vec<&Tensor> {
+        let mut out = vec![&self.emb];
+        for b in &self.blocks {
+            out.extend(b.ws.iter());
+            out.push(&b.norm_attn);
+            out.push(&b.norm_ffn);
+        }
+        out.push(&self.final_norm);
+        out.push(&self.head);
+        out
+    }
+
+    /// Rebuild from the flat canonical-order list (train_step outputs).
+    pub fn from_flat(dim: &ModelDim, flat: Vec<Tensor>) -> Result<Self> {
+        let expect = 1 + dim.layers * 9 + 2;
+        if flat.len() != expect {
+            bail!("flat weight count {} != {expect}", flat.len());
+        }
+        let mut it = flat.into_iter();
+        let emb = it.next().unwrap();
+        let mut blocks = Vec::with_capacity(dim.layers);
+        for _ in 0..dim.layers {
+            let ws: Vec<Tensor> = (0..7).map(|_| it.next().unwrap()).collect();
+            let norm_attn = it.next().unwrap();
+            let norm_ffn = it.next().unwrap();
+            blocks.push(BlockWeights { ws, norm_attn, norm_ffn });
+        }
+        let final_norm = it.next().unwrap();
+        let head = it.next().unwrap();
+        Ok(Weights { dim: dim.clone(), emb, blocks, final_norm, head })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = BufWriter::new(File::create(path)?);
+        w.write_all(b"LRQW")?;
+        w.write_all(&1u32.to_le_bytes())?;
+        let flat = self.flat();
+        w.write_all(&(flat.len() as u32).to_le_bytes())?;
+        for t in flat {
+            write_tensor(&mut w, t)?;
+        }
+        Ok(())
+    }
+
+    pub fn load(dim: &ModelDim, path: &Path) -> Result<Self> {
+        let mut r = BufReader::new(
+            File::open(path).with_context(|| format!("open {path:?}"))?);
+        let mut magic = [0u8; 4];
+        r.read_exact(&mut magic)?;
+        if &magic != b"LRQW" {
+            bail!("bad magic in {path:?}");
+        }
+        let _ver = read_u32(&mut r)?;
+        let n = read_u32(&mut r)? as usize;
+        let flat: Result<Vec<Tensor>> =
+            (0..n).map(|_| read_tensor(&mut r)).collect();
+        Weights::from_flat(dim, flat?)
+    }
+}
+
+/// One block's weights in quantized (packed) form.
+#[derive(Clone, Debug)]
+pub struct QuantizedBlock {
+    pub ws: Vec<PackedMatrix>, // canonical order
+    pub norm_attn: Tensor,
+    pub norm_ffn: Tensor,
+}
+
+impl QuantizedBlock {
+    /// Dequantized (Ŵ) tensors, canonical order — the block_fwd_q inputs.
+    pub fn dequant_ws(&self) -> Vec<Tensor> {
+        self.ws.iter().map(|p| p.dequant()).collect()
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.ws.iter().map(|p| p.storage_bytes()).sum::<usize>()
+            + (self.norm_attn.len() + self.norm_ffn.len()) * 4
+    }
+}
+
+/// A fully quantized model checkpoint (embeddings/head/norms stay FP, as in
+/// the paper: only attention/FFN linears are quantized).
+#[derive(Clone, Debug)]
+pub struct QuantizedModel {
+    pub dim: ModelDim,
+    pub bits: u32,
+    pub emb: Tensor,
+    pub blocks: Vec<QuantizedBlock>,
+    pub final_norm: Tensor,
+    pub head: Tensor,
+}
+
+impl QuantizedModel {
+    /// Total storage including FP pieces — the Fig. 5 "model size".
+    pub fn storage_bytes(&self) -> usize {
+        let fp = (self.emb.len() + self.final_norm.len() + self.head.len()) * 4;
+        fp + self.blocks.iter().map(|b| b.storage_bytes()).sum::<usize>()
+    }
+
+    pub fn fp_equivalent_bytes(&self) -> usize {
+        self.dim.param_count() * 4
+    }
+}
+
+fn write_tensor<W: Write>(w: &mut W, t: &Tensor) -> Result<()> {
+    w.write_all(&(t.dims.len() as u32).to_le_bytes())?;
+    for &d in &t.dims {
+        w.write_all(&(d as u64).to_le_bytes())?;
+    }
+    for &v in &t.data {
+        w.write_all(&v.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_tensor<R: Read>(r: &mut R) -> Result<Tensor> {
+    let rank = read_u32(r)? as usize;
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        let mut b = [0u8; 8];
+        r.read_exact(&mut b)?;
+        dims.push(u64::from_le_bytes(b) as usize);
+    }
+    let n: usize = dims.iter().product();
+    let mut bytes = vec![0u8; n * 4];
+    r.read_exact(&mut bytes)?;
+    let data = bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+        .collect();
+    Ok(Tensor::new(dims, data))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ModelDim {
+        ModelDim {
+            name: "tiny".into(),
+            vocab: 512,
+            d: 128,
+            heads: 4,
+            layers: 4,
+            ff: 352,
+            seq: 64,
+            train_batch: 16,
+            calib_batch: 8,
+            recon_batch: 4,
+            rank: 32,
+        }
+    }
+
+    #[test]
+    fn init_shapes() {
+        let dim = tiny();
+        let w = Weights::init(&dim, &mut Rng::new(1));
+        assert_eq!(w.blocks.len(), 4);
+        assert_eq!(w.emb.dims, vec![512, 128]);
+        assert_eq!(w.blocks[0].ws[4].dims, vec![352, 128]);
+        assert_eq!(w.flat().len(), 1 + 4 * 9 + 2);
+    }
+
+    #[test]
+    fn flat_roundtrip() {
+        let dim = tiny();
+        let w = Weights::init(&dim, &mut Rng::new(2));
+        let flat: Vec<Tensor> = w.flat().into_iter().cloned().collect();
+        let w2 = Weights::from_flat(&dim, flat).unwrap();
+        assert_eq!(w.emb, w2.emb);
+        assert_eq!(w.blocks[3].ws[6], w2.blocks[3].ws[6]);
+        assert_eq!(w.head, w2.head);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dim = tiny();
+        let w = Weights::init(&dim, &mut Rng::new(3));
+        let tmp = std::env::temp_dir().join("lrq_test_weights.bin");
+        w.save(&tmp).unwrap();
+        let w2 = Weights::load(&dim, &tmp).unwrap();
+        assert_eq!(w.emb, w2.emb);
+        assert_eq!(w.blocks[1].norm_ffn, w2.blocks[1].norm_ffn);
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn residual_projections_scaled_down() {
+        let dim = tiny();
+        let w = Weights::init(&dim, &mut Rng::new(4));
+        let std_of = |t: &Tensor| {
+            (t.sq_norm() / t.len() as f64).sqrt()
+        };
+        // wo (idx 3) should have smaller std than wq (idx 0)
+        assert!(std_of(&w.blocks[0].ws[3]) < std_of(&w.blocks[0].ws[0]) * 0.6);
+    }
+}

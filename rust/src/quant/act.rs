@@ -1,0 +1,118 @@
+//! Activation-side quantization: per-tensor static ranges (calibrated by the
+//! L3 pass from `block_fwd` stats) and per-token fake-quant (the Rust oracle
+//! for the L1 per-token kernel; also used by SmoothQuant's statistics).
+
+use crate::tensor::Tensor;
+
+/// A calibrated per-tensor asymmetric range.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ActRange {
+    pub min: f32,
+    pub max: f32,
+}
+
+impl ActRange {
+    pub fn update(&mut self, mn: f32, mx: f32) {
+        self.min = self.min.min(mn.min(0.0));
+        self.max = self.max.max(mx.max(0.0));
+    }
+
+    /// (scale, zero-point) for a given qmax.
+    pub fn grid(&self, qmax: f32) -> (f32, f32) {
+        let scale = ((self.max - self.min) / qmax).max(1e-9);
+        let zp = (-self.min / scale).round().clamp(0.0, qmax);
+        (scale, zp)
+    }
+}
+
+/// Per-tensor static asymmetric fake-quant.
+pub fn per_tensor_quant(x: &Tensor, scale: f32, zp: f32, qmax: f32) -> Tensor {
+    x.map(|v| {
+        let q = (v / scale + zp).round().clamp(0.0, qmax);
+        (q - zp) * scale
+    })
+}
+
+/// Per-token asymmetric fake-quant over the trailing dim (oracle for the
+/// Pallas per-token kernel).
+pub fn per_token_quant(x: &Tensor, qmax: f32) -> Tensor {
+    let (t, d) = x.as_2d();
+    let mut out = vec![0.0f32; x.len()];
+    for i in 0..t {
+        let row = &x.data[i * d..(i + 1) * d];
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let scale = ((hi - lo) / qmax).max(1e-9);
+        let zp = (-lo / scale).round().clamp(0.0, qmax);
+        for (o, &v) in out[i * d..(i + 1) * d].iter_mut().zip(row) {
+            let q = (v / scale + zp).round().clamp(0.0, qmax);
+            *o = (q - zp) * scale;
+        }
+    }
+    Tensor::new(x.dims.clone(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn range_grid_covers() {
+        let mut r = ActRange::default();
+        r.update(-2.0, 6.0);
+        let (scale, zp) = r.grid(255.0);
+        // dequant endpoints land near the true range
+        let lo = (0.0 - zp) * scale;
+        let hi = (255.0 - zp) * scale;
+        assert!((lo - -2.0).abs() < scale);
+        assert!((hi - 6.0).abs() < scale);
+    }
+
+    #[test]
+    fn per_tensor_error_bound() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[8, 32], 1.0);
+        let mut r = ActRange::default();
+        r.update(x.min(), x.max());
+        let (s, z) = r.grid(255.0);
+        let q = per_tensor_quant(&x, s, z, 255.0);
+        for (a, b) in q.data.iter().zip(&x.data) {
+            assert!((a - b).abs() <= s * 0.5 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn per_token_tighter_than_per_tensor_on_outliers() {
+        // one token with huge dynamic range should not hurt the others under
+        // per-token quant — the SmoothQuant/per-token motivation.
+        let mut rng = Rng::new(2);
+        let mut x = Tensor::randn(&mut rng, &[4, 64], 0.1);
+        for v in x.row_mut(0) {
+            *v *= 100.0;
+        }
+        let qmax = 255.0;
+        let per_tok = per_token_quant(&x, qmax);
+        let mut r = ActRange::default();
+        r.update(x.min(), x.max());
+        let (s, z) = r.grid(qmax);
+        let per_ten = per_tensor_quant(&x, s, z, qmax);
+        // compare error on the *normal* tokens only
+        let sl = |t: &Tensor| Tensor::new(vec![3, 64], t.data[64..].to_vec());
+        let base = sl(&x);
+        assert!(sl(&per_tok).rmse(&base) < sl(&per_ten).rmse(&base));
+    }
+
+    #[test]
+    fn per_token_idempotent() {
+        let mut rng = Rng::new(3);
+        let x = Tensor::randn(&mut rng, &[6, 16], 1.0);
+        let q1 = per_token_quant(&x, 255.0);
+        let q2 = per_token_quant(&q1, 255.0);
+        assert!(q1.rmse(&q2) < 2e-2 * q1.frob() / (q1.len() as f64).sqrt());
+    }
+}

@@ -1,0 +1,162 @@
+//! Per-channel asymmetric quantization grids (the weight-side scheme used in
+//! every experiment of the paper) and the RTN / grid-searched initializers.
+
+use crate::tensor::Tensor;
+
+/// Per-output-channel asymmetric grid: `q = clip(round(w/s + z), 0, qmax)`,
+/// `ŵ = (q - z)·s`. One (s, z) pair per row of `W[Cout, Cin]`.
+#[derive(Clone, Debug)]
+pub struct ChannelGrid {
+    pub scale: Vec<f32>,
+    pub zp: Vec<f32>,
+    pub qmax: f32,
+}
+
+impl ChannelGrid {
+    pub fn rows(&self) -> usize {
+        self.scale.len()
+    }
+
+    /// Fake-quant one row with this grid (no weight-scaling exponent).
+    pub fn fq_row(&self, r: usize, w: &[f32], out: &mut [f32]) {
+        let s = self.scale[r];
+        let z = self.zp[r];
+        for (o, &x) in out.iter_mut().zip(w) {
+            let q = (x / s + z).round().clamp(0.0, self.qmax);
+            *o = (q - z) * s;
+        }
+    }
+}
+
+/// RTN init: per-row min/max range (zero always included, as in the paper's
+/// asymmetric scheme).
+pub fn rtn_grid(w: &Tensor, qmax: f32) -> ChannelGrid {
+    let (rows, _cols) = w.rc();
+    let mut scale = Vec::with_capacity(rows);
+    let mut zp = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = w.row(r);
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &x in row {
+            lo = lo.min(x);
+            hi = hi.max(x);
+        }
+        let s = ((hi - lo) / qmax).max(1e-9);
+        let z = (-lo / s).round().clamp(0.0, qmax);
+        scale.push(s);
+        zp.push(z);
+    }
+    ChannelGrid { scale, zp, qmax }
+}
+
+/// FlexRound/LRQ initializer: refine each row's scale by grid search,
+/// `s1 = argmin_s ||w - fq(w; s)||²` over multiplicative candidates around the
+/// RTN scale (the paper's `arg min_{s1} ||W - Ŵ||²` init).
+pub fn grid_search_scales(w: &Tensor, qmax: f32, candidates: usize) -> ChannelGrid {
+    let mut g = rtn_grid(w, qmax);
+    let (rows, cols) = w.rc();
+    let mut buf = vec![0.0f32; cols];
+    for r in 0..rows {
+        let row = w.row(r);
+        let s0 = g.scale[r];
+        let mut best = (f64::INFINITY, s0, g.zp[r]);
+        for i in 0..candidates {
+            // sweep 0.6 .. 1.15 × RTN scale
+            let f = 0.6 + 0.55 * (i as f32) / (candidates.max(2) - 1) as f32;
+            let s = s0 * f;
+            // re-derive zero point for the candidate scale
+            let lo = row.iter().cloned().fold(0.0f32, f32::min);
+            let z = (-lo / s).round().clamp(0.0, qmax);
+            let mut err = 0.0f64;
+            for (o, &x) in buf.iter_mut().zip(row) {
+                let q = (x / s + z).round().clamp(0.0, qmax);
+                *o = (q - z) * s;
+                let d = (*o - x) as f64;
+                err += d * d;
+            }
+            if err < best.0 {
+                best = (err, s, z);
+            }
+        }
+        g.scale[r] = best.1;
+        g.zp[r] = best.2;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rtn_range_covers_zero() {
+        let w = Tensor::new(vec![1, 4], vec![0.5, 1.0, 2.0, 3.0]);
+        let g = rtn_grid(&w, 255.0);
+        // all-positive row: lo clamps to 0, zp = 0
+        assert_eq!(g.zp[0], 0.0);
+        assert!((g.scale[0] - 3.0 / 255.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rtn_roundtrip_error_bound() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&mut rng, &[16, 64], 1.0);
+        let g = rtn_grid(&w, 255.0);
+        let mut out = vec![0.0f32; 64];
+        for r in 0..16 {
+            g.fq_row(r, w.row(r), &mut out);
+            for (o, &x) in out.iter().zip(w.row(r)) {
+                assert!((o - x).abs() <= g.scale[r] * 0.5 + 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn grid_search_not_worse_than_rtn() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&mut rng, &[8, 128], 0.05);
+        for qmax in [7.0, 15.0, 255.0] {
+            let rtn = rtn_grid(&w, qmax);
+            let gs = grid_search_scales(&w, qmax, 40);
+            let mut buf = vec![0.0f32; 128];
+            let err = |g: &ChannelGrid| {
+                let mut e = 0.0f64;
+                let mut buf = buf.clone();
+                for r in 0..8 {
+                    g.fq_row(r, w.row(r), &mut buf);
+                    for (o, &x) in buf.iter().zip(w.row(r)) {
+                        let d = (o - x) as f64;
+                        e += d * d;
+                    }
+                }
+                e
+            };
+            let e_gs = err(&gs);
+            let e_rtn = err(&rtn);
+            assert!(e_gs <= e_rtn * 1.0001, "{e_gs} vs {e_rtn} @ qmax {qmax}");
+            buf.clear();
+        }
+    }
+
+    #[test]
+    fn lower_bits_more_error() {
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&mut rng, &[4, 256], 1.0);
+        let mut errs = Vec::new();
+        for bits in [8u32, 4, 3] {
+            let g = rtn_grid(&w, super::super::qmax(bits));
+            let mut e = 0.0f64;
+            let mut buf = vec![0.0f32; 256];
+            for r in 0..4 {
+                g.fq_row(r, w.row(r), &mut buf);
+                for (o, &x) in buf.iter().zip(w.row(r)) {
+                    e += ((o - x) as f64).powi(2);
+                }
+            }
+            errs.push(e);
+        }
+        assert!(errs[0] < errs[1] && errs[1] < errs[2], "{errs:?}");
+    }
+}

@@ -1,0 +1,258 @@
+//! Rust-side LRQ math: the exponent matrix `S = L2·U2 + r2 + c2`, fake-quant
+//! with a learned exponent, integer-code extraction, and the Table 29
+//! learnable-parameter accounting.
+//!
+//! This mirrors the L1 Pallas kernel exactly (cross-checked by the
+//! `kernel_fakequant_*` integration test) and is used at *finalize* time:
+//! after reconstruction, `L2, U2, r2, c2` are folded into integer codes and
+//! discarded — inference needs only `(s1, z, codes)` (Appendix G).
+
+use crate::tensor::Tensor;
+
+use super::grid::ChannelGrid;
+
+/// Learned LRQ parameters for one linear layer.
+#[derive(Clone, Debug)]
+pub struct LrqParams {
+    /// multiplicative offset on the init scale: `s1 = s1_init · exp(ds1)`
+    pub ds1: Vec<f32>,
+    pub l2: Tensor,
+    pub u2: Tensor,
+    pub r2: Vec<f32>,
+    pub c2: Vec<f32>,
+}
+
+impl LrqParams {
+    /// RTN start: ds1 = 0, L2 = 0, U2 ~ N(0, 0.01), r2 = c2 = 0 (paper §2.3).
+    pub fn init(rng: &mut crate::rng::Rng, cout: usize, cin: usize,
+                rank: usize) -> Self {
+        LrqParams {
+            ds1: vec![0.0; cout],
+            l2: Tensor::zeros(&[cout, rank]),
+            u2: Tensor::randn(rng, &[rank, cin], 0.01),
+            r2: vec![0.0; cout],
+            c2: vec![0.0; cin],
+        }
+    }
+
+    /// The exponent matrix `S = L2U2 + r2 + c2` (Appendix M broadcasting).
+    pub fn exponent(&self) -> Tensor {
+        let mut s = self.l2.matmul(&self.u2);
+        let (rows, _cols) = s.rc();
+        for r in 0..rows {
+            let rb = self.r2[r];
+            let row = s.row_mut(r);
+            for (x, &cb) in row.iter_mut().zip(&self.c2) {
+                *x += rb + cb;
+            }
+        }
+        s
+    }
+
+    /// Effective per-channel scales `s1 = s1_init · exp(ds1)`.
+    pub fn effective_scale(&self, s1_init: &[f32]) -> Vec<f32> {
+        s1_init
+            .iter()
+            .zip(&self.ds1)
+            .map(|(&s, &d)| s * d.exp())
+            .collect()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.ds1.len() + self.l2.len() + self.u2.len() + self.r2.len()
+            + self.c2.len()
+    }
+}
+
+/// Fake-quant `W` with grid `(s1, z)` and exponent matrix `S`:
+/// `ŵ = (clip(round(w / (s1·exp(S)) + z), 0, qmax) - z) · s1`.
+pub fn fakequant_with_exponent(w: &Tensor, grid: &ChannelGrid,
+                               s_exp: &Tensor) -> Tensor {
+    let (rows, cols) = w.rc();
+    assert_eq!(s_exp.rc(), (rows, cols));
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let s1 = grid.scale[r];
+        let z = grid.zp[r];
+        let wrow = w.row(r);
+        let srow = s_exp.row(r);
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for ((o, &x), &e) in orow.iter_mut().zip(wrow).zip(srow) {
+            let div = s1 * e.exp();
+            let q = (x / div + z).round().clamp(0.0, grid.qmax);
+            *o = (q - z) * s1;
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+/// Full LRQ fake-quant from learned params (Eq. 2 with the ds1 re-param).
+pub fn fakequant_lrq(w: &Tensor, grid_init: &ChannelGrid,
+                     params: &LrqParams) -> Tensor {
+    let grid = ChannelGrid {
+        scale: params.effective_scale(&grid_init.scale),
+        zp: grid_init.zp.clone(),
+        qmax: grid_init.qmax,
+    };
+    let s_exp = params.exponent();
+    fakequant_with_exponent(w, &grid, &s_exp)
+}
+
+/// Integer codes `q = clip(round(w/(s1·exp(S)) + z), 0, qmax)`; `s_exp = None`
+/// is plain RTN. Codes are carried in f32 (the packing/serving format).
+pub fn quantize_int_codes(w: &Tensor, grid: &ChannelGrid,
+                          s_exp: Option<&Tensor>) -> Tensor {
+    let (rows, cols) = w.rc();
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        let s1 = grid.scale[r];
+        let z = grid.zp[r];
+        let wrow = w.row(r);
+        let orow = &mut out[r * cols..(r + 1) * cols];
+        for (c, (o, &x)) in orow.iter_mut().zip(wrow).enumerate() {
+            let div = match s_exp {
+                Some(s) => s1 * s.data[r * cols + c].exp(),
+                None => s1,
+            };
+            *o = (x / div + z).round().clamp(0.0, grid.qmax);
+        }
+    }
+    Tensor::new(vec![rows, cols], out)
+}
+
+/// Table 29 accounting: (#learnable LRQ params, #weights) for one linear.
+pub fn lrq_param_counts(cout: usize, cin: usize, rank: usize) -> (usize, usize) {
+    // ds1 excluded as in the paper (s1 exists for FlexRound too); the table
+    // counts L2, U2, r2, c2 against Cout×Cin.
+    let learn = cout * rank + rank * cin + cout + cin;
+    (learn, cout * cin)
+}
+
+/// The Table 29 ratio for a full block: 4 attention (d×d) + gate/up (f×d) +
+/// down (d×f) projections.
+pub fn block_param_ratio(d: usize, f: usize, rank: usize) -> f64 {
+    let mut learn = 0usize;
+    let mut weights = 0usize;
+    for (co, ci) in [(d, d), (d, d), (d, d), (d, d), (f, d), (f, d), (d, f)] {
+        let (l, w) = lrq_param_counts(co, ci, rank);
+        learn += l;
+        weights += w;
+    }
+    learn as f64 / weights as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::grid::rtn_grid;
+    use crate::rng::Rng;
+
+    #[test]
+    fn zero_params_is_rtn() {
+        let mut rng = Rng::new(1);
+        let w = Tensor::randn(&mut rng, &[16, 24], 0.1);
+        let grid = rtn_grid(&w, 255.0);
+        let mut p = LrqParams::init(&mut rng, 16, 24, 4);
+        p.u2 = Tensor::zeros(&[4, 24]); // L2U2 = 0 exactly
+        let out = fakequant_lrq(&w, &grid, &p);
+        let mut rtn = vec![0.0f32; 24];
+        for r in 0..16 {
+            grid.fq_row(r, w.row(r), &mut rtn);
+            for (a, b) in out.row(r).iter().zip(&rtn) {
+                assert!((a - b).abs() < 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn exponent_broadcasting_appendix_m() {
+        let p = LrqParams {
+            ds1: vec![0.0; 2],
+            l2: Tensor::new(vec![2, 1], vec![1.0, 2.0]),
+            u2: Tensor::new(vec![1, 3], vec![1.0, 0.0, -1.0]),
+            r2: vec![10.0, 20.0],
+            c2: vec![0.1, 0.2, 0.3],
+        };
+        let s = p.exponent();
+        assert_eq!(
+            s.data,
+            vec![
+                1.0 + 10.0 + 0.1, 0.0 + 10.0 + 0.2, -1.0 + 10.0 + 0.3,
+                2.0 + 20.0 + 0.1, 0.0 + 20.0 + 0.2, -2.0 + 20.0 + 0.3,
+            ]
+        );
+    }
+
+    #[test]
+    fn positive_exponent_shrinks_codes() {
+        // larger divisor => codes pulled toward the zero-point
+        let w = Tensor::new(vec![1, 2], vec![1.0, -1.0]);
+        let grid = rtn_grid(&w, 15.0);
+        let s_hi = Tensor::new(vec![1, 2], vec![2.0, 2.0]);
+        let codes_rtn = quantize_int_codes(&w, &grid, None);
+        let codes_hi = quantize_int_codes(&w, &grid, Some(&s_hi));
+        let z = grid.zp[0];
+        for c in 0..2 {
+            assert!((codes_hi.data[c] - z).abs() <= (codes_rtn.data[c] - z).abs());
+        }
+    }
+
+    #[test]
+    fn table29_ratios() {
+        // Llama-7B: d=4096, f=11008, r=1024 -> 39.51 % (Table 29)
+        let r = block_param_ratio(4096, 11008, 1024);
+        assert!((r - 0.3951).abs() < 0.001, "7B ratio {r}");
+        // Llama-13B: d=5120, f=13824, r=1024 -> 31.57 %
+        let r = block_param_ratio(5120, 13824, 1024);
+        assert!((r - 0.3157).abs() < 0.001, "13B ratio {r}");
+        // Llama-33B: d=6656, f=17920, r=2048 -> 48.60 %
+        let r = block_param_ratio(6656, 17920, 2048);
+        assert!((r - 0.4860).abs() < 0.001, "33B ratio {r}");
+        // Llama-65B: d=8192, f=22016, r=2048 -> 39.51 %
+        let r = block_param_ratio(8192, 22016, 2048);
+        assert!((r - 0.3951).abs() < 0.001, "65B ratio {r}");
+    }
+
+    #[test]
+    fn effective_scale_multiplicative() {
+        let p = LrqParams {
+            ds1: vec![0.0, (2.0f32).ln()],
+            l2: Tensor::zeros(&[2, 1]),
+            u2: Tensor::zeros(&[1, 2]),
+            r2: vec![0.0; 2],
+            c2: vec![0.0; 2],
+        };
+        let s = p.effective_scale(&[0.5, 0.5]);
+        assert!((s[0] - 0.5).abs() < 1e-7);
+        assert!((s[1] - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn finalize_codes_match_fakequant() {
+        // dequant(quantize_int_codes with exponent) must equal fakequant
+        let mut rng = Rng::new(4);
+        let w = Tensor::randn(&mut rng, &[8, 12], 0.2);
+        let grid0 = rtn_grid(&w, 15.0);
+        let mut p = LrqParams::init(&mut rng, 8, 12, 2);
+        p.l2 = Tensor::randn(&mut rng, &[8, 2], 0.05);
+        p.r2 = rng.normal_vec(8, 0.05);
+        p.c2 = rng.normal_vec(12, 0.05);
+        for d in p.ds1.iter_mut() {
+            *d = rng.normal() * 0.05;
+        }
+        let grid = ChannelGrid {
+            scale: p.effective_scale(&grid0.scale),
+            zp: grid0.zp.clone(),
+            qmax: grid0.qmax,
+        };
+        let s_exp = p.exponent();
+        let codes = quantize_int_codes(&w, &grid, Some(&s_exp));
+        let what = fakequant_lrq(&w, &grid0, &p);
+        for r in 0..8 {
+            for c in 0..12 {
+                let deq = (codes.data[r * 12 + c] - grid.zp[r]) * grid.scale[r];
+                assert!((deq - what.data[r * 12 + c]).abs() < 1e-6);
+            }
+        }
+    }
+}

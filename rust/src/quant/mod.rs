@@ -1,0 +1,29 @@
+//! Quantization substrate: grids, rounding, packing, and the Rust-side LRQ
+//! fake-quant (used to finalize learned parameters into integer weights and
+//! as the cross-layer oracle against the Pallas kernel artifact).
+
+pub mod act;
+pub mod grid;
+pub mod lrq;
+pub mod pack;
+
+pub use act::{per_tensor_quant, per_token_quant, ActRange};
+pub use grid::{grid_search_scales, rtn_grid, ChannelGrid};
+pub use lrq::{fakequant_lrq, fakequant_with_exponent, lrq_param_counts,
+              quantize_int_codes, LrqParams};
+pub use pack::PackedMatrix;
+
+/// qmax for a bit-width (unsigned asymmetric grid [0, 2^bits - 1]).
+pub fn qmax(bits: u32) -> f32 {
+    ((1u64 << bits) - 1) as f32
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn qmax_values() {
+        assert_eq!(super::qmax(8), 255.0);
+        assert_eq!(super::qmax(4), 15.0);
+        assert_eq!(super::qmax(3), 7.0);
+    }
+}

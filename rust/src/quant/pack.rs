@@ -1,0 +1,189 @@
+//! Bit-packing of integer weight codes (8/4/3-bit) — the storage format of
+//! quantized checkpoints and the model-size numbers of Fig. 5 / Table 15.
+//!
+//! Codes are packed LSB-first into a contiguous bitstream per matrix; 4-bit
+//! packs two codes per byte, 3-bit packs 8 codes per 3 bytes (true bit-level
+//! packing, matching the 4.55× / 3.58× compression ratios in Appendix G).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// A per-channel-quantized matrix in packed storage: integer codes + grid.
+#[derive(Clone, Debug)]
+pub struct PackedMatrix {
+    pub rows: usize,
+    pub cols: usize,
+    pub bits: u32,
+    pub scale: Vec<f32>,
+    pub zp: Vec<f32>,
+    pub packed: Vec<u8>,
+}
+
+/// Pack `codes` (each < 2^bits) into an LSB-first bitstream.
+pub fn pack_bits(codes: &[u32], bits: u32) -> Vec<u8> {
+    let total_bits = codes.len() * bits as usize;
+    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    let mut bitpos = 0usize;
+    for &c in codes {
+        debug_assert!(c < (1 << bits));
+        let mut v = c;
+        let mut left = bits;
+        while left > 0 {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min(left as usize) as u32;
+            out[byte] |= ((v & ((1 << take) - 1)) as u8) << off;
+            v >>= take;
+            left -= take;
+            bitpos += take as usize;
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_bits`].
+pub fn unpack_bits(packed: &[u8], bits: u32, n: usize) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n);
+    let mut bitpos = 0usize;
+    for _ in 0..n {
+        let mut v = 0u32;
+        let mut got = 0u32;
+        while got < bits {
+            let byte = bitpos / 8;
+            let off = bitpos % 8;
+            let take = (8 - off).min((bits - got) as usize) as u32;
+            let part = ((packed[byte] >> off) as u32) & ((1 << take) - 1);
+            v |= part << got;
+            got += take;
+            bitpos += take as usize;
+        }
+        out.push(v);
+    }
+    out
+}
+
+impl PackedMatrix {
+    /// Pack integer codes (f32-carried, as produced by quantization) with
+    /// their grid.
+    pub fn from_codes(
+        codes: &Tensor,
+        scale: &[f32],
+        zp: &[f32],
+        bits: u32,
+    ) -> Result<Self> {
+        let (rows, cols) = codes.rc();
+        if scale.len() != rows || zp.len() != rows {
+            bail!("grid size mismatch");
+        }
+        let max = (1u32 << bits) - 1;
+        let ints: Vec<u32> = codes
+            .data
+            .iter()
+            .map(|&c| (c.round() as i64).clamp(0, max as i64) as u32)
+            .collect();
+        Ok(PackedMatrix {
+            rows,
+            cols,
+            bits,
+            scale: scale.to_vec(),
+            zp: zp.to_vec(),
+            packed: pack_bits(&ints, bits),
+        })
+    }
+
+    /// Unpack to integer codes carried in f32 (the kernel_qmm input format).
+    pub fn codes(&self) -> Tensor {
+        let ints = unpack_bits(&self.packed, self.bits, self.rows * self.cols);
+        Tensor::new(
+            vec![self.rows, self.cols],
+            ints.into_iter().map(|v| v as f32).collect(),
+        )
+    }
+
+    /// Dequantize to dense f32 (`(q - z)·s` per row).
+    pub fn dequant(&self) -> Tensor {
+        let ints = unpack_bits(&self.packed, self.bits, self.rows * self.cols);
+        let mut data = Vec::with_capacity(ints.len());
+        for r in 0..self.rows {
+            let s = self.scale[r];
+            let z = self.zp[r];
+            for c in 0..self.cols {
+                data.push((ints[r * self.cols + c] as f32 - z) * s);
+            }
+        }
+        Tensor::new(vec![self.rows, self.cols], data)
+    }
+
+    /// Storage bytes (packed codes + f32 grid) — the Fig. 5 model-size number.
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len() + (self.scale.len() + self.zp.len()) * 4
+    }
+
+    /// FP32 storage for comparison.
+    pub fn fp_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{grid::rtn_grid, lrq::quantize_int_codes};
+    use crate::rng::Rng;
+
+    #[test]
+    fn pack_roundtrip_all_bits() {
+        let mut rng = Rng::new(1);
+        for bits in [3u32, 4, 8] {
+            let n = 1000;
+            let codes: Vec<u32> =
+                (0..n).map(|_| rng.below(1 << bits) as u32).collect();
+            let packed = pack_bits(&codes, bits);
+            assert_eq!(unpack_bits(&packed, bits, n), codes);
+            assert_eq!(packed.len(), (n * bits as usize).div_ceil(8));
+        }
+    }
+
+    #[test]
+    fn packed_matrix_roundtrip() {
+        let mut rng = Rng::new(2);
+        let w = Tensor::randn(&mut rng, &[12, 40], 0.1);
+        for bits in [3u32, 4, 8] {
+            let qmax = crate::quant::qmax(bits);
+            let g = rtn_grid(&w, qmax);
+            let codes = quantize_int_codes(&w, &g, None);
+            let pm = PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits)
+                .unwrap();
+            assert_eq!(pm.codes(), codes);
+            // dequant error bounded by scale/2 per element
+            let dq = pm.dequant();
+            for r in 0..12 {
+                for c in 0..40 {
+                    let d = (dq.data[r * 40 + c] - w.data[r * 40 + c]).abs();
+                    assert!(d <= g.scale[r] * 0.5 + 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compression_ratios_match_appendix_g() {
+        // Appendix G: 3-bit ≈ 4.55×, 4-bit ≈ 3.58× on Llama-2-7B (weights +
+        // grids). Pure packing upper bounds: 32/3 = 10.7, 32/4 = 8 — the
+        // measured ratios include FP pieces; here we check the matrix-level
+        // ratio is between 32/(bits+1) and 32/bits.
+        let mut rng = Rng::new(3);
+        let w = Tensor::randn(&mut rng, &[128, 352], 0.1);
+        for bits in [3u32, 4] {
+            let qmax = crate::quant::qmax(bits);
+            let g = rtn_grid(&w, qmax);
+            let codes = quantize_int_codes(&w, &g, None);
+            let pm = PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits)
+                .unwrap();
+            let ratio = pm.fp_bytes() as f64 / pm.storage_bytes() as f64;
+            assert!(ratio > 32.0 / (bits as f64 + 1.0), "ratio {ratio}");
+            assert!(ratio <= 32.0 / bits as f64 + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,157 @@
+//! Table rendering for the paper-shaped outputs: aligned text to stdout and
+//! markdown files under `reports/` (one per regenerated table/figure).
+
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use anyhow::Result;
+
+#[derive(Clone, Debug)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(),
+                   "row width {} != header width {}", cells.len(),
+                   self.headers.len());
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, s: &str) -> &mut Self {
+        self.notes.push(s.to_string());
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Aligned plain-text rendering.
+    pub fn text(&self) -> String {
+        let w = self.widths();
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} ==", self.title);
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:<width$}", c, width = w[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let _ = writeln!(out, "{}", line(&self.headers, &w));
+        let total: usize = w.iter().sum::<usize>() + 2 * (w.len() - 1);
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &w));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  note: {n}");
+        }
+        out
+    }
+
+    /// GitHub-flavoured markdown rendering.
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}\n", self.title);
+        let _ = writeln!(out, "| {} |", self.headers.join(" | "));
+        let _ = writeln!(
+            out,
+            "|{}|",
+            self.headers.iter().map(|_| "---").collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            let _ = writeln!(out, "| {} |", row.join(" | "));
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "\n> {n}");
+        }
+        out
+    }
+
+    /// Print to stdout and persist markdown under `dir/<id>.md`.
+    pub fn emit(&self, dir: &Path, id: &str) -> Result<()> {
+        print!("{}", self.text());
+        fs::create_dir_all(dir)?;
+        fs::write(dir.join(format!("{id}.md")), self.markdown())?;
+        Ok(())
+    }
+}
+
+/// f64 -> fixed-point cell.
+pub fn fmt(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+/// accuracy fraction -> percent cell.
+pub fn pct(v: f64) -> String {
+    format!("{:.2}", v * 100.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn table() -> Table {
+        let mut t = Table::new("Demo", &["Method", "Acc"]);
+        t.row(vec!["RTN".into(), pct(0.5012)]);
+        t.row(vec!["LRQ (Ours)".into(), pct(0.7525)]);
+        t.note("synthetic");
+        t
+    }
+
+    #[test]
+    fn text_aligned() {
+        let s = table().text();
+        assert!(s.contains("== Demo =="));
+        assert!(s.contains("RTN"));
+        assert!(s.contains("75.25"));
+    }
+
+    #[test]
+    fn markdown_valid() {
+        let s = table().markdown();
+        assert!(s.contains("| Method | Acc |"));
+        assert!(s.contains("|---|---|"));
+        assert!(s.contains("> synthetic"));
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn emit_writes_file() {
+        let dir = std::env::temp_dir().join("lrq_report_test");
+        table().emit(&dir, "demo").unwrap();
+        let p = dir.join("demo.md");
+        assert!(p.exists());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

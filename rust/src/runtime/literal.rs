@@ -1,0 +1,70 @@
+//! Tensor ⇄ PJRT `Literal` conversion helpers.
+
+use anyhow::{bail, Context, Result};
+use xla::Literal;
+
+use crate::tensor::Tensor;
+
+use super::manifest::{DType, IoSpec};
+
+/// f32 tensor -> literal (rank-0 becomes a true scalar literal).
+pub fn to_lit(t: &Tensor) -> Result<Literal> {
+    if t.dims.is_empty() {
+        return Ok(Literal::scalar(t.data[0]));
+    }
+    let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(&t.data).reshape(&dims)?)
+}
+
+/// i32 ids -> literal with the given dims.
+pub fn ids_lit(ids: &[i32], dims: &[usize]) -> Result<Literal> {
+    let n: usize = dims.iter().product();
+    if ids.len() != n {
+        bail!("ids len {} != dims {:?}", ids.len(), dims);
+    }
+    let d: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    Ok(Literal::vec1(ids).reshape(&d)?)
+}
+
+pub fn scalar_lit(v: f32) -> Literal {
+    Literal::scalar(v)
+}
+
+pub fn flag_lit(on: bool) -> Literal {
+    Literal::scalar(if on { 1.0f32 } else { 0.0 })
+}
+
+/// literal -> f32 tensor (using the manifest dims, which are authoritative).
+pub fn from_lit(lit: &Literal, dims: &[usize]) -> Result<Tensor> {
+    let data = lit.to_vec::<f32>().context("literal to_vec<f32>")?;
+    let n: usize = dims.iter().product();
+    if data.len() != n {
+        bail!("literal len {} != manifest dims {:?}", data.len(), dims);
+    }
+    Ok(Tensor::new(dims.to_vec(), data))
+}
+
+pub fn scalar_from_lit(lit: &Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Validate a literal batch against the manifest input specs (count + size).
+pub fn validate_inputs(specs: &[IoSpec], lits: &[&Literal]) -> Result<()> {
+    if specs.len() != lits.len() {
+        bail!("input count {} != manifest {}", lits.len(), specs.len());
+    }
+    for (i, (s, l)) in specs.iter().zip(lits).enumerate() {
+        let n = l.element_count();
+        if n != s.elems() {
+            bail!("input {i} ({}): {} elements, manifest wants {:?}",
+                  s.name, n, s.dims);
+        }
+        let want_f32 = matches!(s.dtype, DType::F32);
+        let ty = l.ty()?;
+        let is_f32 = matches!(ty, xla::ElementType::F32);
+        if want_f32 != is_f32 {
+            bail!("input {i} ({}): dtype mismatch", s.name);
+        }
+    }
+    Ok(())
+}

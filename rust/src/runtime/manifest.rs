@@ -1,0 +1,254 @@
+//! Parser for `artifacts/manifest.txt` — the contract emitted by
+//! `python/compile/aot.py` describing every AOT artifact's I/O (name, dtype,
+//! dims, order) and the model configs they were lowered for.
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::ModelDim;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+}
+
+impl IoSpec {
+    pub fn elems(&self) -> usize {
+        self.dims.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+impl ArtifactSpec {
+    /// Index of the input with this exact name.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {}: no input {name}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {}: no output {name}", self.name))
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub configs: HashMap<String, ModelDim>,
+    pub ranks: HashMap<String, Vec<usize>>,
+    pub artifacts: HashMap<String, ArtifactSpec>,
+}
+
+fn parse_dtype(s: &str) -> Result<DType> {
+    match s {
+        "f32" => Ok(DType::F32),
+        "i32" => Ok(DType::I32),
+        other => bail!("unknown dtype {other}"),
+    }
+}
+
+fn parse_io(line: &str) -> Result<IoSpec> {
+    let mut it = line.split_whitespace();
+    let _tag = it.next();
+    let name = it.next().context("io line missing name")?.to_string();
+    let dtype = parse_dtype(it.next().context("io line missing dtype")?)?;
+    let dims: Result<Vec<usize>, _> = it.map(|d| d.parse()).collect();
+    Ok(IoSpec { name, dtype, dims: dims.context("bad dims")? })
+}
+
+fn parse_config(line: &str) -> Result<ModelDim> {
+    let toks: Vec<&str> = line.split_whitespace().collect();
+    // config <name> k v k v ...
+    if toks.len() < 2 || (toks.len() - 2) % 2 != 0 {
+        bail!("bad config line: {line}");
+    }
+    let name = toks[1].to_string();
+    let mut kv = HashMap::new();
+    for pair in toks[2..].chunks(2) {
+        kv.insert(pair[0], pair[1].parse::<usize>()
+                  .with_context(|| format!("bad config value {}", pair[1]))?);
+    }
+    let get = |k: &str| -> Result<usize> {
+        kv.get(k).copied().with_context(|| format!("config missing {k}"))
+    };
+    Ok(ModelDim {
+        name,
+        vocab: get("vocab")?,
+        d: get("d")?,
+        heads: get("heads")?,
+        layers: get("layers")?,
+        ff: get("ff")?,
+        seq: get("seq")?,
+        train_batch: get("train_batch")?,
+        calib_batch: get("calib_batch")?,
+        recon_batch: get("recon_batch")?,
+        rank: get("rank")?,
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut m = Manifest::default();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let tag = line.split_whitespace().next().unwrap();
+            match tag {
+                "version" => {}
+                "config" => {
+                    let dim = parse_config(line)
+                        .with_context(|| format!("line {}", ln + 1))?;
+                    m.configs.insert(dim.name.clone(), dim);
+                }
+                "ranks" => {
+                    let toks: Vec<&str> = line.split_whitespace().collect();
+                    let name = toks.get(1).context("ranks missing cfg")?;
+                    let ranks: Result<Vec<usize>, _> =
+                        toks[2..].iter().map(|s| s.parse()).collect();
+                    m.ranks.insert(name.to_string(), ranks?);
+                }
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!("line {}: artifact without end", ln + 1);
+                    }
+                    let toks: Vec<&str> = line.split_whitespace().collect();
+                    cur = Some(ArtifactSpec {
+                        name: toks.get(1).context("artifact missing name")?
+                            .to_string(),
+                        file: toks.get(2).context("artifact missing file")?
+                            .to_string(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                    });
+                }
+                "in" => cur
+                    .as_mut()
+                    .context("in outside artifact")?
+                    .inputs
+                    .push(parse_io(line)?),
+                "out" => cur
+                    .as_mut()
+                    .context("out outside artifact")?
+                    .outputs
+                    .push(parse_io(line)?),
+                "end" => {
+                    let a = cur.take().context("end without artifact")?;
+                    m.artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!("line {}: unknown tag {other}", ln + 1),
+            }
+        }
+        if cur.is_some() {
+            bail!("unterminated artifact block");
+        }
+        Ok(m)
+    }
+
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.txt");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("read {path:?} (run `make artifacts`)"))?;
+        Manifest::parse(&text)
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+
+    pub fn dim(&self, cfg: &str) -> Result<&ModelDim> {
+        self.configs
+            .get(cfg)
+            .with_context(|| format!("config {cfg} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+version 1
+config tiny vocab 512 d 128 heads 4 layers 4 ff 352 seq 64 train_batch 16 calib_batch 8 recon_batch 4 rank 32
+ranks tiny 4 8 16
+artifact embed_tiny embed_tiny.hlo.txt
+in emb f32 512 128
+in ids i32 8 64
+out x f32 8 64 128
+end
+artifact head_loss_tiny head_loss_tiny.hlo.txt
+in x f32 8 64 128
+in final_norm f32 128
+in head f32 512 128
+in targets i32 8 64
+out loss f32
+out logp f32 8 64
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.configs.len(), 1);
+        let dim = m.dim("tiny").unwrap();
+        assert_eq!(dim.d, 128);
+        assert_eq!(m.ranks["tiny"], vec![4, 8, 16]);
+        let a = m.artifact("embed_tiny").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[0].dims, vec![8, 64, 128]);
+        let h = m.artifact("head_loss_tiny").unwrap();
+        assert_eq!(h.outputs[0].dims, Vec::<usize>::new()); // scalar
+        assert_eq!(h.input_index("head").unwrap(), 2);
+        assert!(h.input_index("nope").is_err());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("in x f32 3").is_err());
+        assert!(Manifest::parse("artifact a f\nartifact b g\nend").is_err());
+        assert!(Manifest::parse("bogus line").is_err());
+        assert!(Manifest::parse("artifact a f\nin x f32 2").is_err());
+    }
+
+    #[test]
+    fn parses_real_manifest_if_present() {
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.artifacts.contains_key("block_fwd_tiny"));
+            assert!(m.configs.contains_key("tiny"));
+            let r = m.artifact("recon_lrq_tiny_r32").unwrap();
+            // x_q, y_t, 7 W, 2 norms, 7 s1, 7 z, 3×35 theta/m/v, t, lr,
+            // 8 static, 6 flags/qmax = 146
+            assert_eq!(r.inputs.len(), 146);
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! L3 runtime: loads the AOT HLO-text artifacts through the PJRT C API
+//! (`xla` crate), compiles them once, and exposes validated executables.
+//!
+//! Pattern (see /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! HLO **text** is the interchange format — xla_extension 0.5.1 rejects the
+//! 64-bit instruction ids of jax≥0.5 serialized protos.
+
+pub mod literal;
+pub mod manifest;
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+use xla::{Literal, PjRtClient, PjRtLoadedExecutable};
+
+pub use literal::{flag_lit, from_lit, ids_lit, scalar_from_lit, scalar_lit,
+                  to_lit};
+pub use manifest::{ArtifactSpec, DType, IoSpec, Manifest};
+
+use crate::model::ModelDim;
+use crate::tensor::Tensor;
+
+/// A compiled artifact with its manifest spec; all calls validate I/O.
+pub struct Exec {
+    pub spec: ArtifactSpec,
+    exe: PjRtLoadedExecutable,
+}
+
+impl Exec {
+    /// Run with raw literals (owned or borrowed — state-threading loops keep
+    /// their literals and pass `&Literal`); returns the decomposed output
+    /// tuple.
+    pub fn run<L: std::borrow::Borrow<Literal>>(
+        &self, inputs: &[L]) -> Result<Vec<Literal>> {
+        {
+            let borrowed: Vec<&Literal> =
+                inputs.iter().map(|l| l.borrow()).collect();
+            literal::validate_inputs(&self.spec.inputs, &borrowed)
+                .with_context(|| format!("artifact {}", self.spec.name))?;
+        }
+        let bufs = self.exe.execute::<L>(inputs)
+            .with_context(|| format!("execute {}", self.spec.name))?;
+        let tuple = bufs[0][0].to_literal_sync()?;
+        let outs = tuple_elements(tuple, self.spec.outputs.len())?;
+        Ok(outs)
+    }
+
+    /// Run and convert every output to a [`Tensor`] using manifest dims.
+    pub fn run_tensors<L: std::borrow::Borrow<Literal>>(
+        &self, inputs: &[L]) -> Result<Vec<Tensor>> {
+        let outs = self.run(inputs)?;
+        outs.iter()
+            .zip(&self.spec.outputs)
+            .map(|(l, s)| literal::from_lit(l, &s.dims))
+            .collect()
+    }
+}
+
+fn tuple_elements(mut tuple: Literal, expect: usize) -> Result<Vec<Literal>> {
+    let outs = tuple.decompose_tuple()?;
+    if outs.len() != expect {
+        anyhow::bail!("artifact returned {} outputs, manifest wants {expect}",
+                      outs.len());
+    }
+    Ok(outs)
+}
+
+/// The artifact registry: PJRT client + lazily compiled executables.
+pub struct Runtime {
+    pub client: PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Exec>>>,
+    pub verbose: bool,
+}
+
+impl Runtime {
+    /// Load the manifest and create a CPU PJRT client.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("PjRtClient::cpu")?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            verbose: std::env::var("LRQ_VERBOSE").is_ok(),
+        })
+    }
+
+    /// Default artifact dir: `$LRQ_ARTIFACTS` or `./artifacts`.
+    pub fn load_default() -> Result<Runtime> {
+        let dir = std::env::var("LRQ_ARTIFACTS")
+            .unwrap_or_else(|_| "artifacts".to_string());
+        Runtime::load(Path::new(&dir))
+    }
+
+    pub fn dim(&self, cfg: &str) -> Result<ModelDim> {
+        Ok(self.manifest.dim(cfg)?.clone())
+    }
+
+    pub fn ranks(&self, cfg: &str) -> Vec<usize> {
+        self.manifest.ranks.get(cfg).cloned().unwrap_or_default()
+    }
+
+    /// Get (compiling on first use) an executable by artifact name.
+    pub fn exec(&self, name: &str) -> Result<Rc<Exec>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.artifact(name)?.clone();
+        let path = self.dir.join(&spec.file);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parse HLO {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)
+            .with_context(|| format!("compile {name}"))?;
+        if self.verbose {
+            eprintln!("[runtime] compiled {name} in {:?}", t0.elapsed());
+        }
+        let exec = Rc::new(Exec { spec, exe });
+        self.cache.borrow_mut().insert(name.to_string(), exec.clone());
+        Ok(exec)
+    }
+
+    /// Number of artifacts compiled so far (metrics / tests).
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

@@ -1,0 +1,103 @@
+//! Serving metrics: request latency distribution, execution time, batch
+//! occupancy, throughput — the measurements behind Fig. 5 / Table 15.
+
+use std::time::Duration;
+
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests: usize,
+    pub batches: usize,
+    latencies_us: Vec<u64>,
+    exec_us: Vec<u64>,
+    batch_sizes: Vec<usize>,
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency: Duration, exec: Duration,
+                  batch_size: usize) {
+        self.requests += 1;
+        self.latencies_us.push(latency.as_micros() as u64);
+        self.exec_us.push(exec.as_micros() as u64);
+        self.batch_sizes.push(batch_size);
+        if batch_size > 0 {
+            self.batches += 1;
+        }
+    }
+
+    fn pct(mut v: Vec<u64>, p: f64) -> Duration {
+        if v.is_empty() {
+            return Duration::ZERO;
+        }
+        v.sort_unstable();
+        let idx = ((v.len() as f64 - 1.0) * p) as usize;
+        Duration::from_micros(v[idx])
+    }
+
+    pub fn p50_latency(&self) -> Duration {
+        Self::pct(self.latencies_us.clone(), 0.50)
+    }
+
+    pub fn p95_latency(&self) -> Duration {
+        Self::pct(self.latencies_us.clone(), 0.95)
+    }
+
+    pub fn mean_latency(&self) -> Duration {
+        if self.latencies_us.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(
+            self.latencies_us.iter().sum::<u64>()
+                / self.latencies_us.len() as u64,
+        )
+    }
+
+    pub fn mean_exec(&self) -> Duration {
+        if self.exec_us.is_empty() {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(
+            self.exec_us.iter().sum::<u64>() / self.exec_us.len() as u64)
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64
+            / self.batch_sizes.len() as f64
+    }
+
+    /// Requests per second over the recorded latency mass.
+    pub fn throughput(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.requests as f64 / wall.as_secs_f64()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        for i in 1..=100u64 {
+            m.record(Duration::from_micros(i * 10),
+                     Duration::from_micros(i), 2);
+        }
+        assert!(m.p50_latency() < m.p95_latency());
+        assert_eq!(m.requests, 100);
+        assert!((m.mean_batch() - 2.0).abs() < 1e-9);
+        assert!(m.throughput(Duration::from_secs(1)) > 0.0);
+    }
+
+    #[test]
+    fn empty_safe() {
+        let m = Metrics::default();
+        assert_eq!(m.p50_latency(), Duration::ZERO);
+        assert_eq!(m.mean_latency(), Duration::ZERO);
+        assert_eq!(m.mean_batch(), 0.0);
+    }
+}

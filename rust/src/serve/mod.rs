@@ -1,0 +1,319 @@
+//! Batch-scoring server (the Fig. 5 serving-side substrate): a dynamic
+//! batcher in front of a single-threaded PJRT scoring engine, with
+//! request-level latency metrics.
+//!
+//! tokio is unavailable in the offline build image, so this is a std-thread
+//! design: client threads submit [`ScoreRequest`]s over an mpsc channel; the
+//! engine thread drains up to `max_batch` requests (or `max_wait`), pads them
+//! into one model batch, executes, and answers each request on its own
+//! oneshot channel. The PJRT runtime is not `Send`, so the engine is *built
+//! inside* the engine thread by the supplied constructor closure.
+
+pub mod metrics;
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+pub use metrics::Metrics;
+
+/// A batch scorer: given padded id/target rows, return the per-position
+/// target log-probs for each row (row-major [rows × seq]).
+pub trait BatchScorer {
+    /// batch capacity (rows per model execution)
+    fn batch_size(&self) -> usize;
+    fn seq_len(&self) -> usize;
+    fn score(&mut self, ids: &[i32], targets: &[i32]) -> Result<Vec<f32>>;
+}
+
+/// One scoring request: a token sequence; the response is the total log-prob
+/// of `ids[1..]` under the model (the serving analogue of batched scoring /
+/// reranking workloads).
+pub struct ScoreRequest {
+    pub ids: Vec<i32>,
+    resp: Sender<Result<ScoreResponse, String>>,
+    submitted: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct ScoreResponse {
+    pub logp_sum: f32,
+    pub latency: Duration,
+    pub batch_size: usize,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Handle for submitting requests.
+#[derive(Clone)]
+pub struct Client {
+    tx: Sender<ScoreRequest>,
+}
+
+impl Client {
+    /// Blocking score call.
+    pub fn score(&self, ids: Vec<i32>) -> Result<ScoreResponse> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(ScoreRequest { ids, resp: tx, submitted: Instant::now() })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rx.recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+}
+
+pub struct Server {
+    tx: Option<Sender<ScoreRequest>>,
+    handle: Option<JoinHandle<()>>,
+    pub metrics: Arc<Mutex<Metrics>>,
+}
+
+impl Server {
+    /// Start the engine thread. `make_scorer` runs inside the thread (PJRT
+    /// state is not Send).
+    pub fn start<F>(cfg: ServerConfig, make_scorer: F) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn BatchScorer>> + Send + 'static,
+    {
+        let (tx, rx) = channel::<ScoreRequest>();
+        let metrics = Arc::new(Mutex::new(Metrics::default()));
+        let m2 = metrics.clone();
+        let (ready_tx, ready_rx) = channel::<Result<(), String>>();
+        let handle = std::thread::spawn(move || {
+            let mut scorer = match make_scorer() {
+                Ok(s) => {
+                    let _ = ready_tx.send(Ok(()));
+                    s
+                }
+                Err(e) => {
+                    let _ = ready_tx.send(Err(format!("{e:#}")));
+                    return;
+                }
+            };
+            engine_loop(&mut *scorer, cfg, rx, m2);
+        });
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread died"))?
+            .map_err(|e| anyhow!(e))?;
+        Ok(Server { tx: Some(tx), handle: Some(handle), metrics })
+    }
+
+    pub fn client(&self) -> Client {
+        Client { tx: self.tx.as_ref().expect("server running").clone() }
+    }
+
+    /// Stop the engine and join.
+    pub fn shutdown(&mut self) {
+        self.tx.take(); // close channel → engine loop exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
+               rx: Receiver<ScoreRequest>, metrics: Arc<Mutex<Metrics>>) {
+    let bcap = cfg.max_batch.min(scorer.batch_size()).max(1);
+    let seq = scorer.seq_len();
+    loop {
+        // block for the first request
+        let first = match rx.recv() {
+            Ok(r) => r,
+            Err(_) => return, // all senders dropped
+        };
+        let mut batch = vec![first];
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < bcap {
+            let left = deadline.saturating_duration_since(Instant::now());
+            match rx.recv_timeout(left) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        run_batch(scorer, seq, batch, &metrics);
+    }
+}
+
+fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
+             batch: Vec<ScoreRequest>, metrics: &Arc<Mutex<Metrics>>) {
+    let b = scorer.batch_size();
+    let n = batch.len();
+    let mut ids = vec![0i32; b * seq];
+    let mut tgt = vec![0i32; b * seq];
+    let mut lens = vec![0usize; n];
+    let mut bad: Vec<Option<String>> = vec![None; n];
+    for (i, r) in batch.iter().enumerate() {
+        if r.ids.len() < 2 || r.ids.len() > seq {
+            bad[i] = Some(format!("sequence length {} not in [2, {seq}]",
+                                  r.ids.len()));
+            continue;
+        }
+        lens[i] = r.ids.len();
+        ids[i * seq..i * seq + r.ids.len()].copy_from_slice(&r.ids);
+        for (p, w) in r.ids[1..].iter().enumerate() {
+            tgt[i * seq + p] = *w;
+        }
+    }
+    let t0 = Instant::now();
+    let scored = scorer.score(&ids, &tgt);
+    let exec_time = t0.elapsed();
+    match scored {
+        Ok(logp) => {
+            for (i, r) in batch.into_iter().enumerate() {
+                if let Some(msg) = bad[i].take() {
+                    let _ = r.resp.send(Err(msg));
+                    continue;
+                }
+                let row = &logp[i * seq..(i + 1) * seq];
+                let sum: f32 = row[..lens[i] - 1].iter().sum();
+                let latency = r.submitted.elapsed();
+                metrics
+                    .lock()
+                    .unwrap()
+                    .record(latency, exec_time, n);
+                let _ = r.resp.send(Ok(ScoreResponse {
+                    logp_sum: sum,
+                    latency,
+                    batch_size: n,
+                }));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            for r in batch {
+                let _ = r.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// A trivial in-process scorer for tests: logp = -(token value) per position.
+pub struct MockScorer {
+    pub batch: usize,
+    pub seq: usize,
+    pub calls: usize,
+}
+
+impl BatchScorer for MockScorer {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+    fn score(&mut self, _ids: &[i32], targets: &[i32]) -> Result<Vec<f32>> {
+        self.calls += 1;
+        Ok(targets.iter().map(|&t| -(t as f32)).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn start_mock(max_batch: usize, wait_ms: u64) -> Server {
+        Server::start(
+            ServerConfig {
+                max_batch,
+                max_wait: Duration::from_millis(wait_ms),
+            },
+            || Ok(Box::new(MockScorer { batch: 8, seq: 16, calls: 0 })),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn scores_single_request() {
+        let s = start_mock(4, 1);
+        let c = s.client();
+        // ids [5, 3, 2]: targets are [3, 2] -> logp = -(3+2)
+        let r = c.score(vec![5, 3, 2]).unwrap();
+        assert_eq!(r.logp_sum, -5.0);
+    }
+
+    #[test]
+    fn batches_concurrent_requests() {
+        let s = start_mock(8, 50);
+        let mut handles = Vec::new();
+        for k in 0..8 {
+            let c = s.client();
+            handles.push(std::thread::spawn(move || {
+                c.score(vec![1, k as i32 + 1]).unwrap()
+            }));
+        }
+        let results: Vec<ScoreResponse> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // every request answered with its own target sum
+        for (k, r) in results.iter().enumerate() {
+            assert_eq!(r.logp_sum, -((k as f32) + 1.0));
+        }
+        // at least one response saw a batch > 1 (they arrived within the
+        // batching window)
+        assert!(results.iter().any(|r| r.batch_size > 1));
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let s = start_mock(2, 1);
+        let c = s.client();
+        let err = c.score((0..64).collect()).unwrap_err();
+        assert!(format!("{err}").contains("length"));
+    }
+
+    #[test]
+    fn never_drops_or_duplicates() {
+        let s = start_mock(3, 5);
+        let n = 50;
+        let mut handles = Vec::new();
+        for k in 0..n {
+            let c = s.client();
+            handles.push(std::thread::spawn(move || {
+                c.score(vec![0, k as i32]).unwrap().logp_sum
+            }));
+        }
+        let mut got: Vec<f32> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        got.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let want: Vec<f32> = (0..n).map(|k| -(k as f32)).rev().collect();
+        let mut want = want;
+        want.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        assert_eq!(got, want);
+        let m = s.metrics.lock().unwrap();
+        assert_eq!(m.requests, n);
+    }
+
+    #[test]
+    fn metrics_percentiles() {
+        let s = start_mock(4, 1);
+        let c = s.client();
+        for _ in 0..20 {
+            c.score(vec![1, 2, 3]).unwrap();
+        }
+        let m = s.metrics.lock().unwrap();
+        assert_eq!(m.requests, 20);
+        assert!(m.p50_latency() <= m.p95_latency());
+        assert!(m.mean_batch() >= 1.0);
+    }
+}

@@ -1,0 +1,715 @@
+//! Regeneration of every table and figure in the paper's evaluation
+//! (DESIGN.md §5 experiment index). Each `fig*`/`t*` function reproduces the
+//! *shape* of the corresponding paper artifact on the synthetic models and
+//! writes a markdown table under `reports/`.
+
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{Args, Method, ReconConfig, Scheme};
+use crate::coordinator::{pretrain, quantize_model, Engine, QuantizeOutcome};
+use crate::data::{Corpus, CorpusConfig, TaskKind, TaskSet};
+use crate::eval::{evaluate, rmse_curve, EvalSummary,
+                  ModelView};
+use crate::model::Weights;
+use crate::quant::lrq::block_param_ratio;
+use crate::report::{pct, Table};
+use crate::rng::Rng;
+use crate::runtime::Runtime;
+use crate::serve::{BatchScorer, Server, ServerConfig};
+
+/// Shared experiment context for one model config.
+pub struct Lab {
+    pub rt: Runtime,
+    pub cfg: String,
+    pub engine: Engine,
+    pub weights: Weights,
+    pub corpus: Corpus,
+    pub csr: TaskSet,
+    pub mmlu: TaskSet,
+    pub seed: u64,
+    pub recon: ReconConfig,
+    pub reports: PathBuf,
+    pub n_tasks: usize,
+}
+
+/// Default pre-training budget per config.
+fn train_steps(cfg: &str) -> usize {
+    match cfg {
+        "small" => 400,
+        _ => 700,
+    }
+}
+
+impl Lab {
+    pub fn new(args: &Args, cfg: &str) -> Result<Lab> {
+        let dir = args.get_or("artifacts", "artifacts");
+        let rt = Runtime::load(Path::new(&dir))?;
+        let dim = rt.dim(cfg)?;
+        let seed: u64 = args.parse_as("seed", 1234)?;
+        let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+        let engine = Engine::new(&rt, cfg)?;
+
+        // train-or-load the FP baseline
+        let wpath = args.get_or("weights", &format!("weights_{cfg}.bin"));
+        let wpath = Path::new(&wpath);
+        let weights = if wpath.exists() {
+            Weights::load(&dim, wpath)?
+        } else {
+            let steps: usize =
+                args.parse_as("train-steps", train_steps(cfg))?;
+            eprintln!("[lab] no {wpath:?}; pre-training {cfg} for {steps} \
+                       steps (cached afterwards)");
+            let out = pretrain(&rt, cfg, &corpus, steps, 1e-3, seed, 50)?;
+            for (s, l) in &out.losses {
+                eprintln!("[lab]   step {s:>5} loss {l:.4}");
+            }
+            out.weights.save(wpath)?;
+            out.weights
+        };
+
+        let n_tasks: usize = args.parse_as("tasks", 400)?;
+        let mut rng = Rng::new(seed ^ 0x5EED);
+        let csr = TaskSet::generate(&corpus, TaskKind::Csr, n_tasks,
+                                    dim.seq / 2, 8, 4, &mut rng);
+        let mmlu = TaskSet::generate(&corpus, TaskKind::Mmlu, n_tasks,
+                                     dim.seq / 2, 8, 4, &mut rng);
+        let recon = ReconConfig {
+            steps: args.parse_as("steps", 200)?,
+            lr: args.parse_as("lr", 3e-4)?,
+            calib_samples: args.parse_as("calib", 64)?,
+            rank: args.parse_as("rank", 0)?,
+            seed,
+        };
+        Ok(Lab {
+            rt,
+            cfg: cfg.to_string(),
+            engine,
+            weights,
+            corpus,
+            csr,
+            mmlu,
+            seed,
+            recon,
+            reports: PathBuf::from(args.get_or("reports", "reports")),
+            n_tasks,
+        })
+    }
+
+    pub fn fp_summary(&self) -> Result<EvalSummary> {
+        evaluate(&self.engine, &ModelView::Fp(&self.weights), &self.corpus,
+                 &self.csr, &self.mmlu, 8, self.seed)
+    }
+
+    pub fn quantize(&self, method: Method, scheme: Scheme,
+                    recon: ReconConfig) -> Result<QuantizeOutcome> {
+        quantize_model(&self.rt, &self.engine, &self.weights, &self.corpus,
+                       method, scheme, recon)
+    }
+
+    pub fn summary_of(&self, out: &QuantizeOutcome, scheme: Scheme)
+                      -> Result<EvalSummary> {
+        let view = ModelView::Quant {
+            model: &out.model,
+            stats: &out.stats,
+            scheme,
+        };
+        evaluate(&self.engine, &view, &self.corpus, &self.csr, &self.mmlu, 8,
+                 self.seed)
+    }
+
+    pub fn run_method(&self, method: Method, scheme: Scheme)
+                      -> Result<EvalSummary> {
+        if method == Method::Fp16 {
+            return self.fp_summary();
+        }
+        let out = self.quantize(method, scheme, self.recon)?;
+        self.summary_of(&out, scheme)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// figures
+// ---------------------------------------------------------------------------
+
+/// Fig. 1: CSR + MMLU accuracy across model sizes, W8A8(static)KV8.
+pub fn fig1(args: &Args) -> Result<()> {
+    let cfgs: Vec<&str> = if args.flag("full") {
+        vec!["tiny", "small"]
+    } else {
+        vec!["tiny"]
+    };
+    let mut t = Table::new(
+        "Fig. 1 — zero-shot CSR and five-shot MMLU analogue, W8A8(static)KV8",
+        &["Model", "Method", "CSR %", "MMLU %"],
+    );
+    for cfg in cfgs {
+        let lab = Lab::new(args, cfg)?;
+        for m in [Method::Fp16, Method::SmoothQuant, Method::FlexRound,
+                  Method::Lrq] {
+            let s = lab.run_method(m, Scheme::w8a8_static())?;
+            t.row(vec![cfg.into(), m.paper_name().into(), pct(s.csr_acc),
+                       pct(s.mmlu_acc)]);
+            println!("[fig1] {cfg} {}: CSR {:.2} MMLU {:.2}", m.paper_name(),
+                     s.csr_acc * 100.0, s.mmlu_acc * 100.0);
+        }
+    }
+    t.note("paper: LRQ closes the MMLU gap to FP16 that FlexRound leaves \
+            open (Fig. 1b); CSR stays near-FP16 for both");
+    t.emit(Path::new(&args.get_or("reports", "reports")), "fig1")
+}
+
+/// Fig. 2: FlexRound accuracy vs calibration sample size.
+pub fn fig2(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let mut t = Table::new(
+        "Fig. 2 — FlexRound vs calibration sample size, W8A8(static)",
+        &["Calib samples", "CSR %", "MMLU %"],
+    );
+    let fp = lab.fp_summary()?;
+    for n in [16usize, 32, 64, 128] {
+        let recon = ReconConfig { calib_samples: n, ..lab.recon };
+        let out = lab.quantize(Method::FlexRound, Scheme::w8a8_static(),
+                               recon)?;
+        let s = lab.summary_of(&out, Scheme::w8a8_static())?;
+        t.row(vec![n.to_string(), pct(s.csr_acc), pct(s.mmlu_acc)]);
+        println!("[fig2] n={n}: CSR {:.2} MMLU {:.2}", s.csr_acc * 100.0,
+                 s.mmlu_acc * 100.0);
+    }
+    t.row(vec!["FP16".into(), pct(fp.csr_acc), pct(fp.mmlu_acc)]);
+    t.note("paper: FlexRound improves with more calibration data but stays \
+            below FP16 on MMLU");
+    t.emit(&lab.reports, "fig2")
+}
+
+/// Fig. 3 (+ App. C/D): accumulated RMSE per block, calib vs unseen sample.
+pub fn fig3(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let scheme = Scheme::w8a8_static().without_kv_quant();
+    let dim = &lab.engine.dim;
+    let mut rng = Rng::new(lab.seed ^ 0xF16);
+    let calib_ids = lab.corpus.calib_batch(dim.calib_batch, dim.seq, &mut rng);
+    // unseen: held-out domains (the MMLU axis)
+    let held = lab.corpus.heldout_domain_ids();
+    let mut unseen_ids = Vec::new();
+    for _ in 0..dim.calib_batch {
+        let d = held[rng.below(held.len())];
+        unseen_ids.extend(lab.corpus.sequence(d, dim.seq, &mut rng));
+    }
+
+    let mut t = Table::new(
+        "Fig. 3 — accumulated RMSE between FP and quantized streams, W8A8",
+        &["Method", "Sample", "per-block RMSE (first→last)"],
+    );
+    for m in [Method::Rtn, Method::FlexRound, Method::Lrq] {
+        let out = lab.quantize(m, scheme, lab.recon)?;
+        for (name, ids) in [("calib", &calib_ids), ("unseen", &unseen_ids)] {
+            let curve = rmse_curve(&lab.engine, &lab.weights, &out.model,
+                                   &out.stats, &scheme, ids)?;
+            let series = curve
+                .iter()
+                .map(|v| format!("{v:.4}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!("[fig3] {} {name}: {series}", m.paper_name());
+            t.row(vec![m.paper_name().into(), name.into(), series]);
+        }
+    }
+    t.note("paper: LRQ ≈ FlexRound on the calibration sample but clearly \
+            lower on unseen samples — the low-rank generalization effect");
+    t.emit(&lab.reports, "fig3")
+}
+
+/// Fig. 4(a): rank study.
+pub fn fig4a(args: &Args) -> Result<()> {
+    let cfg = args.get_or("cfg", "tiny");
+    let lab = Lab::new(args, &cfg)?;
+    let ranks = lab.rt.ranks(&cfg);
+    if ranks.is_empty() {
+        bail!("no rank artifacts for {cfg}");
+    }
+    let scheme = Scheme::w8a8_static();
+    let mut t = Table::new(
+        "Fig. 4(a) — LRQ rank study, W8A8(static)KV8",
+        &["Rank r", "CSR %", "MMLU %"],
+    );
+    for r in &ranks {
+        let recon = ReconConfig { rank: *r, ..lab.recon };
+        let out = lab.quantize(Method::Lrq, scheme, recon)?;
+        let s = lab.summary_of(&out, scheme)?;
+        t.row(vec![r.to_string(), pct(s.csr_acc), pct(s.mmlu_acc)]);
+        println!("[fig4a] r={r}: CSR {:.2} MMLU {:.2}", s.csr_acc * 100.0,
+                 s.mmlu_acc * 100.0);
+    }
+    let fr = lab.run_method(Method::FlexRound, scheme)?;
+    t.row(vec!["FlexRound (full)".into(), pct(fr.csr_acc),
+               pct(fr.mmlu_acc)]);
+    t.note("paper: performance is stable/rising to a sweet-spot rank, then \
+            decays toward FlexRound as r grows");
+    t.emit(&lab.reports, "fig4a")
+}
+
+/// Fig. 4(b): LRQ calibration sample-size study.
+pub fn fig4b(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let scheme = Scheme::w8a8_static();
+    let mut t = Table::new(
+        "Fig. 4(b) — LRQ vs calibration sample size, W8A8(static)KV8",
+        &["Calib samples", "CSR %", "MMLU %"],
+    );
+    for n in [16usize, 32, 64, 128] {
+        let recon = ReconConfig { calib_samples: n, ..lab.recon };
+        let out = lab.quantize(Method::Lrq, scheme, recon)?;
+        let s = lab.summary_of(&out, scheme)?;
+        t.row(vec![n.to_string(), pct(s.csr_acc), pct(s.mmlu_acc)]);
+        println!("[fig4b] n={n}: CSR {:.2} MMLU {:.2}", s.csr_acc * 100.0,
+                 s.mmlu_acc * 100.0);
+    }
+    t.note("paper: LRQ saturates beyond ~1024 samples and beats FlexRound at \
+            every size");
+    t.emit(&lab.reports, "fig4b")
+}
+
+// ---------------------------------------------------------------------------
+// tables
+// ---------------------------------------------------------------------------
+
+fn methods_weight_act() -> Vec<Method> {
+    vec![Method::Fp16, Method::Rtn, Method::SmoothQuant, Method::FlexRound,
+         Method::Lrq]
+}
+
+/// Tables 1–2 / 16 / 18 shape: CSR accuracy under W8A8(static)KV8.
+pub fn t1(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let scheme = Scheme::w8a8_static();
+    let mut t = Table::new(
+        "Tables 1–2 — CSR accuracy, W/A/KV = 8/8/8 (per-tensor static acts)",
+        &["Method", "#Bits", "CSR %", "PPL"],
+    );
+    for m in methods_weight_act() {
+        let s = lab.run_method(m, scheme)?;
+        let bits = if m == Method::Fp16 { "16/16/16".into() }
+                   else { scheme.label() };
+        t.row(vec![m.paper_name().into(), bits, pct(s.csr_acc),
+                   format!("{:.3}", s.ppl)]);
+        println!("[t1] {}: CSR {:.2} PPL {:.3}", m.paper_name(),
+                 s.csr_acc * 100.0, s.ppl);
+    }
+    t.note("paper shape: LRQ ≥ FlexRound > SmoothQuant > RTN, all near FP16 \
+            on CSR");
+    t.emit(&lab.reports, "t1")
+}
+
+/// Tables 3–4 / 17 / 20 shape: MMLU under W8A8(static)KV8.
+pub fn t3(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let scheme = Scheme::w8a8_static();
+    let mut t = Table::new(
+        "Tables 3–4 — MMLU-analogue accuracy, W/A/KV = 8/8/8",
+        &["Method", "#Bits", "MMLU %"],
+    );
+    for m in methods_weight_act() {
+        let s = lab.run_method(m, scheme)?;
+        let bits = if m == Method::Fp16 { "16/16/16".into() }
+                   else { scheme.label() };
+        t.row(vec![m.paper_name().into(), bits, pct(s.mmlu_acc)]);
+        println!("[t3] {}: MMLU {:.2}", m.paper_name(), s.mmlu_acc * 100.0);
+    }
+    t.note("paper shape: the LRQ-vs-FlexRound gap is much larger here than \
+            on CSR (generalization axis)");
+    t.emit(&lab.reports, "t3")
+}
+
+/// Tables 5–6 / 22–25 shape: W4 A8(per-token) KV8.
+pub fn t5(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let scheme = Scheme::w4a8_token();
+    let mut t = Table::new(
+        "Tables 5–6 — CSR + MMLU, W/A/KV = 4/8/8 (per-token acts)",
+        &["Method", "#Bits", "CSR %", "MMLU %"],
+    );
+    for m in methods_weight_act() {
+        let s = lab.run_method(m, scheme)?;
+        let bits = if m == Method::Fp16 { "16/16/16".into() }
+                   else { scheme.label() };
+        t.row(vec![m.paper_name().into(), bits, pct(s.csr_acc),
+                   pct(s.mmlu_acc)]);
+        println!("[t5] {}: CSR {:.2} MMLU {:.2}", m.paper_name(),
+                 s.csr_acc * 100.0, s.mmlu_acc * 100.0);
+    }
+    t.note("paper shape: 4-bit weights hurt RTN/SmoothQuant badly; \
+            reconstruction methods stay near FP16, LRQ edges FlexRound");
+    t.emit(&lab.reports, "t5")
+}
+
+/// Tables 7–8 / 11–12 shape: per-channel weight-only 3/4-bit.
+pub fn t7(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let mut t = Table::new(
+        "Tables 7–8 — weight-only per-channel quantization",
+        &["Method", "#Bits", "CSR %", "MMLU %", "PPL"],
+    );
+    let fp = lab.fp_summary()?;
+    t.row(vec!["FP16".into(), "16/16/16".into(), pct(fp.csr_acc),
+               pct(fp.mmlu_acc), format!("{:.3}", fp.ppl)]);
+    for bits in [3u32, 4] {
+        let scheme = Scheme::weight_only(bits);
+        for m in [Method::Rtn, Method::Gptq, Method::Awq, Method::FlexRound,
+                  Method::Lrq] {
+            let s = lab.run_method(m, scheme)?;
+            t.row(vec![m.paper_name().into(), scheme.label(),
+                       pct(s.csr_acc), pct(s.mmlu_acc),
+                       format!("{:.3}", s.ppl)]);
+            println!("[t7] {} {}: CSR {:.2} MMLU {:.2} PPL {:.3}",
+                     m.paper_name(), scheme.label(), s.csr_acc * 100.0,
+                     s.mmlu_acc * 100.0, s.ppl);
+        }
+    }
+    t.note("paper shape: LRQ ≥ FlexRound ≥ AWQ/GPTQ ≥ RTN; 4-bit ≈ FP16, \
+            3-bit shows a small gap");
+    t.emit(&lab.reports, "t7")
+}
+
+/// Tables 9–10 (App. B): r2/c2 ablation.
+pub fn t9(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let mut t = Table::new(
+        "Tables 9–10 — ablation: FlexRound vs S2=L2U2 vs LRQ (+r2+c2)",
+        &["Method", "#Bits", "CSR %", "MMLU %"],
+    );
+    for scheme in [Scheme::w8a8_static().without_kv_quant(),
+                   Scheme::w8a8_static()] {
+        for m in [Method::FlexRound, Method::LrqNoBias, Method::Lrq] {
+            let s = lab.run_method(m, scheme)?;
+            t.row(vec![m.paper_name().into(), scheme.label(),
+                       pct(s.csr_acc), pct(s.mmlu_acc)]);
+            println!("[t9] {} {}: CSR {:.2} MMLU {:.2}", m.paper_name(),
+                     scheme.label(), s.csr_acc * 100.0, s.mmlu_acc * 100.0);
+        }
+    }
+    t.note("paper: L2U2 alone already beats FlexRound on MMLU; r2+c2 adds \
+            the rest (App. B)");
+    t.emit(&lab.reports, "t9")
+}
+
+/// Tables 13–14 (App. F): quantization cost.
+pub fn t13(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let scheme = Scheme::w8a8_static();
+    let mut t = Table::new(
+        "Tables 13–14 — quantization cost (this testbed)",
+        &["Method", "Wall time (s)", "Working set (MB)"],
+    );
+    for m in [Method::SmoothQuant, Method::FlexRound, Method::Lrq] {
+        let out = lab.quantize(m, scheme, lab.recon)?;
+        t.row(vec![m.paper_name().into(),
+                   format!("{:.1}", out.wall.as_secs_f64()),
+                   format!("{:.1}", out.mem_bytes as f64 / 1e6)]);
+        println!("[t13] {}: {:.1}s, {:.1} MB", m.paper_name(),
+                 out.wall.as_secs_f64(), out.mem_bytes as f64 / 1e6);
+    }
+    t.note("paper: SmoothQuant is learning-free (minutes); FlexRound and LRQ \
+            pay for reconstruction, with LRQ using *less* memory (fewer \
+            learnable params) but slightly more time (L2·U2 matmul)");
+    t.emit(&lab.reports, "t13")
+}
+
+/// Table 29 (App. J): learnable-parameter ratio.
+pub fn t29(args: &Args) -> Result<()> {
+    let mut t = Table::new(
+        "Table 29 — LRQ learnable params / pre-trained weights per block",
+        &["Model", "d", "ff", "rank", "Ratio %"],
+    );
+    for (name, d, f, r) in [
+        ("Llama 7B", 4096usize, 11008usize, 1024usize),
+        ("Llama 13B", 5120, 13824, 1024),
+        ("Llama 33B", 6656, 17920, 2048),
+        ("Llama 65B", 8192, 22016, 2048),
+        ("tiny (ours)", 128, 352, 32),
+        ("small (ours)", 256, 704, 64),
+    ] {
+        let ratio = block_param_ratio(d, f, r);
+        t.row(vec![name.into(), d.to_string(), f.to_string(), r.to_string(),
+                   format!("{:.2}", ratio * 100.0)]);
+    }
+    t.note("paper values: 39.51 / 31.57 / 48.60 / 39.51 % — matched exactly \
+            by quant::lrq::block_param_ratio (unit-tested)");
+    t.emit(Path::new(&args.get_or("reports", "reports")), "t29")
+}
+
+/// Table 30 (App. K): seed variance of FlexRound vs LRQ.
+pub fn t30(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let scheme = Scheme::w8a8_static();
+    let mut t = Table::new(
+        "Table 30 — mean ± std over 3 seeds, W8A8(static)KV8",
+        &["Method", "CSR mean %", "CSR std", "MMLU mean %", "MMLU std"],
+    );
+    for m in [Method::FlexRound, Method::Lrq] {
+        let mut csr = Vec::new();
+        let mut mmlu = Vec::new();
+        for k in 0..3u64 {
+            let recon = ReconConfig { seed: lab.seed + 1000 * k, ..lab.recon };
+            let out = lab.quantize(m, scheme, recon)?;
+            let s = lab.summary_of(&out, scheme)?;
+            csr.push(s.csr_acc * 100.0);
+            mmlu.push(s.mmlu_acc * 100.0);
+            println!("[t30] {} seed{k}: CSR {:.2} MMLU {:.2}",
+                     m.paper_name(), csr[csr.len() - 1],
+                     mmlu[mmlu.len() - 1]);
+        }
+        let stat = |v: &[f64]| {
+            let mean = v.iter().sum::<f64>() / v.len() as f64;
+            let var = v.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>()
+                / v.len() as f64;
+            (mean, var.sqrt())
+        };
+        let (cm, cs) = stat(&csr);
+        let (mm, ms) = stat(&mmlu);
+        t.row(vec![m.paper_name().into(), format!("{cm:.2}"),
+                   format!("{cs:.2}"), format!("{mm:.2}"),
+                   format!("{ms:.2}")]);
+    }
+    t.note("paper: LRQ has both a higher mean and a smaller std than \
+            FlexRound — the overfitting-variance signature");
+    t.emit(&lab.reports, "t30")
+}
+
+/// Tables 31–32 (App. L): SmoothQuant + reconstruction combinations.
+pub fn t31(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let scheme = Scheme::w8a8_static().without_kv_quant();
+    let mut t = Table::new(
+        "Tables 31–32 — SQ preprocessing + reconstruction, W8A8/KV16",
+        &["Method", "CSR %", "MMLU %"],
+    );
+    for m in [Method::FlexRound, Method::SqFlexRound, Method::Lrq,
+              Method::SqLrq] {
+        let s = lab.run_method(m, scheme)?;
+        t.row(vec![m.paper_name().into(), pct(s.csr_acc), pct(s.mmlu_acc)]);
+        println!("[t31] {}: CSR {:.2} MMLU {:.2}", m.paper_name(),
+                 s.csr_acc * 100.0, s.mmlu_acc * 100.0);
+    }
+    t.note("paper: SQ preprocessing does not reliably help the \
+            reconstruction methods; LRQ alone remains best on MMLU");
+    t.emit(&lab.reports, "t31")
+}
+
+/// App. H: KV-cache quantization on/off deltas.
+pub fn kvq(args: &Args) -> Result<()> {
+    let lab = Lab::new(args, &args.get_or("cfg", "tiny"))?;
+    let mut t = Table::new(
+        "App. H — effect of per-token KV-cache quantization",
+        &["Method", "#Bits", "CSR %", "MMLU %"],
+    );
+    for m in [Method::Rtn, Method::SmoothQuant, Method::FlexRound,
+              Method::Lrq] {
+        for scheme in [Scheme::w8a8_static().without_kv_quant(),
+                       Scheme::w8a8_static()] {
+            let s = lab.run_method(m, scheme)?;
+            t.row(vec![m.paper_name().into(), scheme.label(),
+                       pct(s.csr_acc), pct(s.mmlu_acc)]);
+            println!("[kvq] {} {}: CSR {:.2} MMLU {:.2}", m.paper_name(),
+                     scheme.label(), s.csr_acc * 100.0, s.mmlu_acc * 100.0);
+        }
+    }
+    t.note("paper: KV8 per-token quantization is nearly free for every \
+            method");
+    t.emit(&lab.reports, "kvq")
+}
+
+// ---------------------------------------------------------------------------
+// serving (Fig. 5 / Table 15)
+// ---------------------------------------------------------------------------
+
+struct EngineScorer {
+    engine: Engine,
+    weights: Option<Weights>,
+    quant: Option<(crate::model::QuantizedModel,
+                   Vec<crate::coordinator::BlockStats>, Scheme)>,
+}
+
+impl BatchScorer for EngineScorer {
+    fn batch_size(&self) -> usize {
+        self.engine.dim.calib_batch
+    }
+    fn seq_len(&self) -> usize {
+        self.engine.dim.seq
+    }
+    fn score(&mut self, ids: &[i32], targets: &[i32]) -> Result<Vec<f32>> {
+        let (_, logp) = match (&self.weights, &self.quant) {
+            (Some(w), _) => self.engine.fp_forward(w, ids, targets)?,
+            (None, Some((qm, stats, scheme))) =>
+                self.engine.q_forward(qm, stats, scheme, ids, targets)?,
+            _ => bail!("scorer has no model"),
+        };
+        Ok(logp.data)
+    }
+}
+
+/// Fig. 5 / Table 15: accuracy vs serving latency vs model size for FP16 and
+/// weight-only LRQ at 3/4 bits.
+pub fn fig5(args: &Args) -> Result<()> {
+    let cfg = args.get_or("cfg", "tiny");
+    let lab = Lab::new(args, &cfg)?;
+    let requests: usize = args.parse_as("requests", 120)?;
+    let mut t = Table::new(
+        "Fig. 5 / Table 15 — accuracy vs serving latency vs model size",
+        &["Variant", "CSR %", "Size (MB)", "p50 lat (ms)", "p95 lat (ms)",
+          "req/s"],
+    );
+    let fp = lab.fp_summary()?;
+    let fp_bytes = lab.weights.dim.param_count() * 4;
+
+    let mut variants: Vec<(String, Option<u32>)> =
+        vec![("FP16".into(), None)];
+    for bits in [4u32, 3] {
+        variants.push((format!("LRQ {bits}-bit"), Some(bits)));
+    }
+    for (name, bits) in variants {
+        let (acc, size_bytes) = match bits {
+            None => (fp.csr_acc, fp_bytes),
+            Some(b) => {
+                let scheme = Scheme::weight_only(b);
+                let out = lab.quantize(Method::Lrq, scheme, lab.recon)?;
+                let s = lab.summary_of(&out, scheme)?;
+                (s.csr_acc, out.model.storage_bytes())
+            }
+        };
+        let (p50, p95, rps) = serving_bench(args, &cfg, bits, requests)?;
+        t.row(vec![name.clone(), pct(acc),
+                   format!("{:.2}", size_bytes as f64 / 1e6),
+                   format!("{:.2}", p50.as_secs_f64() * 1e3),
+                   format!("{:.2}", p95.as_secs_f64() * 1e3),
+                   format!("{rps:.1}")]);
+        println!("[fig5] {name}: CSR {:.2} size {:.2}MB p50 {:?} rps {rps:.1}",
+                 acc * 100.0, size_bytes as f64 / 1e6, p50);
+    }
+    t.note("CPU-PJRT testbed: latency parity is expected (XLA executes f32 \
+            either way); the paper's 2.3–2.8× speedups come from LUT-GEMM on \
+            GPU — see DESIGN.md §Hardware-Adaptation for the TPU estimate. \
+            The size column shows the real packed-storage compression.");
+    t.emit(&lab.reports, "fig5")
+}
+
+/// Run a serving benchmark; returns (p50, p95, requests/s).
+fn serving_bench(args: &Args, cfg: &str, w_bits: Option<u32>,
+                 requests: usize) -> Result<(Duration, Duration, f64)> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let wpath = args.get_or("weights", &format!("weights_{cfg}.bin"));
+    let _seed: u64 = args.parse_as("seed", 1234)?;
+    let cfg2 = cfg.to_string();
+    let steps: usize = args.parse_as("steps", 100)?;
+    let calib: usize = args.parse_as("calib", 32)?;
+
+    let server = Server::start(ServerConfig::default(), move || {
+        let rt = Runtime::load(Path::new(&artifacts))?;
+        let dim = rt.dim(&cfg2)?;
+        let engine = Engine::new(&rt, &cfg2)?;
+        let weights = Weights::load(&dim, Path::new(&wpath))?;
+        match w_bits {
+            None => Ok(Box::new(EngineScorer {
+                engine,
+                weights: Some(weights),
+                quant: None,
+            }) as Box<dyn BatchScorer>),
+            Some(bits) => {
+                let corpus =
+                    Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+                let scheme = Scheme::weight_only(bits);
+                let recon = ReconConfig {
+                    steps,
+                    calib_samples: calib,
+                    ..ReconConfig::default()
+                };
+                let out = quantize_model(&rt, &engine, &weights, &corpus,
+                                         Method::Lrq, scheme, recon)?;
+                Ok(Box::new(EngineScorer {
+                    engine,
+                    weights: None,
+                    quant: Some((out.model, out.stats, scheme)),
+                }) as Box<dyn BatchScorer>)
+            }
+        }
+    })?;
+
+    // drive load from 4 client threads
+    let t0 = Instant::now();
+    let per_thread = requests / 4;
+    let mut handles = Vec::new();
+    for k in 0..4u64 {
+        let client = server.client();
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(0xBEEF ^ k);
+            for _ in 0..per_thread {
+                let len = rng.range(8, 48);
+                let ids: Vec<i32> =
+                    (0..len).map(|_| rng.below(256) as i32).collect();
+                client.score(ids)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+    }
+    let wall = t0.elapsed();
+    let m = server.metrics.lock().unwrap().clone();
+    Ok((m.p50_latency(), m.p95_latency(), m.throughput(wall)))
+}
+
+/// `lrq serve` entry: run the serving loop once and print metrics.
+pub fn serving_run(artifacts: &str, cfg: &str, weights: &str,
+                   method: Option<&str>, w_bits: u32, requests: usize,
+                   seed: u64) -> Result<()> {
+    let mut args = Args::default();
+    args.options.insert("artifacts".into(), artifacts.into());
+    args.options.insert("weights".into(), weights.into());
+    args.options.insert("seed".into(), seed.to_string());
+    let bits = method.map(|_| w_bits);
+    let (p50, p95, rps) = serving_bench(&args, cfg, bits, requests)?;
+    println!("served {requests} requests: p50 {:.2}ms p95 {:.2}ms {:.1} req/s",
+             p50.as_secs_f64() * 1e3, p95.as_secs_f64() * 1e3, rps);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// dispatch
+// ---------------------------------------------------------------------------
+
+pub const ALL_TABLES: &[&str] = &["t29", "fig3", "t1", "t3", "t5", "t7", "t9",
+                                  "t13", "t30", "t31", "kvq", "fig1", "fig2",
+                                  "fig4a", "fig4b", "fig5"];
+
+pub fn run_table(id: &str, args: &Args) -> Result<()> {
+    match id {
+        "fig1" => fig1(args),
+        "fig2" => fig2(args),
+        "fig3" => fig3(args),
+        "fig4a" => fig4a(args),
+        "fig4b" => fig4b(args),
+        "fig5" => fig5(args),
+        "t1" => t1(args),
+        "t3" => t3(args),
+        "t5" => t5(args),
+        "t7" => t7(args),
+        "t9" => t9(args),
+        "t13" => t13(args),
+        "t29" => t29(args),
+        "t30" => t30(args),
+        "t31" => t31(args),
+        "kvq" => kvq(args),
+        other => bail!("unknown table id {other}; known: {ALL_TABLES:?}"),
+    }
+}
+
+pub fn run_all(args: &Args) -> Result<()> {
+    for id in ALL_TABLES {
+        println!("\n=== regenerating {id} ===");
+        run_table(id, args).with_context(|| format!("table {id}"))?;
+    }
+    Ok(())
+}

@@ -1,0 +1,460 @@
+//! Dense f32 tensor substrate for the L3 coordinator.
+//!
+//! The heavy math runs in the AOT-compiled XLA artifacts; this module covers
+//! everything the coordinator does natively: weight finalization (LRQ
+//! fake-quant of learned parameters), GPTQ's Hessian algebra, AWQ's grid
+//! search, statistics, and the packed-weight serving path. `matmul_bt` is the
+//! hot kernel (blocked, both operands traversed row-major) — benched in
+//! `rust/benches/kernels.rs`.
+
+use anyhow::{bail, Result};
+
+/// Row-major dense f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    pub dims: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(dims: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), data.len(),
+                   "dims {:?} vs len {}", dims, data.len());
+        Tensor { dims, data }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        Tensor { dims: dims.to_vec(), data: vec![0.0; dims.iter().product()] }
+    }
+
+    pub fn ones(dims: &[usize]) -> Self {
+        Tensor { dims: dims.to_vec(), data: vec![1.0; dims.iter().product()] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor { dims: vec![], data: vec![v] }
+    }
+
+    pub fn randn(rng: &mut crate::rng::Rng, dims: &[usize], std: f32) -> Self {
+        Tensor {
+            dims: dims.to_vec(),
+            data: rng.normal_vec(dims.iter().product(), std),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// (rows, cols) of a 2-D tensor.
+    pub fn rc(&self) -> (usize, usize) {
+        assert_eq!(self.dims.len(), 2, "rc() on rank-{} tensor", self.dims.len());
+        (self.dims[0], self.dims[1])
+    }
+
+    pub fn row(&self, i: usize) -> &[f32] {
+        let (_, c) = self.rc();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let (_, c) = self.rc();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn reshape(mut self, dims: &[usize]) -> Self {
+        assert_eq!(dims.iter().product::<usize>(), self.data.len());
+        self.dims = dims.to_vec();
+        self
+    }
+
+    /// View the trailing dim as columns: (prod(leading), last).
+    pub fn as_2d(&self) -> (usize, usize) {
+        let last = *self.dims.last().expect("as_2d on scalar");
+        (self.data.len() / last, last)
+    }
+
+    // ---- elementwise ----
+
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> Tensor {
+        Tensor {
+            dims: self.dims.clone(),
+            data: self.data.iter().map(|&x| f(x)).collect(),
+        }
+    }
+
+    pub fn zip(&self, other: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+        assert_eq!(self.dims, other.dims);
+        Tensor {
+            dims: self.dims.clone(),
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(&a, &b)| f(a, b))
+                .collect(),
+        }
+    }
+
+    pub fn add(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a + b)
+    }
+
+    pub fn sub(&self, o: &Tensor) -> Tensor {
+        self.zip(o, |a, b| a - b)
+    }
+
+    pub fn scale(&self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    // ---- reductions ----
+
+    pub fn sum(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.sum() / self.data.len() as f64
+    }
+
+    pub fn min(&self) -> f32 {
+        self.data.iter().cloned().fold(f32::INFINITY, f32::min)
+    }
+
+    pub fn max(&self) -> f32 {
+        self.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn frob(&self) -> f64 {
+        self.sq_norm().sqrt()
+    }
+
+    pub fn mse(&self, other: &Tensor) -> f64 {
+        assert_eq!(self.dims, other.dims);
+        let n = self.data.len().max(1);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(&a, &b)| {
+                let d = (a - b) as f64;
+                d * d
+            })
+            .sum::<f64>()
+            / n as f64
+    }
+
+    pub fn rmse(&self, other: &Tensor) -> f64 {
+        self.mse(other).sqrt()
+    }
+
+    /// Per-column absolute max of a (rows, cols) view over the trailing dim.
+    pub fn col_amax(&self) -> Vec<f32> {
+        let (r, c) = self.as_2d();
+        let mut out = vec![0.0f32; c];
+        for i in 0..r {
+            let row = &self.data[i * c..(i + 1) * c];
+            for (o, &x) in out.iter_mut().zip(row) {
+                *o = o.max(x.abs());
+            }
+        }
+        out
+    }
+
+    // ---- matmul ----
+
+    /// `self[m,k] @ b[k,n] -> [m,n]` (blocked over k for cache reuse).
+    pub fn matmul(&self, b: &Tensor) -> Tensor {
+        let (m, k) = self.rc();
+        let (k2, n) = b.rc();
+        assert_eq!(k, k2, "matmul dim mismatch {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        const BK: usize = 64;
+        for k0 in (0..k).step_by(BK) {
+            let k1 = (k0 + BK).min(k);
+            for i in 0..m {
+                let arow = &self.data[i * k..(i + 1) * k];
+                let orow = &mut out[i * n..(i + 1) * n];
+                for kk in k0..k1 {
+                    let a = arow[kk];
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let brow = &b.data[kk * n..(kk + 1) * n];
+                    for (o, &bv) in orow.iter_mut().zip(brow) {
+                        *o += a * bv;
+                    }
+                }
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// `self[m,k] @ b[n,k].T -> [m,n]` — both row-major-friendly. This is the
+    /// layout every model weight uses (`y = x @ W.T`).
+    pub fn matmul_bt(&self, b: &Tensor) -> Tensor {
+        let (m, k) = self.rc();
+        let (n, k2) = b.rc();
+        assert_eq!(k, k2, "matmul_bt dim mismatch {k} vs {k2}");
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                let brow = &b.data[j * k..(j + 1) * k];
+                let mut acc0 = 0.0f32;
+                let mut acc1 = 0.0f32;
+                let mut acc2 = 0.0f32;
+                let mut acc3 = 0.0f32;
+                let chunks = k / 4;
+                for c in 0..chunks {
+                    let p = c * 4;
+                    acc0 += arow[p] * brow[p];
+                    acc1 += arow[p + 1] * brow[p + 1];
+                    acc2 += arow[p + 2] * brow[p + 2];
+                    acc3 += arow[p + 3] * brow[p + 3];
+                }
+                let mut acc = acc0 + acc1 + acc2 + acc3;
+                for p in chunks * 4..k {
+                    acc += arow[p] * brow[p];
+                }
+                orow[j] = acc;
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    /// `self[m,k].T @ b[m,n] -> [k,n]` (Gram-style accumulation for GPTQ).
+    pub fn matmul_at(&self, b: &Tensor) -> Tensor {
+        let (m, k) = self.rc();
+        let (m2, n) = b.rc();
+        assert_eq!(m, m2);
+        let mut out = vec![0.0f32; k * n];
+        for i in 0..m {
+            let arow = &self.data[i * k..(i + 1) * k];
+            let brow = &b.data[i * n..(i + 1) * n];
+            for (kk, &a) in arow.iter().enumerate() {
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = &mut out[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += a * bv;
+                }
+            }
+        }
+        Tensor::new(vec![k, n], out)
+    }
+
+    pub fn transpose(&self) -> Tensor {
+        let (r, c) = self.rc();
+        let mut out = vec![0.0f32; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        Tensor::new(vec![c, r], out)
+    }
+
+    /// Slice along the outermost dim: rows `lo..hi` of dims[0].
+    pub fn slice_outer(&self, lo: usize, hi: usize) -> Tensor {
+        assert!(!self.dims.is_empty() && lo <= hi && hi <= self.dims[0]);
+        let inner: usize = self.dims[1..].iter().product();
+        let mut dims = self.dims.clone();
+        dims[0] = hi - lo;
+        Tensor::new(dims, self.data[lo * inner..hi * inner].to_vec())
+    }
+
+    /// Stack 2-D tensors along rows.
+    pub fn vstack(parts: &[&Tensor]) -> Result<Tensor> {
+        if parts.is_empty() {
+            bail!("vstack of nothing");
+        }
+        let c = parts[0].rc().1;
+        let mut data = Vec::new();
+        let mut rows = 0;
+        for p in parts {
+            let (r, c2) = p.rc();
+            if c2 != c {
+                bail!("vstack col mismatch");
+            }
+            rows += r;
+            data.extend_from_slice(&p.data);
+        }
+        Ok(Tensor::new(vec![rows, c], data))
+    }
+}
+
+/// Cholesky decomposition of a symmetric positive-definite matrix (in f64 for
+/// stability) — GPTQ's core solve. Returns lower-triangular L with A = L·Lᵀ.
+pub fn cholesky(a: &[f64], n: usize) -> Result<Vec<f64>> {
+    let mut l = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..=i {
+            let mut sum = a[i * n + j];
+            for k in 0..j {
+                sum -= l[i * n + k] * l[j * n + k];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    bail!("cholesky: not positive definite at {i} (sum {sum})");
+                }
+                l[i * n + i] = sum.sqrt();
+            } else {
+                l[i * n + j] = sum / l[j * n + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Invert a lower-triangular matrix (forward substitution per column).
+pub fn tri_inverse_lower(l: &[f64], n: usize) -> Vec<f64> {
+    let mut inv = vec![0.0f64; n * n];
+    for j in 0..n {
+        inv[j * n + j] = 1.0 / l[j * n + j];
+        for i in j + 1..n {
+            let mut sum = 0.0;
+            for k in j..i {
+                sum -= l[i * n + k] * inv[k * n + j];
+            }
+            inv[i * n + j] = sum / l[i * n + i];
+        }
+    }
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = a.rc();
+        let (_, n) = b.rc();
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for kk in 0..k {
+                    acc += a.data[i * k + kk] * b.data[kk * n + j];
+                }
+                out[i * n + j] = acc;
+            }
+        }
+        Tensor::new(vec![m, n], out)
+    }
+
+    #[test]
+    fn matmul_matches_naive() {
+        let mut rng = Rng::new(1);
+        for (m, k, n) in [(3, 5, 7), (16, 64, 32), (1, 1, 1), (17, 33, 9)] {
+            let a = Tensor::randn(&mut rng, &[m, k], 1.0);
+            let b = Tensor::randn(&mut rng, &[k, n], 1.0);
+            let got = a.matmul(&b);
+            let want = naive_matmul(&a, &b);
+            assert!(got.rmse(&want) < 1e-5);
+        }
+    }
+
+    #[test]
+    fn matmul_bt_matches_transpose() {
+        let mut rng = Rng::new(2);
+        for (m, k, n) in [(4, 6, 8), (13, 31, 7), (32, 128, 96)] {
+            let a = Tensor::randn(&mut rng, &[m, k], 1.0);
+            let b = Tensor::randn(&mut rng, &[n, k], 1.0);
+            let got = a.matmul_bt(&b);
+            let want = a.matmul(&b.transpose());
+            assert!(got.rmse(&want) < 1e-4);
+        }
+    }
+
+    #[test]
+    fn matmul_at_matches() {
+        let mut rng = Rng::new(3);
+        let a = Tensor::randn(&mut rng, &[10, 6], 1.0);
+        let b = Tensor::randn(&mut rng, &[10, 4], 1.0);
+        let got = a.matmul_at(&b);
+        let want = a.transpose().matmul(&b);
+        assert!(got.rmse(&want) < 1e-5);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(4);
+        let a = Tensor::randn(&mut rng, &[5, 9], 1.0);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(5);
+        let n = 12;
+        let x = Tensor::randn(&mut rng, &[24, n], 1.0);
+        // A = XᵀX + I (SPD)
+        let g = x.matmul_at(&x);
+        let mut a: Vec<f64> = g.data.iter().map(|&v| v as f64).collect();
+        for i in 0..n {
+            a[i * n + i] += 1.0;
+        }
+        let l = cholesky(&a, n).unwrap();
+        for i in 0..n {
+            for j in 0..n {
+                let mut acc = 0.0;
+                for k in 0..n {
+                    acc += l[i * n + k] * l[j * n + k];
+                }
+                assert!((acc - a[i * n + j]).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn tri_inverse() {
+        let l = vec![2.0, 0.0, 0.0, 1.0, 3.0, 0.0, 0.5, -1.0, 4.0];
+        let inv = tri_inverse_lower(&l, 3);
+        // L * inv == I
+        for i in 0..3 {
+            for j in 0..3 {
+                let mut acc = 0.0;
+                for k in 0..3 {
+                    acc += l[i * 3 + k] * inv[k * 3 + j];
+                }
+                let want = if i == j { 1.0 } else { 0.0 };
+                assert!((acc - want).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::new(vec![2, 2], vec![1.0, -2.0, 3.0, 0.0]);
+        assert_eq!(t.min(), -2.0);
+        assert_eq!(t.max(), 3.0);
+        assert!((t.mean() - 0.5).abs() < 1e-9);
+        let amax = t.col_amax();
+        assert_eq!(amax, vec![3.0, 2.0]);
+    }
+
+    #[test]
+    fn vstack_shapes() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::ones(&[1, 3]);
+        let s = Tensor::vstack(&[&a, &b]).unwrap();
+        assert_eq!(s.dims, vec![3, 3]);
+        assert_eq!(s.data[6..9], [1.0, 1.0, 1.0]);
+    }
+}

@@ -1,0 +1,62 @@
+//! Minimal property-testing harness (proptest is unavailable in the offline
+//! build image): run a property over many seeded random cases and report the
+//! first failing seed, which reproduces deterministically.
+
+use crate::rng::Rng;
+
+/// Run `prop` over `cases` seeded RNGs; panic with the failing seed on error.
+/// Properties return `Err(msg)` to fail.
+pub fn check<F>(name: &str, cases: u64, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    for seed in 0..cases {
+        let mut rng = Rng::new(0xC0FFEE ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert two f32 slices are close.
+pub fn assert_close(a: &[f32], b: &[f32], atol: f32, ctx: &str) -> Result<(), String> {
+    if a.len() != b.len() {
+        return Err(format!("{ctx}: len {} vs {}", a.len(), b.len()));
+    }
+    for (i, (&x, &y)) in a.iter().zip(b).enumerate() {
+        if (x - y).abs() > atol {
+            return Err(format!("{ctx}: idx {i}: {x} vs {y} (atol {atol})"));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes() {
+        check("trivial", 10, |rng| {
+            let x = rng.next_f32();
+            if (0.0..1.0).contains(&x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failing")]
+    fn check_reports_failure() {
+        check("failing", 5, |_| Err("boom".into()));
+    }
+
+    #[test]
+    fn close_helper() {
+        assert!(assert_close(&[1.0, 2.0], &[1.0, 2.0005], 1e-3, "t").is_ok());
+        assert!(assert_close(&[1.0], &[1.1], 1e-3, "t").is_err());
+        assert!(assert_close(&[1.0], &[1.0, 2.0], 1e-3, "t").is_err());
+    }
+}

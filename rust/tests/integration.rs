@@ -1,0 +1,339 @@
+//! Integration tests over the PJRT runtime + AOT artifacts: cross-layer
+//! golden checks (Rust quant math vs the Pallas kernels), artifact chaining
+//! consistency, fold invariance through the real block, and pipeline smokes.
+//!
+//! These need `artifacts/manifest.txt` (run `make artifacts`); they are
+//! skipped with a notice otherwise so `cargo test` stays green on a fresh
+//! checkout.
+
+use std::path::{Path, PathBuf};
+
+use lrq::config::{ActScheme, Method, ReconConfig, Scheme};
+use lrq::coordinator::{quantize_model, Engine};
+use lrq::data::{Corpus, CorpusConfig};
+use lrq::methods::fold::fold_block;
+use lrq::methods::{recon_driver, BlockContext};
+use lrq::model::Weights;
+use lrq::quant::{self, fakequant_lrq, rtn_grid, ChannelGrid, LrqParams};
+use lrq::rng::Rng;
+use lrq::runtime::{to_lit, Runtime};
+use lrq::tensor::Tensor;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    for cand in ["artifacts", "../artifacts"] {
+        let p = Path::new(env!("CARGO_MANIFEST_DIR")).join(cand);
+        if p.join("manifest.txt").exists() {
+            return Some(p);
+        }
+    }
+    None
+}
+
+macro_rules! runtime_or_skip {
+    () => {
+        match artifacts_dir() {
+            Some(dir) => Runtime::load(&dir).expect("runtime"),
+            None => {
+                eprintln!("SKIP: no artifacts/ (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn runtime_compiles_and_runs_embed() {
+    let rt = runtime_or_skip!();
+    let dim = rt.dim("tiny").unwrap();
+    let exec = rt.exec("embed_tiny").unwrap();
+    let mut rng = Rng::new(1);
+    let emb = Tensor::randn(&mut rng, &[dim.vocab, dim.d], 0.1);
+    let ids: Vec<i32> = (0..dim.calib_batch * dim.seq)
+        .map(|_| rng.below(dim.vocab) as i32)
+        .collect();
+    let out = exec
+        .run(&[
+            to_lit(&emb).unwrap(),
+            lrq::runtime::ids_lit(&ids, &[dim.calib_batch, dim.seq]).unwrap(),
+        ])
+        .unwrap();
+    let x = lrq::runtime::from_lit(&out[0], &[dim.calib_batch, dim.seq, dim.d])
+        .unwrap();
+    // gather semantics: row b,s equals emb[ids[b,s]]
+    for check in [0usize, 7, 100] {
+        let tok = ids[check] as usize;
+        let got = &x.data[check * dim.d..(check + 1) * dim.d];
+        let want = emb.row(tok);
+        assert!(got
+            .iter()
+            .zip(want)
+            .all(|(a, b)| (a - b).abs() < 1e-6));
+    }
+}
+
+#[test]
+fn cross_layer_fakequant_golden() {
+    // Rust finalize math vs the L1 Pallas kernel artifact, same inputs.
+    let rt = runtime_or_skip!();
+    let dim = rt.dim("tiny").unwrap();
+    let exec = rt.exec("kernel_fakequant_tiny").unwrap();
+    let (co, ci, r) = (dim.ff, dim.d, dim.rank);
+    let mut rng = Rng::new(2);
+    let w = Tensor::randn(&mut rng, &[co, ci], 0.05);
+    let grid = rtn_grid(&w, 255.0);
+    let p = LrqParams {
+        ds1: vec![0.0; co],
+        l2: Tensor::randn(&mut rng, &[co, r], 0.02),
+        u2: Tensor::randn(&mut rng, &[r, ci], 0.02),
+        r2: rng.normal_vec(co, 0.02),
+        c2: rng.normal_vec(ci, 0.02),
+    };
+    let inputs = vec![
+        to_lit(&w).unwrap(),
+        to_lit(&Tensor::new(vec![co], grid.scale.clone())).unwrap(),
+        to_lit(&Tensor::new(vec![co], grid.zp.clone())).unwrap(),
+        to_lit(&p.l2).unwrap(),
+        to_lit(&p.u2).unwrap(),
+        to_lit(&Tensor::new(vec![co], p.r2.clone())).unwrap(),
+        to_lit(&Tensor::new(vec![ci], p.c2.clone())).unwrap(),
+        to_lit(&Tensor::scalar(255.0)).unwrap(),
+    ];
+    let out = exec.run(&inputs).unwrap();
+    let kernel = lrq::runtime::from_lit(&out[0], &[co, ci]).unwrap();
+    let rust = fakequant_lrq(&w, &grid, &p);
+    let err = kernel.rmse(&rust);
+    assert!(err < 1e-5, "kernel vs rust fakequant rmse {err}");
+}
+
+#[test]
+fn qmm_kernel_matches_tensor_substrate() {
+    let rt = runtime_or_skip!();
+    let dim = rt.dim("tiny").unwrap();
+    let exec = rt.exec("kernel_qmm_tiny").unwrap();
+    let t = dim.calib_batch * dim.seq;
+    let (k, n) = (dim.d, dim.ff);
+    let mut rng = Rng::new(3);
+    let x = Tensor::randn(&mut rng, &[t, k], 1.0);
+    let w = Tensor::randn(&mut rng, &[n, k], 0.05);
+    let grid = rtn_grid(&w, 15.0);
+    let codes = quant::quantize_int_codes(&w, &grid, None);
+    let out = exec
+        .run(&[
+            to_lit(&x).unwrap(),
+            to_lit(&codes).unwrap(),
+            to_lit(&Tensor::new(vec![n], grid.scale.clone())).unwrap(),
+            to_lit(&Tensor::new(vec![n], grid.zp.clone())).unwrap(),
+        ])
+        .unwrap();
+    let y_kernel = lrq::runtime::from_lit(&out[0], &[t, n]).unwrap();
+    // Rust: dequant then matmul_bt
+    let mut deq = codes.clone();
+    for r in 0..n {
+        for c in 0..k {
+            deq.data[r * k + c] = (codes.data[r * k + c] - grid.zp[r])
+                * grid.scale[r];
+        }
+    }
+    let y_rust = x.matmul_bt(&deq);
+    let rel = y_kernel.rmse(&y_rust)
+        / (y_rust.frob() / (y_rust.len() as f64).sqrt());
+    assert!(rel < 1e-4, "qmm kernel vs tensor rel rmse {rel}");
+}
+
+#[test]
+fn fold_preserves_block_function() {
+    // SmoothQuant/AWQ fold must leave the FP block function unchanged —
+    // checked through the real block_fwd artifact.
+    let rt = runtime_or_skip!();
+    let dim = rt.dim("tiny").unwrap();
+    let engine = Engine::new(&rt, "tiny").unwrap();
+    let mut rng = Rng::new(4);
+    let weights = Weights::init(&dim, &mut rng);
+    let bw = &weights.blocks[0];
+    let x = Tensor::randn(&mut rng, &[dim.calib_batch, dim.seq, dim.d], 1.0);
+
+    let mut scales: [Vec<f32>; 4] = [
+        vec![0.0; dim.d].iter().map(|_| 0.5 + rng.next_f32()).collect(),
+        (0..dim.d).map(|_| 0.5 + rng.next_f32()).collect(),
+        (0..dim.d).map(|_| 0.5 + rng.next_f32()).collect(),
+        (0..dim.ff).map(|_| 0.5 + rng.next_f32()).collect(),
+    ];
+    scales[0] = (0..dim.d).map(|_| 0.5 + rng.next_f32()).collect();
+    let folded = fold_block(bw, &scales).unwrap();
+
+    let y0 = engine.block_fp(&x, bw).unwrap().y;
+    let y1 = engine.block_fp(&x, &folded).unwrap().y;
+    let rel = y0.rmse(&y1) / (y0.frob() / (y0.len() as f64).sqrt()).max(1e-9);
+    assert!(rel < 1e-4, "fold changed block function: rel rmse {rel}");
+}
+
+#[test]
+fn recon_step0_matches_engine_rtn_loss() {
+    // Artifact-consistency: the recon artifact's step-0 loss (theta=0) must
+    // equal the MSE between block_q(x; RTN Ŵ) and y_t computed through the
+    // block_fwd_q artifact with the same grids.
+    let rt = runtime_or_skip!();
+    let dim = rt.dim("tiny").unwrap();
+    let engine = Engine::new(&rt, "tiny").unwrap();
+    let mut rng = Rng::new(5);
+    let weights = Weights::init(&dim, &mut rng);
+    let bw = &weights.blocks[1];
+    let x = Tensor::randn(&mut rng, &[dim.recon_batch, dim.seq, dim.d], 1.0);
+    let y_t = {
+        // block_fp needs calib_batch; tile x up
+        let mut big = Tensor::zeros(&[dim.calib_batch, dim.seq, dim.d]);
+        let inner = dim.seq * dim.d;
+        for b in 0..dim.calib_batch {
+            let src = b % dim.recon_batch;
+            big.data[b * inner..(b + 1) * inner]
+                .copy_from_slice(&x.data[src * inner..(src + 1) * inner]);
+        }
+        engine.block_fp(&big, bw).unwrap().y.slice_outer(0, dim.recon_batch)
+    };
+
+    // run 1 recon step with lr=0 (weight-only scheme: act quant off)
+    let scheme = Scheme::weight_only(8);
+    let recon = ReconConfig { steps: 1, lr: 0.0, calib_samples: 4,
+                              rank: dim.rank, seed: 9 };
+    let stats: lrq::coordinator::BlockStats = Default::default();
+    let ctx = BlockContext {
+        dim: &dim,
+        weights: bw,
+        x_q: &[x.clone()],
+        y_t: &[y_t.clone()],
+        acts_q: None,
+        stats: &stats,
+        scheme,
+        recon,
+        block_index: 0,
+    };
+    let out = recon_driver::run_recon(&rt, &engine, Method::Lrq, &ctx, bw,
+                                      dim.rank)
+        .unwrap();
+    let recon_loss = out.loss_trace[0] as f64;
+
+    // engine-side: Ŵ from the same grid-searched RTN init, block_q, MSE
+    let grids: Vec<ChannelGrid> = bw
+        .ws
+        .iter()
+        .map(|w| quant::grid_search_scales(w, 255.0, 40))
+        .collect();
+    let whats: Vec<Tensor> = bw
+        .ws
+        .iter()
+        .zip(&grids)
+        .map(|(w, g)| {
+            let codes = quant::quantize_int_codes(w, g, None);
+            let (rows, cols) = w.rc();
+            let mut d = Vec::with_capacity(rows * cols);
+            for r in 0..rows {
+                for c in 0..cols {
+                    d.push((codes.data[r * cols + c] - g.zp[r]) * g.scale[r]);
+                }
+            }
+            Tensor::new(vec![rows, cols], d)
+        })
+        .collect();
+    let mut big = Tensor::zeros(&[dim.calib_batch, dim.seq, dim.d]);
+    let inner = dim.seq * dim.d;
+    for b in 0..dim.calib_batch {
+        let src = b % dim.recon_batch;
+        big.data[b * inner..(b + 1) * inner]
+            .copy_from_slice(&x.data[src * inner..(src + 1) * inner]);
+    }
+    let y_q = engine
+        .block_q(&big, &whats, &bw.norm_attn, &bw.norm_ffn, &stats, &scheme)
+        .unwrap()
+        .slice_outer(0, dim.recon_batch);
+    let manual = y_q.mse(&y_t);
+    let rel = (recon_loss - manual).abs() / manual.max(1e-12);
+    assert!(rel < 5e-3,
+            "recon step-0 loss {recon_loss} vs engine MSE {manual}");
+}
+
+#[test]
+fn recon_loss_decreases_through_artifact() {
+    let rt = runtime_or_skip!();
+    let dim = rt.dim("tiny").unwrap();
+    let engine = Engine::new(&rt, "tiny").unwrap();
+    let mut rng = Rng::new(6);
+    let weights = Weights::init(&dim, &mut rng);
+    let bw = &weights.blocks[0];
+    let x = Tensor::randn(&mut rng, &[dim.calib_batch, dim.seq, dim.d], 1.0);
+    let y_t = engine.block_fp(&x, bw).unwrap().y;
+    let scheme = Scheme::weight_only(4); // enough quant error to learn on
+    let recon = ReconConfig { steps: 30, lr: 3e-3, calib_samples: 8,
+                              rank: dim.rank, seed: 10 };
+    let stats: lrq::coordinator::BlockStats = Default::default();
+    let ctx = BlockContext {
+        dim: &dim,
+        weights: bw,
+        x_q: &[x],
+        y_t: &[y_t],
+        acts_q: None,
+        stats: &stats,
+        scheme,
+        recon,
+        block_index: 0,
+    };
+    for method in [Method::Lrq, Method::FlexRound] {
+        let out = recon_driver::run_recon(&rt, &engine, method, &ctx, bw,
+                                          dim.rank)
+            .unwrap();
+        let first = out.loss_trace[0];
+        let last = *out.loss_trace.last().unwrap();
+        assert!(last < first * 0.95,
+                "{method:?}: loss {first} -> {last} did not decrease");
+    }
+}
+
+#[test]
+fn pipeline_rtn_smoke_all_schemes() {
+    let rt = runtime_or_skip!();
+    let dim = rt.dim("tiny").unwrap();
+    let engine = Engine::new(&rt, "tiny").unwrap();
+    let mut rng = Rng::new(7);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    for scheme in [Scheme::w8a8_static(), Scheme::w4a8_token(),
+                   Scheme::weight_only(3)] {
+        let recon = ReconConfig { steps: 0, calib_samples: 8,
+                                  ..ReconConfig::default() };
+        let out = quantize_model(&rt, &engine, &weights, &corpus, Method::Rtn,
+                                 scheme, recon)
+            .unwrap();
+        assert_eq!(out.model.blocks.len(), dim.layers);
+        assert_eq!(out.stats.len(), dim.layers);
+        // activation ranges were actually calibrated for quantized schemes
+        if !matches!(scheme.act, ActScheme::None) {
+            assert!(out.stats[0][0].range.max > 0.0);
+        }
+        // packed storage is smaller than fp
+        assert!(out.model.storage_bytes() < out.model.fp_equivalent_bytes());
+    }
+}
+
+#[test]
+fn quantized_model_close_to_fp_at_8bit() {
+    // W8 weight-only RTN on a random-init model: outputs must stay close.
+    let rt = runtime_or_skip!();
+    let dim = rt.dim("tiny").unwrap();
+    let engine = Engine::new(&rt, "tiny").unwrap();
+    let mut rng = Rng::new(8);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    let scheme = Scheme::weight_only(8);
+    let recon = ReconConfig { steps: 0, calib_samples: 8,
+                              ..ReconConfig::default() };
+    let out = quantize_model(&rt, &engine, &weights, &corpus, Method::Rtn,
+                             scheme, recon)
+        .unwrap();
+    let mut rng2 = Rng::new(9);
+    let (ids, tgt) = corpus.eval_stream(dim.calib_batch, dim.seq, &mut rng2);
+    let (loss_fp, _) = engine.fp_forward(&weights, &ids, &tgt).unwrap();
+    let (loss_q, _) = engine
+        .q_forward(&out.model, &out.stats, &scheme, &ids, &tgt)
+        .unwrap();
+    assert!((loss_fp - loss_q).abs() < 0.05,
+            "8-bit weight-only shifted loss too much: {loss_fp} vs {loss_q}");
+}

@@ -1,0 +1,207 @@
+//! Property-based tests over the public API (in-repo harness — proptest is
+//! unavailable offline; failures reproduce from the printed seed).
+
+use lrq::methods::fold::{fold_block, smooth_scales, weight_col_amax};
+use lrq::model::BlockWeights;
+use lrq::quant::{self, grid_search_scales, per_token_quant, rtn_grid,
+                 PackedMatrix};
+use lrq::quant::pack::{pack_bits, unpack_bits};
+use lrq::rng::Rng;
+use lrq::tensor::Tensor;
+use lrq::testutil::check;
+
+#[test]
+fn prop_pack_unpack_bijective() {
+    check("pack/unpack bijective", 50, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let n = rng.range(1, 500);
+        let codes: Vec<u32> =
+            (0..n).map(|_| rng.below(1 << bits) as u32).collect();
+        let packed = pack_bits(&codes, bits);
+        if unpack_bits(&packed, bits, n) != codes {
+            return Err(format!("roundtrip failed bits={bits} n={n}"));
+        }
+        let expect = (n * bits as usize).div_ceil(8);
+        if packed.len() != expect {
+            return Err(format!("size {} != {expect}", packed.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rtn_error_bounded_by_half_step() {
+    check("rtn error bound", 30, |rng| {
+        let rows = rng.range(1, 12);
+        let cols = rng.range(2, 64);
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let std = 0.1 + rng.next_f32();
+        let w = Tensor::randn(rng, &[rows, cols], std);
+        let g = rtn_grid(&w, quant::qmax(bits));
+        let mut buf = vec![0.0f32; cols];
+        for r in 0..rows {
+            g.fq_row(r, w.row(r), &mut buf);
+            for (o, &x) in buf.iter().zip(w.row(r)) {
+                if (o - x).abs() > g.scale[r] * 0.5 + 1e-5 {
+                    return Err(format!(
+                        "row {r}: err {} > half-step {}", (o - x).abs(),
+                        g.scale[r] * 0.5));
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_grid_search_never_worse_than_rtn() {
+    check("grid search <= rtn", 20, |rng| {
+        let rows = rng.range(1, 8);
+        let cols = rng.range(8, 96);
+        let bits = [3u32, 4][rng.below(2)];
+        let w = Tensor::randn(rng, &[rows, cols], 0.05);
+        let qm = quant::qmax(bits);
+        let err_of = |g: &quant::ChannelGrid| -> f64 {
+            let mut e = 0.0;
+            let mut buf = vec![0.0f32; cols];
+            for r in 0..rows {
+                g.fq_row(r, w.row(r), &mut buf);
+                for (o, &x) in buf.iter().zip(w.row(r)) {
+                    e += ((o - x) as f64).powi(2);
+                }
+            }
+            e
+        };
+        let e_rtn = err_of(&rtn_grid(&w, qm));
+        let e_gs = err_of(&grid_search_scales(&w, qm, 40));
+        if e_gs > e_rtn * 1.0001 {
+            return Err(format!("gs {e_gs} > rtn {e_rtn}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_per_token_quant_error_monotone_in_bits() {
+    check("per-token monotone bits", 20, |rng| {
+        let t = rng.range(1, 16);
+        let d = rng.range(4, 64);
+        let x = Tensor::randn(rng, &[t, d], 1.0);
+        // fewer bits => no less error (compare against the 8-bit floor)
+        let e8 = per_token_quant(&x, quant::qmax(8)).mse(&x);
+        let e4 = per_token_quant(&x, quant::qmax(4)).mse(&x);
+        let e3 = per_token_quant(&x, quant::qmax(3)).mse(&x);
+        if e4 + 1e-12 < e8 {
+            return Err(format!("e4 {e4} < e8 {e8}"));
+        }
+        if e3 + 1e-12 < e4 {
+            return Err(format!("e3 {e3} < e4 {e4}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fold_roundtrip_identity() {
+    check("fold roundtrip", 15, |rng| {
+        let d = 8 + 4 * rng.below(3);
+        let f = d + 4 + 4 * rng.below(3);
+        let bw = BlockWeights {
+            ws: vec![
+                Tensor::randn(rng, &[d, d], 0.1),
+                Tensor::randn(rng, &[d, d], 0.1),
+                Tensor::randn(rng, &[d, d], 0.1),
+                Tensor::randn(rng, &[d, d], 0.1),
+                Tensor::randn(rng, &[f, d], 0.1),
+                Tensor::randn(rng, &[f, d], 0.1),
+                Tensor::randn(rng, &[d, f], 0.1),
+            ],
+            norm_attn: Tensor::ones(&[d]),
+            norm_ffn: Tensor::ones(&[d]),
+        };
+        let mk = |rng: &mut Rng, n: usize| -> Vec<f32> {
+            (0..n).map(|_| 0.3 + 2.0 * rng.next_f32()).collect()
+        };
+        let s = [mk(rng, d), mk(rng, d), mk(rng, d), mk(rng, f)];
+        let inv = [
+            s[0].iter().map(|v| 1.0 / v).collect::<Vec<_>>(),
+            s[1].iter().map(|v| 1.0 / v).collect(),
+            s[2].iter().map(|v| 1.0 / v).collect(),
+            s[3].iter().map(|v| 1.0 / v).collect(),
+        ];
+        let back = fold_block(&fold_block(&bw, &s).unwrap(), &inv).unwrap();
+        for i in 0..7 {
+            if back.ws[i].rmse(&bw.ws[i]) > 1e-5 {
+                return Err(format!("w{i} not restored"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_smooth_scales_reduce_act_dynamic_range() {
+    check("smoothing flattens acts", 15, |rng| {
+        let d = rng.range(8, 32);
+        let mut amax_a: Vec<f32> =
+            (0..d).map(|_| 0.5 + rng.next_f32()).collect();
+        amax_a[0] = 60.0; // outlier channel
+        let amax_w: Vec<f32> = (0..d).map(|_| 0.5 + rng.next_f32()).collect();
+        let s = smooth_scales(&amax_a, &amax_w, 0.8);
+        let after: Vec<f32> =
+            amax_a.iter().zip(&s).map(|(a, sv)| a / sv).collect();
+        let range_before = amax_a.iter().cloned().fold(0.0f32, f32::max)
+            / amax_a.iter().cloned().fold(f32::INFINITY, f32::min).max(1e-6);
+        let range_after = after.iter().cloned().fold(0.0f32, f32::max)
+            / after.iter().cloned().fold(f32::INFINITY, f32::min).max(1e-6);
+        if range_after > range_before {
+            return Err(format!("range grew: {range_before} -> {range_after}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_packed_matrix_storage_ratio() {
+    check("packed storage ratio", 10, |rng| {
+        let rows = rng.range(4, 40);
+        let cols = rng.range(16, 200);
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let w = Tensor::randn(rng, &[rows, cols], 0.1);
+        let g = rtn_grid(&w, quant::qmax(bits));
+        let codes = quant::quantize_int_codes(&w, &g, None);
+        let pm = PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits)
+            .map_err(|e| e.to_string())?;
+        if pm.codes() != codes {
+            return Err("codes roundtrip".into());
+        }
+        let ratio = pm.fp_bytes() as f64 / pm.storage_bytes() as f64;
+        if ratio > 32.0 / bits as f64 + 1e-9 {
+            return Err(format!("impossible ratio {ratio}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weight_col_amax_dominates_members() {
+    check("col amax dominates", 15, |rng| {
+        let cols = rng.range(2, 20);
+        let ra = rng.range(1, 6);
+        let rb = rng.range(1, 6);
+        let a = Tensor::randn(rng, &[ra, cols], 1.0);
+        let b = Tensor::randn(rng, &[rb, cols], 1.0);
+        let m = weight_col_amax(&[&a, &b]);
+        for (j, &mv) in m.iter().enumerate() {
+            for t in [&a, &b] {
+                let (rows, _) = t.rc();
+                for r in 0..rows {
+                    if t.data[r * cols + j].abs() > mv + 1e-6 {
+                        return Err(format!("col {j} exceeded"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
