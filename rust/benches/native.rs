@@ -1,0 +1,132 @@
+//! Native-engine benches: integer GEMM vs the f32 substrate, activation
+//! quantization, and end-to-end tokens/sec of the packed-checkpoint forward
+//! at each bit-width and shard count (the serving-side numbers behind the
+//! Appendix G / Fig. 5 story, without PJRT). Run: `cargo bench --bench
+//! native`.
+
+use std::time::Duration;
+
+use lrq::bench::Bench;
+use lrq::config::Scheme;
+use lrq::data::{Corpus, CorpusConfig};
+use lrq::infer::kernels::quantize_acts_per_token;
+use lrq::infer::{prepare_native, quantize_weights, start_native_server,
+                 QuantLinear, ScaleInit};
+use lrq::model::{ModelDim, Weights};
+use lrq::quant::{self, grid::rtn_grid, lrq::quantize_int_codes,
+                 PackedMatrix};
+use lrq::rng::Rng;
+use lrq::serve::ServerConfig;
+use lrq::tensor::Tensor;
+
+fn main() -> anyhow::Result<()> {
+    let mut b = Bench::quick();
+    let mut rng = Rng::new(77);
+
+    // ---- kernel level: one linear, 512 tokens × (352 out, 128 in) --------
+    let (t, cout, cin) = (512usize, 352usize, 128usize);
+    let x = Tensor::randn(&mut rng, &[t, cin], 1.0);
+    let flops = 2.0 * t as f64 * cin as f64 * cout as f64;
+    {
+        let w = Tensor::randn(&mut rng, &[cout, cin], 0.05);
+        b.run_units("f32 matmul_bt baseline 512x128 @ 352x128T",
+                    Some(flops), &mut || {
+            std::hint::black_box(x.matmul_bt(&w));
+        });
+    }
+    b.run_units("act quant per-token 512x128", Some((t * cin) as f64),
+                &mut || {
+        std::hint::black_box(quantize_acts_per_token(&x.data, t, cin, 255.0));
+    });
+    for bits in [3u32, 4, 8] {
+        let w = Tensor::randn(&mut rng, &[cout, cin], 0.05);
+        let g = rtn_grid(&w, quant::qmax(bits));
+        let codes = quantize_int_codes(&w, &g, None);
+        let pm =
+            PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits)?;
+        let ql = QuantLinear::from_packed(&pm)?;
+        let qa = quantize_acts_per_token(&x.data, t, cin, 255.0);
+        b.run_units(&format!("QuantLinear int8-act GEMM {bits}-bit"),
+                    Some(flops), &mut || {
+            std::hint::black_box(ql.forward_q(&qa, 1).unwrap());
+        });
+        b.run_units(&format!("QuantLinear weight-only GEMM {bits}-bit"),
+                    Some(flops), &mut || {
+            std::hint::black_box(ql.forward_fp(&x.data, t, 1).unwrap());
+        });
+    }
+
+    // ---- model level: tiny config, tokens/sec vs bits and shards ---------
+    let dim = ModelDim::builtin("tiny").expect("builtin tiny");
+    let weights = Weights::init(&dim, &mut Rng::new(3));
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    let (ids, tgt) = {
+        let mut r = Rng::new(5);
+        corpus.eval_stream(dim.calib_batch, dim.seq, &mut r)
+    };
+    let tokens = (dim.calib_batch * dim.seq) as f64;
+
+    println!("\ntokens/sec vs bit-width (tiny, W?A8 per-token, 1 shard):");
+    for bits in [3u32, 4, 8] {
+        let scheme = Scheme { w_bits: bits, ..Scheme::w4a8_token() };
+        let model = prepare_native(&weights, scheme, ScaleInit::Rtn, &corpus,
+                                   1, 7, 1)?;
+        b.run_units(&format!("NativeModel forward tiny W{bits}A8"),
+                    Some(tokens), &mut || {
+            std::hint::black_box(model.forward(&ids, &tgt).unwrap());
+        });
+    }
+    println!("\ntokens/sec vs shard count (tiny, W4A8 per-token):");
+    for shards in [1usize, 2, 4, 8] {
+        let model = prepare_native(&weights, Scheme::w4a8_token(),
+                                   ScaleInit::Rtn, &corpus, 1, 7, shards)?;
+        b.run_units(&format!("NativeModel forward tiny W4A8 shards={shards}"),
+                    Some(tokens), &mut || {
+            std::hint::black_box(model.forward(&ids, &tgt).unwrap());
+        });
+    }
+
+    // ---- serving level: dynamic batcher over the native scorer -----------
+    println!("\nbatched serving (tiny, W4A8, 2 shards):");
+    {
+        let model = prepare_native(&weights, Scheme::w4a8_token(),
+                                   ScaleInit::Rtn, &corpus, 1, 7, 2)?;
+        let qm = quantize_weights(&weights, 4, ScaleInit::Rtn)?;
+        println!("packed checkpoint: {:.2} MB (fp32 {:.2} MB)",
+                 qm.storage_bytes() as f64 / 1e6,
+                 qm.fp_equivalent_bytes() as f64 / 1e6);
+        let server = start_native_server(
+            model,
+            ServerConfig {
+                max_batch: dim.calib_batch,
+                max_wait: Duration::from_millis(2),
+            },
+        )?;
+        let n = 64usize;
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for k in 0..4u64 {
+            let client = server.client();
+            let vocab = dim.vocab;
+            handles.push(std::thread::spawn(move || {
+                let mut r = Rng::new(0xBE ^ k);
+                for _ in 0..n / 4 {
+                    let len = r.range(8, 48);
+                    let ids: Vec<i32> =
+                        (0..len).map(|_| r.below(vocab) as i32).collect();
+                    client.score(ids).unwrap();
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let wall = t0.elapsed();
+        let m = server.metrics.lock().unwrap().clone();
+        println!("{}", m.summary(wall));
+        println!("wall {:.2}s, {:.0} tokens/s at seq {}",
+                 wall.as_secs_f64(),
+                 m.throughput(wall) * dim.seq as f64, dim.seq);
+    }
+    Ok(())
+}

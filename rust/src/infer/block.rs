@@ -1,0 +1,216 @@
+//! [`QuantBlock`] / [`NativeModel`]: the Transformer forward pass assembled
+//! from packed linears, mirroring `python/compile/model.py::block_fwd` — the
+//! same four activation-quant points (attn_in, o_in, ffn_in, down_in; Fig. 8),
+//! the same per-token KV-cache quantization post-RoPE, the same FP softmax.
+//!
+//! Activation handling per [`crate::config::ActScheme`]:
+//! * `None` — weight-only: FP activations into the fused unpack-matmul path.
+//! * `PerTensorStatic` — calibrated `(scale, zp)` from [`BlockStats`]; one
+//!   integer grid per quant point.
+//! * `PerToken` — dynamic asymmetric grid per token row.
+//!
+//! q/k/v (and gate/up) share one quantization of their common input, exactly
+//! like the `ActQuant` dispatch in the L2 model.
+
+use anyhow::{bail, Result};
+
+use crate::config::{ActScheme, Scheme};
+use crate::coordinator::engine::BlockStats;
+use crate::model::{ModelDim, QuantizedBlock, QuantizedModel};
+use crate::quant::{act::per_token_quant, qmax};
+use crate::tensor::Tensor;
+
+use super::kernels::{quantize_acts_per_token, quantize_acts_static,
+                     QuantActs};
+use super::linear::QuantLinear;
+use super::ops::{causal_attention, embed, head_logprobs, rmsnorm, rope,
+                 silu};
+
+/// One block's packed linears + FP norms, ready for native execution.
+#[derive(Clone, Debug)]
+pub struct QuantBlock {
+    /// canonical order: wq wk wv wo wg wu wd
+    pub ws: Vec<QuantLinear>,
+    pub norm_attn: Tensor,
+    pub norm_ffn: Tensor,
+}
+
+/// How activations enter a linear at one quant point.
+enum ActInput<'a> {
+    Fp(&'a Tensor),
+    Quant(QuantActs),
+}
+
+impl<'a> ActInput<'a> {
+    fn matmul(&self, lin: &QuantLinear, shards: usize) -> Result<Tensor> {
+        match self {
+            ActInput::Fp(x) => {
+                let (rows, _) = x.as_2d();
+                lin.forward_fp(&x.data, rows, shards)
+            }
+            ActInput::Quant(qa) => lin.forward_q(qa, shards),
+        }
+    }
+}
+
+impl QuantBlock {
+    pub fn from_quantized(qb: &QuantizedBlock) -> Result<Self> {
+        if qb.ws.len() != 7 {
+            bail!("quantized block has {} linears, want 7", qb.ws.len());
+        }
+        let ws: Result<Vec<QuantLinear>> =
+            qb.ws.iter().map(QuantLinear::from_packed).collect();
+        Ok(QuantBlock {
+            ws: ws?,
+            norm_attn: qb.norm_attn.clone(),
+            norm_ffn: qb.norm_ffn.clone(),
+        })
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.ws.iter().map(|w| w.storage_bytes()).sum::<usize>()
+            + (self.norm_attn.len() + self.norm_ffn.len()) * 4
+    }
+
+    /// Quantize (or pass through) the activations at one quant point.
+    fn act_input<'a>(&self, x: &'a Tensor, point: usize, stats: &BlockStats,
+                     scheme: &Scheme) -> ActInput<'a> {
+        let (rows, cols) = x.as_2d();
+        let qa = qmax(scheme.a_bits);
+        match scheme.act {
+            ActScheme::None => ActInput::Fp(x),
+            ActScheme::PerToken => ActInput::Quant(
+                quantize_acts_per_token(&x.data, rows, cols, qa)),
+            ActScheme::PerTensorStatic => {
+                let (s, z) = stats[point].range.grid(qa);
+                ActInput::Quant(
+                    quantize_acts_static(&x.data, rows, cols, s, z, qa))
+            }
+        }
+    }
+
+    /// One block forward: `x [b*s, d]` -> `[b*s, d]`.
+    pub fn forward(&self, x: &Tensor, dim: &ModelDim, stats: &BlockStats,
+                   scheme: &Scheme, shards: usize) -> Result<Tensor> {
+        let (t, d) = x.as_2d();
+        if d != dim.d || t % dim.seq != 0 {
+            bail!("block forward: input [{t}, {d}] vs dim d={} seq={}",
+                  dim.d, dim.seq);
+        }
+        let b = t / dim.seq;
+        let (s, h, hd) = (dim.seq, dim.heads, dim.head_dim());
+
+        // ---- attention ----
+        let xa = rmsnorm(x, &self.norm_attn);
+        let ain = self.act_input(&xa, 0, stats, scheme); // attn_in
+        let mut q = ain.matmul(&self.ws[0], shards)?;
+        let mut k = ain.matmul(&self.ws[1], shards)?;
+        let v = ain.matmul(&self.ws[2], shards)?;
+        rope(&mut q.data, b, s, h, hd);
+        rope(&mut k.data, b, s, h, hd);
+        // per-token KV quantization (post-RoPE, over the flattened d)
+        let (k, v) = if scheme.kv_quant {
+            let qkv = qmax(scheme.kv_bits);
+            (per_token_quant(&k, qkv), per_token_quant(&v, qkv))
+        } else {
+            (k, v)
+        };
+        let attn = Tensor::new(
+            vec![t, d],
+            causal_attention(&q.data, &k.data, &v.data, b, s, h, hd),
+        );
+        let oin = self.act_input(&attn, 1, stats, scheme); // o_in
+        let o = oin.matmul(&self.ws[3], shards)?;
+        let hidd = x.add(&o);
+
+        // ---- gated FFN ----
+        let xf = rmsnorm(&hidd, &self.norm_ffn);
+        let fin = self.act_input(&xf, 2, stats, scheme); // ffn_in
+        let g = fin.matmul(&self.ws[4], shards)?;
+        let u = fin.matmul(&self.ws[5], shards)?;
+        let gate = g.zip(&u, |gv, uv| silu(gv) * uv);
+        let din = self.act_input(&gate, 3, stats, scheme); // down_in
+        let down = din.matmul(&self.ws[6], shards)?;
+        Ok(hidd.add(&down))
+    }
+}
+
+/// A full model executing natively from a packed checkpoint: FP embeddings /
+/// norms / head (as in the paper — only block linears are quantized),
+/// integer block linears.
+#[derive(Clone, Debug)]
+pub struct NativeModel {
+    pub dim: ModelDim,
+    pub scheme: Scheme,
+    /// engine worker threads for row-sharded GEMMs (1 = single-threaded)
+    pub shards: usize,
+    pub emb: Tensor,
+    pub blocks: Vec<QuantBlock>,
+    pub final_norm: Tensor,
+    pub head: Tensor,
+    pub stats: Vec<BlockStats>,
+}
+
+impl NativeModel {
+    /// Build from any quantized checkpoint + calibrated stats. `stats` may be
+    /// empty for weight-only / per-token schemes (no static grids needed).
+    pub fn from_quantized(qm: &QuantizedModel, stats: &[BlockStats],
+                          scheme: Scheme, shards: usize) -> Result<Self> {
+        if matches!(scheme.act, ActScheme::PerTensorStatic)
+            && stats.len() != qm.blocks.len() {
+            bail!("static act scheme needs {} block stats, got {}",
+                  qm.blocks.len(), stats.len());
+        }
+        // the integer path carries activation codes in u8
+        if !matches!(scheme.act, ActScheme::None) && scheme.a_bits > 8 {
+            bail!("native engine quantizes activations to u8 codes; \
+                   a_bits {} > 8 unsupported", scheme.a_bits);
+        }
+        let blocks: Result<Vec<QuantBlock>> =
+            qm.blocks.iter().map(QuantBlock::from_quantized).collect();
+        let stats: Vec<BlockStats> = if stats.is_empty() {
+            (0..qm.blocks.len()).map(|_| Default::default()).collect()
+        } else {
+            stats.to_vec()
+        };
+        Ok(NativeModel {
+            dim: qm.dim.clone(),
+            scheme,
+            shards: shards.max(1),
+            emb: qm.emb.clone(),
+            blocks: blocks?,
+            final_norm: qm.final_norm.clone(),
+            head: qm.head.clone(),
+            stats,
+        })
+    }
+
+    /// Full forward over padded rows: `ids`/`targets` are `[b * seq]` with
+    /// any `b >= 1`. Returns `(mean NLL, per-position target logprob [b*seq])`.
+    pub fn forward(&self, ids: &[i32], targets: &[i32])
+                   -> Result<(f32, Tensor)> {
+        let seq = self.dim.seq;
+        if ids.is_empty() || ids.len() % seq != 0 {
+            bail!("forward: ids len {} not a multiple of seq {seq}",
+                  ids.len());
+        }
+        if targets.len() != ids.len() {
+            bail!("forward: {} targets for {} ids", targets.len(), ids.len());
+        }
+        let b = ids.len() / seq;
+        let mut x = embed(&self.emb, ids)?;
+        for (blk, st) in self.blocks.iter().zip(&self.stats) {
+            x = blk.forward(&x, &self.dim, st, &self.scheme, self.shards)?;
+        }
+        let (loss, logp) =
+            head_logprobs(&x, &self.final_norm, &self.head, targets)?;
+        Ok((loss, Tensor::new(vec![b, seq], logp)))
+    }
+
+    /// Packed storage bytes (the Fig. 5 size axis, native layout).
+    pub fn storage_bytes(&self) -> usize {
+        let fp =
+            (self.emb.len() + self.final_norm.len() + self.head.len()) * 4;
+        fp + self.blocks.iter().map(|b| b.storage_bytes()).sum::<usize>()
+    }
+}

@@ -1,0 +1,292 @@
+//! Integer kernel primitives for the native engine: activation quantization
+//! to u8 codes, unrolled u8×u8→i32 dot products, and fused unpacking of
+//! 3/4/8-bit weight rows into cache-resident tiles.
+//!
+//! Grid math is kept bit-identical to [`crate::quant::act`] (the Rust oracle
+//! of the Pallas per-token kernel): same `(hi-lo)/qmax` scale floor, same
+//! zero-point rounding — so the integer path dequantizes to exactly the
+//! values the fake-quant reference produces, and any output difference is
+//! pure f32 accumulation order.
+
+use anyhow::{bail, Result};
+
+use crate::quant::pack::packed_len;
+
+/// Largest inner dimension for which a u8×u8 dot fits an i32 accumulator
+/// (255·255·K < 2^31).
+pub const MAX_DOT_K: usize = 33_000;
+
+/// Quantized activations: per-row u8 codes + asymmetric grid,
+/// `x ≈ (code - zp)·scale` per row. For per-tensor static quantization every
+/// row shares the same grid entries.
+#[derive(Clone, Debug)]
+pub struct QuantActs {
+    pub rows: usize,
+    pub cols: usize,
+    /// row-major `[rows, cols]` integer codes in `[0, qmax]`
+    pub codes: Vec<u8>,
+    /// per-row scale
+    pub scale: Vec<f32>,
+    /// per-row integral zero-point
+    pub zp: Vec<i32>,
+    /// per-row Σ codes (epilogue correction term)
+    pub code_sum: Vec<i64>,
+}
+
+fn quantize_rows(x: &[f32], rows: usize, cols: usize,
+                 grid_of: impl Fn(&[f32]) -> (f32, f32), qmax: f32)
+                 -> QuantActs {
+    debug_assert_eq!(x.len(), rows * cols);
+    debug_assert!(qmax <= 255.0, "u8 codes need qmax <= 255, got {qmax}");
+    let mut codes = vec![0u8; rows * cols];
+    let mut scale = Vec::with_capacity(rows);
+    let mut zp = Vec::with_capacity(rows);
+    let mut code_sum = Vec::with_capacity(rows);
+    for r in 0..rows {
+        let row = &x[r * cols..(r + 1) * cols];
+        let (s, z) = grid_of(row);
+        let crow = &mut codes[r * cols..(r + 1) * cols];
+        let mut sum = 0i64;
+        for (o, &v) in crow.iter_mut().zip(row) {
+            let q = (v / s + z).round().clamp(0.0, qmax) as u8;
+            sum += q as i64;
+            *o = q;
+        }
+        scale.push(s);
+        zp.push(z as i32);
+        code_sum.push(sum);
+    }
+    QuantActs { rows, cols, codes, scale, zp, code_sum }
+}
+
+/// Per-token asymmetric quantization over the trailing dim — the integer
+/// twin of [`crate::quant::act::per_token_quant`].
+pub fn quantize_acts_per_token(x: &[f32], rows: usize, cols: usize,
+                               qmax: f32) -> QuantActs {
+    quantize_rows(x, rows, cols, |row| {
+        let mut lo = 0.0f32;
+        let mut hi = 0.0f32;
+        for &v in row {
+            lo = lo.min(v);
+            hi = hi.max(v);
+        }
+        let scale = ((hi - lo) / qmax).max(1e-9);
+        let zp = (-lo / scale).round().clamp(0.0, qmax);
+        (scale, zp)
+    }, qmax)
+}
+
+/// Per-tensor static quantization with a calibrated `(scale, zp)` — the
+/// integer twin of [`crate::quant::act::per_tensor_quant`].
+pub fn quantize_acts_static(x: &[f32], rows: usize, cols: usize, scale: f32,
+                            zp: f32, qmax: f32) -> QuantActs {
+    quantize_rows(x, rows, cols, |_| (scale, zp), qmax)
+}
+
+/// Unrolled u8×u8 dot product with i32 accumulation. Caller guarantees
+/// `a.len() == b.len() <= MAX_DOT_K` (checked at `QuantLinear` build).
+#[inline]
+pub fn dot_u8(a: &[u8], b: &[u8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    let k = a.len();
+    let chunks = k / 4;
+    let mut acc0 = 0i32;
+    let mut acc1 = 0i32;
+    let mut acc2 = 0i32;
+    let mut acc3 = 0i32;
+    for c in 0..chunks {
+        let p = c * 4;
+        acc0 += a[p] as i32 * b[p] as i32;
+        acc1 += a[p + 1] as i32 * b[p + 1] as i32;
+        acc2 += a[p + 2] as i32 * b[p + 2] as i32;
+        acc3 += a[p + 3] as i32 * b[p + 3] as i32;
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for p in chunks * 4..k {
+        acc += a[p] as i32 * b[p] as i32;
+    }
+    acc
+}
+
+/// f32×u8 dot product (weight-only path: FP activations, integer weights).
+#[inline]
+pub fn dot_f32_u8(x: &[f32], q: &[u8]) -> f32 {
+    debug_assert_eq!(x.len(), q.len());
+    let k = x.len();
+    let chunks = k / 4;
+    let mut acc0 = 0.0f32;
+    let mut acc1 = 0.0f32;
+    let mut acc2 = 0.0f32;
+    let mut acc3 = 0.0f32;
+    for c in 0..chunks {
+        let p = c * 4;
+        acc0 += x[p] * q[p] as f32;
+        acc1 += x[p + 1] * q[p + 1] as f32;
+        acc2 += x[p + 2] * q[p + 2] as f32;
+        acc3 += x[p + 3] * q[p + 3] as f32;
+    }
+    let mut acc = acc0 + acc1 + acc2 + acc3;
+    for p in chunks * 4..k {
+        acc += x[p] * q[p] as f32;
+    }
+    acc
+}
+
+/// Fused unpack of weight rows `[r0, r0+n)` from an LSB-first packed
+/// bitstream into `out[0..n*cols]` (u8 codes). This is the "unpack tile,
+/// then matmul against it" half of the fused 3/4-bit kernels: tiles stay
+/// small enough to live in L1 while every token row streams past them.
+///
+/// The stream layout is validated at [`crate::quant::PackedMatrix`]
+/// construction; this only debug-checks.
+pub fn unpack_rows(packed: &[u8], bits: u32, cols: usize, r0: usize, n: usize,
+                   out: &mut [u8]) {
+    debug_assert!(out.len() >= n * cols);
+    debug_assert!(packed.len() >= packed_len((r0 + n) * cols, bits));
+    match bits {
+        8 => {
+            out[..n * cols]
+                .copy_from_slice(&packed[r0 * cols..(r0 + n) * cols]);
+        }
+        4 if cols % 2 == 0 => {
+            // rows are byte-aligned: expand two nibbles per byte
+            let src = &packed[r0 * cols / 2..(r0 + n) * cols / 2];
+            for (i, &b) in src.iter().enumerate() {
+                out[2 * i] = b & 0x0F;
+                out[2 * i + 1] = b >> 4;
+            }
+        }
+        _ => {
+            // generic bit cursor (3-bit rows start mid-byte)
+            let mask = (1u32 << bits) - 1;
+            let mut bitpos = r0 * cols * bits as usize;
+            for o in out[..n * cols].iter_mut() {
+                let byte = bitpos / 8;
+                let off = (bitpos % 8) as u32;
+                // splice up to 16 bits so any <=8-bit code is covered
+                let lo = packed[byte] as u32;
+                let hi = *packed.get(byte + 1).unwrap_or(&0) as u32;
+                *o = (((lo | (hi << 8)) >> off) & mask) as u8;
+                bitpos += bits as usize;
+            }
+        }
+    }
+}
+
+/// Contiguous shard ranges splitting `n` rows across `shards` workers.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let shards = shards.clamp(1, n.max(1));
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut lo = 0usize;
+    for i in 0..shards {
+        let len = base + usize::from(i < extra);
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Validate an inner dimension against the i32 accumulator bound.
+pub fn check_dot_k(k: usize) -> Result<()> {
+    if k > MAX_DOT_K {
+        bail!("inner dim {k} exceeds i32-safe u8 GEMM bound {MAX_DOT_K}");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::act::per_token_quant;
+    use crate::quant::pack::pack_bits;
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn per_token_codes_dequant_to_oracle() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[6, 40], 1.3);
+        for qmax in [255.0f32, 15.0] {
+            let qa = quantize_acts_per_token(&x.data, 6, 40, qmax);
+            let oracle = per_token_quant(&x, qmax);
+            for r in 0..6 {
+                for c in 0..40 {
+                    let deq = (qa.codes[r * 40 + c] as f32 - qa.zp[r] as f32)
+                        * qa.scale[r];
+                    let want = oracle.data[r * 40 + c];
+                    assert!((deq - want).abs() < 1e-6,
+                            "qmax {qmax} r{r} c{c}: {deq} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn code_sums_consistent() {
+        let mut rng = Rng::new(2);
+        let x = Tensor::randn(&mut rng, &[3, 17], 0.7);
+        let qa = quantize_acts_per_token(&x.data, 3, 17, 255.0);
+        for r in 0..3 {
+            let s: i64 = qa.codes[r * 17..(r + 1) * 17]
+                .iter()
+                .map(|&c| c as i64)
+                .sum();
+            assert_eq!(s, qa.code_sum[r]);
+        }
+    }
+
+    #[test]
+    fn dots_match_naive() {
+        let mut rng = Rng::new(3);
+        for k in [1usize, 3, 4, 7, 64, 129] {
+            let a: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+            let b: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+            let want: i32 = a.iter().zip(&b)
+                .map(|(&x, &y)| x as i32 * y as i32).sum();
+            assert_eq!(dot_u8(&a, &b), want);
+            let xf: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            let wantf: f32 = xf.iter().zip(&b)
+                .map(|(&x, &y)| x * y as f32).sum();
+            let tol = wantf.abs() * 1e-5 + 1e-2;
+            assert!((dot_f32_u8(&xf, &b) - wantf).abs() < tol);
+        }
+    }
+
+    #[test]
+    fn unpack_rows_matches_bitstream() {
+        let mut rng = Rng::new(4);
+        for bits in [3u32, 4, 8] {
+            for cols in [5usize, 8, 33] {
+                let rows = 9;
+                let codes: Vec<u32> = (0..rows * cols)
+                    .map(|_| rng.below(1 << bits) as u32)
+                    .collect();
+                let packed = pack_bits(&codes, bits);
+                let mut tile = vec![0u8; 4 * cols];
+                for r0 in [0usize, 1, 5] {
+                    let n = 4.min(rows - r0);
+                    unpack_rows(&packed, bits, cols, r0, n, &mut tile);
+                    for i in 0..n * cols {
+                        assert_eq!(tile[i] as u32, codes[r0 * cols + i],
+                                   "bits {bits} cols {cols} r0 {r0} i {i}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_cover() {
+        for (n, s) in [(10usize, 3usize), (7, 7), (5, 9), (352, 4), (1, 1)] {
+            let r = shard_ranges(n, s);
+            assert_eq!(r.first().unwrap().0, 0);
+            assert_eq!(r.last().unwrap().1, n);
+            for w in r.windows(2) {
+                assert_eq!(w[0].1, w[1].0);
+                assert!(w[0].1 > w[0].0);
+            }
+        }
+    }
+}

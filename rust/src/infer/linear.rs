@@ -1,0 +1,289 @@
+//! [`QuantLinear`]: one packed linear layer executed natively.
+//!
+//! Two execution paths, both cache-blocked over weight-row tiles that are
+//! unpacked on the fly (the fused unpack-then-matmul of the 3/4-bit formats;
+//! 8-bit tiles are a straight copy):
+//!
+//! * **integer path** (`forward_q`): quantized activations × quantized
+//!   weights with an exact-integer inner product and a per-channel dequant
+//!   epilogue. With `x ≈ (a - z_a)·s_a` per token and `w = (q - z_w)·s_w`
+//!   per output channel,
+//!   `y[t,j] = s_a[t]·s_w[j]·(Σ a·q − z_a[t]·Σq_j − z_w[j]·Σa_t + K·z_a[t]·z_w[j])`
+//!   — everything inside the parentheses is integer arithmetic, so the only
+//!   difference from the fake-quant reference is f32 summation order.
+//! * **weight-only path** (`forward_fp`): FP activations × integer weights,
+//!   `y[t,j] = s_w[j]·(Σ x·q − z_w[j]·Σx_t)`.
+//!
+//! Row-sharded parallelism: output channels split into contiguous shards,
+//! one scoped worker thread per shard (the engine is `Send`, unlike PJRT).
+
+use anyhow::{bail, Result};
+
+use crate::quant::PackedMatrix;
+use crate::tensor::Tensor;
+
+use super::kernels::{check_dot_k, dot_f32_u8, dot_u8, shard_ranges,
+                     unpack_rows, QuantActs};
+
+/// Weight rows unpacked per tile: 16 rows × Cin bytes stays L1-resident for
+/// every model dimension this repo ships.
+const ROW_TILE: usize = 16;
+
+/// A packed linear layer ready for native execution (`y = x @ W.T`).
+#[derive(Clone, Debug)]
+pub struct QuantLinear {
+    pub cout: usize,
+    pub cin: usize,
+    pub bits: u32,
+    packed: Vec<u8>,
+    pub scale: Vec<f32>,
+    zp: Vec<i32>,
+    /// per-output-row Σ codes (dequant epilogue correction)
+    code_sum: Vec<i64>,
+}
+
+impl QuantLinear {
+    /// Build from a packed checkpoint matrix (any quantization method).
+    pub fn from_packed(pm: &PackedMatrix) -> Result<Self> {
+        check_dot_k(pm.cols)?;
+        let codes = pm.unpack();
+        let mut zp = Vec::with_capacity(pm.rows);
+        for (r, &z) in pm.zp.iter().enumerate() {
+            if z < 0.0 || z > 255.0 || z.fract() != 0.0 {
+                bail!("row {r}: zero-point {z} is not an integer in [0, 255]");
+            }
+            zp.push(z as i32);
+        }
+        let mut code_sum = vec![0i64; pm.rows];
+        for r in 0..pm.rows {
+            code_sum[r] = codes[r * pm.cols..(r + 1) * pm.cols]
+                .iter()
+                .map(|&c| c as i64)
+                .sum();
+        }
+        Ok(QuantLinear {
+            cout: pm.rows,
+            cin: pm.cols,
+            bits: pm.bits,
+            packed: pm.packed.clone(),
+            scale: pm.scale.clone(),
+            zp,
+            code_sum,
+        })
+    }
+
+    /// Packed weight bytes (model-size accounting).
+    pub fn storage_bytes(&self) -> usize {
+        self.packed.len() + self.scale.len() * 4 + self.zp.len() * 4
+    }
+
+    /// Integer path: quantized activations -> `[acts.rows, cout]`.
+    pub fn forward_q(&self, acts: &QuantActs, shards: usize) -> Result<Tensor> {
+        if acts.cols != self.cin {
+            bail!("forward_q: act dim {} != Cin {}", acts.cols, self.cin);
+        }
+        self.run_sharded(acts.rows, shards, |j0, j1, chunk| {
+            self.gemm_q_chunk(acts, j0, j1, chunk);
+        })
+    }
+
+    /// Weight-only path: FP activations `[rows, cin]` -> `[rows, cout]`.
+    pub fn forward_fp(&self, x: &[f32], rows: usize, shards: usize)
+                      -> Result<Tensor> {
+        if x.len() != rows * self.cin {
+            bail!("forward_fp: x len {} != {rows}x{}", x.len(), self.cin);
+        }
+        let xsum: Vec<f32> = (0..rows)
+            .map(|t| x[t * self.cin..(t + 1) * self.cin].iter().sum())
+            .collect();
+        self.run_sharded(rows, shards, |j0, j1, chunk| {
+            self.gemm_fp_chunk(x, rows, &xsum, j0, j1, chunk);
+        })
+    }
+
+    /// Split output channels into shards, run `body(j0, j1, chunk)` per
+    /// shard (scoped worker threads when `shards > 1`), stitch `[rows, cout]`.
+    fn run_sharded<F>(&self, rows: usize, shards: usize, body: F)
+                      -> Result<Tensor>
+    where
+        F: Fn(usize, usize, &mut [f32]) + Sync,
+    {
+        let ranges = shard_ranges(self.cout, shards);
+        if ranges.len() == 1 {
+            let mut out = vec![0.0f32; rows * self.cout];
+            body(0, self.cout, &mut out);
+            return Ok(Tensor::new(vec![rows, self.cout], out));
+        }
+        let chunks: Vec<Vec<f32>> = std::thread::scope(|s| {
+            let handles: Vec<_> = ranges
+                .iter()
+                .map(|&(j0, j1)| {
+                    let body = &body;
+                    s.spawn(move || {
+                        let mut chunk = vec![0.0f32; rows * (j1 - j0)];
+                        body(j0, j1, &mut chunk);
+                        chunk
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // stitch column blocks back into row-major [rows, cout]
+        let mut out = vec![0.0f32; rows * self.cout];
+        for (&(j0, j1), chunk) in ranges.iter().zip(&chunks) {
+            let jw = j1 - j0;
+            for t in 0..rows {
+                out[t * self.cout + j0..t * self.cout + j1]
+                    .copy_from_slice(&chunk[t * jw..(t + 1) * jw]);
+            }
+        }
+        Ok(Tensor::new(vec![rows, self.cout], out))
+    }
+
+    /// Integer GEMM over output channels `[j0, j1)` into a `[rows, j1-j0]`
+    /// chunk.
+    fn gemm_q_chunk(&self, acts: &QuantActs, j0: usize, j1: usize,
+                    chunk: &mut [f32]) {
+        let k = self.cin;
+        let jw = j1 - j0;
+        let kk = k as i64;
+        let mut tile = vec![0u8; ROW_TILE * k];
+        let mut jt = j0;
+        while jt < j1 {
+            let jn = ROW_TILE.min(j1 - jt);
+            unpack_rows(&self.packed, self.bits, k, jt, jn, &mut tile);
+            for t in 0..acts.rows {
+                let arow = &acts.codes[t * k..(t + 1) * k];
+                let sa = acts.scale[t];
+                let za = acts.zp[t] as i64;
+                let asum = acts.code_sum[t];
+                let orow = &mut chunk[t * jw..(t + 1) * jw];
+                for jj in 0..jn {
+                    let j = jt + jj;
+                    let q = &tile[jj * k..(jj + 1) * k];
+                    let dot = dot_u8(arow, q) as i64;
+                    let zw = self.zp[j] as i64;
+                    let corr =
+                        dot - za * self.code_sum[j] - zw * asum + kk * za * zw;
+                    orow[j - j0] = sa * self.scale[j] * corr as f32;
+                }
+            }
+            jt += jn;
+        }
+    }
+
+    /// Weight-only GEMM over output channels `[j0, j1)`.
+    fn gemm_fp_chunk(&self, x: &[f32], rows: usize, xsum: &[f32], j0: usize,
+                     j1: usize, chunk: &mut [f32]) {
+        let k = self.cin;
+        let jw = j1 - j0;
+        let mut tile = vec![0u8; ROW_TILE * k];
+        let mut jt = j0;
+        while jt < j1 {
+            let jn = ROW_TILE.min(j1 - jt);
+            unpack_rows(&self.packed, self.bits, k, jt, jn, &mut tile);
+            for t in 0..rows {
+                let xrow = &x[t * k..(t + 1) * k];
+                let orow = &mut chunk[t * jw..(t + 1) * jw];
+                for jj in 0..jn {
+                    let j = jt + jj;
+                    let q = &tile[jj * k..(jj + 1) * k];
+                    let acc = dot_f32_u8(xrow, q);
+                    orow[j - j0] =
+                        self.scale[j] * (acc - self.zp[j] as f32 * xsum[t]);
+                }
+            }
+            jt += jn;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::kernels::quantize_acts_per_token;
+    use crate::quant::{self, grid::rtn_grid, lrq::quantize_int_codes};
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    fn packed(rng: &mut Rng, cout: usize, cin: usize, bits: u32)
+              -> (Tensor, PackedMatrix) {
+        let w = Tensor::randn(rng, &[cout, cin], 0.08);
+        let g = rtn_grid(&w, quant::qmax(bits));
+        let codes = quantize_int_codes(&w, &g, None);
+        let pm =
+            PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits).unwrap();
+        (w, pm)
+    }
+
+    fn rel_rmse(a: &Tensor, b: &Tensor) -> f64 {
+        a.rmse(b) / (b.frob() / (b.len() as f64).sqrt()).max(1e-12)
+    }
+
+    #[test]
+    fn integer_path_matches_dequant_reference() {
+        let mut rng = Rng::new(11);
+        for bits in [3u32, 4, 8] {
+            let (_, pm) = packed(&mut rng, 23, 36, bits);
+            let ql = QuantLinear::from_packed(&pm).unwrap();
+            let x = Tensor::randn(&mut rng, &[9, 36], 1.0);
+            let qa = quantize_acts_per_token(&x.data, 9, 36, 255.0);
+            let got = ql.forward_q(&qa, 1).unwrap();
+            // reference: fake-quant acts (dequantized codes) × dequant W
+            let mut xq = vec![0.0f32; 9 * 36];
+            for t in 0..9 {
+                for c in 0..36 {
+                    xq[t * 36 + c] = (qa.codes[t * 36 + c] as f32
+                        - qa.zp[t] as f32) * qa.scale[t];
+                }
+            }
+            let want =
+                Tensor::new(vec![9, 36], xq).matmul_bt(&pm.dequant());
+            assert!(rel_rmse(&got, &want) < 1e-5,
+                    "bits {bits}: {}", rel_rmse(&got, &want));
+        }
+    }
+
+    #[test]
+    fn weight_only_path_matches_dequant_reference() {
+        let mut rng = Rng::new(12);
+        for bits in [3u32, 4, 8] {
+            let (_, pm) = packed(&mut rng, 17, 29, bits);
+            let ql = QuantLinear::from_packed(&pm).unwrap();
+            let x = Tensor::randn(&mut rng, &[7, 29], 1.0);
+            let got = ql.forward_fp(&x.data, 7, 1).unwrap();
+            let want = x.matmul_bt(&pm.dequant());
+            assert!(rel_rmse(&got, &want) < 1e-4,
+                    "bits {bits}: {}", rel_rmse(&got, &want));
+        }
+    }
+
+    #[test]
+    fn sharding_is_invariant() {
+        let mut rng = Rng::new(13);
+        let (_, pm) = packed(&mut rng, 40, 24, 4);
+        let ql = QuantLinear::from_packed(&pm).unwrap();
+        let x = Tensor::randn(&mut rng, &[5, 24], 1.0);
+        let qa = quantize_acts_per_token(&x.data, 5, 24, 255.0);
+        let one = ql.forward_q(&qa, 1).unwrap();
+        for shards in [2usize, 3, 7, 64] {
+            let many = ql.forward_q(&qa, shards).unwrap();
+            // same per-element arithmetic, only the thread changes
+            assert_eq!(one, many, "shards {shards}");
+        }
+        let fone = ql.forward_fp(&x.data, 5, 1).unwrap();
+        let fmany = ql.forward_fp(&x.data, 5, 3).unwrap();
+        assert_eq!(fone, fmany);
+    }
+
+    #[test]
+    fn rejects_mismatched_dims() {
+        let mut rng = Rng::new(14);
+        let (_, pm) = packed(&mut rng, 8, 16, 8);
+        let ql = QuantLinear::from_packed(&pm).unwrap();
+        let x = Tensor::randn(&mut rng, &[2, 12], 1.0);
+        assert!(ql.forward_fp(&x.data, 2, 1).is_err());
+        let qa = quantize_acts_per_token(&x.data, 2, 12, 255.0);
+        assert!(ql.forward_q(&qa, 1).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! Native quantized inference engine: executes packed LRQ checkpoints
+//! ([`crate::quant::PackedMatrix`]) directly with pure-Rust integer kernels —
+//! no PJRT, no AOT artifacts (DESIGN.md §6).
+//!
+//! This is the Appendix G serving contract made executable: after
+//! reconstruction a checkpoint is only `(s1, z, codes)` per linear, and this
+//! module runs W8A8 / W4A8 / weight-only configurations end-to-end from that
+//! representation, for weights produced by **any** method in
+//! [`crate::methods`] (RTN / GPTQ / AWQ / FlexRound / LRQ — they all finalize
+//! into the same packed format).
+//!
+//! Layer map:
+//! * [`kernels`] — primitives: per-token/static activation quantization to u8
+//!   codes (bit-exact with [`crate::quant::act`]'s grid math), unrolled
+//!   u8×u8→i32 dot products, and fused row-tile unpacking of 3/4/8-bit
+//!   packed streams.
+//! * [`linear`] — [`QuantLinear`]: cache-blocked integer GEMM with the
+//!   per-channel dequant epilogue, an FP-activation weight-only path, and
+//!   row-sharded multi-threaded execution.
+//! * [`ops`] — the FP glue of a block: RMSNorm, RoPE, causal attention,
+//!   SiLU, and the scoring head (log-prob extraction).
+//! * [`block`] — [`QuantBlock`] / [`NativeModel`]: the Transformer forward
+//!   assembled from `model::layout` order, plus embedding and head.
+//! * [`reference`] — the fake-quant oracle (dequantize-then-matmul, the exact
+//!   semantics of the `block_fwd_q` artifact) used by the correctness
+//!   harness, and native FP calibration of activation ranges.
+//! * [`quantize`] — artifact-free PTQ: RTN / grid-searched grids straight to
+//!   a packed [`crate::model::QuantizedModel`].
+//! * [`scorer`] — [`NativeScorer`]: a [`crate::serve::BatchScorer`] so the
+//!   existing dynamic batcher serves the native engine unchanged. Unlike the
+//!   PJRT runtime the engine is `Send`, so it can be built outside the
+//!   engine thread and row-shard across worker threads.
+
+pub mod block;
+pub mod kernels;
+pub mod linear;
+pub mod ops;
+pub mod quantize;
+pub mod reference;
+pub mod scorer;
+
+pub use block::{NativeModel, QuantBlock};
+pub use kernels::QuantActs;
+pub use linear::QuantLinear;
+pub use quantize::{calibrate_stats, prepare_native, quantize_weights,
+                   ScaleInit};
+pub use scorer::{start_native_server, NativeScorer};

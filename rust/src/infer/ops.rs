@@ -1,0 +1,263 @@
+//! FP glue ops of the native forward pass — the pure-Rust mirror of
+//! `python/compile/model.py` (RMSNorm, half-split RoPE, causal softmax
+//! attention, SiLU, and the scoring head). Numerics follow the L2 model
+//! exactly: same eps, same base-10000 rotary angles, same masking constant,
+//! so the native engine and the AOT artifacts disagree only by f32
+//! accumulation order.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// RMSNorm over the trailing dim: `x · rsqrt(mean(x²) + 1e-5) · g`.
+pub fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
+    let (rows, d) = x.as_2d();
+    debug_assert_eq!(g.len(), d);
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let row = &x.data[r * d..(r + 1) * d];
+        let ms: f32 =
+            row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-5).sqrt();
+        for ((o, &v), &gv) in out[r * d..(r + 1) * d]
+            .iter_mut()
+            .zip(row)
+            .zip(&g.data)
+        {
+            *o = v * inv * gv;
+        }
+    }
+    Tensor::new(x.dims.clone(), out)
+}
+
+/// In-place half-split rotary embedding over `x[b, s, h, hd]` (row-major
+/// `[b*s, h*hd]` layout, position = sequence index).
+pub fn rope(x: &mut [f32], b: usize, s: usize, h: usize, hd: usize) {
+    debug_assert_eq!(x.len(), b * s * h * hd);
+    let half = hd / 2;
+    // angle table [s, half]
+    let mut cos = vec![0.0f32; s * half];
+    let mut sin = vec![0.0f32; s * half];
+    for p in 0..s {
+        for i in 0..half {
+            let inv = 1.0 / 10000f32.powf(i as f32 / half as f32);
+            let ang = p as f32 * inv;
+            cos[p * half + i] = ang.cos();
+            sin[p * half + i] = ang.sin();
+        }
+    }
+    for bi in 0..b {
+        for p in 0..s {
+            let base = (bi * s + p) * h * hd;
+            for hi in 0..h {
+                let off = base + hi * hd;
+                for i in 0..half {
+                    let (c, sn) = (cos[p * half + i], sin[p * half + i]);
+                    let x1 = x[off + i];
+                    let x2 = x[off + half + i];
+                    x[off + i] = x1 * c - x2 * sn;
+                    x[off + half + i] = x1 * sn + x2 * c;
+                }
+            }
+        }
+    }
+}
+
+/// Causal softmax attention: `q, k, v` are `[b*s, h*hd]` row-major; returns
+/// `attn [b*s, h*hd]` (heads re-interleaved, ready for the `wo` projection).
+pub fn causal_attention(q: &[f32], k: &[f32], v: &[f32], b: usize, s: usize,
+                        h: usize, hd: usize) -> Vec<f32> {
+    let d = h * hd;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut out = vec![0.0f32; b * s * d];
+    let mut scores = vec![0.0f32; s];
+    for bi in 0..b {
+        for hi in 0..h {
+            for ti in 0..s {
+                let qoff = (bi * s + ti) * d + hi * hd;
+                let qrow = &q[qoff..qoff + hd];
+                // scores over the causal prefix
+                let mut mx = f32::NEG_INFINITY;
+                for tj in 0..=ti {
+                    let koff = (bi * s + tj) * d + hi * hd;
+                    let krow = &k[koff..koff + hd];
+                    let mut acc = 0.0f32;
+                    for (a, b2) in qrow.iter().zip(krow) {
+                        acc += a * b2;
+                    }
+                    let sc = acc * scale;
+                    scores[tj] = sc;
+                    mx = mx.max(sc);
+                }
+                // softmax over the prefix
+                let mut denom = 0.0f32;
+                for sc in scores[..=ti].iter_mut() {
+                    *sc = (*sc - mx).exp();
+                    denom += *sc;
+                }
+                let inv = 1.0 / denom;
+                // weighted sum of v
+                let ooff = (bi * s + ti) * d + hi * hd;
+                for tj in 0..=ti {
+                    let w = scores[tj] * inv;
+                    let voff = (bi * s + tj) * d + hi * hd;
+                    for (o, &vv) in out[ooff..ooff + hd]
+                        .iter_mut()
+                        .zip(&v[voff..voff + hd])
+                    {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// SiLU (x·sigmoid(x)), elementwise.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Embedding gather: `ids[b*s]` -> `[b*s, d]`.
+pub fn embed(emb: &Tensor, ids: &[i32]) -> Result<Tensor> {
+    let (vocab, d) = emb.rc();
+    let mut out = Vec::with_capacity(ids.len() * d);
+    for &id in ids {
+        let idx = id as usize;
+        if id < 0 || idx >= vocab {
+            bail!("token id {id} outside vocab {vocab}");
+        }
+        out.extend_from_slice(emb.row(idx));
+    }
+    Ok(Tensor::new(vec![ids.len(), d], out))
+}
+
+/// Final norm + head: returns `(mean NLL, per-position logprob of targets)`,
+/// logprobs shaped `[rows]` in the same order as `targets` — the native twin
+/// of `head_logprobs` in `model.py`.
+pub fn head_logprobs(x: &Tensor, final_norm: &Tensor, head: &Tensor,
+                     targets: &[i32]) -> Result<(f32, Vec<f32>)> {
+    let (rows, _d) = x.as_2d();
+    if targets.len() != rows {
+        bail!("head: {} targets for {rows} positions", targets.len());
+    }
+    let (vocab, _) = head.rc();
+    let xn = rmsnorm(x, final_norm);
+    let logits = xn.matmul_bt(head); // [rows, vocab]
+    let mut logp = Vec::with_capacity(rows);
+    let mut nll = 0.0f64;
+    for r in 0..rows {
+        let row = logits.row(r);
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let sum: f32 = row.iter().map(|&v| (v - mx).exp()).sum();
+        let logz = mx + sum.ln();
+        let t = targets[r] as usize;
+        if targets[r] < 0 || t >= vocab {
+            bail!("target id {} outside vocab {vocab}", targets[r]);
+        }
+        let lp = row[t] - logz;
+        logp.push(lp);
+        nll -= lp as f64;
+    }
+    Ok(((nll / rows as f64) as f32, logp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let mut rng = Rng::new(1);
+        let x = Tensor::randn(&mut rng, &[4, 32], 2.0);
+        let g = Tensor::ones(&[32]);
+        let y = rmsnorm(&x, &g);
+        for r in 0..4 {
+            let ms: f32 = y.row(r).iter().map(|&v| v * v).sum::<f32>() / 32.0;
+            assert!((ms - 1.0).abs() < 1e-3, "row {r} ms {ms}");
+        }
+    }
+
+    #[test]
+    fn rope_preserves_norm_and_fixes_origin() {
+        let mut rng = Rng::new(2);
+        let (b, s, h, hd) = (2usize, 5, 2, 8);
+        let x0 = Tensor::randn(&mut rng, &[b * s, h * hd], 1.0);
+        let mut x = x0.data.clone();
+        rope(&mut x, b, s, h, hd);
+        // position 0 is unrotated
+        for bi in 0..b {
+            let off = bi * s * h * hd;
+            for i in 0..h * hd {
+                assert!((x[off + i] - x0.data[off + i]).abs() < 1e-6);
+            }
+        }
+        // rotation preserves per-pair norms
+        for (r, chunk) in x.chunks(hd).enumerate() {
+            let orig = &x0.data[r * hd..(r + 1) * hd];
+            let n0: f32 = orig.iter().map(|v| v * v).sum();
+            let n1: f32 = chunk.iter().map(|v| v * v).sum();
+            assert!((n0 - n1).abs() < 1e-3, "chunk {r}");
+        }
+    }
+
+    #[test]
+    fn attention_first_token_is_v() {
+        // causal: position 0 attends only to itself -> output == v[0]
+        let mut rng = Rng::new(3);
+        let (b, s, h, hd) = (1usize, 4, 2, 6);
+        let d = h * hd;
+        let q = Tensor::randn(&mut rng, &[s, d], 1.0);
+        let k = Tensor::randn(&mut rng, &[s, d], 1.0);
+        let v = Tensor::randn(&mut rng, &[s, d], 1.0);
+        let out = causal_attention(&q.data, &k.data, &v.data, b, s, h, hd);
+        for i in 0..d {
+            assert!((out[i] - v.data[i]).abs() < 1e-6);
+        }
+        // every output row is a convex combination -> bounded by v extremes
+        let vmax = v.data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let vmin = v.data.iter().cloned().fold(f32::INFINITY, f32::min);
+        for &o in &out {
+            assert!(o <= vmax + 1e-5 && o >= vmin - 1e-5);
+        }
+    }
+
+    #[test]
+    fn head_logprobs_normalized() {
+        let mut rng = Rng::new(4);
+        let x = Tensor::randn(&mut rng, &[6, 16], 1.0);
+        let fnorm = Tensor::ones(&[16]);
+        let head = Tensor::randn(&mut rng, &[40, 16], 0.3);
+        let targets: Vec<i32> = (0..6).map(|_| rng.below(40) as i32).collect();
+        let (loss, logp) = head_logprobs(&x, &fnorm, &head, &targets).unwrap();
+        assert_eq!(logp.len(), 6);
+        assert!(logp.iter().all(|&p| p < 0.0));
+        let mean = -logp.iter().map(|&p| p as f64).sum::<f64>() / 6.0;
+        assert!((loss as f64 - mean).abs() < 1e-6);
+        // exhaustive check on row 0: exp(logp) sums to 1 across all targets
+        let mut total = 0.0f64;
+        for t in 0..40 {
+            let (_, lp) =
+                head_logprobs(&x, &fnorm, &head,
+                              &[t, targets[1], targets[2], targets[3],
+                                targets[4], targets[5]]).unwrap();
+            if t == 0 {
+                total = 0.0;
+            }
+            total += (lp[0] as f64).exp();
+        }
+        assert!((total - 1.0).abs() < 1e-4, "Σp = {total}");
+    }
+
+    #[test]
+    fn embed_gathers_and_validates() {
+        let emb = Tensor::new(vec![3, 2], vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let x = embed(&emb, &[2, 0]).unwrap();
+        assert_eq!(x.data, vec![4.0, 5.0, 0.0, 1.0]);
+        assert!(embed(&emb, &[3]).is_err());
+        assert!(embed(&emb, &[-1]).is_err());
+    }
+}

@@ -1,0 +1,156 @@
+//! Artifact-free post-training quantization: turn an FP [`Weights`] into a
+//! packed [`QuantizedModel`] (RTN or grid-searched per-channel scales) and
+//! calibrate static activation grids with the native FP forward — no PJRT,
+//! no AOT artifacts. Checkpoints produced by the full pipeline
+//! ([`crate::coordinator::quantize_model`], any method) serve through the
+//! same [`NativeModel`]; this module exists so `lrq serve-native` and the
+//! tests can run from a bare weights file.
+
+use anyhow::Result;
+
+use crate::config::{ActScheme, Scheme};
+use crate::coordinator::engine::BlockStats;
+use crate::data::Corpus;
+use crate::model::{QuantizedBlock, QuantizedModel, Weights};
+use crate::quant::{grid_search_scales, lrq::quantize_int_codes, qmax,
+                   rtn_grid, PackedMatrix};
+use crate::rng::Rng;
+
+use super::block::NativeModel;
+use super::ops::embed;
+use super::reference::fp_block_forward;
+
+/// Per-channel scale initializer for artifact-free quantization.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ScaleInit {
+    /// min/max RTN grid
+    Rtn,
+    /// RTN refined by the FlexRound/LRQ `argmin ||W - Ŵ||²` grid search
+    GridSearch,
+}
+
+impl std::str::FromStr for ScaleInit {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        Ok(match s.to_ascii_lowercase().as_str() {
+            "rtn" => ScaleInit::Rtn,
+            "grid" | "gridsearch" | "grid-search" => ScaleInit::GridSearch,
+            other => anyhow::bail!("unknown scale init {other} \
+                                    (rtn | grid)"),
+        })
+    }
+}
+
+/// Quantize every block linear of `weights` to packed `w_bits` codes.
+/// Embeddings, norms, and the head stay FP (paper scheme).
+pub fn quantize_weights(weights: &Weights, w_bits: u32, init: ScaleInit)
+                        -> Result<QuantizedModel> {
+    let qm_val = qmax(w_bits);
+    let mut blocks = Vec::with_capacity(weights.blocks.len());
+    for bw in &weights.blocks {
+        let mut ws = Vec::with_capacity(7);
+        for w in &bw.ws {
+            let grid = match init {
+                ScaleInit::Rtn => rtn_grid(w, qm_val),
+                ScaleInit::GridSearch => grid_search_scales(w, qm_val, 40),
+            };
+            let codes = quantize_int_codes(w, &grid, None);
+            ws.push(PackedMatrix::from_codes(&codes, &grid.scale, &grid.zp,
+                                             w_bits)?);
+        }
+        blocks.push(QuantizedBlock {
+            ws,
+            norm_attn: bw.norm_attn.clone(),
+            norm_ffn: bw.norm_ffn.clone(),
+        });
+    }
+    Ok(QuantizedModel {
+        dim: weights.dim.clone(),
+        bits: w_bits,
+        emb: weights.emb.clone(),
+        blocks,
+        final_norm: weights.final_norm.clone(),
+        head: weights.head.clone(),
+    })
+}
+
+/// Calibrate static activation grids by streaming `batches` calibration
+/// batches through the native FP forward, merging (min, max, amax) at the
+/// four quant points of every block.
+pub fn calibrate_stats(weights: &Weights, corpus: &Corpus, batches: usize,
+                       seed: u64) -> Result<Vec<BlockStats>> {
+    let dim = &weights.dim;
+    let mut stats: Vec<BlockStats> =
+        (0..weights.blocks.len()).map(|_| Default::default()).collect();
+    let mut rng = Rng::new(seed ^ 0xCA11B);
+    for _ in 0..batches.max(1) {
+        let ids = corpus.calib_batch(dim.calib_batch, dim.seq, &mut rng);
+        let mut x = embed(&weights.emb, &ids)?;
+        for (bw, st) in weights.blocks.iter().zip(stats.iter_mut()) {
+            x = fp_block_forward(&x, bw, dim, st)?;
+        }
+    }
+    Ok(stats)
+}
+
+/// One-call setup for artifact-free native serving: quantize, calibrate (if
+/// the scheme needs static grids), and assemble a [`NativeModel`].
+pub fn prepare_native(weights: &Weights, scheme: Scheme, init: ScaleInit,
+                      corpus: &Corpus, calib_batches: usize, seed: u64,
+                      shards: usize) -> Result<NativeModel> {
+    let qm = quantize_weights(weights, scheme.w_bits, init)?;
+    let stats = if matches!(scheme.act, ActScheme::PerTensorStatic) {
+        calibrate_stats(weights, corpus, calib_batches, seed)?
+    } else {
+        Vec::new()
+    };
+    NativeModel::from_quantized(&qm, &stats, scheme, shards)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::CorpusConfig;
+    use crate::model::ModelDim;
+
+    fn micro_dim() -> ModelDim {
+        ModelDim::builtin("micro").expect("micro builtin")
+    }
+
+    #[test]
+    fn quantize_produces_valid_packed_model() {
+        let dim = micro_dim();
+        let w = Weights::init(&dim, &mut Rng::new(1));
+        for bits in [3u32, 4, 8] {
+            let qm = quantize_weights(&w, bits, ScaleInit::GridSearch)
+                .unwrap();
+            assert_eq!(qm.blocks.len(), dim.layers);
+            assert_eq!(qm.bits, bits);
+            assert!(qm.storage_bytes() < qm.fp_equivalent_bytes());
+            // every matrix dequantizes close to the FP weight
+            let dq = qm.blocks[0].ws[0].dequant();
+            let rel = dq.rmse(&w.blocks[0].ws[0])
+                / (w.blocks[0].ws[0].frob()
+                   / (dq.len() as f64).sqrt()).max(1e-12);
+            assert!(rel < 0.5, "bits {bits} rel {rel}");
+        }
+    }
+
+    #[test]
+    fn calibration_populates_ranges() {
+        let dim = micro_dim();
+        let w = Weights::init(&dim, &mut Rng::new(2));
+        let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 7));
+        let stats = calibrate_stats(&w, &corpus, 2, 3).unwrap();
+        assert_eq!(stats.len(), dim.layers);
+        for st in &stats {
+            for p in st.iter() {
+                assert!(p.range.max > 0.0);
+                assert!(!p.amax.is_empty());
+            }
+        }
+        // point dims match the layout contract
+        assert_eq!(stats[0][0].amax.len(), dim.d);
+        assert_eq!(stats[0][3].amax.len(), dim.ff);
+    }
+}

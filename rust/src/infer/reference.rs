@@ -1,0 +1,147 @@
+//! Reference paths for the native engine:
+//!
+//! * [`ref_block_forward`] — the **fake-quant oracle**: dequantize packed
+//!   weights to f32 and run the block with fake-quantized activations,
+//!   reproducing the semantics of the `block_fwd_q` AOT artifact in pure
+//!   Rust. The correctness harness (`tests/native.rs`) asserts the integer
+//!   engine matches this within f32-accumulation tolerance.
+//! * [`fp_block_forward`] — the FP block with activation-statistics capture
+//!   at the four quant points, powering artifact-free calibration of static
+//!   activation grids ([`super::quantize::calibrate_stats`]).
+
+use anyhow::{bail, Result};
+
+use crate::config::{ActScheme, Scheme};
+use crate::coordinator::engine::BlockStats;
+use crate::model::{BlockWeights, ModelDim, QuantizedModel};
+use crate::quant::act::{per_tensor_quant, per_token_quant};
+use crate::quant::qmax;
+use crate::tensor::Tensor;
+
+use super::ops::{causal_attention, embed, head_logprobs, rmsnorm, rope,
+                 silu};
+
+/// Fake-quantize activations at one quant point (the `ActQuant` dispatch of
+/// `model.py`, in f32).
+fn fq_act(x: &Tensor, point: usize, stats: &BlockStats, scheme: &Scheme)
+          -> Tensor {
+    let qa = qmax(scheme.a_bits);
+    match scheme.act {
+        ActScheme::None => x.clone(),
+        ActScheme::PerToken => per_token_quant(x, qa),
+        ActScheme::PerTensorStatic => {
+            let (s, z) = stats[point].range.grid(qa);
+            per_tensor_quant(x, s, z, qa)
+        }
+    }
+}
+
+/// Reference quantized block forward over dequantized (Ŵ) weights — the
+/// fake-quant semantics every PTQ method in this repo evaluates under.
+pub fn ref_block_forward(x: &Tensor, whats: &[Tensor], norm_attn: &Tensor,
+                         norm_ffn: &Tensor, dim: &ModelDim,
+                         stats: &BlockStats, scheme: &Scheme)
+                         -> Result<Tensor> {
+    if whats.len() != 7 {
+        bail!("reference block needs 7 weight tensors, got {}", whats.len());
+    }
+    let (t, d) = x.as_2d();
+    if d != dim.d || t % dim.seq != 0 {
+        bail!("reference block: input [{t}, {d}] vs dim");
+    }
+    let b = t / dim.seq;
+    let (s, h, hd) = (dim.seq, dim.heads, dim.head_dim());
+
+    let xa = fq_act(&rmsnorm(x, norm_attn), 0, stats, scheme);
+    let mut q = xa.matmul_bt(&whats[0]);
+    let mut k = xa.matmul_bt(&whats[1]);
+    let v = xa.matmul_bt(&whats[2]);
+    rope(&mut q.data, b, s, h, hd);
+    rope(&mut k.data, b, s, h, hd);
+    let (k, v) = if scheme.kv_quant {
+        let qkv = qmax(scheme.kv_bits);
+        (per_token_quant(&k, qkv), per_token_quant(&v, qkv))
+    } else {
+        (k, v)
+    };
+    let attn = Tensor::new(
+        vec![t, d],
+        causal_attention(&q.data, &k.data, &v.data, b, s, h, hd),
+    );
+    let o = fq_act(&attn, 1, stats, scheme).matmul_bt(&whats[3]);
+    let hidd = x.add(&o);
+
+    let xf = fq_act(&rmsnorm(&hidd, norm_ffn), 2, stats, scheme);
+    let g = xf.matmul_bt(&whats[4]);
+    let u = xf.matmul_bt(&whats[5]);
+    let gate = g.zip(&u, |gv, uv| silu(gv) * uv);
+    let down = fq_act(&gate, 3, stats, scheme).matmul_bt(&whats[6]);
+    Ok(hidd.add(&down))
+}
+
+/// Full reference forward over a packed checkpoint (dequantized weights,
+/// fake-quant activations): the oracle for [`super::NativeModel::forward`].
+pub fn ref_forward(qm: &QuantizedModel, stats: &[BlockStats],
+                   scheme: &Scheme, ids: &[i32], targets: &[i32])
+                   -> Result<(f32, Tensor)> {
+    let seq = qm.dim.seq;
+    if ids.is_empty() || ids.len() % seq != 0 || targets.len() != ids.len() {
+        bail!("ref_forward: bad ids/targets shapes");
+    }
+    let b = ids.len() / seq;
+    let default_stats: BlockStats = Default::default();
+    let mut x = embed(&qm.emb, ids)?;
+    for (i, qb) in qm.blocks.iter().enumerate() {
+        let whats = qb.dequant_ws();
+        let st = stats.get(i).unwrap_or(&default_stats);
+        x = ref_block_forward(&x, &whats, &qb.norm_attn, &qb.norm_ffn,
+                              &qm.dim, st, scheme)?;
+    }
+    let (loss, logp) = head_logprobs(&x, &qm.final_norm, &qm.head, targets)?;
+    Ok((loss, Tensor::new(vec![b, seq], logp)))
+}
+
+/// Record per-tensor (min, max) and per-channel amax of a 2-D activation
+/// into one quant point's stats.
+fn capture(stats: &mut BlockStats, point: usize, x: &Tensor) {
+    let mn = x.min().min(0.0);
+    let mx = x.max().max(0.0);
+    let amax = x.col_amax();
+    stats[point].merge(mn, mx, &amax);
+}
+
+/// FP block forward with stats capture at the four quant points — the native
+/// twin of the `block_fwd` artifact's calibration outputs.
+pub fn fp_block_forward(x: &Tensor, bw: &BlockWeights, dim: &ModelDim,
+                        stats: &mut BlockStats) -> Result<Tensor> {
+    let (t, d) = x.as_2d();
+    if d != dim.d || t % dim.seq != 0 {
+        bail!("fp block: input [{t}, {d}] vs dim");
+    }
+    let b = t / dim.seq;
+    let (s, h, hd) = (dim.seq, dim.heads, dim.head_dim());
+
+    let xa = rmsnorm(x, &bw.norm_attn);
+    capture(stats, 0, &xa);
+    let mut q = xa.matmul_bt(&bw.ws[0]);
+    let mut k = xa.matmul_bt(&bw.ws[1]);
+    let v = xa.matmul_bt(&bw.ws[2]);
+    rope(&mut q.data, b, s, h, hd);
+    rope(&mut k.data, b, s, h, hd);
+    let attn = Tensor::new(
+        vec![t, d],
+        causal_attention(&q.data, &k.data, &v.data, b, s, h, hd),
+    );
+    capture(stats, 1, &attn);
+    let o = attn.matmul_bt(&bw.ws[3]);
+    let hidd = x.add(&o);
+
+    let xf = rmsnorm(&hidd, &bw.norm_ffn);
+    capture(stats, 2, &xf);
+    let g = xf.matmul_bt(&bw.ws[4]);
+    let u = xf.matmul_bt(&bw.ws[5]);
+    let gate = g.zip(&u, |gv, uv| silu(gv) * uv);
+    capture(stats, 3, &gate);
+    let down = gate.matmul_bt(&bw.ws[6]);
+    Ok(hidd.add(&down))
+}

@@ -1,0 +1,67 @@
+//! [`NativeScorer`]: the native engine behind the existing dynamic batcher.
+//!
+//! Implements [`crate::serve::BatchScorer`] over a [`NativeModel`], so
+//! [`crate::serve::Server`] serves packed checkpoints unchanged. Unlike the
+//! PJRT engine the native model is `Send`: it can be quantized/calibrated on
+//! the caller's thread and *moved* into the engine thread
+//! ([`start_native_server`]), and its GEMMs row-shard across
+//! `model.shards` scoped worker threads.
+
+use anyhow::Result;
+
+use crate::serve::{BatchScorer, Server, ServerConfig};
+
+use super::block::NativeModel;
+
+pub struct NativeScorer {
+    pub model: NativeModel,
+    batch: usize,
+}
+
+impl NativeScorer {
+    /// Default batch capacity: the config's calibration batch (parity with
+    /// the PJRT `EngineScorer`).
+    pub fn new(model: NativeModel) -> Self {
+        let batch = model.dim.calib_batch.max(1);
+        NativeScorer { model, batch }
+    }
+
+    /// Override the rows-per-execution capacity (the native engine has no
+    /// fixed-shape artifacts, so any batch works).
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch.max(1);
+        self
+    }
+}
+
+impl BatchScorer for NativeScorer {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    fn seq_len(&self) -> usize {
+        self.model.dim.seq
+    }
+
+    /// The native engine has no fixed-shape artifacts: partially filled
+    /// batches are executed at their true occupancy, not padded to capacity.
+    fn variable_batch(&self) -> bool {
+        true
+    }
+
+    fn score(&mut self, ids: &[i32], targets: &[i32]) -> Result<Vec<f32>> {
+        let (_, logp) = self.model.forward(ids, targets)?;
+        Ok(logp.data)
+    }
+}
+
+/// Start the dynamic batcher over a native model. The model is built here,
+/// on the caller's thread, and moved into the engine thread — legal because
+/// the native engine is `Send` (the PJRT path must construct inside).
+/// Scorer capacity follows `cfg.max_batch` (the native engine has no
+/// fixed-shape artifacts, so the batching knob is fully honored).
+pub fn start_native_server(model: NativeModel, cfg: ServerConfig)
+                           -> Result<Server> {
+    let scorer = NativeScorer::new(model).with_batch(cfg.max_batch);
+    Server::start(cfg, move || Ok(Box::new(scorer) as Box<dyn BatchScorer>))
+}

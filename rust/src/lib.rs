@@ -14,7 +14,11 @@
 //!   fake-quant, per-token quant, dequant-matmul) lowered into the same HLO.
 //!
 //! The [`runtime`] module loads the artifacts through the PJRT C API (`xla`
-//! crate) and exposes typed executables the coordinator drives.
+//! crate) and exposes typed executables the coordinator drives. The
+//! [`infer`] module is the artifact-free counterpart: a native integer
+//! inference engine that executes packed checkpoints (`quant::pack`)
+//! directly and serves them through the same dynamic batcher
+//! (`lrq serve-native`).
 //!
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper table/figure to a module and bench target.
@@ -24,6 +28,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod infer;
 pub mod methods;
 pub mod model;
 pub mod quant;

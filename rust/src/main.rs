@@ -7,21 +7,25 @@
 //!               --act static --steps 200 --calib 64
 //! lrq eval      --cfg tiny --weights weights.bin [--method ...]
 //! lrq serve     --cfg tiny --weights weights.bin [--method lrq]
+//! lrq serve-native --cfg tiny --wbits 4 --act token --shards 4   # no PJRT
 //! lrq bench-table <id>                  # regenerate a paper table/figure
 //! lrq report                            # regenerate everything
 //! ```
 
 use std::path::Path;
 use std::process::ExitCode;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 use lrq::config::{ActScheme, Args, Method, ReconConfig, Scheme};
 use lrq::coordinator::{pretrain, quantize_model, Engine};
 use lrq::data::{Corpus, CorpusConfig, TaskKind, TaskSet};
 use lrq::eval::{evaluate, ModelView};
-use lrq::model::Weights;
+use lrq::infer::{prepare_native, start_native_server, ScaleInit};
+use lrq::model::{ModelDim, Weights};
 use lrq::rng::Rng;
-use lrq::runtime::Runtime;
+use lrq::runtime::{Manifest, Runtime};
+use lrq::serve::ServerConfig;
 use lrq::tables;
 
 fn main() -> ExitCode {
@@ -49,6 +53,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "quantize" => quantize(args),
         "eval" => eval_cmd(args),
         "serve" => serve(args),
+        "serve-native" => serve_native(args),
         "bench-table" => {
             let id = args
                 .positional
@@ -76,6 +81,13 @@ commands:
            [--calib N] [--rank R] [--lr F]
   eval     --cfg C --weights PATH [--method M ...quantize flags]
   serve    --cfg C --weights PATH [--method M] [--requests N] [--wbits B]
+  serve-native --cfg C [--weights PATH] [--wbits B] [--act none|static|token]
+           [--abits B] [--no-kv] [--init rtn|grid] [--shards N]
+           [--requests N] [--max-batch B] [--clients N]
+           [--calib-batches N] [--seed S]
+           pure-Rust integer engine over packed codes; needs no artifacts
+           (dims fall back to built-ins micro|tiny|small, missing weights
+           are random-init)
   bench-table ID                     regenerate one paper table/figure
                                      (fig1 fig2 fig3 fig4a fig4b fig5
                                       t1 t3 t5 t7 t9 t13 t29 t30 t31 kvq)
@@ -245,6 +257,96 @@ fn serve(args: &Args) -> Result<()> {
     let w_bits: u32 = args.parse_as("wbits", 4)?;
     tables::serving_run(&artifacts, &cfg, &wpath, method.as_deref(), w_bits,
                         requests, seed)
+}
+
+/// `serve-native`: serve a packed checkpoint through the dynamic batcher
+/// with the pure-Rust integer engine — no PJRT, no AOT artifacts.
+fn serve_native(args: &Args) -> Result<()> {
+    let cfg = args.get_or("cfg", "tiny");
+    let scheme = scheme_from(args)?;
+    let init: ScaleInit = args.parse_as("init", ScaleInit::GridSearch)?;
+    let shards: usize = args.parse_as("shards", 1)?;
+    let requests: usize = args.parse_as("requests", 200)?;
+    let clients: usize = args.parse_as("clients", 4)?;
+    let max_batch: usize = args.parse_as("max-batch", 8)?;
+    let seed: u64 = args.parse_as("seed", 1234)?;
+    let calib: usize = args.parse_as("calib-batches", 4)?;
+
+    // dims: manifest entry if present (authoritative), else built-ins —
+    // `micro` is native-only and never appears in a manifest
+    let adir = args.get_or("artifacts", "artifacts");
+    let dim = Manifest::load(Path::new(&adir))
+        .ok()
+        .and_then(|m| m.configs.get(cfg.as_str()).cloned())
+        .or_else(|| ModelDim::builtin(&cfg))
+        .with_context(|| {
+            format!("config {cfg}: neither in {adir}/manifest.txt nor a \
+                     built-in (micro|tiny|small)")
+        })?;
+
+    // weights: load the trained checkpoint, or random-init for a dry run
+    let wpath = args.get_or("weights", &format!("weights_{cfg}.bin"));
+    let weights = if Path::new(&wpath).exists() {
+        Weights::load(&dim, Path::new(&wpath))?
+    } else {
+        println!("({wpath} missing; serving random-init weights)");
+        Weights::init(&dim, &mut Rng::new(seed ^ 0x1217))
+    };
+
+    let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
+    let t0 = Instant::now();
+    let model =
+        prepare_native(&weights, scheme, init, &corpus, calib, seed, shards)?;
+    println!(
+        "native engine ready in {:.2}s: {cfg} W/A/KV {} ({:?} init), \
+         {:.2} MB packed ({:.2}x vs fp32), {shards} shard thread(s)",
+        t0.elapsed().as_secs_f64(),
+        scheme.label(),
+        init,
+        model.storage_bytes() as f64 / 1e6,
+        (dim.param_count() * 4) as f64 / model.storage_bytes() as f64,
+    );
+
+    let tokens_per_req = dim.seq; // each scored row is one seq-length batch row
+    let server = start_native_server(
+        model,
+        ServerConfig { max_batch, max_wait: Duration::from_millis(2) },
+    )?;
+    let t1 = Instant::now();
+    let mut handles = Vec::new();
+    let n_clients = clients.max(1);
+    for k in 0..n_clients as u64 {
+        let client = server.client();
+        // distribute the remainder so exactly `requests` are served
+        let per = requests / n_clients
+            + usize::from((k as usize) < requests % n_clients);
+        let vocab = dim.vocab;
+        let seq = dim.seq;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            let mut rng = Rng::new(0xD00D ^ k);
+            for _ in 0..per {
+                let len = rng.range(2, seq.min(48) + 1);
+                let ids: Vec<i32> =
+                    (0..len).map(|_| rng.below(vocab) as i32).collect();
+                client.score(ids)?;
+            }
+            Ok(())
+        }));
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+    }
+    let wall = t1.elapsed();
+    let m = server.metrics.lock().unwrap().clone();
+    println!("{}", m.summary(wall));
+    println!(
+        "wall {:.2}s, {:.0} tokens/s at seq {}",
+        wall.as_secs_f64(),
+        m.throughput(wall) * tokens_per_req as f64,
+        tokens_per_req,
+    );
+    Ok(())
 }
 
 /// Consistency probe: loss reported by the train_step artifact (lr=0) vs the

@@ -52,6 +52,57 @@ pub struct ModelDim {
 }
 
 impl ModelDim {
+    /// Built-in dimensions mirroring `python/compile/configs.py` — used by
+    /// artifact-free paths (the native inference engine, `serve-native`) so
+    /// they never require `artifacts/manifest.txt`. The manifest, when
+    /// present, remains authoritative. `micro` has no Python/artifact
+    /// counterpart: it is the native-only smoke config shared by the test
+    /// suites and fast `serve-native` dry runs.
+    pub fn builtin(name: &str) -> Option<ModelDim> {
+        match name {
+            "micro" => Some(ModelDim {
+                name: "micro".into(),
+                vocab: 64,
+                d: 32,
+                heads: 2,
+                layers: 2,
+                ff: 48,
+                seq: 16,
+                train_batch: 4,
+                calib_batch: 4,
+                recon_batch: 2,
+                rank: 8,
+            }),
+            "tiny" => Some(ModelDim {
+                name: "tiny".into(),
+                vocab: 512,
+                d: 128,
+                heads: 4,
+                layers: 4,
+                ff: 352,
+                seq: 64,
+                train_batch: 16,
+                calib_batch: 8,
+                recon_batch: 4,
+                rank: 32,
+            }),
+            "small" => Some(ModelDim {
+                name: "small".into(),
+                vocab: 2048,
+                d: 256,
+                heads: 8,
+                layers: 8,
+                ff: 704,
+                seq: 64,
+                train_batch: 8,
+                calib_batch: 8,
+                recon_batch: 4,
+                rank: 64,
+            }),
+            _ => None,
+        }
+    }
+
     pub fn head_dim(&self) -> usize {
         self.d / self.heads
     }
@@ -129,6 +180,19 @@ mod tests {
         // emb + head: 2*512*128 = 131072; block: 4*128^2 + 3*352*128 + 256
         let block = 4 * 128 * 128 + 3 * 352 * 128 + 256;
         assert_eq!(m.param_count(), 131072 + 4 * block + 128);
+    }
+
+    #[test]
+    fn builtin_configs() {
+        // tiny/small mirror python/compile/configs.py; micro is native-only
+        let t = ModelDim::builtin("tiny").unwrap();
+        assert_eq!((t.vocab, t.d, t.layers, t.ff), (512, 128, 4, 352));
+        let s = ModelDim::builtin("small").unwrap();
+        assert_eq!((s.vocab, s.d, s.layers, s.ff), (2048, 256, 8, 704));
+        let m = ModelDim::builtin("micro").unwrap();
+        assert_eq!(m.d % m.heads, 0);
+        assert!(m.param_count() < t.param_count());
+        assert!(ModelDim::builtin("huge").is_none());
     }
 
     #[test]

@@ -4,12 +4,22 @@
 //! Codes are packed LSB-first into a contiguous bitstream per matrix; 4-bit
 //! packs two codes per byte, 3-bit packs 8 codes per 3 bytes (true bit-level
 //! packing, matching the 4.55× / 3.58× compression ratios in Appendix G).
+//!
+//! Every decode path is length-checked: [`unpack_bits`] refuses truncated
+//! bitstreams and [`PackedMatrix::new`] validates the packed buffer against
+//! `(rows·cols·bits)/8` at construction, so the serving-side kernels in
+//! [`crate::infer`] can index the stream without per-element bounds anxiety.
 
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
 /// A per-channel-quantized matrix in packed storage: integer codes + grid.
+///
+/// The packed stream is crate-private so the length invariant established by
+/// [`PackedMatrix::new`] cannot be bypassed by struct-literal construction;
+/// decode paths ([`PackedMatrix::unpack`], the `infer` GEMM tiles) rely on
+/// it.
 #[derive(Clone, Debug)]
 pub struct PackedMatrix {
     pub rows: usize,
@@ -17,13 +27,18 @@ pub struct PackedMatrix {
     pub bits: u32,
     pub scale: Vec<f32>,
     pub zp: Vec<f32>,
-    pub packed: Vec<u8>,
+    pub(crate) packed: Vec<u8>,
+}
+
+/// Exact byte length of `n` codes packed at `bits` bits each.
+pub fn packed_len(n: usize, bits: u32) -> usize {
+    (n * bits as usize).div_ceil(8)
 }
 
 /// Pack `codes` (each < 2^bits) into an LSB-first bitstream.
 pub fn pack_bits(codes: &[u32], bits: u32) -> Vec<u8> {
-    let total_bits = codes.len() * bits as usize;
-    let mut out = vec![0u8; total_bits.div_ceil(8)];
+    assert!((1..=16).contains(&bits), "pack_bits: bits {bits} out of range");
+    let mut out = vec![0u8; packed_len(codes.len(), bits)];
     let mut bitpos = 0usize;
     for &c in codes {
         debug_assert!(c < (1 << bits));
@@ -42,8 +57,17 @@ pub fn pack_bits(codes: &[u32], bits: u32) -> Vec<u8> {
     out
 }
 
-/// Inverse of [`pack_bits`].
-pub fn unpack_bits(packed: &[u8], bits: u32, n: usize) -> Vec<u32> {
+/// Inverse of [`pack_bits`]. Fails on a truncated/short bitstream instead of
+/// indexing out of bounds.
+pub fn unpack_bits(packed: &[u8], bits: u32, n: usize) -> Result<Vec<u32>> {
+    if !(1..=16).contains(&bits) {
+        bail!("unpack_bits: bits {bits} out of range [1, 16]");
+    }
+    let need = packed_len(n, bits);
+    if packed.len() < need {
+        bail!("unpack_bits: truncated bitstream ({} bytes, need {need} for \
+               {n} codes at {bits} bits)", packed.len());
+    }
     let mut out = Vec::with_capacity(n);
     let mut bitpos = 0usize;
     for _ in 0..n {
@@ -60,10 +84,29 @@ pub fn unpack_bits(packed: &[u8], bits: u32, n: usize) -> Vec<u32> {
         }
         out.push(v);
     }
-    out
+    Ok(out)
 }
 
 impl PackedMatrix {
+    /// Validated constructor: grid and packed-stream lengths must match the
+    /// matrix shape exactly. All decode paths rely on this invariant.
+    pub fn new(rows: usize, cols: usize, bits: u32, scale: Vec<f32>,
+               zp: Vec<f32>, packed: Vec<u8>) -> Result<Self> {
+        if !(1..=8).contains(&bits) {
+            bail!("PackedMatrix: bits {bits} out of range [1, 8]");
+        }
+        if scale.len() != rows || zp.len() != rows {
+            bail!("PackedMatrix: grid size mismatch (rows {rows}, scale {}, \
+                   zp {})", scale.len(), zp.len());
+        }
+        let expect = packed_len(rows * cols, bits);
+        if packed.len() != expect {
+            bail!("PackedMatrix: packed stream is {} bytes, expected {expect} \
+                   for {rows}x{cols} at {bits} bits", packed.len());
+        }
+        Ok(PackedMatrix { rows, cols, bits, scale, zp, packed })
+    }
+
     /// Pack integer codes (f32-carried, as produced by quantization) with
     /// their grid.
     pub fn from_codes(
@@ -73,37 +116,34 @@ impl PackedMatrix {
         bits: u32,
     ) -> Result<Self> {
         let (rows, cols) = codes.rc();
-        if scale.len() != rows || zp.len() != rows {
-            bail!("grid size mismatch");
-        }
         let max = (1u32 << bits) - 1;
         let ints: Vec<u32> = codes
             .data
             .iter()
             .map(|&c| (c.round() as i64).clamp(0, max as i64) as u32)
             .collect();
-        Ok(PackedMatrix {
-            rows,
-            cols,
-            bits,
-            scale: scale.to_vec(),
-            zp: zp.to_vec(),
-            packed: pack_bits(&ints, bits),
-        })
+        PackedMatrix::new(rows, cols, bits, scale.to_vec(), zp.to_vec(),
+                          pack_bits(&ints, bits))
     }
 
     /// Unpack to integer codes carried in f32 (the kernel_qmm input format).
     pub fn codes(&self) -> Tensor {
-        let ints = unpack_bits(&self.packed, self.bits, self.rows * self.cols);
+        let ints = self.unpack();
         Tensor::new(
             vec![self.rows, self.cols],
             ints.into_iter().map(|v| v as f32).collect(),
         )
     }
 
+    /// Raw integer codes, row-major.
+    pub fn unpack(&self) -> Vec<u32> {
+        unpack_bits(&self.packed, self.bits, self.rows * self.cols)
+            .expect("PackedMatrix invariant: lengths validated at construction")
+    }
+
     /// Dequantize to dense f32 (`(q - z)·s` per row).
     pub fn dequant(&self) -> Tensor {
-        let ints = unpack_bits(&self.packed, self.bits, self.rows * self.cols);
+        let ints = self.unpack();
         let mut data = Vec::with_capacity(ints.len());
         for r in 0..self.rows {
             let s = self.scale[r];
@@ -140,9 +180,47 @@ mod tests {
             let codes: Vec<u32> =
                 (0..n).map(|_| rng.below(1 << bits) as u32).collect();
             let packed = pack_bits(&codes, bits);
-            assert_eq!(unpack_bits(&packed, bits, n), codes);
+            assert_eq!(unpack_bits(&packed, bits, n).unwrap(), codes);
             assert_eq!(packed.len(), (n * bits as usize).div_ceil(8));
         }
+    }
+
+    #[test]
+    fn unpack_rejects_truncated_stream() {
+        let codes: Vec<u32> = (0..64).map(|i| i % 8).collect();
+        for bits in [3u32, 4, 8] {
+            let packed = pack_bits(&codes, bits);
+            // full stream decodes
+            assert!(unpack_bits(&packed, bits, 64).is_ok());
+            // one byte short: refused, not out-of-bounds
+            let short = &packed[..packed.len() - 1];
+            let err = unpack_bits(short, bits, 64).unwrap_err();
+            assert!(format!("{err}").contains("truncated"), "{err}");
+            // asking for more codes than the stream holds: refused
+            assert!(unpack_bits(&packed, bits, 100).is_err());
+        }
+        // bad bit-widths
+        assert!(unpack_bits(&[0u8; 4], 0, 1).is_err());
+        assert!(unpack_bits(&[0u8; 4], 17, 1).is_err());
+    }
+
+    #[test]
+    fn constructor_validates_lengths() {
+        let ok = PackedMatrix::new(2, 8, 4, vec![1.0; 2], vec![0.0; 2],
+                                   vec![0u8; 8]);
+        assert!(ok.is_ok());
+        // short packed stream
+        assert!(PackedMatrix::new(2, 8, 4, vec![1.0; 2], vec![0.0; 2],
+                                  vec![0u8; 7]).is_err());
+        // over-long packed stream
+        assert!(PackedMatrix::new(2, 8, 4, vec![1.0; 2], vec![0.0; 2],
+                                  vec![0u8; 9]).is_err());
+        // grid mismatch
+        assert!(PackedMatrix::new(2, 8, 4, vec![1.0; 3], vec![0.0; 2],
+                                  vec![0u8; 8]).is_err());
+        // unsupported bits
+        assert!(PackedMatrix::new(2, 8, 9, vec![1.0; 2], vec![0.0; 2],
+                                  vec![0u8; 18]).is_err());
     }
 
     #[test]

@@ -1,7 +1,8 @@
-//! Serving metrics: request latency distribution, execution time, batch
-//! occupancy, throughput — the measurements behind Fig. 5 / Table 15.
+//! Serving metrics: request latency distribution (p50/p95/p99), execution
+//! time, batch occupancy, throughput — the measurements behind Fig. 5 /
+//! Table 15 and the `serve` / `serve-native` CLI summaries.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
@@ -10,27 +11,41 @@ pub struct Metrics {
     latencies_us: Vec<u64>,
     exec_us: Vec<u64>,
     batch_sizes: Vec<usize>,
+    /// first/last record times — the observation window for the built-in
+    /// requests/sec counter
+    first_record: Option<Instant>,
+    last_record: Option<Instant>,
 }
 
 impl Metrics {
+    /// Record one request's response (called once per request).
     pub fn record(&mut self, latency: Duration, exec: Duration,
                   batch_size: usize) {
+        let now = Instant::now();
+        self.first_record.get_or_insert(now);
+        self.last_record = Some(now);
         self.requests += 1;
         self.latencies_us.push(latency.as_micros() as u64);
         self.exec_us.push(exec.as_micros() as u64);
         self.batch_sizes.push(batch_size);
-        if batch_size > 0 {
-            self.batches += 1;
-        }
     }
 
-    fn pct(mut v: Vec<u64>, p: f64) -> Duration {
+    /// Record one executed model batch (called once per engine execution).
+    pub fn record_batch(&mut self) {
+        self.batches += 1;
+    }
+
+    fn pct_sorted(v: &[u64], p: f64) -> Duration {
         if v.is_empty() {
             return Duration::ZERO;
         }
-        v.sort_unstable();
         let idx = ((v.len() as f64 - 1.0) * p) as usize;
         Duration::from_micros(v[idx])
+    }
+
+    fn pct(mut v: Vec<u64>, p: f64) -> Duration {
+        v.sort_unstable();
+        Self::pct_sorted(&v, p)
     }
 
     pub fn p50_latency(&self) -> Duration {
@@ -39,6 +54,10 @@ impl Metrics {
 
     pub fn p95_latency(&self) -> Duration {
         Self::pct(self.latencies_us.clone(), 0.95)
+    }
+
+    pub fn p99_latency(&self) -> Duration {
+        Self::pct(self.latencies_us.clone(), 0.99)
     }
 
     pub fn mean_latency(&self) -> Duration {
@@ -67,12 +86,51 @@ impl Metrics {
             / self.batch_sizes.len() as f64
     }
 
-    /// Requests per second over the recorded latency mass.
+    /// Requests per second over an externally measured wall window.
     pub fn throughput(&self, wall: Duration) -> f64 {
         if wall.is_zero() {
             return 0.0;
         }
         self.requests as f64 / wall.as_secs_f64()
+    }
+
+    /// Steady-state completion rate: requests per second over the window
+    /// between the first and last recorded response (0.0 until two requests
+    /// have landed). Caveat: the window excludes the first batch's queue +
+    /// exec time, so with few batches this overstates throughput — CLI
+    /// summaries use [`Metrics::throughput`] with an external wall clock.
+    pub fn requests_per_sec(&self) -> f64 {
+        match (self.first_record, self.last_record) {
+            (Some(a), Some(b)) if self.requests > 1 => {
+                let w = b.saturating_duration_since(a);
+                if w.is_zero() {
+                    0.0
+                } else {
+                    (self.requests - 1) as f64 / w.as_secs_f64()
+                }
+            }
+            _ => 0.0,
+        }
+    }
+
+    /// One-line CLI summary (shared by `serve` and `serve-native`), with
+    /// throughput over the caller-measured wall window. Sorts the latency
+    /// history once for all three percentiles.
+    pub fn summary(&self, wall: Duration) -> String {
+        let mut lat = self.latencies_us.clone();
+        lat.sort_unstable();
+        format!(
+            "{} requests in {} batches (mean batch {:.2}): latency p50 \
+             {:.2}ms p95 {:.2}ms p99 {:.2}ms, mean exec {:.2}ms, {:.1} req/s",
+            self.requests,
+            self.batches,
+            self.mean_batch(),
+            Self::pct_sorted(&lat, 0.50).as_secs_f64() * 1e3,
+            Self::pct_sorted(&lat, 0.95).as_secs_f64() * 1e3,
+            Self::pct_sorted(&lat, 0.99).as_secs_f64() * 1e3,
+            self.mean_exec().as_secs_f64() * 1e3,
+            self.throughput(wall),
+        )
     }
 }
 
@@ -84,11 +142,17 @@ mod tests {
     fn percentiles_ordered() {
         let mut m = Metrics::default();
         for i in 1..=100u64 {
+            // two requests per executed batch
+            if i % 2 == 1 {
+                m.record_batch();
+            }
             m.record(Duration::from_micros(i * 10),
                      Duration::from_micros(i), 2);
         }
         assert!(m.p50_latency() < m.p95_latency());
+        assert!(m.p95_latency() <= m.p99_latency());
         assert_eq!(m.requests, 100);
+        assert_eq!(m.batches, 50);
         assert!((m.mean_batch() - 2.0).abs() < 1e-9);
         assert!(m.throughput(Duration::from_secs(1)) > 0.0);
     }
@@ -97,7 +161,23 @@ mod tests {
     fn empty_safe() {
         let m = Metrics::default();
         assert_eq!(m.p50_latency(), Duration::ZERO);
+        assert_eq!(m.p99_latency(), Duration::ZERO);
         assert_eq!(m.mean_latency(), Duration::ZERO);
         assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.requests_per_sec(), 0.0);
+        assert!(!m.summary(Duration::ZERO).is_empty());
+    }
+
+    #[test]
+    fn requests_per_sec_counts_window() {
+        let mut m = Metrics::default();
+        m.record(Duration::from_micros(5), Duration::from_micros(1), 1);
+        // single request: no window yet
+        assert_eq!(m.requests_per_sec(), 0.0);
+        std::thread::sleep(Duration::from_millis(5));
+        m.record(Duration::from_micros(5), Duration::from_micros(1), 1);
+        let rps = m.requests_per_sec();
+        // one inter-arrival over a >=5ms sleep: positive, below 1000 req/s
+        assert!(rps > 0.0 && rps < 1000.0, "rps {rps}");
     }
 }

@@ -26,6 +26,13 @@ pub trait BatchScorer {
     /// batch capacity (rows per model execution)
     fn batch_size(&self) -> usize;
     fn seq_len(&self) -> usize;
+    /// Whether `score` accepts fewer than `batch_size()` rows. Fixed-shape
+    /// backends (PJRT artifacts) keep the default `false` and always receive
+    /// `batch_size()` padded rows; variable backends (the native engine)
+    /// return `true` and are handed only the occupied rows.
+    fn variable_batch(&self) -> bool {
+        false
+    }
     fn score(&mut self, ids: &[i32], targets: &[i32]) -> Result<Vec<f32>>;
 }
 
@@ -158,8 +165,14 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
 
 fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
              batch: Vec<ScoreRequest>, metrics: &Arc<Mutex<Metrics>>) {
-    let b = scorer.batch_size();
     let n = batch.len();
+    // fixed-shape scorers always get full capacity; variable ones only the
+    // occupied rows (no padded-row compute)
+    let b = if scorer.variable_batch() {
+        n.min(scorer.batch_size())
+    } else {
+        scorer.batch_size()
+    };
     let mut ids = vec![0i32; b * seq];
     let mut tgt = vec![0i32; b * seq];
     let mut lens = vec![0usize; n];
@@ -181,6 +194,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
     let exec_time = t0.elapsed();
     match scored {
         Ok(logp) => {
+            metrics.lock().unwrap().record_batch();
             for (i, r) in batch.into_iter().enumerate() {
                 if let Some(msg) = bad[i].take() {
                     let _ = r.resp.send(Err(msg));

@@ -559,7 +559,7 @@ pub fn fig5(args: &Args) -> Result<()> {
     let mut t = Table::new(
         "Fig. 5 / Table 15 — accuracy vs serving latency vs model size",
         &["Variant", "CSR %", "Size (MB)", "p50 lat (ms)", "p95 lat (ms)",
-          "req/s"],
+          "p99 lat (ms)", "req/s"],
     );
     let fp = lab.fp_summary()?;
     let fp_bytes = lab.weights.dim.param_count() * 4;
@@ -579,14 +579,18 @@ pub fn fig5(args: &Args) -> Result<()> {
                 (s.csr_acc, out.model.storage_bytes())
             }
         };
-        let (p50, p95, rps) = serving_bench(args, &cfg, bits, requests)?;
+        let (m, wall) = serving_bench(args, &cfg, bits, requests)?;
+        let rps = m.throughput(wall);
         t.row(vec![name.clone(), pct(acc),
                    format!("{:.2}", size_bytes as f64 / 1e6),
-                   format!("{:.2}", p50.as_secs_f64() * 1e3),
-                   format!("{:.2}", p95.as_secs_f64() * 1e3),
+                   format!("{:.2}", m.p50_latency().as_secs_f64() * 1e3),
+                   format!("{:.2}", m.p95_latency().as_secs_f64() * 1e3),
+                   format!("{:.2}", m.p99_latency().as_secs_f64() * 1e3),
                    format!("{rps:.1}")]);
-        println!("[fig5] {name}: CSR {:.2} size {:.2}MB p50 {:?} rps {rps:.1}",
-                 acc * 100.0, size_bytes as f64 / 1e6, p50);
+        println!("[fig5] {name}: CSR {:.2} size {:.2}MB p50 {:?} p99 {:?} \
+                  rps {rps:.1}",
+                 acc * 100.0, size_bytes as f64 / 1e6, m.p50_latency(),
+                 m.p99_latency());
     }
     t.note("CPU-PJRT testbed: latency parity is expected (XLA executes f32 \
             either way); the paper's 2.3–2.8× speedups come from LUT-GEMM on \
@@ -595,9 +599,10 @@ pub fn fig5(args: &Args) -> Result<()> {
     t.emit(&lab.reports, "fig5")
 }
 
-/// Run a serving benchmark; returns (p50, p95, requests/s).
+/// Run a serving benchmark; returns (metrics, wall time).
 fn serving_bench(args: &Args, cfg: &str, w_bits: Option<u32>,
-                 requests: usize) -> Result<(Duration, Duration, f64)> {
+                 requests: usize)
+                 -> Result<(crate::serve::Metrics, Duration)> {
     let artifacts = args.get_or("artifacts", "artifacts");
     let wpath = args.get_or("weights", &format!("weights_{cfg}.bin"));
     let _seed: u64 = args.parse_as("seed", 1234)?;
@@ -658,7 +663,7 @@ fn serving_bench(args: &Args, cfg: &str, w_bits: Option<u32>,
     }
     let wall = t0.elapsed();
     let m = server.metrics.lock().unwrap().clone();
-    Ok((m.p50_latency(), m.p95_latency(), m.throughput(wall)))
+    Ok((m, wall))
 }
 
 /// `lrq serve` entry: run the serving loop once and print metrics.
@@ -670,9 +675,8 @@ pub fn serving_run(artifacts: &str, cfg: &str, weights: &str,
     args.options.insert("weights".into(), weights.into());
     args.options.insert("seed".into(), seed.to_string());
     let bits = method.map(|_| w_bits);
-    let (p50, p95, rps) = serving_bench(&args, cfg, bits, requests)?;
-    println!("served {requests} requests: p50 {:.2}ms p95 {:.2}ms {:.1} req/s",
-             p50.as_secs_f64() * 1e3, p95.as_secs_f64() * 1e3, rps);
+    let (m, wall) = serving_bench(&args, cfg, bits, requests)?;
+    println!("{} (wall {:.2}s)", m.summary(wall), wall.as_secs_f64());
     Ok(())
 }
 

@@ -1,6 +1,8 @@
 //! Property-based tests over the public API (in-repo harness — proptest is
 //! unavailable offline; failures reproduce from the printed seed).
 
+use lrq::infer::kernels::quantize_acts_per_token;
+use lrq::infer::QuantLinear;
 use lrq::methods::fold::{fold_block, smooth_scales, weight_col_amax};
 use lrq::model::BlockWeights;
 use lrq::quant::{self, grid_search_scales, per_token_quant, rtn_grid,
@@ -18,12 +20,32 @@ fn prop_pack_unpack_bijective() {
         let codes: Vec<u32> =
             (0..n).map(|_| rng.below(1 << bits) as u32).collect();
         let packed = pack_bits(&codes, bits);
-        if unpack_bits(&packed, bits, n) != codes {
-            return Err(format!("roundtrip failed bits={bits} n={n}"));
+        match unpack_bits(&packed, bits, n) {
+            Ok(back) if back == codes => {}
+            Ok(_) => return Err(format!("roundtrip failed bits={bits} n={n}")),
+            Err(e) => return Err(format!("unpack failed: {e}")),
         }
         let expect = (n * bits as usize).div_ceil(8);
         if packed.len() != expect {
             return Err(format!("size {} != {expect}", packed.len()));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_unpack_refuses_truncation() {
+    check("unpack refuses truncation", 50, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let n = rng.range(2, 400);
+        let codes: Vec<u32> =
+            (0..n).map(|_| rng.below(1 << bits) as u32).collect();
+        let packed = pack_bits(&codes, bits);
+        let cut = rng.below(packed.len());
+        if unpack_bits(&packed[..cut], bits, n).is_ok() {
+            return Err(format!(
+                "accepted {cut}/{} bytes for {n} codes at {bits} bits",
+                packed.len()));
         }
         Ok(())
     });
@@ -178,6 +200,44 @@ fn prop_packed_matrix_storage_ratio() {
         let ratio = pm.fp_bytes() as f64 / pm.storage_bytes() as f64;
         if ratio > 32.0 / bits as f64 + 1e-9 {
             return Err(format!("impossible ratio {ratio}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_native_linear_matches_fakequant_reference() {
+    // The native integer GEMM must equal the fake-quant reference
+    // (dequantized acts × dequantized weights) up to f32 accumulation, for
+    // random shapes and every packed bit-width.
+    check("native linear vs fake-quant reference", 25, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let rows = rng.range(1, 9);
+        let cout = rng.range(1, 33);
+        let cin = rng.range(4, 64);
+        let w = Tensor::randn(rng, &[cout, cin], 0.1);
+        let g = rtn_grid(&w, quant::qmax(bits));
+        let codes = quant::quantize_int_codes(&w, &g, None);
+        let pm = PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits)
+            .map_err(|e| e.to_string())?;
+        let ql = QuantLinear::from_packed(&pm).map_err(|e| e.to_string())?;
+        let x = Tensor::randn(rng, &[rows, cin], 1.0);
+        let qa = quantize_acts_per_token(&x.data, rows, cin, 255.0);
+        let got = ql.forward_q(&qa, 1).map_err(|e| e.to_string())?;
+        // fake-quant acts = dequantized act codes
+        let mut xq = vec![0.0f32; rows * cin];
+        for t in 0..rows {
+            for c in 0..cin {
+                xq[t * cin + c] = (qa.codes[t * cin + c] as f32
+                    - qa.zp[t] as f32) * qa.scale[t];
+            }
+        }
+        let want = Tensor::new(vec![rows, cin], xq).matmul_bt(&pm.dequant());
+        let denom = (want.frob() / (want.len() as f64).sqrt()).max(1e-9);
+        let rel = got.rmse(&want) / denom;
+        if rel > 1e-4 {
+            return Err(format!(
+                "bits {bits} {rows}x{cin}->{cout}: rel rmse {rel}"));
         }
         Ok(())
     });

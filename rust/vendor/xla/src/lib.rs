@@ -1,0 +1,233 @@
+//! Compile-time stub of the `xla` PJRT bindings (xla_extension 0.5.1 API
+//! surface used by `lrq::runtime`).
+//!
+//! `Literal` construction, reshape, and host-side conversion work fully
+//! in-memory so `lrq`'s literal plumbing stays unit-testable. Everything that
+//! would touch PJRT itself — client creation, HLO parsing, compilation,
+//! execution — returns [`Error::Unavailable`] with a pointer at
+//! `rust/vendor/README.md`. The `lrq::infer` native engine never reaches any
+//! of this.
+
+use std::borrow::Borrow;
+use std::fmt;
+
+/// Stub error type (the real crate's `XlaError` analogue).
+#[derive(Debug)]
+pub struct Error(pub String);
+
+impl Error {
+    fn unavailable(what: &str) -> Error {
+        Error(format!(
+            "{what}: PJRT is unavailable in this build (vendored xla stub; \
+             see rust/vendor/README.md to link the real bindings)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types the coordinator exchanges with artifacts.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    F32,
+    S32,
+}
+
+/// Host value types storable in a [`Literal`].
+pub trait NativeType: Copy + Sized {
+    const TY: ElementType;
+    fn wrap(data: Vec<Self>) -> LiteralData;
+    fn unwrap(lit: &Literal) -> Option<&[Self]>;
+}
+
+#[derive(Clone, Debug)]
+pub enum LiteralData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl NativeType for f32 {
+    const TY: ElementType = ElementType::F32;
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::F32(data)
+    }
+    fn unwrap(lit: &Literal) -> Option<&[Self]> {
+        match &lit.data {
+            LiteralData::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    const TY: ElementType = ElementType::S32;
+    fn wrap(data: Vec<Self>) -> LiteralData {
+        LiteralData::I32(data)
+    }
+    fn unwrap(lit: &Literal) -> Option<&[Self]> {
+        match &lit.data {
+            LiteralData::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+}
+
+/// Host-side literal: typed buffer + dims (rank 0 = scalar).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: LiteralData,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        Literal { data: T::wrap(vec![v]), dims: Vec::new() }
+    }
+
+    pub fn vec1<T: NativeType>(vals: &[T]) -> Literal {
+        Literal { data: T::wrap(vals.to_vec()), dims: vec![vals.len() as i64] }
+    }
+
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.element_count() {
+            return Err(Error(format!(
+                "reshape {:?} -> {dims:?}: element count mismatch", self.dims
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            LiteralData::F32(v) => v.len(),
+            LiteralData::I32(v) => v.len(),
+        }
+    }
+
+    pub fn ty(&self) -> Result<ElementType> {
+        Ok(match &self.data {
+            LiteralData::F32(_) => ElementType::F32,
+            LiteralData::I32(_) => ElementType::S32,
+        })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::unwrap(self)
+            .map(|s| s.to_vec())
+            .ok_or_else(|| Error(format!(
+                "literal dtype mismatch: holds {:?}, asked for {:?}",
+                self.ty().unwrap(), T::TY
+            )))
+    }
+
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        T::unwrap(self)
+            .and_then(|s| s.first().copied())
+            .ok_or_else(|| Error("empty or dtype-mismatched literal".into()))
+    }
+
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable("Literal::decompose_tuple"))
+    }
+}
+
+/// Parsed HLO module (stub: cannot be produced).
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!(
+            "HloModuleProto::from_text_file({path})"
+        )))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+/// PJRT client (stub: construction always fails).
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation)
+        -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: Borrow<Literal>>(&self, _inputs: &[L])
+        -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.element_count(), 4);
+        assert_eq!(r.ty().unwrap(), ElementType::F32);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 2]).is_err());
+        assert_eq!(Literal::scalar(7i32).get_first_element::<i32>().unwrap(),
+                   7);
+    }
+
+    #[test]
+    fn pjrt_paths_unavailable() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
