@@ -1,6 +1,7 @@
 //! Native-engine benches: integer GEMM vs the f32 substrate, activation
-//! quantization, and end-to-end tokens/sec of the packed-checkpoint forward
-//! at each bit-width and shard count (the serving-side numbers behind the
+//! quantization, end-to-end tokens/sec of the packed-checkpoint forward at
+//! each bit-width and shard count, and incremental-decode tokens/sec with
+//! the quantized KV cache on vs off (the serving-side numbers behind the
 //! Appendix G / Fig. 5 story, without PJRT). Run: `cargo bench --bench
 //! native`.
 
@@ -10,12 +11,13 @@ use lrq::bench::Bench;
 use lrq::config::Scheme;
 use lrq::data::{Corpus, CorpusConfig};
 use lrq::infer::kernels::quantize_acts_per_token;
+use lrq::infer::ops::head_logits;
 use lrq::infer::{prepare_native, quantize_weights, start_native_server,
                  QuantLinear, ScaleInit};
 use lrq::model::{ModelDim, Weights};
 use lrq::quant::{self, grid::rtn_grid, lrq::quantize_int_codes,
                  PackedMatrix};
-use lrq::rng::Rng;
+use lrq::rng::{sample_top_k, Rng};
 use lrq::serve::ServerConfig;
 use lrq::tensor::Tensor;
 
@@ -83,6 +85,45 @@ fn main() -> anyhow::Result<()> {
         b.run_units(&format!("NativeModel forward tiny W4A8 shards={shards}"),
                     Some(tokens), &mut || {
             std::hint::black_box(model.forward(&ids, &tgt).unwrap());
+        });
+    }
+
+    // ---- decode level: tokens/sec, quantized KV cache on vs off ----------
+    // "cache on" prefills the prompt then decodes token-by-token against
+    // cached u8 K/V codes; "cache off" is the pre-decode serving story —
+    // every new token re-runs the full-context forward over the padded
+    // sequence and reads the logits at its position.
+    println!("\ndecode tokens/sec: kv-cache incremental vs full-context \
+              re-forward (tiny):");
+    let prompt: Vec<i32> = {
+        let mut r = Rng::new(11);
+        (0..8).map(|_| r.below(dim.vocab) as i32).collect()
+    };
+    let gen_n = 24usize;
+    for bits in [3u32, 4, 8] {
+        let scheme = Scheme { w_bits: bits, ..Scheme::w4a8_token() };
+        let model = prepare_native(&weights, scheme, ScaleInit::Rtn, &corpus,
+                                   1, 7, 1)?;
+        b.run_units(&format!("decode W{bits}A8 kv-cache ON"),
+                    Some(gen_n as f64), &mut || {
+            std::hint::black_box(
+                model.generate(&prompt, gen_n, 1, 9).unwrap());
+        });
+        b.run_units(&format!("decode W{bits}A8 kv-cache OFF"),
+                    Some(gen_n as f64), &mut || {
+            let mut r = Rng::new(9);
+            let mut ids = prompt.clone();
+            for _ in 0..gen_n {
+                let mut padded = ids.clone();
+                padded.resize(dim.seq, 0);
+                let hidden = model.forward_hidden(&padded).unwrap();
+                let logits =
+                    head_logits(&hidden, &model.final_norm, &model.head);
+                let next =
+                    sample_top_k(logits.row(ids.len() - 1), 1, &mut r);
+                ids.push(next as i32);
+            }
+            std::hint::black_box(ids);
         });
     }
 

@@ -18,13 +18,15 @@ use crate::config::{ActScheme, Scheme};
 use crate::coordinator::engine::BlockStats;
 use crate::model::{ModelDim, QuantizedBlock, QuantizedModel};
 use crate::quant::{act::per_token_quant, qmax};
+use crate::rng::{sample_top_k, Rng};
 use crate::tensor::Tensor;
 
+use super::decode::KvCache;
 use super::kernels::{quantize_acts_per_token, quantize_acts_static,
                      QuantActs};
 use super::linear::QuantLinear;
-use super::ops::{causal_attention, embed, head_logprobs, rmsnorm, rope,
-                 silu};
+use super::ops::{causal_attention, embed, head_logits, head_logprobs,
+                 rmsnorm, rope, rope_row, silu};
 
 /// One block's packed linears + FP norms, ready for native execution.
 #[derive(Clone, Debug)]
@@ -70,6 +72,26 @@ impl QuantBlock {
     pub fn storage_bytes(&self) -> usize {
         self.ws.iter().map(|w| w.storage_bytes()).sum::<usize>()
             + (self.norm_attn.len() + self.norm_ffn.len()) * 4
+    }
+
+    /// Shared tail of every forward flavor: o-projection + residual +
+    /// gated FFN (quant points o_in, ffn_in, down_in — all position-
+    /// independent). One copy keeps the full-context, decode-step, and
+    /// prefill paths bit-identical by construction.
+    fn attn_ffn_tail(&self, x: &Tensor, attn: &Tensor, stats: &BlockStats,
+                     scheme: &Scheme, shards: usize) -> Result<Tensor> {
+        let oin = self.act_input(attn, 1, stats, scheme); // o_in
+        let o = oin.matmul(&self.ws[3], shards)?;
+        let hidd = x.add(&o);
+
+        let xf = rmsnorm(&hidd, &self.norm_ffn);
+        let fin = self.act_input(&xf, 2, stats, scheme); // ffn_in
+        let g = fin.matmul(&self.ws[4], shards)?;
+        let u = fin.matmul(&self.ws[5], shards)?;
+        let gate = g.zip(&u, |gv, uv| silu(gv) * uv);
+        let din = self.act_input(&gate, 3, stats, scheme); // down_in
+        let down = din.matmul(&self.ws[6], shards)?;
+        Ok(hidd.add(&down))
     }
 
     /// Quantize (or pass through) the activations at one quant point.
@@ -119,19 +141,99 @@ impl QuantBlock {
             vec![t, d],
             causal_attention(&q.data, &k.data, &v.data, b, s, h, hd),
         );
-        let oin = self.act_input(&attn, 1, stats, scheme); // o_in
-        let o = oin.matmul(&self.ws[3], shards)?;
-        let hidd = x.add(&o);
+        self.attn_ffn_tail(x, &attn, stats, scheme, shards)
+    }
 
-        // ---- gated FFN ----
-        let xf = rmsnorm(&hidd, &self.norm_ffn);
-        let fin = self.act_input(&xf, 2, stats, scheme); // ffn_in
-        let g = fin.matmul(&self.ws[4], shards)?;
-        let u = fin.matmul(&self.ws[5], shards)?;
-        let gate = g.zip(&u, |gv, uv| silu(gv) * uv);
-        let din = self.act_input(&gate, 3, stats, scheme); // down_in
-        let down = din.matmul(&self.ws[6], shards)?;
-        Ok(hidd.add(&down))
+    /// One *decode* step: `x [n, d]` holds one new token per sequence (each
+    /// sequence owning `caches[i]`), at layer index `layer` of the model.
+    /// Appends the post-RoPE quantized K/V row of every sequence to its
+    /// cache, attends the new token against the cached prefix, and returns
+    /// the block output `[n, d]`.
+    ///
+    /// Every per-row op (RMSNorm, act quant, integer GEMM, RoPE, KV grid) is
+    /// the same arithmetic as [`QuantBlock::forward`] applies to that row in
+    /// a full-context pass, so incremental decode reproduces the full
+    /// forward token-for-token (see `tests/native.rs`).
+    pub fn forward_step(&self, x: &Tensor, dim: &ModelDim, stats: &BlockStats,
+                        scheme: &Scheme, shards: usize, layer: usize,
+                        caches: &mut [KvCache]) -> Result<Tensor> {
+        let (n, d) = x.as_2d();
+        if d != dim.d || n != caches.len() {
+            bail!("forward_step: input [{n}, {d}] vs d={} / {} caches",
+                  dim.d, caches.len());
+        }
+        let (h, hd) = (dim.heads, dim.head_dim());
+
+        // ---- attention (incremental) ----
+        let xa = rmsnorm(x, &self.norm_attn);
+        let ain = self.act_input(&xa, 0, stats, scheme); // attn_in
+        let mut q = ain.matmul(&self.ws[0], shards)?;
+        let mut k = ain.matmul(&self.ws[1], shards)?;
+        let v = ain.matmul(&self.ws[2], shards)?;
+        // per-row RoPE at each sequence's next position
+        for (i, cache) in caches.iter().enumerate() {
+            let pos = cache.layer_len(layer);
+            rope_row(&mut q.data[i * d..(i + 1) * d], pos, h, hd);
+            rope_row(&mut k.data[i * d..(i + 1) * d], pos, h, hd);
+        }
+        // append quantized K/V (post-RoPE, the cache applies the per-token
+        // grid), then attend the new token against its full cached prefix
+        let mut attn = vec![0.0f32; n * d];
+        let mut scratch = Vec::new();
+        for (i, cache) in caches.iter_mut().enumerate() {
+            cache.push(layer, &k.data[i * d..(i + 1) * d],
+                       &v.data[i * d..(i + 1) * d]);
+            cache.attend(layer, &q.data[i * d..(i + 1) * d], h, hd,
+                         &mut attn[i * d..(i + 1) * d], &mut scratch);
+        }
+        let attn = Tensor::new(vec![n, d], attn);
+        self.attn_ffn_tail(x, &attn, stats, scheme, shards)
+    }
+
+    /// Vectorized prefill of one sequence: `x [p, d]` holds the prompt rows
+    /// at positions `0..p`; `cache` must be empty at `layer`. Pushes every
+    /// post-RoPE K/V row to the cache and attends over the in-batch causal
+    /// prefix — one multi-row pass, so each packed weight tile is unpacked
+    /// once per tile instead of once per prompt token
+    /// ([`QuantBlock::forward_step`] would pay that `p` times).
+    pub fn forward_prefill(&self, x: &Tensor, dim: &ModelDim,
+                           stats: &BlockStats, scheme: &Scheme,
+                           shards: usize, layer: usize, cache: &mut KvCache)
+                           -> Result<Tensor> {
+        let (p, d) = x.as_2d();
+        if d != dim.d {
+            bail!("forward_prefill: input [{p}, {d}] vs d={}", dim.d);
+        }
+        if cache.layer_len(layer) != 0 {
+            bail!("forward_prefill: cache layer {layer} already holds {} \
+                   tokens", cache.layer_len(layer));
+        }
+        let (h, hd) = (dim.heads, dim.head_dim());
+
+        // ---- attention (positions 0..p, cache == in-batch prefix) ----
+        let xa = rmsnorm(x, &self.norm_attn);
+        let ain = self.act_input(&xa, 0, stats, scheme); // attn_in
+        let mut q = ain.matmul(&self.ws[0], shards)?;
+        let mut k = ain.matmul(&self.ws[1], shards)?;
+        let v = ain.matmul(&self.ws[2], shards)?;
+        rope(&mut q.data, 1, p, h, hd);
+        rope(&mut k.data, 1, p, h, hd);
+        // the cache applies the same per-token grid the fake-quant below
+        // uses, so cached rows dequantize to exactly what we attend over
+        for t in 0..p {
+            cache.push(layer, k.row(t), v.row(t));
+        }
+        let (k, v) = if scheme.kv_quant {
+            let qkv = qmax(scheme.kv_bits);
+            (per_token_quant(&k, qkv), per_token_quant(&v, qkv))
+        } else {
+            (k, v)
+        };
+        let attn = Tensor::new(
+            vec![p, d],
+            causal_attention(&q.data, &k.data, &v.data, 1, p, h, hd),
+        );
+        self.attn_ffn_tail(x, &attn, stats, scheme, shards)
     }
 }
 
@@ -185,26 +287,136 @@ impl NativeModel {
         })
     }
 
-    /// Full forward over padded rows: `ids`/`targets` are `[b * seq]` with
-    /// any `b >= 1`. Returns `(mean NLL, per-position target logprob [b*seq])`.
-    pub fn forward(&self, ids: &[i32], targets: &[i32])
-                   -> Result<(f32, Tensor)> {
+    /// Full-context forward to final hidden states: `ids` is `[b * seq]`
+    /// with any `b >= 1`; returns `[b*seq, d]` (pre final-norm/head).
+    pub fn forward_hidden(&self, ids: &[i32]) -> Result<Tensor> {
         let seq = self.dim.seq;
         if ids.is_empty() || ids.len() % seq != 0 {
             bail!("forward: ids len {} not a multiple of seq {seq}",
                   ids.len());
         }
-        if targets.len() != ids.len() {
-            bail!("forward: {} targets for {} ids", targets.len(), ids.len());
-        }
-        let b = ids.len() / seq;
         let mut x = embed(&self.emb, ids)?;
         for (blk, st) in self.blocks.iter().zip(&self.stats) {
             x = blk.forward(&x, &self.dim, st, &self.scheme, self.shards)?;
         }
+        Ok(x)
+    }
+
+    /// Full forward over padded rows: `ids`/`targets` are `[b * seq]` with
+    /// any `b >= 1`. Returns `(mean NLL, per-position target logprob [b*seq])`.
+    pub fn forward(&self, ids: &[i32], targets: &[i32])
+                   -> Result<(f32, Tensor)> {
+        if targets.len() != ids.len() {
+            bail!("forward: {} targets for {} ids", targets.len(), ids.len());
+        }
+        let x = self.forward_hidden(ids)?;
+        let b = ids.len() / self.dim.seq;
         let (loss, logp) =
             head_logprobs(&x, &self.final_norm, &self.head, targets)?;
-        Ok((loss, Tensor::new(vec![b, seq], logp)))
+        Ok((loss, Tensor::new(vec![b, self.dim.seq], logp)))
+    }
+
+    /// Fresh per-sequence KV cache matching this model's layer count, width,
+    /// and KV-quant scheme.
+    pub fn new_cache(&self) -> KvCache {
+        KvCache::new(self.blocks.len(), self.dim.d, self.scheme.kv_quant,
+                     self.scheme.kv_bits)
+    }
+
+    /// One incremental decode step: `ids[i]` is the next token of the
+    /// sequence owning `caches[i]` (sequences may be at different lengths).
+    /// Appends each token's quantized K/V to its cache and returns the
+    /// next-token logits `[n, vocab]`.
+    pub fn decode_step(&self, ids: &[i32], caches: &mut [KvCache])
+                       -> Result<Tensor> {
+        if ids.is_empty() || ids.len() != caches.len() {
+            bail!("decode_step: {} ids vs {} caches", ids.len(),
+                  caches.len());
+        }
+        for (i, c) in caches.iter().enumerate() {
+            if c.layer_count() != self.blocks.len() || c.dim() != self.dim.d {
+                bail!("decode_step: cache {i} is [{} layers, d {}], model \
+                       is [{} layers, d {}]",
+                      c.layer_count(), c.dim(), self.blocks.len(),
+                      self.dim.d);
+            }
+            // same limit the serving path enforces: positions beyond the
+            // trained context would silently produce garbage
+            if c.len() >= self.dim.seq {
+                bail!("decode_step: cache {i} is at the {}-token context \
+                       limit", self.dim.seq);
+            }
+        }
+        let mut x = embed(&self.emb, ids)?;
+        for (l, (blk, st)) in
+            self.blocks.iter().zip(&self.stats).enumerate()
+        {
+            x = blk.forward_step(&x, &self.dim, st, &self.scheme,
+                                 self.shards, l, caches)?;
+        }
+        Ok(head_logits(&x, &self.final_norm, &self.head))
+    }
+
+    /// Fill a fresh `cache` with a prompt in one vectorized multi-row pass
+    /// (each packed weight tile unpacked once, not once per token); returns
+    /// the next-token logits after the last prompt token (`[vocab]`).
+    pub fn prefill(&self, ids: &[i32], cache: &mut KvCache)
+                   -> Result<Vec<f32>> {
+        if ids.is_empty() {
+            bail!("prefill: empty prompt");
+        }
+        if ids.len() > self.dim.seq {
+            bail!("prefill: prompt {} exceeds the {}-token context",
+                  ids.len(), self.dim.seq);
+        }
+        if cache.layer_count() != self.blocks.len()
+            || cache.dim() != self.dim.d {
+            bail!("prefill: cache is [{} layers, d {}], model is \
+                   [{} layers, d {}]", cache.layer_count(), cache.dim(),
+                  self.blocks.len(), self.dim.d);
+        }
+        if !cache.is_empty() {
+            bail!("prefill: cache already holds {} tokens (needs a fresh \
+                   cache)", cache.len());
+        }
+        let mut x = embed(&self.emb, ids)?;
+        for (l, (blk, st)) in
+            self.blocks.iter().zip(&self.stats).enumerate()
+        {
+            x = blk.forward_prefill(&x, &self.dim, st, &self.scheme,
+                                    self.shards, l, cache)?;
+        }
+        // only the last prompt position feeds the next-token distribution
+        let last =
+            Tensor::new(vec![1, self.dim.d], x.row(ids.len() - 1).to_vec());
+        Ok(head_logits(&last, &self.final_norm, &self.head).data)
+    }
+
+    /// Generate `max_new` tokens after `prompt` with a fresh KV cache —
+    /// greedy when `top_k <= 1`, top-k sampling otherwise. The single-
+    /// sequence twin of the batched serve path (`lrq generate-native`), and
+    /// the direct oracle its tests compare against. Enforces the same
+    /// context budget as the serving path.
+    pub fn generate(&self, prompt: &[i32], max_new: usize, top_k: usize,
+                    seed: u64) -> Result<Vec<i32>> {
+        if prompt.len() + max_new > self.dim.seq {
+            bail!("generate: prompt {} + max_new {max_new} exceeds the \
+                   {}-token context", prompt.len(), self.dim.seq);
+        }
+        let mut cache = self.new_cache();
+        let mut logits = self.prefill(prompt, &mut cache)?;
+        let mut rng = Rng::new(seed);
+        let mut out = Vec::with_capacity(max_new);
+        for step in 0..max_new {
+            let t = sample_top_k(&logits, top_k, &mut rng) as i32;
+            out.push(t);
+            if step + 1 < max_new {
+                logits = self
+                    .decode_step(&[t], std::slice::from_mut(&mut cache))?
+                    .data;
+            }
+        }
+        Ok(out)
     }
 
     /// Packed storage bytes (the Fig. 5 size axis, native layout).

@@ -1,0 +1,301 @@
+//! Incremental decode: the per-sequence quantized KV cache.
+//!
+//! The serving payoff of a finalized `(s1, z, codes)` checkpoint (paper
+//! Fig. 5, App. G/H) is that token-by-token generation only touches the new
+//! token — everything already seen lives in a **quantized KV cache**. Each
+//! appended K/V row is quantized post-RoPE with exactly the grid math of
+//! [`crate::quant::act::per_token_quant`] (same `(hi-lo)/qmax` scale floor,
+//! same rounded zero-point), so a cached row dequantizes bit-for-bit to the
+//! value the full-context forward would have used, and
+//! [`crate::infer::NativeModel::decode_step`] reproduces the full forward
+//! token-for-token (proved in `tests/native.rs`).
+//!
+//! Storage per token per layer: `2·d` u8 codes + two `(scale, zp)` pairs —
+//! the App. H memory story. Attention dequantizes head-slices on the fly
+//! ("dequant-in-tile"): codes stay packed in the cache, only one `[head_dim]`
+//! scratch row is materialized at a time. Sampling lives in
+//! [`crate::rng::sample_top_k`], shared with the engine-agnostic batcher.
+
+/// How K/V rows are stored for one sequence.
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum KvMode {
+    /// FP rows (scheme has `kv_quant: false`).
+    Fp,
+    /// u8 codes + per-token asymmetric grid (`kv_bits <= 8`).
+    Codes(f32),
+    /// Fake-quantized FP rows (`kv_bits > 8` cannot fit u8 codes; semantics
+    /// stay identical to the reference path).
+    FakeFp(f32),
+}
+
+/// One cached K or V stream: `[len, d]` rows in appended order.
+#[derive(Clone, Debug, Default)]
+struct KvTrack {
+    /// `[len * d]` u8 codes (`Codes` mode)
+    codes: Vec<u8>,
+    /// per-token scale (`Codes` mode)
+    scale: Vec<f32>,
+    /// per-token zero-point, integral by construction (`Codes` mode)
+    zp: Vec<f32>,
+    /// `[len * d]` FP rows (`Fp` / `FakeFp` modes)
+    fp: Vec<f32>,
+}
+
+impl KvTrack {
+    fn push(&mut self, row: &[f32], mode: KvMode) {
+        match mode {
+            KvMode::Fp => self.fp.extend_from_slice(row),
+            KvMode::Codes(qmax) => {
+                let (scale, zp) = crate::quant::act::row_grid(row, qmax);
+                self.scale.push(scale);
+                self.zp.push(zp);
+                for &v in row {
+                    let q = crate::quant::act::quantize_code(v, scale, zp,
+                                                             qmax);
+                    self.codes.push(q as u8);
+                }
+            }
+            KvMode::FakeFp(qmax) => {
+                let (scale, zp) = crate::quant::act::row_grid(row, qmax);
+                for &v in row {
+                    let q = crate::quant::act::quantize_code(v, scale, zp,
+                                                             qmax);
+                    self.fp.push((q - zp) * scale);
+                }
+            }
+        }
+    }
+
+    /// Dequantize `out.len()` features of token `t` starting at feature
+    /// `off` (one head slice at a time — the cache itself stays packed).
+    fn read(&self, t: usize, off: usize, d: usize, mode: KvMode,
+            out: &mut [f32]) {
+        match mode {
+            KvMode::Fp | KvMode::FakeFp(_) => {
+                out.copy_from_slice(&self.fp[t * d + off..t * d + off
+                                             + out.len()]);
+            }
+            KvMode::Codes(_) => {
+                let (s, z) = (self.scale[t], self.zp[t]);
+                let src = &self.codes[t * d + off..t * d + off + out.len()];
+                for (o, &c) in out.iter_mut().zip(src) {
+                    *o = (c as f32 - z) * s;
+                }
+            }
+        }
+    }
+
+    fn storage_bytes(&self) -> usize {
+        self.codes.len() + (self.scale.len() + self.zp.len()) * 4
+            + self.fp.len() * 4
+    }
+}
+
+#[derive(Clone, Debug)]
+struct LayerKv {
+    len: usize,
+    k: KvTrack,
+    v: KvTrack,
+}
+
+/// Per-sequence KV cache: one `(K, V)` stream per layer, quantized per token
+/// post-RoPE. Layers advance independently within one decode step (layer `l`
+/// appends before layer `l+1` runs), so a token is "cached" once the last
+/// layer has pushed it.
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    d: usize,
+    mode: KvMode,
+    layers: Vec<LayerKv>,
+}
+
+impl KvCache {
+    /// `kv_quant: false` stores FP rows; otherwise u8 codes when
+    /// `kv_bits <= 8`, fake-quantized FP rows above that (identical
+    /// semantics, no packed win).
+    pub fn new(layers: usize, d: usize, kv_quant: bool, kv_bits: u32)
+               -> KvCache {
+        let mode = if !kv_quant {
+            KvMode::Fp
+        } else if kv_bits <= 8 {
+            KvMode::Codes(crate::quant::qmax(kv_bits))
+        } else {
+            KvMode::FakeFp(crate::quant::qmax(kv_bits))
+        };
+        KvCache {
+            d,
+            mode,
+            layers: (0..layers)
+                .map(|_| LayerKv { len: 0, k: KvTrack::default(),
+                                   v: KvTrack::default() })
+                .collect(),
+        }
+    }
+
+    /// Feature dim of cached rows (`h * hd`).
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    pub fn layer_count(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Tokens fully appended (i.e. pushed through the *last* layer).
+    pub fn len(&self) -> usize {
+        self.layers.last().map(|l| l.len).unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Tokens appended at one layer — the next token's position there.
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.layers[layer].len
+    }
+
+    /// Whether rows are stored as u8 codes (vs FP).
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.mode, KvMode::Codes(_))
+    }
+
+    /// Cache footprint in bytes (the App. H axis: u8 codes + grids vs 4-byte
+    /// FP rows).
+    pub fn storage_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.k.storage_bytes() + l.v.storage_bytes())
+            .sum()
+    }
+
+    /// Append one post-RoPE `(k, v)` row pair (`[d]` each) at `layer`.
+    pub fn push(&mut self, layer: usize, krow: &[f32], vrow: &[f32]) {
+        debug_assert_eq!(krow.len(), self.d);
+        debug_assert_eq!(vrow.len(), self.d);
+        let lk = &mut self.layers[layer];
+        lk.k.push(krow, self.mode);
+        lk.v.push(vrow, self.mode);
+        lk.len += 1;
+    }
+
+    /// Softmax attention of one query row `q [d]` against every cached token
+    /// of `layer`, writing `out [d]` (heads re-interleaved). Mirrors
+    /// [`crate::infer::ops::causal_attention`]'s accumulation order exactly,
+    /// so a decode step is bit-identical to the full-context row.
+    ///
+    /// `scratch` is caller-owned scoring/dequant workspace (resized here),
+    /// so the per-layer-per-sequence hot path does no heap allocation.
+    pub fn attend(&self, layer: usize, q: &[f32], h: usize, hd: usize,
+                  out: &mut [f32], scratch: &mut Vec<f32>) {
+        debug_assert_eq!(h * hd, self.d);
+        debug_assert_eq!(q.len(), self.d);
+        debug_assert_eq!(out.len(), self.d);
+        let lk = &self.layers[layer];
+        let len = lk.len;
+        debug_assert!(len > 0, "attend on empty cache layer {layer}");
+        let scale = 1.0 / (hd as f32).sqrt();
+        // scratch = [len score slots | hd-wide dequant row]
+        scratch.clear();
+        scratch.resize(len + hd, 0.0);
+        let (scores, row) = scratch.split_at_mut(len);
+        out.fill(0.0);
+        for hi in 0..h {
+            let qrow = &q[hi * hd..(hi + 1) * hd];
+            // scores over the cached prefix (the causal set by construction)
+            let mut mx = f32::NEG_INFINITY;
+            for tj in 0..len {
+                lk.k.read(tj, hi * hd, self.d, self.mode, row);
+                let mut acc = 0.0f32;
+                for (a, b) in qrow.iter().zip(row.iter()) {
+                    acc += a * b;
+                }
+                let sc = acc * scale;
+                scores[tj] = sc;
+                mx = mx.max(sc);
+            }
+            let mut denom = 0.0f32;
+            for sc in scores.iter_mut() {
+                *sc = (*sc - mx).exp();
+                denom += *sc;
+            }
+            let inv = 1.0 / denom;
+            let orow = &mut out[hi * hd..(hi + 1) * hd];
+            for tj in 0..len {
+                let w = scores[tj] * inv;
+                lk.v.read(tj, hi * hd, self.d, self.mode, row);
+                for (o, &vv) in orow.iter_mut().zip(row.iter()) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::infer::ops::causal_attention;
+    use crate::quant::act::per_token_quant;
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    #[test]
+    fn cached_attention_matches_causal_reference() {
+        let mut rng = Rng::new(41);
+        let (s, h, hd) = (6usize, 2usize, 8usize);
+        let d = h * hd;
+        let q = Tensor::randn(&mut rng, &[s, d], 1.0);
+        let k = Tensor::randn(&mut rng, &[s, d], 1.0);
+        let v = Tensor::randn(&mut rng, &[s, d], 1.0);
+        for (kv_quant, bits) in [(false, 16u32), (true, 8), (true, 16)] {
+            // reference: (fake-)quantized K/V through full causal attention
+            let (kr, vr) = if kv_quant {
+                let qm = crate::quant::qmax(bits);
+                (per_token_quant(&k, qm), per_token_quant(&v, qm))
+            } else {
+                (k.clone(), v.clone())
+            };
+            let want =
+                causal_attention(&q.data, &kr.data, &vr.data, 1, s, h, hd);
+            // incremental: push each row, attend the newest query
+            let mut cache = KvCache::new(1, d, kv_quant, bits);
+            let mut out = vec![0.0f32; d];
+            let mut scratch = Vec::new();
+            for t in 0..s {
+                cache.push(0, k.row(t), v.row(t));
+                cache.attend(0, q.row(t), h, hd, &mut out, &mut scratch);
+                for (c, i) in out.iter().zip(0..d) {
+                    let w = want[t * d + i];
+                    assert!(
+                        (c - w).abs() < 1e-6,
+                        "kv_quant {kv_quant} bits {bits} t{t} i{i}: {c} vs {w}"
+                    );
+                }
+            }
+            assert_eq!(cache.len(), s);
+            assert_eq!(cache.is_quantized(), kv_quant && bits <= 8);
+        }
+    }
+
+    #[test]
+    fn quantized_cache_is_smaller_than_fp() {
+        let mut rng = Rng::new(42);
+        let d = 32;
+        let mut qc = KvCache::new(2, d, true, 8);
+        let mut fc = KvCache::new(2, d, false, 16);
+        for l in 0..2 {
+            for _ in 0..5 {
+                let k: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                let v: Vec<f32> = (0..d).map(|_| rng.normal()).collect();
+                qc.push(l, &k, &v);
+                fc.push(l, &k, &v);
+            }
+        }
+        assert_eq!(qc.len(), 5);
+        assert_eq!(qc.layer_len(1), 5);
+        assert!(qc.storage_bytes() < fc.storage_bytes() / 2,
+                "u8 cache {} vs fp cache {}", qc.storage_bytes(),
+                fc.storage_bytes());
+    }
+}

@@ -45,35 +45,33 @@ fn quantize_rows(x: &[f32], rows: usize, cols: usize,
     for r in 0..rows {
         let row = &x[r * cols..(r + 1) * cols];
         let (s, z) = grid_of(row);
+        // the epilogue correction is integer arithmetic, so the zero-point
+        // must be an integral code — round (never truncate) and use the same
+        // rounded value for the codes, keeping both sides consistent
+        debug_assert!(z.fract() == 0.0 && (0.0..=qmax).contains(&z),
+                      "zero-point {z} is not an integral code in [0, {qmax}]");
+        let zi = z.round();
         let crow = &mut codes[r * cols..(r + 1) * cols];
         let mut sum = 0i64;
         for (o, &v) in crow.iter_mut().zip(row) {
-            let q = (v / s + z).round().clamp(0.0, qmax) as u8;
+            let q = crate::quant::act::quantize_code(v, s, zi, qmax) as u8;
             sum += q as i64;
             *o = q;
         }
         scale.push(s);
-        zp.push(z as i32);
+        zp.push(zi as i32);
         code_sum.push(sum);
     }
     QuantActs { rows, cols, codes, scale, zp, code_sum }
 }
 
 /// Per-token asymmetric quantization over the trailing dim — the integer
-/// twin of [`crate::quant::act::per_token_quant`].
+/// twin of [`crate::quant::act::per_token_quant`], sharing its grid math
+/// via [`crate::quant::act::row_grid`].
 pub fn quantize_acts_per_token(x: &[f32], rows: usize, cols: usize,
                                qmax: f32) -> QuantActs {
-    quantize_rows(x, rows, cols, |row| {
-        let mut lo = 0.0f32;
-        let mut hi = 0.0f32;
-        for &v in row {
-            lo = lo.min(v);
-            hi = hi.max(v);
-        }
-        let scale = ((hi - lo) / qmax).max(1e-9);
-        let zp = (-lo / scale).round().clamp(0.0, qmax);
-        (scale, zp)
-    }, qmax)
+    quantize_rows(x, rows, cols,
+                  |row| crate::quant::act::row_grid(row, qmax), qmax)
 }
 
 /// Per-tensor static quantization with a calibrated `(scale, zp)` — the
@@ -224,6 +222,24 @@ mod tests {
     }
 
     #[test]
+    fn static_codes_dequant_to_oracle() {
+        use crate::quant::act::{per_tensor_quant, ActRange};
+        let mut rng = Rng::new(7);
+        let x = Tensor::randn(&mut rng, &[4, 24], 1.1);
+        let mut r = ActRange::default();
+        r.update(x.min(), x.max());
+        let (s, z) = r.grid(255.0);
+        let qa = quantize_acts_static(&x.data, 4, 24, s, z, 255.0);
+        let oracle = per_tensor_quant(&x, s, z, 255.0);
+        for (i, &want) in oracle.data.iter().enumerate() {
+            let row = i / 24;
+            let deq = (qa.codes[i] as f32 - qa.zp[row] as f32)
+                * qa.scale[row];
+            assert!((deq - want).abs() < 1e-6, "i{i}: {deq} vs {want}");
+        }
+    }
+
+    #[test]
     fn code_sums_consistent() {
         let mut rng = Rng::new(2);
         let x = Tensor::randn(&mut rng, &[3, 17], 0.7);
@@ -287,6 +303,15 @@ mod tests {
                 assert_eq!(w[0].1, w[1].0);
                 assert!(w[0].1 > w[0].0);
             }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_empty_input_is_single_empty_range() {
+        // n = 0 must not panic or emit shards < 1 — the empty-batch guard
+        // upstream never executes, but the primitive stays total
+        for s in [1usize, 4, 9] {
+            assert_eq!(shard_ranges(0, s), vec![(0, 0)]);
         }
     }
 }

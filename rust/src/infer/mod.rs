@@ -20,18 +20,26 @@
 //! * [`ops`] — the FP glue of a block: RMSNorm, RoPE, causal attention,
 //!   SiLU, and the scoring head (log-prob extraction).
 //! * [`block`] — [`QuantBlock`] / [`NativeModel`]: the Transformer forward
-//!   assembled from `model::layout` order, plus embedding and head.
+//!   assembled from `model::layout` order, plus embedding and head — and the
+//!   incremental decode entry points (`decode_step` / `prefill` /
+//!   `generate`).
+//! * [`decode`] — [`KvCache`]: per-sequence quantized KV cache (u8 codes +
+//!   per-token grids, post-RoPE, same grid math as `quant::act`) with
+//!   cached attention dequantizing on the fly; greedy/top-k sampling lives
+//!   in [`crate::rng::sample_top_k`], shared with the batcher.
 //! * [`reference`] — the fake-quant oracle (dequantize-then-matmul, the exact
 //!   semantics of the `block_fwd_q` artifact) used by the correctness
 //!   harness, and native FP calibration of activation ranges.
 //! * [`quantize`] — artifact-free PTQ: RTN / grid-searched grids straight to
 //!   a packed [`crate::model::QuantizedModel`].
 //! * [`scorer`] — [`NativeScorer`]: a [`crate::serve::BatchScorer`] so the
-//!   existing dynamic batcher serves the native engine unchanged. Unlike the
-//!   PJRT runtime the engine is `Send`, so it can be built outside the
-//!   engine thread and row-shard across worker threads.
+//!   dynamic batcher serves the native engine for both score and generate
+//!   workloads (engine-owned KV caches, decode-step batching across active
+//!   sequences). Unlike the PJRT runtime the engine is `Send`, so it can be
+//!   built outside the engine thread and row-shard across worker threads.
 
 pub mod block;
+pub mod decode;
 pub mod kernels;
 pub mod linear;
 pub mod ops;
@@ -40,6 +48,7 @@ pub mod reference;
 pub mod scorer;
 
 pub use block::{NativeModel, QuantBlock};
+pub use decode::KvCache;
 pub use kernels::QuantActs;
 pub use linear::QuantLinear;
 pub use quantize::{calibrate_stats, prepare_native, quantize_weights,

@@ -63,6 +63,28 @@ pub fn rope(x: &mut [f32], b: usize, s: usize, h: usize, hd: usize) {
     }
 }
 
+/// Half-split rotary embedding of a single token row `x [h*hd]` at absolute
+/// position `pos` — the incremental-decode twin of [`rope`]. The angle math
+/// is kept identical (same base-10000 formula, same f32 op order), so a K
+/// row rotated here matches the full-context path bit-for-bit.
+pub fn rope_row(x: &mut [f32], pos: usize, h: usize, hd: usize) {
+    debug_assert_eq!(x.len(), h * hd);
+    let half = hd / 2;
+    // angles depend only on (pos, i): compute each once, apply to all heads
+    for i in 0..half {
+        let inv = 1.0 / 10000f32.powf(i as f32 / half as f32);
+        let ang = pos as f32 * inv;
+        let (c, sn) = (ang.cos(), ang.sin());
+        for hi in 0..h {
+            let off = hi * hd;
+            let x1 = x[off + i];
+            let x2 = x[off + half + i];
+            x[off + i] = x1 * c - x2 * sn;
+            x[off + half + i] = x1 * sn + x2 * c;
+        }
+    }
+}
+
 /// Causal softmax attention: `q, k, v` are `[b*s, h*hd]` row-major; returns
 /// `attn [b*s, h*hd]` (heads re-interleaved, ready for the `wo` projection).
 pub fn causal_attention(q: &[f32], k: &[f32], v: &[f32], b: usize, s: usize,
@@ -134,6 +156,14 @@ pub fn embed(emb: &Tensor, ids: &[i32]) -> Result<Tensor> {
     Ok(Tensor::new(vec![ids.len(), d], out))
 }
 
+/// Final norm + head projection: hidden `[rows, d]` -> logits
+/// `[rows, vocab]`. Shared by scoring ([`head_logprobs`]) and the
+/// incremental decode path (next-token distribution).
+pub fn head_logits(x: &Tensor, final_norm: &Tensor, head: &Tensor)
+                   -> Tensor {
+    rmsnorm(x, final_norm).matmul_bt(head)
+}
+
 /// Final norm + head: returns `(mean NLL, per-position logprob of targets)`,
 /// logprobs shaped `[rows]` in the same order as `targets` — the native twin
 /// of `head_logprobs` in `model.py`.
@@ -144,8 +174,7 @@ pub fn head_logprobs(x: &Tensor, final_norm: &Tensor, head: &Tensor,
         bail!("head: {} targets for {rows} positions", targets.len());
     }
     let (vocab, _) = head.rc();
-    let xn = rmsnorm(x, final_norm);
-    let logits = xn.matmul_bt(head); // [rows, vocab]
+    let logits = head_logits(x, final_norm, head); // [rows, vocab]
     let mut logp = Vec::with_capacity(rows);
     let mut nll = 0.0f64;
     for r in 0..rows {
@@ -201,6 +230,22 @@ mod tests {
             let n0: f32 = orig.iter().map(|v| v * v).sum();
             let n1: f32 = chunk.iter().map(|v| v * v).sum();
             assert!((n0 - n1).abs() < 1e-3, "chunk {r}");
+        }
+    }
+
+    #[test]
+    fn rope_row_matches_full_rope() {
+        let mut rng = Rng::new(6);
+        let (s, h, hd) = (7usize, 2usize, 8usize);
+        let x0 = Tensor::randn(&mut rng, &[s, h * hd], 1.0);
+        let mut full = x0.data.clone();
+        rope(&mut full, 1, s, h, hd);
+        for p in 0..s {
+            let mut row = x0.row(p).to_vec();
+            rope_row(&mut row, p, h, hd);
+            // identical angle math -> bit-identical rotation
+            assert_eq!(row.as_slice(), &full[p * h * hd..(p + 1) * h * hd],
+                       "pos {p}");
         }
     }
 

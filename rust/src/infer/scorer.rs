@@ -1,21 +1,32 @@
-//! [`NativeScorer`]: the native engine behind the existing dynamic batcher.
+//! [`NativeScorer`]: the native engine behind the dynamic batcher.
 //!
-//! Implements [`crate::serve::BatchScorer`] over a [`NativeModel`], so
-//! [`crate::serve::Server`] serves packed checkpoints unchanged. Unlike the
-//! PJRT engine the native model is `Send`: it can be quantized/calibrated on
-//! the caller's thread and *moved* into the engine thread
-//! ([`start_native_server`]), and its GEMMs row-shard across
+//! Implements [`crate::serve::BatchScorer`] over a [`NativeModel`] for both
+//! workload kinds: **score** (full-sequence log-probs, as before) and
+//! **generate** (incremental decode). Each generation owns an engine-side
+//! [`KvCache`]; the serve loop batches decode steps across active
+//! sequences, and [`NativeScorer::decode_step`] executes them as one
+//! `[n, d]` model step so every linear's unpack/GEMM work is shared.
+//!
+//! Unlike the PJRT engine the native model is `Send`: it can be
+//! quantized/calibrated on the caller's thread and *moved* into the engine
+//! thread ([`start_native_server`]), and its GEMMs row-shard across
 //! `model.shards` scoped worker threads.
 
-use anyhow::Result;
+use std::collections::HashMap;
 
-use crate::serve::{BatchScorer, Server, ServerConfig};
+use anyhow::{bail, Result};
+
+use crate::serve::{BatchScorer, SeqId, Server, ServerConfig};
 
 use super::block::NativeModel;
+use super::decode::KvCache;
 
 pub struct NativeScorer {
     pub model: NativeModel,
     batch: usize,
+    /// engine-owned KV caches of active decode sequences
+    seqs: HashMap<SeqId, KvCache>,
+    next_seq: SeqId,
 }
 
 impl NativeScorer {
@@ -23,7 +34,7 @@ impl NativeScorer {
     /// the PJRT `EngineScorer`).
     pub fn new(model: NativeModel) -> Self {
         let batch = model.dim.calib_batch.max(1);
-        NativeScorer { model, batch }
+        NativeScorer { model, batch, seqs: HashMap::new(), next_seq: 0 }
     }
 
     /// Override the rows-per-execution capacity (the native engine has no
@@ -31,6 +42,11 @@ impl NativeScorer {
     pub fn with_batch(mut self, batch: usize) -> Self {
         self.batch = batch.max(1);
         self
+    }
+
+    /// Active decode sequences currently holding a KV cache.
+    pub fn active_seqs(&self) -> usize {
+        self.seqs.len()
     }
 }
 
@@ -52,6 +68,61 @@ impl BatchScorer for NativeScorer {
     fn score(&mut self, ids: &[i32], targets: &[i32]) -> Result<Vec<f32>> {
         let (_, logp) = self.model.forward(ids, targets)?;
         Ok(logp.data)
+    }
+
+    fn supports_decode(&self) -> bool {
+        true
+    }
+
+    fn begin_decode(&mut self, prompt: &[i32]) -> Result<(SeqId, Vec<f32>)> {
+        let mut cache = self.model.new_cache();
+        let logits = self.model.prefill(prompt, &mut cache)?;
+        let sid = self.next_seq;
+        self.next_seq += 1;
+        self.seqs.insert(sid, cache);
+        Ok((sid, logits))
+    }
+
+    fn decode_step(&mut self, batch: &[(SeqId, i32)])
+                   -> Result<Vec<Vec<f32>>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        // take the caches out of the map so the whole step runs as one
+        // batched [n, d] model execution, then put them back. Removal also
+        // catches duplicate handles in one batch (the second take fails),
+        // which a contains_key pre-check would miss.
+        let mut sids = Vec::with_capacity(batch.len());
+        let mut toks = Vec::with_capacity(batch.len());
+        let mut caches = Vec::with_capacity(batch.len());
+        for &(sid, tok) in batch {
+            match self.seqs.remove(&sid) {
+                Some(c) => {
+                    sids.push(sid);
+                    toks.push(tok);
+                    caches.push(c);
+                }
+                None => {
+                    for (s, c) in sids.into_iter().zip(caches) {
+                        self.seqs.insert(s, c);
+                    }
+                    bail!("decode_step: unknown or duplicate sequence \
+                           {sid}");
+                }
+            }
+        }
+        let stepped = self.model.decode_step(&toks, &mut caches);
+        for (sid, cache) in sids.into_iter().zip(caches) {
+            self.seqs.insert(sid, cache);
+        }
+        let logits = stepped?;
+        let (n, vocab) = logits.as_2d();
+        debug_assert_eq!(n, batch.len());
+        Ok(logits.data.chunks(vocab).map(|c| c.to_vec()).collect())
+    }
+
+    fn end_decode(&mut self, sid: SeqId) {
+        self.seqs.remove(&sid);
     }
 }
 

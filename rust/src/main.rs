@@ -21,7 +21,8 @@ use lrq::config::{ActScheme, Args, Method, ReconConfig, Scheme};
 use lrq::coordinator::{pretrain, quantize_model, Engine};
 use lrq::data::{Corpus, CorpusConfig, TaskKind, TaskSet};
 use lrq::eval::{evaluate, ModelView};
-use lrq::infer::{prepare_native, start_native_server, ScaleInit};
+use lrq::infer::{prepare_native, start_native_server, NativeModel,
+                 ScaleInit};
 use lrq::model::{ModelDim, Weights};
 use lrq::rng::Rng;
 use lrq::runtime::{Manifest, Runtime};
@@ -54,6 +55,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "eval" => eval_cmd(args),
         "serve" => serve(args),
         "serve-native" => serve_native(args),
+        "generate-native" => generate_native(args),
         "bench-table" => {
             let id = args
                 .positional
@@ -88,6 +90,11 @@ commands:
            pure-Rust integer engine over packed codes; needs no artifacts
            (dims fall back to built-ins micro|tiny|small, missing weights
            are random-init)
+  generate-native --cfg C [--prompt-len N] [--max-new N] [--top-k K]
+           [--requests N] [--clients N] [--max-batch B]
+           [...same engine flags as serve-native]
+           token-by-token generation through the dynamic batcher with a
+           quantized KV cache (decode steps batched across sequences)
   bench-table ID                     regenerate one paper table/figure
                                      (fig1 fig2 fig3 fig4a fig4b fig5
                                       t1 t3 t5 t7 t9 t13 t29 t30 t31 kvq)
@@ -259,16 +266,13 @@ fn serve(args: &Args) -> Result<()> {
                         requests, seed)
 }
 
-/// `serve-native`: serve a packed checkpoint through the dynamic batcher
-/// with the pure-Rust integer engine — no PJRT, no AOT artifacts.
-fn serve_native(args: &Args) -> Result<()> {
+/// Build the artifact-free native engine from CLI flags (shared by
+/// `serve-native` and `generate-native`).
+fn native_model_from_args(args: &Args) -> Result<(ModelDim, NativeModel)> {
     let cfg = args.get_or("cfg", "tiny");
     let scheme = scheme_from(args)?;
     let init: ScaleInit = args.parse_as("init", ScaleInit::GridSearch)?;
     let shards: usize = args.parse_as("shards", 1)?;
-    let requests: usize = args.parse_as("requests", 200)?;
-    let clients: usize = args.parse_as("clients", 4)?;
-    let max_batch: usize = args.parse_as("max-batch", 8)?;
     let seed: u64 = args.parse_as("seed", 1234)?;
     let calib: usize = args.parse_as("calib-batches", 4)?;
 
@@ -306,7 +310,17 @@ fn serve_native(args: &Args) -> Result<()> {
         model.storage_bytes() as f64 / 1e6,
         (dim.param_count() * 4) as f64 / model.storage_bytes() as f64,
     );
+    Ok((dim, model))
+}
 
+/// `serve-native`: serve a packed checkpoint through the dynamic batcher
+/// with the pure-Rust integer engine — no PJRT, no AOT artifacts.
+fn serve_native(args: &Args) -> Result<()> {
+    let requests: usize = args.parse_as("requests", 200)?;
+    let clients: usize = args.parse_as("clients", 4)?;
+    let max_batch: usize = args.parse_as("max-batch", 8)?;
+
+    let (dim, model) = native_model_from_args(args)?;
     let tokens_per_req = dim.seq; // each scored row is one seq-length batch row
     let server = start_native_server(
         model,
@@ -345,6 +359,81 @@ fn serve_native(args: &Args) -> Result<()> {
         wall.as_secs_f64(),
         m.throughput(wall) * tokens_per_req as f64,
         tokens_per_req,
+    );
+    Ok(())
+}
+
+/// `generate-native`: token-by-token generation through the dynamic batcher
+/// with the quantized KV cache — concurrent clients' decode steps are
+/// batched into shared model executions.
+fn generate_native(args: &Args) -> Result<()> {
+    let requests: usize = args.parse_as("requests", 32)?;
+    let clients: usize = args.parse_as("clients", 4)?;
+    let max_batch: usize = args.parse_as("max-batch", 8)?;
+    let prompt_len: usize = args.parse_as("prompt-len", 8)?;
+    let max_new: usize = args.parse_as("max-new", 16)?;
+    let top_k: usize = args.parse_as("top-k", 1)?;
+    let seed: u64 = args.parse_as("seed", 1234)?;
+
+    let (dim, model) = native_model_from_args(args)?;
+    if prompt_len == 0 || prompt_len + max_new > dim.seq {
+        anyhow::bail!(
+            "prompt-len {prompt_len} + max-new {max_new} must fit the \
+             {}-token context (and prompt-len must be >= 1)",
+            dim.seq
+        );
+    }
+
+    let server = start_native_server(
+        model,
+        ServerConfig { max_batch, max_wait: Duration::from_millis(2) },
+    )?;
+    let t1 = Instant::now();
+    let mut handles = Vec::new();
+    let n_clients = clients.max(1);
+    for k in 0..n_clients as u64 {
+        let client = server.client();
+        // distribute the remainder so exactly `requests` are generated
+        let per = requests / n_clients
+            + usize::from((k as usize) < requests % n_clients);
+        let vocab = dim.vocab;
+        handles.push(std::thread::spawn(
+            move || -> Result<Option<(Vec<i32>, Vec<i32>)>> {
+                let mut rng = Rng::new(0x6E47 ^ k);
+                let mut sample = None;
+                for i in 0..per {
+                    let prompt: Vec<i32> = (0..prompt_len)
+                        .map(|_| rng.below(vocab) as i32)
+                        .collect();
+                    let resp = client.generate(prompt.clone(), max_new,
+                                               top_k, seed ^ (k << 8) ^ i as u64)?;
+                    if sample.is_none() {
+                        sample = Some((prompt, resp.tokens));
+                    }
+                }
+                Ok(sample)
+            },
+        ));
+    }
+    let mut sample = None;
+    for h in handles {
+        let s = h.join()
+            .map_err(|_| anyhow::anyhow!("client thread panicked"))??;
+        if sample.is_none() {
+            sample = s;
+        }
+    }
+    let wall = t1.elapsed();
+    let m = server.metrics.lock().unwrap().clone();
+    if let Some((prompt, tokens)) = sample {
+        println!("sample: prompt {prompt:?} -> {tokens:?}");
+    }
+    println!("{}", m.summary(wall));
+    println!(
+        "wall {:.2}s, {:.0} generated tokens/s end-to-end \
+         (prompt {prompt_len} + {max_new} new, top-k {top_k})",
+        wall.as_secs_f64(),
+        m.gen_tokens as f64 / wall.as_secs_f64(),
     );
     Ok(())
 }

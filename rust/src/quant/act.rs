@@ -25,12 +25,37 @@ impl ActRange {
     }
 }
 
+/// Map one value onto the integer grid: `round(v/scale + zp)` clamped to
+/// `[0, qmax]`. The single source of the code mapping — paired with
+/// [`row_grid`] so every quant site (fake-quant oracles here, the integer
+/// activation kernels, the KV cache) stays bit-identical.
+#[inline]
+pub fn quantize_code(v: f32, scale: f32, zp: f32, qmax: f32) -> f32 {
+    (v / scale + zp).round().clamp(0.0, qmax)
+}
+
 /// Per-tensor static asymmetric fake-quant.
 pub fn per_tensor_quant(x: &Tensor, scale: f32, zp: f32, qmax: f32) -> Tensor {
-    x.map(|v| {
-        let q = (v / scale + zp).round().clamp(0.0, qmax);
-        (q - zp) * scale
-    })
+    x.map(|v| (quantize_code(v, scale, zp, qmax) - zp) * scale)
+}
+
+/// The per-token asymmetric grid of one activation row: `(scale, zp)` with
+/// the `(hi-lo)/qmax` scale floor and zero-anchored range (`min(0)` /
+/// `max(0)`). The **single source of the per-token grid math** — shared by
+/// [`per_token_quant`], the integer activation-quant kernel
+/// (`infer::kernels`), and the KV cache (`infer::decode`), whose
+/// token-for-token decode equivalence depends on all three staying
+/// bit-identical.
+pub fn row_grid(row: &[f32], qmax: f32) -> (f32, f32) {
+    let mut lo = 0.0f32;
+    let mut hi = 0.0f32;
+    for &v in row {
+        lo = lo.min(v);
+        hi = hi.max(v);
+    }
+    let scale = ((hi - lo) / qmax).max(1e-9);
+    let zp = (-lo / scale).round().clamp(0.0, qmax);
+    (scale, zp)
 }
 
 /// Per-token asymmetric fake-quant over the trailing dim (oracle for the
@@ -40,17 +65,9 @@ pub fn per_token_quant(x: &Tensor, qmax: f32) -> Tensor {
     let mut out = vec![0.0f32; x.len()];
     for i in 0..t {
         let row = &x.data[i * d..(i + 1) * d];
-        let mut lo = 0.0f32;
-        let mut hi = 0.0f32;
-        for &v in row {
-            lo = lo.min(v);
-            hi = hi.max(v);
-        }
-        let scale = ((hi - lo) / qmax).max(1e-9);
-        let zp = (-lo / scale).round().clamp(0.0, qmax);
+        let (scale, zp) = row_grid(row, qmax);
         for (o, &v) in out[i * d..(i + 1) * d].iter_mut().zip(row) {
-            let q = (v / scale + zp).round().clamp(0.0, qmax);
-            *o = (q - zp) * scale;
+            *o = (quantize_code(v, scale, zp, qmax) - zp) * scale;
         }
     }
     Tensor::new(x.dims.clone(), out)

@@ -117,9 +117,67 @@ impl Rng {
     }
 }
 
+/// Sample a token id from next-token logits. `top_k <= 1` is greedy argmax
+/// (deterministic, rng untouched); otherwise softmax over the `top_k`
+/// largest logits, sampled with the caller's deterministic [`Rng`]. Lives
+/// here (not in `infer` or `serve`) because both the native decode path and
+/// the engine-agnostic batcher sample — this keeps their dependency one-way.
+pub fn sample_top_k(logits: &[f32], top_k: usize, rng: &mut Rng) -> usize {
+    debug_assert!(!logits.is_empty());
+    if top_k <= 1 {
+        let mut best = 0usize;
+        for (i, &v) in logits.iter().enumerate() {
+            if v > logits[best] {
+                best = i;
+            }
+        }
+        return best;
+    }
+    let k = top_k.min(logits.len());
+    let mut idx: Vec<usize> = (0..logits.len()).collect();
+    if k < idx.len() {
+        // partition (O(V)) instead of fully sorting the vocabulary: after
+        // this the first k indices are the k largest logits (unordered)
+        idx.select_nth_unstable_by(k - 1, |&a, &b| {
+            logits[b]
+                .partial_cmp(&logits[a])
+                .unwrap_or(std::cmp::Ordering::Equal)
+        });
+        idx.truncate(k);
+    }
+    let mx = idx
+        .iter()
+        .map(|&i| logits[i])
+        .fold(f32::NEG_INFINITY, f32::max);
+    let weights: Vec<f32> =
+        idx.iter().map(|&i| (logits[i] - mx).exp()).collect();
+    idx[rng.weighted(&weights)]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::new(43);
+        let logits = vec![0.1f32, 2.0, -1.0, 1.9];
+        assert_eq!(sample_top_k(&logits, 0, &mut rng), 1);
+        assert_eq!(sample_top_k(&logits, 1, &mut rng), 1);
+    }
+
+    #[test]
+    fn top_k_samples_within_top_set_and_is_seed_deterministic() {
+        let logits = vec![5.0f32, 4.5, -10.0, 4.8, -20.0];
+        let top: Vec<usize> = vec![0, 3, 1]; // three largest
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..50 {
+            let sa = sample_top_k(&logits, 3, &mut a);
+            assert!(top.contains(&sa), "sampled {sa} outside top-3");
+            assert_eq!(sa, sample_top_k(&logits, 3, &mut b));
+        }
+    }
 
     #[test]
     fn deterministic() {

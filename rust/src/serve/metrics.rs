@@ -1,15 +1,42 @@
-//! Serving metrics: request latency distribution (p50/p95/p99), execution
-//! time, batch occupancy, throughput — the measurements behind Fig. 5 /
-//! Table 15 and the `serve` / `serve-native` CLI summaries.
+//! Serving metrics: request latency distribution (p50/p95/p99), per-batch
+//! execution time, batch occupancy, throughput, and incremental-decode
+//! counters — the measurements behind Fig. 5 / Table 15 and the `serve` /
+//! `serve-native` / `generate-native` CLI summaries.
+//!
+//! Accounting contract:
+//! * [`Metrics::record`] — once per completed *request* (score or generate,
+//!   success or scorer-error). Requests rejected up front (invalid length)
+//!   never executed and are not recorded.
+//! * [`Metrics::record_batch`] — once per executed *score batch*: `exec_us`
+//!   is per batch, so `mean_exec` is a per-execution mean rather than being
+//!   skewed toward large batches.
+//! * [`Metrics::record_decode`] — once per executed *decode step* across
+//!   however many active sequences were batched into it.
+//! * Percentiles use nearest-rank (ceil), so small sample counts no longer
+//!   understate tail latency.
 
 use std::time::{Duration, Instant};
 
 #[derive(Clone, Debug, Default)]
 pub struct Metrics {
+    /// completed requests (score + generate)
     pub requests: usize,
+    /// executed score batches
     pub batches: usize,
+    /// completed generate requests
+    pub gen_requests: usize,
+    /// generated tokens across all completed generate requests
+    pub gen_tokens: usize,
+    /// executed decode steps (each covers >= 1 active sequences)
+    pub decode_steps: usize,
+    /// tokens produced by decode steps (Σ per-step sequence counts)
+    decode_step_tokens: usize,
+    /// total decode execution time
+    decode_exec_us: u64,
     latencies_us: Vec<u64>,
+    /// per executed batch
     exec_us: Vec<u64>,
+    /// per executed batch
     batch_sizes: Vec<usize>,
     /// first/last record times — the observation window for the built-in
     /// requests/sec counter
@@ -18,29 +45,52 @@ pub struct Metrics {
 }
 
 impl Metrics {
-    /// Record one request's response (called once per request).
-    pub fn record(&mut self, latency: Duration, exec: Duration,
-                  batch_size: usize) {
+    fn touch(&mut self) {
         let now = Instant::now();
         self.first_record.get_or_insert(now);
         self.last_record = Some(now);
+    }
+
+    /// Record one completed score request (called once per request, on the
+    /// success *and* the scorer-error path).
+    pub fn record(&mut self, latency: Duration) {
+        self.touch();
         self.requests += 1;
         self.latencies_us.push(latency.as_micros() as u64);
+    }
+
+    /// Record one executed score batch (called once per engine execution).
+    pub fn record_batch(&mut self, exec: Duration, batch_size: usize) {
+        self.batches += 1;
         self.exec_us.push(exec.as_micros() as u64);
         self.batch_sizes.push(batch_size);
     }
 
-    /// Record one executed model batch (called once per engine execution).
-    pub fn record_batch(&mut self) {
-        self.batches += 1;
+    /// Record one completed generate request and its token count.
+    pub fn record_gen(&mut self, latency: Duration, tokens: usize) {
+        self.touch();
+        self.requests += 1;
+        self.gen_requests += 1;
+        self.gen_tokens += tokens;
+        self.latencies_us.push(latency.as_micros() as u64);
     }
 
+    /// Record one executed decode step batched across `seqs` sequences.
+    pub fn record_decode(&mut self, seqs: usize, exec: Duration) {
+        self.decode_steps += 1;
+        self.decode_step_tokens += seqs;
+        self.decode_exec_us += exec.as_micros() as u64;
+    }
+
+    /// Nearest-rank percentile over a sorted sample: the smallest value
+    /// whose rank covers fraction `p` (ceil), so p95/p99 of a small sample
+    /// report a real observed tail value instead of flooring toward p50.
     fn pct_sorted(v: &[u64], p: f64) -> Duration {
         if v.is_empty() {
             return Duration::ZERO;
         }
-        let idx = ((v.len() as f64 - 1.0) * p) as usize;
-        Duration::from_micros(v[idx])
+        let rank = (v.len() as f64 * p).ceil() as usize;
+        Duration::from_micros(v[rank.clamp(1, v.len()) - 1])
     }
 
     fn pct(mut v: Vec<u64>, p: f64) -> Duration {
@@ -70,6 +120,7 @@ impl Metrics {
         )
     }
 
+    /// Mean execution time per score batch.
     pub fn mean_exec(&self) -> Duration {
         if self.exec_us.is_empty() {
             return Duration::ZERO;
@@ -78,12 +129,29 @@ impl Metrics {
             self.exec_us.iter().sum::<u64>() / self.exec_us.len() as u64)
     }
 
+    /// Mean occupancy per executed score batch.
     pub fn mean_batch(&self) -> f64 {
         if self.batch_sizes.is_empty() {
             return 0.0;
         }
         self.batch_sizes.iter().sum::<usize>() as f64
             / self.batch_sizes.len() as f64
+    }
+
+    /// Mean active sequences per decode step (decode-batching occupancy).
+    pub fn mean_decode_batch(&self) -> f64 {
+        if self.decode_steps == 0 {
+            return 0.0;
+        }
+        self.decode_step_tokens as f64 / self.decode_steps as f64
+    }
+
+    /// Decode throughput: tokens produced per second of decode execution.
+    pub fn decode_tokens_per_sec(&self) -> f64 {
+        if self.decode_exec_us == 0 {
+            return 0.0;
+        }
+        self.decode_step_tokens as f64 / (self.decode_exec_us as f64 * 1e-6)
     }
 
     /// Requests per second over an externally measured wall window.
@@ -113,13 +181,14 @@ impl Metrics {
         }
     }
 
-    /// One-line CLI summary (shared by `serve` and `serve-native`), with
-    /// throughput over the caller-measured wall window. Sorts the latency
-    /// history once for all three percentiles.
+    /// One-line CLI summary (shared by `serve`, `serve-native`, and
+    /// `generate-native`), with throughput over the caller-measured wall
+    /// window. Sorts the latency history once for all three percentiles;
+    /// decode counters are appended only when decoding happened.
     pub fn summary(&self, wall: Duration) -> String {
         let mut lat = self.latencies_us.clone();
         lat.sort_unstable();
-        format!(
+        let mut s = format!(
             "{} requests in {} batches (mean batch {:.2}): latency p50 \
              {:.2}ms p95 {:.2}ms p99 {:.2}ms, mean exec {:.2}ms, {:.1} req/s",
             self.requests,
@@ -130,7 +199,19 @@ impl Metrics {
             Self::pct_sorted(&lat, 0.99).as_secs_f64() * 1e3,
             self.mean_exec().as_secs_f64() * 1e3,
             self.throughput(wall),
-        )
+        );
+        if self.decode_steps > 0 {
+            s.push_str(&format!(
+                "; {} generations, {} tokens in {} decode steps (mean step \
+                 batch {:.2}, {:.0} tok/s decode)",
+                self.gen_requests,
+                self.gen_tokens,
+                self.decode_steps,
+                self.mean_decode_batch(),
+                self.decode_tokens_per_sec(),
+            ));
+        }
+        s
     }
 }
 
@@ -144,10 +225,9 @@ mod tests {
         for i in 1..=100u64 {
             // two requests per executed batch
             if i % 2 == 1 {
-                m.record_batch();
+                m.record_batch(Duration::from_micros(i), 2);
             }
-            m.record(Duration::from_micros(i * 10),
-                     Duration::from_micros(i), 2);
+            m.record(Duration::from_micros(i * 10));
         }
         assert!(m.p50_latency() < m.p95_latency());
         assert!(m.p95_latency() <= m.p99_latency());
@@ -158,12 +238,58 @@ mod tests {
     }
 
     #[test]
+    fn nearest_rank_covers_small_tails() {
+        let mut m = Metrics::default();
+        // 5 samples: 10, 20, 30, 40, 1000us. Floor indexing reported p99 =
+        // v[3] = 40us; nearest-rank must surface the real 1000us outlier.
+        for us in [10u64, 20, 30, 40, 1000] {
+            m.record(Duration::from_micros(us));
+        }
+        assert_eq!(m.p99_latency(), Duration::from_micros(1000));
+        assert_eq!(m.p95_latency(), Duration::from_micros(1000));
+        assert_eq!(m.p50_latency(), Duration::from_micros(30));
+    }
+
+    #[test]
+    fn exec_is_per_batch_not_per_request() {
+        let mut m = Metrics::default();
+        // one big slow batch + one small fast batch; per-request accounting
+        // would weight the slow exec 4x and report 820us
+        m.record_batch(Duration::from_micros(1000), 4);
+        for _ in 0..4 {
+            m.record(Duration::from_micros(1100));
+        }
+        m.record_batch(Duration::from_micros(100), 1);
+        m.record(Duration::from_micros(150));
+        assert_eq!(m.mean_exec(), Duration::from_micros(550));
+        assert!((m.mean_batch() - 2.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn decode_counters_aggregate() {
+        let mut m = Metrics::default();
+        m.record_decode(4, Duration::from_micros(200));
+        m.record_decode(2, Duration::from_micros(100));
+        m.record_gen(Duration::from_millis(3), 7);
+        assert_eq!(m.decode_steps, 2);
+        assert_eq!(m.gen_requests, 1);
+        assert_eq!(m.gen_tokens, 7);
+        assert_eq!(m.requests, 1);
+        assert!((m.mean_decode_batch() - 3.0).abs() < 1e-9);
+        // 6 tokens over 300us = 20k tok/s
+        assert!((m.decode_tokens_per_sec() - 20_000.0).abs() < 1.0);
+        assert!(m.summary(Duration::from_secs(1)).contains("decode"));
+    }
+
+    #[test]
     fn empty_safe() {
         let m = Metrics::default();
         assert_eq!(m.p50_latency(), Duration::ZERO);
         assert_eq!(m.p99_latency(), Duration::ZERO);
         assert_eq!(m.mean_latency(), Duration::ZERO);
         assert_eq!(m.mean_batch(), 0.0);
+        assert_eq!(m.mean_decode_batch(), 0.0);
+        assert_eq!(m.decode_tokens_per_sec(), 0.0);
         assert_eq!(m.requests_per_sec(), 0.0);
         assert!(!m.summary(Duration::ZERO).is_empty());
     }
@@ -171,11 +297,11 @@ mod tests {
     #[test]
     fn requests_per_sec_counts_window() {
         let mut m = Metrics::default();
-        m.record(Duration::from_micros(5), Duration::from_micros(1), 1);
+        m.record(Duration::from_micros(5));
         // single request: no window yet
         assert_eq!(m.requests_per_sec(), 0.0);
         std::thread::sleep(Duration::from_millis(5));
-        m.record(Duration::from_micros(5), Duration::from_micros(1), 1);
+        m.record(Duration::from_micros(5));
         let rps = m.requests_per_sec();
         // one inter-arrival over a >=5ms sleep: positive, below 1000 req/s
         assert!(rps > 0.0 && rps < 1000.0, "rps {rps}");

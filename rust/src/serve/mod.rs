@@ -1,27 +1,49 @@
-//! Batch-scoring server (the Fig. 5 serving-side substrate): a dynamic
-//! batcher in front of a single-threaded PJRT scoring engine, with
-//! request-level latency metrics.
+//! Batch serving (the Fig. 5 serving-side substrate): a dynamic batcher in
+//! front of a single engine thread, serving two workload kinds over one
+//! request channel:
+//!
+//! * **score** — total log-prob of a sequence (reranking-style), batched
+//!   into padded model executions exactly as before;
+//! * **generate** — incremental decode with an engine-owned per-sequence KV
+//!   cache ([`crate::infer::KvCache`] for the native engine): the prompt is
+//!   prefilled once, then decode steps are **batched across all active
+//!   sequences**, so concurrent generations share each step's unpack/GEMM
+//!   work. Sampling (greedy / top-k) happens in the engine loop with a
+//!   per-request deterministic RNG seed.
 //!
 //! tokio is unavailable in the offline build image, so this is a std-thread
-//! design: client threads submit [`ScoreRequest`]s over an mpsc channel; the
-//! engine thread drains up to `max_batch` requests (or `max_wait`), pads them
-//! into one model batch, executes, and answers each request on its own
-//! oneshot channel. The PJRT runtime is not `Send`, so the engine is *built
-//! inside* the engine thread by the supplied constructor closure.
+//! design: client threads submit [`Request`]s over an mpsc channel; the
+//! engine thread drains up to `max_batch` requests (or `max_wait`) when
+//! idle, never stalling active decode sequences, and answers each request on
+//! its own oneshot channel. The PJRT runtime is not `Send`, so the engine is
+//! *built inside* the engine thread by the supplied constructor closure.
+//!
+//! Validation happens *before* batch assembly: an invalid request is
+//! rejected immediately and never occupies a batch row, so it neither wastes
+//! engine compute (variable-batch engines execute only occupied rows) nor
+//! inflates the `batch_size` reported to the other requests in its batch.
 
 pub mod metrics;
 
-use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::collections::VecDeque;
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender,
+                      TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::rng::{sample_top_k, Rng};
+
 pub use metrics::Metrics;
 
-/// A batch scorer: given padded id/target rows, return the per-position
-/// target log-probs for each row (row-major [rows × seq]).
+/// Engine-side handle of an active decode sequence (its KV cache lives
+/// inside the scorer).
+pub type SeqId = u64;
+
+/// A batch engine: scores padded id/target rows, and (optionally) runs
+/// incremental decode over engine-owned per-sequence KV caches.
 pub trait BatchScorer {
     /// batch capacity (rows per model execution)
     fn batch_size(&self) -> usize;
@@ -33,7 +55,28 @@ pub trait BatchScorer {
     fn variable_batch(&self) -> bool {
         false
     }
+    /// Given padded id/target rows, return the per-position target log-probs
+    /// for each row (row-major [rows × seq]).
     fn score(&mut self, ids: &[i32], targets: &[i32]) -> Result<Vec<f32>>;
+
+    /// Whether this engine supports incremental decode (generation). The
+    /// remaining decode methods are only called when this returns `true`.
+    fn supports_decode(&self) -> bool {
+        false
+    }
+    /// Prefill `prompt` into a fresh engine-owned sequence; returns its
+    /// handle plus the next-token logits after the last prompt token.
+    fn begin_decode(&mut self, _prompt: &[i32]) -> Result<(SeqId, Vec<f32>)> {
+        Err(anyhow!("this engine does not support incremental decode"))
+    }
+    /// One decode step batched across sequences: `batch[i]` is a sequence
+    /// handle plus its newest token; returns next-token logits per sequence.
+    fn decode_step(&mut self, _batch: &[(SeqId, i32)])
+                   -> Result<Vec<Vec<f32>>> {
+        Err(anyhow!("this engine does not support incremental decode"))
+    }
+    /// Release a sequence's KV cache (finished or failed).
+    fn end_decode(&mut self, _seq: SeqId) {}
 }
 
 /// One scoring request: a token sequence; the response is the total log-prob
@@ -49,7 +92,36 @@ pub struct ScoreRequest {
 pub struct ScoreResponse {
     pub logp_sum: f32,
     pub latency: Duration,
+    /// valid requests sharing this request's model execution
     pub batch_size: usize,
+}
+
+/// One generation request: prompt + sampling knobs; the response is the
+/// generated continuation.
+pub struct GenerateRequest {
+    pub prompt: Vec<i32>,
+    /// tokens to generate (the context budget is `seq_len`)
+    pub max_new: usize,
+    /// `<= 1` = greedy argmax; otherwise sample from the top-k logits
+    pub top_k: usize,
+    /// per-request sampling seed (deterministic under greedy regardless)
+    pub seed: u64,
+    resp: Sender<Result<GenerateResponse, String>>,
+    submitted: Instant,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenerateResponse {
+    /// generated tokens (continuation only, `max_new` of them)
+    pub tokens: Vec<i32>,
+    pub latency: Duration,
+    pub prompt_len: usize,
+}
+
+/// Anything a client can submit to the engine thread.
+pub enum Request {
+    Score(ScoreRequest),
+    Generate(GenerateRequest),
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -67,15 +139,48 @@ impl Default for ServerConfig {
 /// Handle for submitting requests.
 #[derive(Clone)]
 pub struct Client {
-    tx: Sender<ScoreRequest>,
+    tx: Sender<Request>,
 }
 
 impl Client {
-    /// Blocking score call.
-    pub fn score(&self, ids: Vec<i32>) -> Result<ScoreResponse> {
+    /// Submit a score request without blocking; the response arrives on the
+    /// returned channel (dropping it is safe — the engine ignores send
+    /// failures, so a disconnected client never poisons its batch).
+    pub fn submit(&self, ids: Vec<i32>)
+                  -> Result<Receiver<Result<ScoreResponse, String>>> {
         let (tx, rx) = channel();
         self.tx
-            .send(ScoreRequest { ids, resp: tx, submitted: Instant::now() })
+            .send(Request::Score(ScoreRequest {
+                ids,
+                resp: tx,
+                submitted: Instant::now(),
+            }))
+            .map_err(|_| anyhow!("server stopped"))?;
+        Ok(rx)
+    }
+
+    /// Blocking score call.
+    pub fn score(&self, ids: Vec<i32>) -> Result<ScoreResponse> {
+        self.submit(ids)?
+            .recv()
+            .map_err(|_| anyhow!("server dropped request"))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Blocking generate call: decode `max_new` tokens after `prompt`
+    /// (greedy when `top_k <= 1`).
+    pub fn generate(&self, prompt: Vec<i32>, max_new: usize, top_k: usize,
+                    seed: u64) -> Result<GenerateResponse> {
+        let (tx, rx) = channel();
+        self.tx
+            .send(Request::Generate(GenerateRequest {
+                prompt,
+                max_new,
+                top_k,
+                seed,
+                resp: tx,
+                submitted: Instant::now(),
+            }))
             .map_err(|_| anyhow!("server stopped"))?;
         rx.recv()
             .map_err(|_| anyhow!("server dropped request"))?
@@ -84,7 +189,7 @@ impl Client {
 }
 
 pub struct Server {
-    tx: Option<Sender<ScoreRequest>>,
+    tx: Option<Sender<Request>>,
     handle: Option<JoinHandle<()>>,
     pub metrics: Arc<Mutex<Metrics>>,
 }
@@ -96,7 +201,7 @@ impl Server {
     where
         F: FnOnce() -> Result<Box<dyn BatchScorer>> + Send + 'static,
     {
-        let (tx, rx) = channel::<ScoreRequest>();
+        let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let m2 = metrics.clone();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
@@ -124,7 +229,8 @@ impl Server {
         Client { tx: self.tx.as_ref().expect("server running").clone() }
     }
 
-    /// Stop the engine and join.
+    /// Stop the engine and join. Active decode sequences are drained first
+    /// (their clients still hold response channels).
     pub fn shutdown(&mut self) {
         self.tx.take(); // close channel → engine loop exits
         if let Some(h) = self.handle.take() {
@@ -139,33 +245,122 @@ impl Drop for Server {
     }
 }
 
-fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
-               rx: Receiver<ScoreRequest>, metrics: Arc<Mutex<Metrics>>) {
-    let bcap = cfg.max_batch.min(scorer.batch_size()).max(1);
-    let seq = scorer.seq_len();
-    loop {
-        // block for the first request
-        let first = match rx.recv() {
-            Ok(r) => r,
-            Err(_) => return, // all senders dropped
-        };
-        let mut batch = vec![first];
-        let deadline = Instant::now() + cfg.max_wait;
-        while batch.len() < bcap {
-            let left = deadline.saturating_duration_since(Instant::now());
-            match rx.recv_timeout(left) {
-                Ok(r) => batch.push(r),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        run_batch(scorer, seq, batch, &metrics);
+/// An admitted generation: engine-side sequence handle + sampling state.
+struct ActiveSeq {
+    sid: SeqId,
+    prompt_len: usize,
+    max_new: usize,
+    top_k: usize,
+    rng: Rng,
+    tokens: Vec<i32>,
+    resp: Sender<Result<GenerateResponse, String>>,
+    submitted: Instant,
+}
+
+fn sort_request(r: Request, scores: &mut Vec<ScoreRequest>,
+                gens: &mut VecDeque<GenerateRequest>) {
+    match r {
+        Request::Score(s) => scores.push(s),
+        Request::Generate(g) => gens.push_back(g),
     }
 }
 
+fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
+               rx: Receiver<Request>, metrics: Arc<Mutex<Metrics>>) {
+    let bcap = cfg.max_batch.min(scorer.batch_size()).max(1);
+    let seq = scorer.seq_len();
+    let mut scores: Vec<ScoreRequest> = Vec::new();
+    let mut gens: VecDeque<GenerateRequest> = VecDeque::new();
+    let mut active: Vec<ActiveSeq> = Vec::new();
+    let mut open = true;
+    loop {
+        // ---- intake ----
+        if open && scores.is_empty() && gens.is_empty() && active.is_empty()
+        {
+            // fully idle: block for the next request
+            match rx.recv() {
+                Ok(r) => sort_request(r, &mut scores, &mut gens),
+                Err(_) => open = false, // all senders dropped
+            }
+        }
+        if open {
+            if active.is_empty() && !(scores.is_empty() && gens.is_empty()) {
+                // batching window: coalesce up to bcap while nothing decodes
+                let deadline = Instant::now() + cfg.max_wait;
+                while scores.len() < bcap && gens.len() < bcap {
+                    let left =
+                        deadline.saturating_duration_since(Instant::now());
+                    match rx.recv_timeout(left) {
+                        Ok(r) => sort_request(r, &mut scores, &mut gens),
+                        Err(RecvTimeoutError::Timeout) => break,
+                        Err(RecvTimeoutError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            } else {
+                // decode in flight: take whatever has arrived, don't stall
+                loop {
+                    match rx.try_recv() {
+                        Ok(r) => sort_request(r, &mut scores, &mut gens),
+                        Err(TryRecvError::Empty) => break,
+                        Err(TryRecvError::Disconnected) => {
+                            open = false;
+                            break;
+                        }
+                    }
+                }
+            }
+        }
+        if !open && scores.is_empty() && gens.is_empty() && active.is_empty()
+        {
+            return;
+        }
+        // ---- one score batch ----
+        if !scores.is_empty() {
+            let take = scores.len().min(bcap);
+            let batch: Vec<ScoreRequest> = scores.drain(..take).collect();
+            run_batch(scorer, seq, batch, &metrics);
+        }
+        // ---- admit new generations (validate, prefill, first sample) ----
+        // bounded admission: each active sequence pins a KV cache in the
+        // engine, so excess requests wait in `gens` (they are admitted as
+        // sequences finish) instead of growing memory with offered load
+        let max_active = bcap.saturating_mul(4);
+        while active.len() < max_active {
+            match gens.pop_front() {
+                Some(g) => admit(scorer, seq, g, &mut active, &metrics),
+                None => break,
+            }
+        }
+        // ---- one decode step across active sequences ----
+        if !active.is_empty() {
+            decode_round(scorer, &mut active, bcap, &metrics);
+        }
+    }
+}
+
+/// Execute one score batch. Invalid requests were rejected before assembly
+/// ([`engine_loop`] admits anything; the length check lives here so tests
+/// can drive it directly) — only valid rows reach the scorer, and
+/// `batch_size` reflects valid rows only.
 fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
              batch: Vec<ScoreRequest>, metrics: &Arc<Mutex<Metrics>>) {
-    let n = batch.len();
+    // reject invalid requests up front: no batch row, no reported occupancy
+    let mut valid: Vec<ScoreRequest> = Vec::with_capacity(batch.len());
+    for r in batch {
+        if r.ids.len() < 2 || r.ids.len() > seq {
+            let _ = r.resp.send(Err(format!(
+                "sequence length {} not in [2, {seq}]", r.ids.len())));
+        } else {
+            valid.push(r);
+        }
+    }
+    if valid.is_empty() {
+        return; // never execute an empty batch
+    }
+    let n = valid.len();
     // fixed-shape scorers always get full capacity; variable ones only the
     // occupied rows (no padded-row compute)
     let b = if scorer.variable_batch() {
@@ -176,13 +371,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
     let mut ids = vec![0i32; b * seq];
     let mut tgt = vec![0i32; b * seq];
     let mut lens = vec![0usize; n];
-    let mut bad: Vec<Option<String>> = vec![None; n];
-    for (i, r) in batch.iter().enumerate() {
-        if r.ids.len() < 2 || r.ids.len() > seq {
-            bad[i] = Some(format!("sequence length {} not in [2, {seq}]",
-                                  r.ids.len()));
-            continue;
-        }
+    for (i, r) in valid.iter().enumerate() {
         lens[i] = r.ids.len();
         ids[i * seq..i * seq + r.ids.len()].copy_from_slice(&r.ids);
         for (p, w) in r.ids[1..].iter().enumerate() {
@@ -192,21 +381,14 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
     let t0 = Instant::now();
     let scored = scorer.score(&ids, &tgt);
     let exec_time = t0.elapsed();
+    metrics.lock().unwrap().record_batch(exec_time, n);
     match scored {
         Ok(logp) => {
-            metrics.lock().unwrap().record_batch();
-            for (i, r) in batch.into_iter().enumerate() {
-                if let Some(msg) = bad[i].take() {
-                    let _ = r.resp.send(Err(msg));
-                    continue;
-                }
+            for (i, r) in valid.into_iter().enumerate() {
                 let row = &logp[i * seq..(i + 1) * seq];
                 let sum: f32 = row[..lens[i] - 1].iter().sum();
                 let latency = r.submitted.elapsed();
-                metrics
-                    .lock()
-                    .unwrap()
-                    .record(latency, exec_time, n);
+                metrics.lock().unwrap().record(latency);
                 let _ = r.resp.send(Ok(ScoreResponse {
                     logp_sum: sum,
                     latency,
@@ -215,9 +397,127 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
             }
         }
         Err(e) => {
+            // scorer-error path: the batch executed (and failed) — latency
+            // and exec metrics still count
             let msg = format!("{e:#}");
-            for r in batch {
+            for r in valid {
+                metrics.lock().unwrap().record(r.submitted.elapsed());
                 let _ = r.resp.send(Err(msg.clone()));
+            }
+        }
+    }
+}
+
+/// Validate + prefill one generation request; on success it joins `active`
+/// with its first sampled token (a `max_new == 1` request completes here).
+fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
+         active: &mut Vec<ActiveSeq>, metrics: &Arc<Mutex<Metrics>>) {
+    if g.prompt.is_empty() || g.max_new == 0 {
+        let _ = g.resp.send(Err(
+            "generate needs a non-empty prompt and max_new >= 1".into()));
+        return;
+    }
+    if g.prompt.len() + g.max_new > seq {
+        let _ = g.resp.send(Err(format!(
+            "prompt {} + max_new {} exceeds the {seq}-token context",
+            g.prompt.len(), g.max_new)));
+        return;
+    }
+    if !scorer.supports_decode() {
+        let _ = g.resp.send(Err(
+            "this engine does not support incremental decode".into()));
+        return;
+    }
+    match scorer.begin_decode(&g.prompt) {
+        Err(e) => {
+            // engine-error path: the prefill executed (and failed) — the
+            // request still counts, like the score-batch error path
+            metrics.lock().unwrap().record(g.submitted.elapsed());
+            let _ = g.resp.send(Err(format!("{e:#}")));
+        }
+        Ok((sid, logits)) => {
+            let mut rng = Rng::new(g.seed);
+            let first = sample_top_k(&logits, g.top_k, &mut rng) as i32;
+            let seq_state = ActiveSeq {
+                sid,
+                prompt_len: g.prompt.len(),
+                max_new: g.max_new,
+                top_k: g.top_k,
+                rng,
+                tokens: vec![first],
+                resp: g.resp,
+                submitted: g.submitted,
+            };
+            if seq_state.tokens.len() >= seq_state.max_new {
+                finish(scorer, seq_state, metrics);
+            } else {
+                active.push(seq_state);
+            }
+        }
+    }
+}
+
+/// Complete one generation: release its KV cache, record metrics, respond.
+fn finish(scorer: &mut dyn BatchScorer, a: ActiveSeq,
+          metrics: &Arc<Mutex<Metrics>>) {
+    scorer.end_decode(a.sid);
+    let latency = a.submitted.elapsed();
+    metrics.lock().unwrap().record_gen(latency, a.tokens.len());
+    let _ = a.resp.send(Ok(GenerateResponse {
+        tokens: a.tokens,
+        latency,
+        prompt_len: a.prompt_len,
+    }));
+}
+
+/// One decode step batched across up to `bcap` active sequences; finished
+/// sequences respond and release their caches, the rest rotate so every
+/// sequence gets steps under overload.
+fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
+                bcap: usize, metrics: &Arc<Mutex<Metrics>>) {
+    let n = active.len().min(bcap);
+    let batch: Vec<(SeqId, i32)> = active[..n]
+        .iter()
+        .map(|a| (a.sid, *a.tokens.last().expect("admitted with a token")))
+        .collect();
+    let t0 = Instant::now();
+    let stepped = scorer.decode_step(&batch);
+    let exec = t0.elapsed();
+    match stepped {
+        Ok(all_logits) => {
+            // recorded only on success: a failed step produced no tokens
+            metrics.lock().unwrap().record_decode(n, exec);
+            debug_assert_eq!(all_logits.len(), n);
+            let mut done: Vec<usize> = Vec::new();
+            for (i, logits) in all_logits.iter().enumerate().take(n) {
+                let a = &mut active[i];
+                let t = sample_top_k(logits, a.top_k, &mut a.rng) as i32;
+                a.tokens.push(t);
+                if a.tokens.len() >= a.max_new {
+                    done.push(i);
+                }
+            }
+            let finished = done.len();
+            for i in done.into_iter().rev() {
+                let a = active.remove(i);
+                finish(scorer, a, metrics);
+            }
+            // round-robin fairness across > bcap active sequences: rotate
+            // the stepped *survivors* to the back so un-stepped sequences
+            // come first next round
+            if !active.is_empty() {
+                let rot = (n - finished).min(active.len());
+                active.rotate_left(rot);
+            }
+        }
+        Err(e) => {
+            // decode failure poisons exactly the stepped sequences; they
+            // executed (and failed), so they still count as requests
+            let msg = format!("{e:#}");
+            for a in active.drain(..n) {
+                scorer.end_decode(a.sid);
+                metrics.lock().unwrap().record(a.submitted.elapsed());
+                let _ = a.resp.send(Err(msg.clone()));
             }
         }
     }
@@ -246,6 +546,8 @@ impl BatchScorer for MockScorer {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::collections::HashMap;
+    use std::sync::atomic::{AtomicUsize, Ordering};
 
     fn start_mock(max_batch: usize, wait_ms: u64) -> Server {
         Server::start(
@@ -329,5 +631,260 @@ mod tests {
         assert_eq!(m.requests, 20);
         assert!(m.p50_latency() <= m.p95_latency());
         assert!(m.mean_batch() >= 1.0);
+    }
+
+    /// A scorer that counts executions and the row occupancy it was handed
+    /// (variable-batch, like the native engine).
+    struct CountingScorer {
+        seq: usize,
+        calls: Arc<AtomicUsize>,
+        rows_seen: Arc<Mutex<Vec<usize>>>,
+    }
+
+    impl BatchScorer for CountingScorer {
+        fn batch_size(&self) -> usize {
+            8
+        }
+        fn seq_len(&self) -> usize {
+            self.seq
+        }
+        fn variable_batch(&self) -> bool {
+            true
+        }
+        fn score(&mut self, ids: &[i32], targets: &[i32])
+                 -> Result<Vec<f32>> {
+            self.calls.fetch_add(1, Ordering::SeqCst);
+            self.rows_seen.lock().unwrap().push(ids.len() / self.seq);
+            Ok(targets.iter().map(|&t| -(t as f32)).collect())
+        }
+    }
+
+    #[test]
+    fn invalid_requests_never_occupy_batch_rows() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let (c2, r2) = (calls.clone(), rows.clone());
+        let s = Server::start(
+            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(50) },
+            move || Ok(Box::new(CountingScorer {
+                seq: 16,
+                calls: c2,
+                rows_seen: r2,
+            })),
+        )
+        .unwrap();
+        // mixed batch: 2 valid + 2 invalid submitted together
+        let mut handles = Vec::new();
+        for ids in [vec![1, 2], vec![9], (0..40).collect(), vec![3, 4, 5]] {
+            let c = s.client();
+            handles.push(std::thread::spawn(move || c.score(ids)));
+        }
+        let results: Vec<_> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        let ok: Vec<_> = results.iter().filter_map(|r| r.as_ref().ok())
+            .collect();
+        let errs = results.iter().filter(|r| r.is_err()).count();
+        assert_eq!(ok.len(), 2);
+        assert_eq!(errs, 2);
+        for r in &ok {
+            // reported occupancy counts valid rows only
+            assert!(r.batch_size <= 2, "batch_size {}", r.batch_size);
+        }
+        // the engine only ever executed the valid rows — no zeroed padding
+        let total_rows: usize = rows.lock().unwrap().iter().sum();
+        assert_eq!(total_rows, 2);
+    }
+
+    #[test]
+    fn all_invalid_batch_never_executes_scorer() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let (c2, r2) = (calls.clone(), rows.clone());
+        let s = Server::start(
+            ServerConfig { max_batch: 4, max_wait: Duration::from_millis(20) },
+            move || Ok(Box::new(CountingScorer {
+                seq: 16,
+                calls: c2,
+                rows_seen: r2,
+            })),
+        )
+        .unwrap();
+        let mut handles = Vec::new();
+        for ids in [vec![1], vec![], (0..99).collect::<Vec<i32>>()] {
+            let c = s.client();
+            handles.push(std::thread::spawn(move || c.score(ids)));
+        }
+        for h in handles {
+            assert!(h.join().unwrap().is_err());
+        }
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn disconnected_client_does_not_poison_its_batch() {
+        let s = start_mock(4, 30);
+        let c = s.client();
+        // submit and immediately drop the response channel (client died)
+        let rx = c.submit(vec![1, 7]).unwrap();
+        drop(rx);
+        // a live request in the same window still gets its answer
+        let r = c.score(vec![1, 5]).unwrap();
+        assert_eq!(r.logp_sum, -5.0);
+        // both were valid and executed -> both recorded
+        let m = s.metrics.lock().unwrap();
+        assert_eq!(m.requests, 2);
+    }
+
+    /// Decode-capable mock: the "model" deterministically continues with
+    /// `(last token + 1) % 100`, so generations are checkable counting
+    /// sequences. Tracks live caches to prove none leak.
+    struct GenMock {
+        next: SeqId,
+        caches: HashMap<SeqId, i32>,
+        live: Arc<AtomicUsize>,
+    }
+
+    impl GenMock {
+        fn logits_for(last: i32) -> Vec<f32> {
+            let mut l = vec![0.0f32; 100];
+            l[((last + 1) % 100) as usize] = 10.0;
+            l
+        }
+    }
+
+    impl BatchScorer for GenMock {
+        fn batch_size(&self) -> usize {
+            8
+        }
+        fn seq_len(&self) -> usize {
+            32
+        }
+        fn score(&mut self, _ids: &[i32], targets: &[i32])
+                 -> Result<Vec<f32>> {
+            Ok(targets.iter().map(|&t| -(t as f32)).collect())
+        }
+        fn supports_decode(&self) -> bool {
+            true
+        }
+        fn begin_decode(&mut self, prompt: &[i32])
+                        -> Result<(SeqId, Vec<f32>)> {
+            let sid = self.next;
+            self.next += 1;
+            let last = *prompt.last().unwrap();
+            self.caches.insert(sid, last);
+            self.live.fetch_add(1, Ordering::SeqCst);
+            Ok((sid, Self::logits_for(last)))
+        }
+        fn decode_step(&mut self, batch: &[(SeqId, i32)])
+                       -> Result<Vec<Vec<f32>>> {
+            batch
+                .iter()
+                .map(|&(sid, tok)| {
+                    let c = self
+                        .caches
+                        .get_mut(&sid)
+                        .ok_or_else(|| anyhow!("unknown seq {sid}"))?;
+                    *c = tok;
+                    Ok(Self::logits_for(tok))
+                })
+                .collect()
+        }
+        fn end_decode(&mut self, sid: SeqId) {
+            if self.caches.remove(&sid).is_some() {
+                self.live.fetch_sub(1, Ordering::SeqCst);
+            }
+        }
+    }
+
+    fn start_gen_mock(live: Arc<AtomicUsize>) -> Server {
+        Server::start(
+            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
+            move || Ok(Box::new(GenMock {
+                next: 0,
+                caches: HashMap::new(),
+                live,
+            })),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn generates_counting_sequences_concurrently() {
+        let live = Arc::new(AtomicUsize::new(0));
+        let s = start_gen_mock(live.clone());
+        let mut handles = Vec::new();
+        for k in 0..6i32 {
+            let c = s.client();
+            handles.push(std::thread::spawn(move || {
+                (k, c.generate(vec![k * 10], 5, 1, 0).unwrap())
+            }));
+        }
+        for h in handles {
+            let (k, r) = h.join().unwrap();
+            let want: Vec<i32> =
+                (1..=5).map(|i| (k * 10 + i) % 100).collect();
+            assert_eq!(r.tokens, want, "client {k}");
+            assert_eq!(r.prompt_len, 1);
+        }
+        // every cache released
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+        let m = s.metrics.lock().unwrap();
+        assert_eq!(m.gen_requests, 6);
+        assert_eq!(m.gen_tokens, 30);
+        assert!(m.decode_steps > 0);
+        assert!(m.mean_decode_batch() >= 1.0);
+    }
+
+    #[test]
+    fn mixed_score_and_generate_traffic() {
+        let live = Arc::new(AtomicUsize::new(0));
+        let s = start_gen_mock(live.clone());
+        let mut gen_handles = Vec::new();
+        let mut score_handles = Vec::new();
+        for k in 0..4i32 {
+            let c = s.client();
+            gen_handles.push(std::thread::spawn(move || {
+                c.generate(vec![k], 4, 1, 0).unwrap()
+            }));
+            let c = s.client();
+            score_handles.push(std::thread::spawn(move || {
+                c.score(vec![1, k + 1]).unwrap()
+            }));
+        }
+        for (k, h) in gen_handles.into_iter().enumerate() {
+            let r = h.join().unwrap();
+            assert_eq!(r.tokens.len(), 4);
+            assert_eq!(r.tokens[0], k as i32 + 1);
+        }
+        for (k, h) in score_handles.into_iter().enumerate() {
+            assert_eq!(h.join().unwrap().logp_sum, -(k as f32 + 1.0));
+        }
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+    }
+
+    #[test]
+    fn generate_validates_before_prefill() {
+        let live = Arc::new(AtomicUsize::new(0));
+        let s = start_gen_mock(live.clone());
+        let c = s.client();
+        // empty prompt
+        assert!(c.generate(vec![], 4, 1, 0).is_err());
+        // zero tokens requested
+        assert!(c.generate(vec![1], 0, 1, 0).is_err());
+        // context overflow (seq_len = 32)
+        assert!(c.generate(vec![0; 30], 10, 1, 0).is_err());
+        // nothing was admitted
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+        assert_eq!(s.metrics.lock().unwrap().gen_requests, 0);
+    }
+
+    #[test]
+    fn generate_on_score_only_engine_errors() {
+        let s = start_mock(4, 1);
+        let c = s.client();
+        let err = c.generate(vec![1, 2], 3, 1, 0).unwrap_err();
+        assert!(format!("{err}").contains("decode"));
+        // score traffic is unaffected
+        assert_eq!(c.score(vec![1, 2]).unwrap().logp_sum, -2.0);
     }
 }

@@ -1,14 +1,17 @@
 //! Correctness harness for the native quantized inference engine
 //! (`lrq::infer`): the integer path must match the reference fake-quant path
 //! (dequantize-then-matmul, the `block_fwd_q` semantics) within f32
-//! accumulation tolerance, and packed W4A8 / W8A8 checkpoints must serve
-//! end-to-end through the existing dynamic batcher. Runs entirely without
-//! artifacts or PJRT.
+//! accumulation tolerance; incremental decode with the quantized KV cache
+//! must reproduce the full-context forward token-for-token; and packed
+//! W4A8 / W8A8 checkpoints must serve both score and generate workloads
+//! end-to-end through the dynamic batcher. Runs entirely without artifacts
+//! or PJRT.
 
 use std::time::Duration;
 
 use lrq::config::Scheme;
 use lrq::data::{Corpus, CorpusConfig};
+use lrq::infer::ops::head_logits;
 use lrq::infer::{calibrate_stats, prepare_native, quantize_weights,
                  reference, start_native_server, NativeModel, QuantBlock,
                  ScaleInit};
@@ -172,6 +175,163 @@ fn native_scorer_serves_w4a8_and_w8a8_through_batcher() {
         // should have coalesced
         assert!(batched || m.mean_batch() >= 1.0);
     }
+}
+
+/// The acceptance-criteria test for the decode path: `decode_step` with a
+/// (quantized) KV cache must reproduce the full-context forward
+/// token-for-token — per-position next-token logits equal within
+/// f32-accumulation tolerance — for W8A8(static), W4A8(per-token), and
+/// weight-only configs.
+#[test]
+fn decode_with_kv_cache_matches_full_context_forward() {
+    let dim = micro_dim();
+    let mut rng = Rng::new(31);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 11));
+    let ids: Vec<i32> =
+        (0..dim.seq).map(|_| rng.below(dim.vocab) as i32).collect();
+    for scheme in schemes_under_test() {
+        let model = prepare_native(&weights, scheme, ScaleInit::GridSearch,
+                                   &corpus, 2, 17, 1).unwrap();
+        // full-context oracle: logits at every position in one pass
+        let hidden = model.forward_hidden(&ids).unwrap();
+        let full = head_logits(&hidden, &model.final_norm, &model.head);
+        // incremental: one token at a time against the growing cache
+        let mut cache = model.new_cache();
+        assert_eq!(cache.is_quantized(), scheme.kv_quant);
+        for (t, &id) in ids.iter().enumerate() {
+            let step = model
+                .decode_step(&[id], std::slice::from_mut(&mut cache))
+                .unwrap();
+            let got = Tensor::new(vec![1, dim.vocab], step.data.clone());
+            let want = Tensor::new(vec![1, dim.vocab], full.row(t).to_vec());
+            let rel = rel_rmse(&got, &want);
+            assert!(rel < 1e-4,
+                    "{} pos {t}: decode vs full-context rel rmse {rel}",
+                    scheme.label());
+        }
+        assert_eq!(cache.len(), dim.seq);
+        assert!(cache.storage_bytes() > 0);
+        // the vectorized prefill must agree with the same oracle: its
+        // last-token logits are the full forward's last row
+        let mut pc = model.new_cache();
+        let plog = model.prefill(&ids, &mut pc).unwrap();
+        assert_eq!(pc.len(), dim.seq);
+        let got = Tensor::new(vec![1, dim.vocab], plog);
+        let want =
+            Tensor::new(vec![1, dim.vocab], full.row(dim.seq - 1).to_vec());
+        let rel = rel_rmse(&got, &want);
+        assert!(rel < 1e-4, "{}: prefill vs full-context rel rmse {rel}",
+                scheme.label());
+        // context-window guard: the cache is full, one more step must fail
+        assert!(model
+            .decode_step(&[ids[0]], std::slice::from_mut(&mut pc))
+            .is_err());
+    }
+}
+
+/// Quantized KV cache stores u8 codes: ~4x smaller than the FP rows the
+/// no-KV-quant scheme caches.
+#[test]
+fn quantized_kv_cache_compresses_storage() {
+    let dim = micro_dim();
+    let mut rng = Rng::new(32);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 12));
+    let ids: Vec<i32> =
+        (0..dim.seq).map(|_| rng.below(dim.vocab) as i32).collect();
+    let q = prepare_native(&weights, Scheme::w4a8_token(), ScaleInit::Rtn,
+                           &corpus, 1, 13, 1).unwrap();
+    let f = prepare_native(&weights,
+                           Scheme::w4a8_token().without_kv_quant(),
+                           ScaleInit::Rtn, &corpus, 1, 13, 1).unwrap();
+    let mut qc = q.new_cache();
+    let mut fc = f.new_cache();
+    q.prefill(&ids, &mut qc).unwrap();
+    f.prefill(&ids, &mut fc).unwrap();
+    assert_eq!(qc.len(), fc.len());
+    assert!(qc.storage_bytes() * 2 < fc.storage_bytes(),
+            "quantized cache {} vs fp cache {}", qc.storage_bytes(),
+            fc.storage_bytes());
+}
+
+/// Batched decode across sequences is the same arithmetic as one-by-one
+/// decode: interleaving two sequences through `decode_step` must equal each
+/// sequence generated alone.
+#[test]
+fn batched_decode_steps_match_single_sequence_decode() {
+    let dim = micro_dim();
+    let mut rng = Rng::new(33);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 14));
+    let model = prepare_native(&weights, Scheme::w4a8_token(),
+                               ScaleInit::Rtn, &corpus, 1, 15, 1).unwrap();
+    let a: Vec<i32> = (0..8).map(|_| rng.below(dim.vocab) as i32).collect();
+    let b: Vec<i32> = (0..8).map(|_| rng.below(dim.vocab) as i32).collect();
+    // batched: both sequences advance together
+    let mut caches = vec![model.new_cache(), model.new_cache()];
+    let mut batched_logits = Vec::new();
+    for t in 0..8 {
+        let step = model.decode_step(&[a[t], b[t]], &mut caches).unwrap();
+        batched_logits.push(step);
+    }
+    // single: each sequence alone
+    for (si, ids) in [&a, &b].into_iter().enumerate() {
+        let mut cache = model.new_cache();
+        for (t, &id) in ids.iter().enumerate() {
+            let solo = model
+                .decode_step(&[id], std::slice::from_mut(&mut cache))
+                .unwrap();
+            assert_eq!(solo.data.as_slice(),
+                       batched_logits[t].row(si),
+                       "seq {si} pos {t}");
+        }
+    }
+}
+
+/// Generation through the dynamic batcher (concurrent clients, decode-step
+/// batching) must match a direct single-sequence greedy decode of the same
+/// prompt, token for token.
+#[test]
+fn generate_through_batcher_matches_direct_decode() {
+    let dim = micro_dim();
+    let mut rng = Rng::new(34);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 16));
+    let model = prepare_native(&weights, Scheme::w4a8_token(),
+                               ScaleInit::GridSearch, &corpus, 1, 19, 1)
+        .unwrap();
+    let local = model.clone();
+    let server = start_native_server(
+        model,
+        ServerConfig { max_batch: 4, max_wait: Duration::from_millis(10) },
+    )
+    .unwrap();
+    let max_new = 6usize;
+    let mut handles = Vec::new();
+    for k in 0..8u64 {
+        let client = server.client();
+        let vocab = dim.vocab;
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(0xCAFE ^ k);
+            let plen = rng.range(1, 7);
+            let prompt: Vec<i32> =
+                (0..plen).map(|_| rng.below(vocab) as i32).collect();
+            let resp = client.generate(prompt.clone(), max_new, 1, k).unwrap();
+            (prompt, resp)
+        }));
+    }
+    for h in handles {
+        let (prompt, resp) = h.join().unwrap();
+        assert_eq!(resp.prompt_len, prompt.len());
+        let want = local.generate(&prompt, max_new, 1, 0).unwrap();
+        // greedy decode is deterministic and batching is bit-exact
+        assert_eq!(resp.tokens, want, "prompt {prompt:?}");
+    }
+    let m = server.metrics.lock().unwrap();
+    assert_eq!(m.gen_requests, 8);
+    assert_eq!(m.gen_tokens, 8 * max_new);
+    assert!(m.decode_steps > 0);
 }
 
 #[test]
