@@ -1,19 +1,26 @@
-//! Native-engine benches: integer GEMM vs the f32 substrate, activation
+//! Native-engine benches: planned vs pre-plan GEMM rates, activation
 //! quantization, end-to-end tokens/sec of the packed-checkpoint forward at
-//! each bit-width and shard count, and incremental-decode tokens/sec with
-//! the quantized KV cache on vs off (the serving-side numbers behind the
-//! Appendix G / Fig. 5 story, without PJRT). Run: `cargo bench --bench
-//! native`.
+//! each bit-width and shard count, prefill + incremental-decode tokens/sec
+//! (planned engine vs the pre-plan per-call-unpack engine, and quantized KV
+//! cache on vs off — the serving-side numbers behind the Appendix G /
+//! Fig. 5 story, without PJRT).
+//!
+//! Run: `cargo bench --bench native` (full) or
+//! `cargo bench --bench native -- --smoke` (CI: seconds, not minutes).
+//! Either way the headline rates land in **`BENCH_native.json`**
+//! (machine-readable: prefill tok/s, decode tok/s, and the planned-vs-
+//! pre-plan decode speedup, per bit-width) so the perf trajectory is
+//! tracked across PRs.
 
 use std::time::Duration;
 
-use lrq::bench::Bench;
+use lrq::bench::{Bench, BenchStats};
 use lrq::config::Scheme;
 use lrq::data::{Corpus, CorpusConfig};
 use lrq::infer::kernels::quantize_acts_per_token;
 use lrq::infer::ops::head_logits;
 use lrq::infer::{prepare_native, quantize_weights, start_native_server,
-                 QuantLinear, ScaleInit};
+                 ExecMode, ExecState, QuantLinear, ScaleInit};
 use lrq::model::{ModelDim, Weights};
 use lrq::quant::{self, grid::rtn_grid, lrq::quantize_int_codes,
                  PackedMatrix};
@@ -21,115 +28,219 @@ use lrq::rng::{sample_top_k, Rng};
 use lrq::serve::ServerConfig;
 use lrq::tensor::Tensor;
 
+/// Headline rates of one bit-width (the JSON row).
+struct BitRates {
+    bits: u32,
+    prefill_tok_s: f64,
+    decode_tok_s: f64,
+    decode_preplan_tok_s: f64,
+}
+
+fn rate(st: &BenchStats) -> f64 {
+    st.units_per_iter.unwrap_or(0.0) / st.mean.as_secs_f64()
+}
+
+fn write_json(path: &str, smoke: bool, cfg: &str, rates: &[BitRates])
+              -> std::io::Result<()> {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"native\",\n  \"smoke\": {smoke},\n  \
+         \"config\": \"{cfg}\",\n"));
+    s.push_str("  \"per_bit\": [\n");
+    for (i, r) in rates.iter().enumerate() {
+        let speedup = r.decode_tok_s / r.decode_preplan_tok_s.max(1e-9);
+        s.push_str(&format!(
+            "    {{\"w_bits\": {}, \"prefill_tok_s\": {:.1}, \
+             \"decode_tok_s\": {:.1}, \"decode_preplan_tok_s\": {:.1}, \
+             \"decode_speedup\": {:.2}}}{}\n",
+            r.bits, r.prefill_tok_s, r.decode_tok_s, r.decode_preplan_tok_s,
+            speedup, if i + 1 < rates.len() { "," } else { "" }));
+    }
+    s.push_str("  ]\n}\n");
+    std::fs::write(path, &s)?;
+    println!("\nwrote {path} ({} bytes)", s.len());
+    Ok(())
+}
+
 fn main() -> anyhow::Result<()> {
-    let mut b = Bench::quick();
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    let mut b = if smoke {
+        // CI mode: keep it compiling and emitting, not statistically deep
+        Bench {
+            warmup: Duration::from_millis(5),
+            budget: Duration::from_millis(40),
+            max_iters: 50,
+            results: Vec::new(),
+        }
+    } else {
+        Bench::quick()
+    };
     let mut rng = Rng::new(77);
 
     // ---- kernel level: one linear, 512 tokens × (352 out, 128 in) --------
-    let (t, cout, cin) = (512usize, 352usize, 128usize);
-    let x = Tensor::randn(&mut rng, &[t, cin], 1.0);
-    let flops = 2.0 * t as f64 * cin as f64 * cout as f64;
-    {
-        let w = Tensor::randn(&mut rng, &[cout, cin], 0.05);
-        b.run_units("f32 matmul_bt baseline 512x128 @ 352x128T",
-                    Some(flops), &mut || {
-            std::hint::black_box(x.matmul_bt(&w));
+    if !smoke {
+        let (t, cout, cin) = (512usize, 352usize, 128usize);
+        let x = Tensor::randn(&mut rng, &[t, cin], 1.0);
+        let flops = 2.0 * t as f64 * cin as f64 * cout as f64;
+        {
+            let w = Tensor::randn(&mut rng, &[cout, cin], 0.05);
+            b.run_units("f32 matmul_bt baseline 512x128 @ 352x128T",
+                        Some(flops), &mut || {
+                std::hint::black_box(x.matmul_bt(&w));
+            });
+        }
+        b.run_units("act quant per-token 512x128", Some((t * cin) as f64),
+                    &mut || {
+            std::hint::black_box(
+                quantize_acts_per_token(&x.data, t, cin, 255.0));
         });
-    }
-    b.run_units("act quant per-token 512x128", Some((t * cin) as f64),
-                &mut || {
-        std::hint::black_box(quantize_acts_per_token(&x.data, t, cin, 255.0));
-    });
-    for bits in [3u32, 4, 8] {
-        let w = Tensor::randn(&mut rng, &[cout, cin], 0.05);
-        let g = rtn_grid(&w, quant::qmax(bits));
-        let codes = quantize_int_codes(&w, &g, None);
-        let pm =
-            PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits)?;
-        let ql = QuantLinear::from_packed(&pm)?;
-        let qa = quantize_acts_per_token(&x.data, t, cin, 255.0);
-        b.run_units(&format!("QuantLinear int8-act GEMM {bits}-bit"),
-                    Some(flops), &mut || {
-            std::hint::black_box(ql.forward_q(&qa, 1).unwrap());
-        });
-        b.run_units(&format!("QuantLinear weight-only GEMM {bits}-bit"),
-                    Some(flops), &mut || {
-            std::hint::black_box(ql.forward_fp(&x.data, t, 1).unwrap());
-        });
+        for bits in [3u32, 4, 8] {
+            let w = Tensor::randn(&mut rng, &[cout, cin], 0.05);
+            let g = rtn_grid(&w, quant::qmax(bits));
+            let codes = quantize_int_codes(&w, &g, None);
+            let pm =
+                PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits)?;
+            let ql = QuantLinear::from_packed(&pm)?;
+            let qa = quantize_acts_per_token(&x.data, t, cin, 255.0);
+            let mut pl = ExecState::new(1);
+            let mut rf = ExecState::new(1).with_mode(ExecMode::Reference);
+            b.run_units(&format!("int GEMM {bits}-bit planned"),
+                        Some(flops), &mut || {
+                std::hint::black_box(
+                    ql.forward_q(&qa, &mut pl.exec()).unwrap());
+            });
+            b.run_units(&format!("int GEMM {bits}-bit pre-plan unpack"),
+                        Some(flops), &mut || {
+                std::hint::black_box(
+                    ql.forward_q(&qa, &mut rf.exec()).unwrap());
+            });
+            b.run_units(&format!("weight-only GEMM {bits}-bit planned"),
+                        Some(flops), &mut || {
+                std::hint::black_box(
+                    ql.forward_fp(&x.data, t, &mut pl.exec()).unwrap());
+            });
+        }
     }
 
-    // ---- model level: tiny config, tokens/sec vs bits and shards ---------
+    // ---- model level: tiny config --------------------------------------
     let dim = ModelDim::builtin("tiny").expect("builtin tiny");
     let weights = Weights::init(&dim, &mut Rng::new(3));
     let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
-    let (ids, tgt) = {
-        let mut r = Rng::new(5);
-        corpus.eval_stream(dim.calib_batch, dim.seq, &mut r)
-    };
-    let tokens = (dim.calib_batch * dim.seq) as f64;
 
-    println!("\ntokens/sec vs bit-width (tiny, W?A8 per-token, 1 shard):");
-    for bits in [3u32, 4, 8] {
-        let scheme = Scheme { w_bits: bits, ..Scheme::w4a8_token() };
-        let model = prepare_native(&weights, scheme, ScaleInit::Rtn, &corpus,
-                                   1, 7, 1)?;
-        b.run_units(&format!("NativeModel forward tiny W{bits}A8"),
-                    Some(tokens), &mut || {
-            std::hint::black_box(model.forward(&ids, &tgt).unwrap());
-        });
-    }
-    println!("\ntokens/sec vs shard count (tiny, W4A8 per-token):");
-    for shards in [1usize, 2, 4, 8] {
-        let model = prepare_native(&weights, Scheme::w4a8_token(),
-                                   ScaleInit::Rtn, &corpus, 1, 7, shards)?;
-        b.run_units(&format!("NativeModel forward tiny W4A8 shards={shards}"),
-                    Some(tokens), &mut || {
-            std::hint::black_box(model.forward(&ids, &tgt).unwrap());
-        });
+    if !smoke {
+        let (ids, tgt) = {
+            let mut r = Rng::new(5);
+            corpus.eval_stream(dim.calib_batch, dim.seq, &mut r)
+        };
+        let tokens = (dim.calib_batch * dim.seq) as f64;
+        println!("\ntokens/sec vs bit-width (tiny, W?A8 per-token, 1 shard):");
+        for bits in [3u32, 4, 8] {
+            let scheme = Scheme { w_bits: bits, ..Scheme::w4a8_token() };
+            let model = prepare_native(&weights, scheme, ScaleInit::Rtn,
+                                       &corpus, 1, 7, 1)?;
+            b.run_units(&format!("NativeModel forward tiny W{bits}A8"),
+                        Some(tokens), &mut || {
+                std::hint::black_box(model.forward(&ids, &tgt).unwrap());
+            });
+        }
+        println!("\ntokens/sec vs shard count (tiny, W4A8 per-token):");
+        for shards in [1usize, 2, 4, 8] {
+            let model = prepare_native(&weights, Scheme::w4a8_token(),
+                                       ScaleInit::Rtn, &corpus, 1, 7,
+                                       shards)?;
+            b.run_units(
+                &format!("NativeModel forward tiny W4A8 shards={shards}"),
+                Some(tokens), &mut || {
+                    std::hint::black_box(model.forward(&ids, &tgt).unwrap());
+                });
+        }
     }
 
-    // ---- decode level: tokens/sec, quantized KV cache on vs off ----------
-    // "cache on" prefills the prompt then decodes token-by-token against
-    // cached u8 K/V codes; "cache off" is the pre-decode serving story —
-    // every new token re-runs the full-context forward over the padded
-    // sequence and reads the logits at its position.
-    println!("\ndecode tokens/sec: kv-cache incremental vs full-context \
-              re-forward (tiny):");
+    // ---- headline: prefill + decode tokens/sec, planned vs pre-plan ------
+    // the pre-plan engine (ExecMode::Reference) is the engine this PR
+    // replaced: per-call tile unpack, scalar dots, no persistent pool
+    println!("\nprefill + decode tokens/sec, planned vs pre-plan engine \
+              (tiny, 1 shard):");
     let prompt: Vec<i32> = {
         let mut r = Rng::new(11);
         (0..8).map(|_| r.below(dim.vocab) as i32).collect()
     };
-    let gen_n = 24usize;
+    let pprompt: Vec<i32> = {
+        let mut r = Rng::new(13);
+        (0..48.min(dim.seq)).map(|_| r.below(dim.vocab) as i32).collect()
+    };
+    let gen_n = if smoke { 6usize } else { 24 };
+    let mut rates: Vec<BitRates> = Vec::new();
     for bits in [3u32, 4, 8] {
         let scheme = Scheme { w_bits: bits, ..Scheme::w4a8_token() };
         let model = prepare_native(&weights, scheme, ScaleInit::Rtn, &corpus,
                                    1, 7, 1)?;
-        b.run_units(&format!("decode W{bits}A8 kv-cache ON"),
-                    Some(gen_n as f64), &mut || {
-            std::hint::black_box(
-                model.generate(&prompt, gen_n, 1, 9).unwrap());
-        });
-        b.run_units(&format!("decode W{bits}A8 kv-cache OFF"),
-                    Some(gen_n as f64), &mut || {
-            let mut r = Rng::new(9);
-            let mut ids = prompt.clone();
-            for _ in 0..gen_n {
-                let mut padded = ids.clone();
-                padded.resize(dim.seq, 0);
-                let hidden = model.forward_hidden(&padded).unwrap();
-                let logits =
-                    head_logits(&hidden, &model.final_norm, &model.head);
-                let next =
-                    sample_top_k(logits.row(ids.len() - 1), 1, &mut r);
-                ids.push(next as i32);
-            }
-            std::hint::black_box(ids);
+        let preplan = model.clone().with_mode(ExecMode::Reference);
+        let prefill_tok_s = rate(b.run_units(
+            &format!("prefill W{bits}A8 {} tokens", pprompt.len()),
+            Some(pprompt.len() as f64), &mut || {
+                let mut c = model.new_cache();
+                std::hint::black_box(model.prefill(&pprompt, &mut c)
+                                     .unwrap());
+            }));
+        let decode_tok_s = rate(b.run_units(
+            &format!("decode W{bits}A8 planned"), Some(gen_n as f64),
+            &mut || {
+                std::hint::black_box(
+                    model.generate(&prompt, gen_n, 1, 9).unwrap());
+            }));
+        let decode_preplan_tok_s = rate(b.run_units(
+            &format!("decode W{bits}A8 pre-plan engine"),
+            Some(gen_n as f64), &mut || {
+                std::hint::black_box(
+                    preplan.generate(&prompt, gen_n, 1, 9).unwrap());
+            }));
+        println!("  -> W{bits}A8 planned decode speedup vs pre-plan: \
+                  {:.2}x", decode_tok_s / decode_preplan_tok_s.max(1e-9));
+        rates.push(BitRates {
+            bits,
+            prefill_tok_s,
+            decode_tok_s,
+            decode_preplan_tok_s,
         });
     }
 
+    // ---- decode level: quantized KV cache on vs full-context re-forward --
+    if !smoke {
+        println!("\ndecode tokens/sec: kv-cache incremental vs full-context \
+                  re-forward (tiny):");
+        for bits in [4u32, 8] {
+            let scheme = Scheme { w_bits: bits, ..Scheme::w4a8_token() };
+            let model = prepare_native(&weights, scheme, ScaleInit::Rtn,
+                                       &corpus, 1, 7, 1)?;
+            b.run_units(&format!("decode W{bits}A8 kv-cache ON"),
+                        Some(gen_n as f64), &mut || {
+                std::hint::black_box(
+                    model.generate(&prompt, gen_n, 1, 9).unwrap());
+            });
+            b.run_units(&format!("decode W{bits}A8 kv-cache OFF"),
+                        Some(gen_n as f64), &mut || {
+                let mut r = Rng::new(9);
+                let mut ids = prompt.clone();
+                for _ in 0..gen_n {
+                    let mut padded = ids.clone();
+                    padded.resize(dim.seq, 0);
+                    let hidden = model.forward_hidden(&padded).unwrap();
+                    let logits =
+                        head_logits(&hidden, &model.final_norm, &model.head);
+                    let next =
+                        sample_top_k(logits.row(ids.len() - 1), 1, &mut r);
+                    ids.push(next as i32);
+                }
+                std::hint::black_box(ids);
+            });
+        }
+    }
+
     // ---- serving level: dynamic batcher over the native scorer -----------
-    println!("\nbatched serving (tiny, W4A8, 2 shards):");
-    {
+    if !smoke {
+        println!("\nbatched serving (tiny, W4A8, 2 shards):");
         let model = prepare_native(&weights, Scheme::w4a8_token(),
                                    ScaleInit::Rtn, &corpus, 1, 7, 2)?;
         let qm = quantize_weights(&weights, 4, ScaleInit::Rtn)?;
@@ -169,5 +280,7 @@ fn main() -> anyhow::Result<()> {
                  wall.as_secs_f64(),
                  m.throughput(wall) * dim.seq as f64, dim.seq);
     }
+
+    write_json("BENCH_native.json", smoke, &dim.name, &rates)?;
     Ok(())
 }

@@ -4,13 +4,22 @@
 //! the same per-token KV-cache quantization post-RoPE, the same FP softmax.
 //!
 //! Activation handling per [`crate::config::ActScheme`]:
-//! * `None` — weight-only: FP activations into the fused unpack-matmul path.
+//! * `None` — weight-only: FP activations into the planned weight-only path.
 //! * `PerTensorStatic` — calibrated `(scale, zp)` from [`BlockStats`]; one
 //!   integer grid per quant point.
 //! * `PerToken` — dynamic asymmetric grid per token row.
 //!
 //! q/k/v (and gate/up) share one quantization of their common input, exactly
 //! like the `ActQuant` dispatch in the L2 model.
+//!
+//! Every forward flavor borrows one [`Exec`] — the persistent worker pool,
+//! the execution mode (planned / pre-plan reference), and the scratch arena.
+//! All block-internal buffers (norms, activation codes, GEMM outputs,
+//! attention workspace) are taken from and returned to the arena, so a
+//! steady-state decode step performs no heap allocation inside the model;
+//! the only escaping allocation is the logits tensor handed to the caller.
+
+use std::cell::RefCell;
 
 use anyhow::{bail, Result};
 
@@ -22,11 +31,11 @@ use crate::rng::{sample_top_k, Rng};
 use crate::tensor::Tensor;
 
 use super::decode::KvCache;
-use super::kernels::{quantize_acts_per_token, quantize_acts_static,
-                     QuantActs};
+use super::kernels::{quantize_acts_per_token_into, quantize_acts_static_into};
 use super::linear::QuantLinear;
-use super::ops::{causal_attention, embed, head_logits, head_logprobs,
-                 rmsnorm, rope, rope_row, silu};
+use super::ops::{causal_attention, embed, embed_into, head_logits,
+                 head_logprobs, rmsnorm_into, rope, rope_row, silu};
+use super::plan::{Exec, ExecMode, ExecState, Scratch};
 
 /// One block's packed linears + FP norms, ready for native execution.
 #[derive(Clone, Debug)]
@@ -40,17 +49,24 @@ pub struct QuantBlock {
 /// How activations enter a linear at one quant point.
 enum ActInput<'a> {
     Fp(&'a Tensor),
-    Quant(QuantActs),
+    Quant(super::kernels::QuantActs),
 }
 
 impl<'a> ActInput<'a> {
-    fn matmul(&self, lin: &QuantLinear, shards: usize) -> Result<Tensor> {
+    fn matmul(&self, lin: &QuantLinear, exec: &mut Exec) -> Result<Tensor> {
         match self {
             ActInput::Fp(x) => {
                 let (rows, _) = x.as_2d();
-                lin.forward_fp(&x.data, rows, shards)
+                lin.forward_fp(&x.data, rows, exec)
             }
-            ActInput::Quant(qa) => lin.forward_q(qa, shards),
+            ActInput::Quant(qa) => lin.forward_q(qa, exec),
+        }
+    }
+
+    /// Return the quantized-code holder to the arena.
+    fn recycle(self, scratch: &mut Scratch) {
+        if let ActInput::Quant(qa) = self {
+            scratch.put_acts(qa);
         }
     }
 }
@@ -74,46 +90,74 @@ impl QuantBlock {
             + (self.norm_attn.len() + self.norm_ffn.len()) * 4
     }
 
-    /// Shared tail of every forward flavor: o-projection + residual +
-    /// gated FFN (quant points o_in, ffn_in, down_in — all position-
-    /// independent). One copy keeps the full-context, decode-step, and
-    /// prefill paths bit-identical by construction.
-    fn attn_ffn_tail(&self, x: &Tensor, attn: &Tensor, stats: &BlockStats,
-                     scheme: &Scheme, shards: usize) -> Result<Tensor> {
-        let oin = self.act_input(attn, 1, stats, scheme); // o_in
-        let o = oin.matmul(&self.ws[3], shards)?;
-        let hidd = x.add(&o);
-
-        let xf = rmsnorm(&hidd, &self.norm_ffn);
-        let fin = self.act_input(&xf, 2, stats, scheme); // ffn_in
-        let g = fin.matmul(&self.ws[4], shards)?;
-        let u = fin.matmul(&self.ws[5], shards)?;
-        let gate = g.zip(&u, |gv, uv| silu(gv) * uv);
-        let din = self.act_input(&gate, 3, stats, scheme); // down_in
-        let down = din.matmul(&self.ws[6], shards)?;
-        Ok(hidd.add(&down))
-    }
-
-    /// Quantize (or pass through) the activations at one quant point.
+    /// Quantize (or pass through) the activations at one quant point. The
+    /// code holder comes from the arena — `recycle` it after the matmuls.
     fn act_input<'a>(&self, x: &'a Tensor, point: usize, stats: &BlockStats,
-                     scheme: &Scheme) -> ActInput<'a> {
+                     scheme: &Scheme, scratch: &mut Scratch) -> ActInput<'a> {
         let (rows, cols) = x.as_2d();
         let qa = qmax(scheme.a_bits);
         match scheme.act {
             ActScheme::None => ActInput::Fp(x),
-            ActScheme::PerToken => ActInput::Quant(
-                quantize_acts_per_token(&x.data, rows, cols, qa)),
+            ActScheme::PerToken => {
+                let mut acts = scratch.take_acts();
+                quantize_acts_per_token_into(&x.data, rows, cols, qa,
+                                             &mut acts);
+                ActInput::Quant(acts)
+            }
             ActScheme::PerTensorStatic => {
                 let (s, z) = stats[point].range.grid(qa);
-                ActInput::Quant(
-                    quantize_acts_static(&x.data, rows, cols, s, z, qa))
+                let mut acts = scratch.take_acts();
+                quantize_acts_static_into(&x.data, rows, cols, s, z, qa,
+                                          &mut acts);
+                ActInput::Quant(acts)
             }
         }
     }
 
+    /// Shared tail of every forward flavor: o-projection + residual +
+    /// gated FFN (quant points o_in, ffn_in, down_in — all position-
+    /// independent). One copy keeps the full-context, decode-step, and
+    /// prefill paths bit-identical by construction. Residuals and the gate
+    /// accumulate in place into arena buffers (f32 addition is commutative,
+    /// so `o += x` is bitwise `x + o`).
+    fn attn_ffn_tail(&self, x: &Tensor, attn: &Tensor, stats: &BlockStats,
+                     scheme: &Scheme, exec: &mut Exec) -> Result<Tensor> {
+        let oin = self.act_input(attn, 1, stats, scheme, exec.scratch); // o_in
+        let o = oin.matmul(&self.ws[3], exec)?;
+        oin.recycle(exec.scratch);
+        let mut hidd = o;
+        for (h, &xv) in hidd.data.iter_mut().zip(&x.data) {
+            *h += xv;
+        }
+
+        let (t, d) = hidd.as_2d();
+        let mut xf = exec.scratch.tensor(t, d);
+        rmsnorm_into(&hidd, &self.norm_ffn, &mut xf.data);
+        let fin = self.act_input(&xf, 2, stats, scheme, exec.scratch); // ffn_in
+        let g = fin.matmul(&self.ws[4], exec)?;
+        let u = fin.matmul(&self.ws[5], exec)?;
+        fin.recycle(exec.scratch);
+        exec.scratch.put_tensor(xf);
+        let mut gate = g;
+        for (gv, &uv) in gate.data.iter_mut().zip(&u.data) {
+            *gv = silu(*gv) * uv;
+        }
+        exec.scratch.put_tensor(u);
+        let din = self.act_input(&gate, 3, stats, scheme, exec.scratch); // down_in
+        let down = din.matmul(&self.ws[6], exec)?;
+        din.recycle(exec.scratch);
+        exec.scratch.put_tensor(gate);
+        let mut out = down;
+        for (ov, &hv) in out.data.iter_mut().zip(&hidd.data) {
+            *ov += hv;
+        }
+        exec.scratch.put_tensor(hidd);
+        Ok(out)
+    }
+
     /// One block forward: `x [b*s, d]` -> `[b*s, d]`.
     pub fn forward(&self, x: &Tensor, dim: &ModelDim, stats: &BlockStats,
-                   scheme: &Scheme, shards: usize) -> Result<Tensor> {
+                   scheme: &Scheme, exec: &mut Exec) -> Result<Tensor> {
         let (t, d) = x.as_2d();
         if d != dim.d || t % dim.seq != 0 {
             bail!("block forward: input [{t}, {d}] vs dim d={} seq={}",
@@ -123,17 +167,24 @@ impl QuantBlock {
         let (s, h, hd) = (dim.seq, dim.heads, dim.head_dim());
 
         // ---- attention ----
-        let xa = rmsnorm(x, &self.norm_attn);
-        let ain = self.act_input(&xa, 0, stats, scheme); // attn_in
-        let mut q = ain.matmul(&self.ws[0], shards)?;
-        let mut k = ain.matmul(&self.ws[1], shards)?;
-        let v = ain.matmul(&self.ws[2], shards)?;
+        let mut xa = exec.scratch.tensor(t, d);
+        rmsnorm_into(x, &self.norm_attn, &mut xa.data);
+        let ain = self.act_input(&xa, 0, stats, scheme, exec.scratch); // attn_in
+        let mut q = ain.matmul(&self.ws[0], exec)?;
+        let mut k = ain.matmul(&self.ws[1], exec)?;
+        let v = ain.matmul(&self.ws[2], exec)?;
+        ain.recycle(exec.scratch);
+        exec.scratch.put_tensor(xa);
         rope(&mut q.data, b, s, h, hd);
         rope(&mut k.data, b, s, h, hd);
         // per-token KV quantization (post-RoPE, over the flattened d)
         let (k, v) = if scheme.kv_quant {
             let qkv = qmax(scheme.kv_bits);
-            (per_token_quant(&k, qkv), per_token_quant(&v, qkv))
+            let kq = per_token_quant(&k, qkv);
+            let vq = per_token_quant(&v, qkv);
+            exec.scratch.put_tensor(k);
+            exec.scratch.put_tensor(v);
+            (kq, vq)
         } else {
             (k, v)
         };
@@ -141,7 +192,12 @@ impl QuantBlock {
             vec![t, d],
             causal_attention(&q.data, &k.data, &v.data, b, s, h, hd),
         );
-        self.attn_ffn_tail(x, &attn, stats, scheme, shards)
+        exec.scratch.put_tensor(q);
+        exec.scratch.put_tensor(k);
+        exec.scratch.put_tensor(v);
+        let out = self.attn_ffn_tail(x, &attn, stats, scheme, exec)?;
+        exec.scratch.put_tensor(attn);
+        Ok(out)
     }
 
     /// One *decode* step: `x [n, d]` holds one new token per sequence (each
@@ -153,9 +209,10 @@ impl QuantBlock {
     /// Every per-row op (RMSNorm, act quant, integer GEMM, RoPE, KV grid) is
     /// the same arithmetic as [`QuantBlock::forward`] applies to that row in
     /// a full-context pass, so incremental decode reproduces the full
-    /// forward token-for-token (see `tests/native.rs`).
+    /// forward token-for-token (see `tests/native.rs`). All intermediates
+    /// live in the arena: zero heap allocation here in steady state.
     pub fn forward_step(&self, x: &Tensor, dim: &ModelDim, stats: &BlockStats,
-                        scheme: &Scheme, shards: usize, layer: usize,
+                        scheme: &Scheme, exec: &mut Exec, layer: usize,
                         caches: &mut [KvCache]) -> Result<Tensor> {
         let (n, d) = x.as_2d();
         if d != dim.d || n != caches.len() {
@@ -165,11 +222,14 @@ impl QuantBlock {
         let (h, hd) = (dim.heads, dim.head_dim());
 
         // ---- attention (incremental) ----
-        let xa = rmsnorm(x, &self.norm_attn);
-        let ain = self.act_input(&xa, 0, stats, scheme); // attn_in
-        let mut q = ain.matmul(&self.ws[0], shards)?;
-        let mut k = ain.matmul(&self.ws[1], shards)?;
-        let v = ain.matmul(&self.ws[2], shards)?;
+        let mut xa = exec.scratch.tensor(n, d);
+        rmsnorm_into(x, &self.norm_attn, &mut xa.data);
+        let ain = self.act_input(&xa, 0, stats, scheme, exec.scratch); // attn_in
+        let mut q = ain.matmul(&self.ws[0], exec)?;
+        let mut k = ain.matmul(&self.ws[1], exec)?;
+        let v = ain.matmul(&self.ws[2], exec)?;
+        ain.recycle(exec.scratch);
+        exec.scratch.put_tensor(xa);
         // per-row RoPE at each sequence's next position
         for (i, cache) in caches.iter().enumerate() {
             let pos = cache.layer_len(layer);
@@ -178,27 +238,32 @@ impl QuantBlock {
         }
         // append quantized K/V (post-RoPE, the cache applies the per-token
         // grid), then attend the new token against its full cached prefix
-        let mut attn = vec![0.0f32; n * d];
-        let mut scratch = Vec::new();
+        let mut attn = exec.scratch.tensor(n, d);
+        let mut att_ws = exec.scratch.take();
         for (i, cache) in caches.iter_mut().enumerate() {
             cache.push(layer, &k.data[i * d..(i + 1) * d],
                        &v.data[i * d..(i + 1) * d]);
             cache.attend(layer, &q.data[i * d..(i + 1) * d], h, hd,
-                         &mut attn[i * d..(i + 1) * d], &mut scratch);
+                         &mut attn.data[i * d..(i + 1) * d], &mut att_ws);
         }
-        let attn = Tensor::new(vec![n, d], attn);
-        self.attn_ffn_tail(x, &attn, stats, scheme, shards)
+        exec.scratch.put(att_ws);
+        exec.scratch.put_tensor(q);
+        exec.scratch.put_tensor(k);
+        exec.scratch.put_tensor(v);
+        let out = self.attn_ffn_tail(x, &attn, stats, scheme, exec)?;
+        exec.scratch.put_tensor(attn);
+        Ok(out)
     }
 
     /// Vectorized prefill of one sequence: `x [p, d]` holds the prompt rows
     /// at positions `0..p`; `cache` must be empty at `layer`. Pushes every
     /// post-RoPE K/V row to the cache and attends over the in-batch causal
-    /// prefix — one multi-row pass, so each packed weight tile is unpacked
-    /// once per tile instead of once per prompt token
-    /// ([`QuantBlock::forward_step`] would pay that `p` times).
+    /// prefix — one multi-row pass, so each weight tile streams once per
+    /// tile instead of once per prompt token ([`QuantBlock::forward_step`]
+    /// would pay that `p` times).
     pub fn forward_prefill(&self, x: &Tensor, dim: &ModelDim,
                            stats: &BlockStats, scheme: &Scheme,
-                           shards: usize, layer: usize, cache: &mut KvCache)
+                           exec: &mut Exec, layer: usize, cache: &mut KvCache)
                            -> Result<Tensor> {
         let (p, d) = x.as_2d();
         if d != dim.d {
@@ -211,11 +276,14 @@ impl QuantBlock {
         let (h, hd) = (dim.heads, dim.head_dim());
 
         // ---- attention (positions 0..p, cache == in-batch prefix) ----
-        let xa = rmsnorm(x, &self.norm_attn);
-        let ain = self.act_input(&xa, 0, stats, scheme); // attn_in
-        let mut q = ain.matmul(&self.ws[0], shards)?;
-        let mut k = ain.matmul(&self.ws[1], shards)?;
-        let v = ain.matmul(&self.ws[2], shards)?;
+        let mut xa = exec.scratch.tensor(p, d);
+        rmsnorm_into(x, &self.norm_attn, &mut xa.data);
+        let ain = self.act_input(&xa, 0, stats, scheme, exec.scratch); // attn_in
+        let mut q = ain.matmul(&self.ws[0], exec)?;
+        let mut k = ain.matmul(&self.ws[1], exec)?;
+        let v = ain.matmul(&self.ws[2], exec)?;
+        ain.recycle(exec.scratch);
+        exec.scratch.put_tensor(xa);
         rope(&mut q.data, 1, p, h, hd);
         rope(&mut k.data, 1, p, h, hd);
         // the cache applies the same per-token grid the fake-quant below
@@ -225,7 +293,11 @@ impl QuantBlock {
         }
         let (k, v) = if scheme.kv_quant {
             let qkv = qmax(scheme.kv_bits);
-            (per_token_quant(&k, qkv), per_token_quant(&v, qkv))
+            let kq = per_token_quant(&k, qkv);
+            let vq = per_token_quant(&v, qkv);
+            exec.scratch.put_tensor(k);
+            exec.scratch.put_tensor(v);
+            (kq, vq)
         } else {
             (k, v)
         };
@@ -233,19 +305,29 @@ impl QuantBlock {
             vec![p, d],
             causal_attention(&q.data, &k.data, &v.data, 1, p, h, hd),
         );
-        self.attn_ffn_tail(x, &attn, stats, scheme, shards)
+        exec.scratch.put_tensor(q);
+        exec.scratch.put_tensor(k);
+        exec.scratch.put_tensor(v);
+        let out = self.attn_ffn_tail(x, &attn, stats, scheme, exec)?;
+        exec.scratch.put_tensor(attn);
+        Ok(out)
     }
 }
 
 /// A full model executing natively from a packed checkpoint: FP embeddings /
 /// norms / head (as in the paper — only block linears are quantized),
-/// integer block linears.
+/// integer block linears. Owns the planned-execution state: the persistent
+/// worker pool (spawned once here, shared by clones) and the scratch arena
+/// (private per clone).
 #[derive(Clone, Debug)]
 pub struct NativeModel {
     pub dim: ModelDim,
     pub scheme: Scheme,
-    /// engine worker threads for row-sharded GEMMs (1 = single-threaded)
+    /// engine worker threads for tile-sharded GEMMs (1 = single-threaded)
     pub shards: usize,
+    /// pool + mode + arena (interior mutability: forward calls recycle
+    /// buffers through `&self`)
+    exec: RefCell<ExecState>,
     pub emb: Tensor,
     pub blocks: Vec<QuantBlock>,
     pub final_norm: Tensor,
@@ -256,6 +338,8 @@ pub struct NativeModel {
 impl NativeModel {
     /// Build from any quantized checkpoint + calibrated stats. `stats` may be
     /// empty for weight-only / per-token schemes (no static grids needed).
+    /// Spawns the persistent worker pool (`shards` threads) and repacks
+    /// every linear into its execution plan — both exactly once, here.
     pub fn from_quantized(qm: &QuantizedModel, stats: &[BlockStats],
                           scheme: Scheme, shards: usize) -> Result<Self> {
         if matches!(scheme.act, ActScheme::PerTensorStatic)
@@ -275,16 +359,35 @@ impl NativeModel {
         } else {
             stats.to_vec()
         };
+        let shards = shards.max(1);
         Ok(NativeModel {
             dim: qm.dim.clone(),
             scheme,
-            shards: shards.max(1),
+            shards,
+            exec: RefCell::new(ExecState::new(shards)),
             emb: qm.emb.clone(),
             blocks: blocks?,
             final_norm: qm.final_norm.clone(),
             head: qm.head.clone(),
             stats,
         })
+    }
+
+    /// Switch execution mode: [`ExecMode::Planned`] (default) or
+    /// [`ExecMode::Reference`] (the pre-plan engine — the bit-exact oracle
+    /// and the bench's speedup baseline).
+    pub fn with_mode(self, mode: ExecMode) -> Self {
+        self.exec.borrow_mut().set_mode(mode);
+        self
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.exec.borrow().mode()
+    }
+
+    /// Worker threads in the persistent pool (shared across clones).
+    pub fn threads(&self) -> usize {
+        self.exec.borrow().threads()
     }
 
     /// Full-context forward to final hidden states: `ids` is `[b * seq]`
@@ -295,9 +398,13 @@ impl NativeModel {
             bail!("forward: ids len {} not a multiple of seq {seq}",
                   ids.len());
         }
+        let mut state = self.exec.borrow_mut();
+        let mut exec = state.exec();
         let mut x = embed(&self.emb, ids)?;
         for (blk, st) in self.blocks.iter().zip(&self.stats) {
-            x = blk.forward(&x, &self.dim, st, &self.scheme, self.shards)?;
+            let nx = blk.forward(&x, &self.dim, st, &self.scheme,
+                                 &mut exec)?;
+            exec.scratch.put_tensor(std::mem::replace(&mut x, nx));
         }
         Ok(x)
     }
@@ -326,7 +433,8 @@ impl NativeModel {
     /// One incremental decode step: `ids[i]` is the next token of the
     /// sequence owning `caches[i]` (sequences may be at different lengths).
     /// Appends each token's quantized K/V to its cache and returns the
-    /// next-token logits `[n, vocab]`.
+    /// next-token logits `[n, vocab]` — the only heap allocation of a
+    /// steady-state step (it escapes to the sampler).
     pub fn decode_step(&self, ids: &[i32], caches: &mut [KvCache])
                        -> Result<Tensor> {
         if ids.is_empty() || ids.len() != caches.len() {
@@ -347,19 +455,28 @@ impl NativeModel {
                        limit", self.dim.seq);
             }
         }
-        let mut x = embed(&self.emb, ids)?;
+        let mut state = self.exec.borrow_mut();
+        let mut exec = state.exec();
+        let mut x = {
+            let mut buf = exec.scratch.take();
+            embed_into(&self.emb, ids, &mut buf)?;
+            Tensor::new(vec![ids.len(), self.dim.d], buf)
+        };
         for (l, (blk, st)) in
             self.blocks.iter().zip(&self.stats).enumerate()
         {
-            x = blk.forward_step(&x, &self.dim, st, &self.scheme,
-                                 self.shards, l, caches)?;
+            let nx = blk.forward_step(&x, &self.dim, st, &self.scheme,
+                                      &mut exec, l, caches)?;
+            exec.scratch.put_tensor(std::mem::replace(&mut x, nx));
         }
-        Ok(head_logits(&x, &self.final_norm, &self.head))
+        let logits = head_logits(&x, &self.final_norm, &self.head);
+        exec.scratch.put_tensor(x);
+        Ok(logits)
     }
 
     /// Fill a fresh `cache` with a prompt in one vectorized multi-row pass
-    /// (each packed weight tile unpacked once, not once per token); returns
-    /// the next-token logits after the last prompt token (`[vocab]`).
+    /// (each weight tile streamed once, not once per token); returns the
+    /// next-token logits after the last prompt token (`[vocab]`).
     pub fn prefill(&self, ids: &[i32], cache: &mut KvCache)
                    -> Result<Vec<f32>> {
         if ids.is_empty() {
@@ -379,16 +496,21 @@ impl NativeModel {
             bail!("prefill: cache already holds {} tokens (needs a fresh \
                    cache)", cache.len());
         }
+        cache.reserve(ids.len());
+        let mut state = self.exec.borrow_mut();
+        let mut exec = state.exec();
         let mut x = embed(&self.emb, ids)?;
         for (l, (blk, st)) in
             self.blocks.iter().zip(&self.stats).enumerate()
         {
-            x = blk.forward_prefill(&x, &self.dim, st, &self.scheme,
-                                    self.shards, l, cache)?;
+            let nx = blk.forward_prefill(&x, &self.dim, st, &self.scheme,
+                                         &mut exec, l, cache)?;
+            exec.scratch.put_tensor(std::mem::replace(&mut x, nx));
         }
         // only the last prompt position feeds the next-token distribution
         let last =
             Tensor::new(vec![1, self.dim.d], x.row(ids.len() - 1).to_vec());
+        exec.scratch.put_tensor(x);
         Ok(head_logits(&last, &self.final_norm, &self.head).data)
     }
 

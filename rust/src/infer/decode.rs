@@ -85,6 +85,19 @@ impl KvTrack {
         }
     }
 
+    /// Grow capacity for `tokens` more rows in one reallocation (prefill
+    /// knows the prompt length up front).
+    fn reserve(&mut self, tokens: usize, d: usize, mode: KvMode) {
+        match mode {
+            KvMode::Fp | KvMode::FakeFp(_) => self.fp.reserve(tokens * d),
+            KvMode::Codes(_) => {
+                self.codes.reserve(tokens * d);
+                self.scale.reserve(tokens);
+                self.zp.reserve(tokens);
+            }
+        }
+    }
+
     fn storage_bytes(&self) -> usize {
         self.codes.len() + (self.scale.len() + self.zp.len()) * 4
             + self.fp.len() * 4
@@ -167,6 +180,17 @@ impl KvCache {
             .iter()
             .map(|l| l.k.storage_bytes() + l.v.storage_bytes())
             .sum()
+    }
+
+    /// Pre-reserve capacity for `tokens` more cached tokens at every layer
+    /// (the vectorized prefill calls this with the prompt length, so the
+    /// cache grows with one reallocation per track instead of
+    /// per-push doublings).
+    pub fn reserve(&mut self, tokens: usize) {
+        for lk in &mut self.layers {
+            lk.k.reserve(tokens, self.d, self.mode);
+            lk.v.reserve(tokens, self.d, self.mode);
+        }
     }
 
     /// Append one post-RoPE `(k, v)` row pair (`[d]` each) at `layer`.

@@ -1,6 +1,9 @@
 //! Integer kernel primitives for the native engine: activation quantization
-//! to u8 codes, unrolled u8×u8→i32 dot products, and fused unpacking of
-//! 3/4/8-bit weight rows into cache-resident tiles.
+//! to u8 codes, the register-blocked 4×4 micro-kernels of the planned path
+//! ([`dot_block_u8`] / [`dot_block_f32_u8`], streaming interleaved
+//! [`crate::infer::plan::TilePlan`] tiles), the scalar dots of the
+//! reference path, and fused unpacking of 3/4/8-bit weight rows into
+//! cache-resident tiles (plan construction + reference execution).
 //!
 //! Grid math is kept bit-identical to [`crate::quant::act`] (the Rust oracle
 //! of the Pallas per-token kernel): same `(hi-lo)/qmax` scale floor, same
@@ -18,8 +21,10 @@ pub const MAX_DOT_K: usize = 33_000;
 
 /// Quantized activations: per-row u8 codes + asymmetric grid,
 /// `x ≈ (code - zp)·scale` per row. For per-tensor static quantization every
-/// row shares the same grid entries.
-#[derive(Clone, Debug)]
+/// row shares the same grid entries. Holders are recyclable through
+/// [`crate::infer::plan::Scratch`] — the `_into` quantizers below refill an
+/// existing instance without reallocating.
+#[derive(Clone, Debug, Default)]
 pub struct QuantActs {
     pub rows: usize,
     pub cols: usize,
@@ -33,15 +38,18 @@ pub struct QuantActs {
     pub code_sum: Vec<i64>,
 }
 
-fn quantize_rows(x: &[f32], rows: usize, cols: usize,
-                 grid_of: impl Fn(&[f32]) -> (f32, f32), qmax: f32)
-                 -> QuantActs {
+fn quantize_rows_into(x: &[f32], rows: usize, cols: usize,
+                      grid_of: impl Fn(&[f32]) -> (f32, f32), qmax: f32,
+                      out: &mut QuantActs) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert!(qmax <= 255.0, "u8 codes need qmax <= 255, got {qmax}");
-    let mut codes = vec![0u8; rows * cols];
-    let mut scale = Vec::with_capacity(rows);
-    let mut zp = Vec::with_capacity(rows);
-    let mut code_sum = Vec::with_capacity(rows);
+    out.rows = rows;
+    out.cols = cols;
+    out.codes.clear();
+    out.codes.resize(rows * cols, 0);
+    out.scale.clear();
+    out.zp.clear();
+    out.code_sum.clear();
     for r in 0..rows {
         let row = &x[r * cols..(r + 1) * cols];
         let (s, z) = grid_of(row);
@@ -51,34 +59,53 @@ fn quantize_rows(x: &[f32], rows: usize, cols: usize,
         debug_assert!(z.fract() == 0.0 && (0.0..=qmax).contains(&z),
                       "zero-point {z} is not an integral code in [0, {qmax}]");
         let zi = z.round();
-        let crow = &mut codes[r * cols..(r + 1) * cols];
+        let crow = &mut out.codes[r * cols..(r + 1) * cols];
         let mut sum = 0i64;
         for (o, &v) in crow.iter_mut().zip(row) {
             let q = crate::quant::act::quantize_code(v, s, zi, qmax) as u8;
             sum += q as i64;
             *o = q;
         }
-        scale.push(s);
-        zp.push(zi as i32);
-        code_sum.push(sum);
+        out.scale.push(s);
+        out.zp.push(zi as i32);
+        out.code_sum.push(sum);
     }
-    QuantActs { rows, cols, codes, scale, zp, code_sum }
 }
 
 /// Per-token asymmetric quantization over the trailing dim — the integer
 /// twin of [`crate::quant::act::per_token_quant`], sharing its grid math
-/// via [`crate::quant::act::row_grid`].
+/// via [`crate::quant::act::row_grid`]. Refills `out` in place (the
+/// scratch-arena path: steady-state decode steps reuse one holder).
+pub fn quantize_acts_per_token_into(x: &[f32], rows: usize, cols: usize,
+                                    qmax: f32, out: &mut QuantActs) {
+    quantize_rows_into(x, rows, cols,
+                       |row| crate::quant::act::row_grid(row, qmax), qmax,
+                       out);
+}
+
+/// Allocating convenience wrapper over [`quantize_acts_per_token_into`].
 pub fn quantize_acts_per_token(x: &[f32], rows: usize, cols: usize,
                                qmax: f32) -> QuantActs {
-    quantize_rows(x, rows, cols,
-                  |row| crate::quant::act::row_grid(row, qmax), qmax)
+    let mut out = QuantActs::default();
+    quantize_acts_per_token_into(x, rows, cols, qmax, &mut out);
+    out
 }
 
 /// Per-tensor static quantization with a calibrated `(scale, zp)` — the
-/// integer twin of [`crate::quant::act::per_tensor_quant`].
+/// integer twin of [`crate::quant::act::per_tensor_quant`]. Refills `out`
+/// in place.
+pub fn quantize_acts_static_into(x: &[f32], rows: usize, cols: usize,
+                                 scale: f32, zp: f32, qmax: f32,
+                                 out: &mut QuantActs) {
+    quantize_rows_into(x, rows, cols, |_| (scale, zp), qmax, out);
+}
+
+/// Allocating convenience wrapper over [`quantize_acts_static_into`].
 pub fn quantize_acts_static(x: &[f32], rows: usize, cols: usize, scale: f32,
                             zp: f32, qmax: f32) -> QuantActs {
-    quantize_rows(x, rows, cols, |_| (scale, zp), qmax)
+    let mut out = QuantActs::default();
+    quantize_acts_static_into(x, rows, cols, scale, zp, qmax, &mut out);
+    out
 }
 
 /// Unrolled u8×u8 dot product with i32 accumulation. Caller guarantees
@@ -107,27 +134,161 @@ pub fn dot_u8(a: &[u8], b: &[u8]) -> i32 {
 }
 
 /// f32×u8 dot product (weight-only path: FP activations, integer weights).
+///
+/// Accumulation is **sequential** over the inner dim — one accumulator, in
+/// index order — because this is the `ExecMode::Reference` twin of the
+/// register-blocked [`dot_block_f32_u8`], whose per-output-element
+/// accumulation is also one sequential chain. Same per-element f32 op order
+/// ⇒ the planned and reference weight-only paths are bit-identical, not
+/// merely close.
 #[inline]
 pub fn dot_f32_u8(x: &[f32], q: &[u8]) -> f32 {
     debug_assert_eq!(x.len(), q.len());
-    let k = x.len();
-    let chunks = k / 4;
-    let mut acc0 = 0.0f32;
-    let mut acc1 = 0.0f32;
-    let mut acc2 = 0.0f32;
-    let mut acc3 = 0.0f32;
-    for c in 0..chunks {
-        let p = c * 4;
-        acc0 += x[p] * q[p] as f32;
-        acc1 += x[p + 1] * q[p + 1] as f32;
-        acc2 += x[p + 2] * q[p + 2] as f32;
-        acc3 += x[p + 3] * q[p + 3] as f32;
-    }
-    let mut acc = acc0 + acc1 + acc2 + acc3;
-    for p in chunks * 4..k {
-        acc += x[p] * q[p] as f32;
+    let mut acc = 0.0f32;
+    for (&xv, &qv) in x.iter().zip(q) {
+        acc += xv * qv as f32;
     }
     acc
+}
+
+/// Register-blocked integer micro-kernel: one `tn × rn` output block
+/// (`tn <= 4` token rows × `rn <= 4` weight rows, [`super::plan::MR`]) per
+/// call, with 16 independent i32 accumulators so the autovectorizer can
+/// keep the whole block in registers.
+///
+/// * `a` — `tn` contiguous token-code rows (`tn * k` bytes, row-major);
+/// * `wt` — one interleaved weight tile, `rn` bytes per column
+///   (`[col][row-in-tile]`, the [`super::plan::TilePlan`] layout), streamed
+///   front to back — no per-call unpack, no strided reads;
+/// * `acc[t * 4 + r]` — dot of token row `t` against weight row `r`.
+///
+/// Integer accumulation is exact, so any tiling of the same codes produces
+/// identical results; the i32 bound is the same [`MAX_DOT_K`] contract as
+/// [`dot_u8`].
+#[inline]
+pub fn dot_block_u8(a: &[u8], k: usize, tn: usize, wt: &[u8], rn: usize,
+                    acc: &mut [i32; 16]) {
+    debug_assert!((1..=4).contains(&tn) && (1..=4).contains(&rn));
+    debug_assert!(a.len() >= tn * k);
+    debug_assert!(wt.len() >= k * rn);
+    acc.fill(0);
+    if tn == 4 && rn == 4 {
+        let (a0, rest) = a.split_at(k);
+        let (a1, rest) = rest.split_at(k);
+        let (a2, a3) = rest.split_at(k);
+        for (c, w) in wt.chunks_exact(4).enumerate() {
+            let w0 = w[0] as i32;
+            let w1 = w[1] as i32;
+            let w2 = w[2] as i32;
+            let w3 = w[3] as i32;
+            let x0 = a0[c] as i32;
+            acc[0] += x0 * w0;
+            acc[1] += x0 * w1;
+            acc[2] += x0 * w2;
+            acc[3] += x0 * w3;
+            let x1 = a1[c] as i32;
+            acc[4] += x1 * w0;
+            acc[5] += x1 * w1;
+            acc[6] += x1 * w2;
+            acc[7] += x1 * w3;
+            let x2 = a2[c] as i32;
+            acc[8] += x2 * w0;
+            acc[9] += x2 * w1;
+            acc[10] += x2 * w2;
+            acc[11] += x2 * w3;
+            let x3 = a3[c] as i32;
+            acc[12] += x3 * w0;
+            acc[13] += x3 * w1;
+            acc[14] += x3 * w2;
+            acc[15] += x3 * w3;
+        }
+    } else if tn == 1 && rn == 4 {
+        // single-token fast path: the shape of every decode step
+        for (c, w) in wt.chunks_exact(4).enumerate() {
+            let x0 = a[c] as i32;
+            acc[0] += x0 * w[0] as i32;
+            acc[1] += x0 * w[1] as i32;
+            acc[2] += x0 * w[2] as i32;
+            acc[3] += x0 * w[3] as i32;
+        }
+    } else {
+        // ragged edge (tail tile rows / tail token rows)
+        for c in 0..k {
+            let wcol = &wt[c * rn..(c + 1) * rn];
+            for t in 0..tn {
+                let xv = a[t * k + c] as i32;
+                let arow = &mut acc[t * 4..t * 4 + rn];
+                for (o, &wv) in arow.iter_mut().zip(wcol) {
+                    *o += xv * wv as i32;
+                }
+            }
+        }
+    }
+}
+
+/// Weight-only twin of [`dot_block_u8`]: FP token rows × interleaved
+/// integer weight tile, 16 independent f32 accumulators. Each output
+/// element is one sequential accumulation chain over the inner dim — the
+/// exact per-element op order of [`dot_f32_u8`], keeping planned and
+/// reference weight-only outputs bit-identical.
+#[inline]
+pub fn dot_block_f32_u8(x: &[f32], k: usize, tn: usize, wt: &[u8], rn: usize,
+                        acc: &mut [f32; 16]) {
+    debug_assert!((1..=4).contains(&tn) && (1..=4).contains(&rn));
+    debug_assert!(x.len() >= tn * k);
+    debug_assert!(wt.len() >= k * rn);
+    acc.fill(0.0);
+    if tn == 4 && rn == 4 {
+        let (x0, rest) = x.split_at(k);
+        let (x1, rest) = rest.split_at(k);
+        let (x2, x3) = rest.split_at(k);
+        for (c, w) in wt.chunks_exact(4).enumerate() {
+            let w0 = w[0] as f32;
+            let w1 = w[1] as f32;
+            let w2 = w[2] as f32;
+            let w3 = w[3] as f32;
+            let v0 = x0[c];
+            acc[0] += v0 * w0;
+            acc[1] += v0 * w1;
+            acc[2] += v0 * w2;
+            acc[3] += v0 * w3;
+            let v1 = x1[c];
+            acc[4] += v1 * w0;
+            acc[5] += v1 * w1;
+            acc[6] += v1 * w2;
+            acc[7] += v1 * w3;
+            let v2 = x2[c];
+            acc[8] += v2 * w0;
+            acc[9] += v2 * w1;
+            acc[10] += v2 * w2;
+            acc[11] += v2 * w3;
+            let v3 = x3[c];
+            acc[12] += v3 * w0;
+            acc[13] += v3 * w1;
+            acc[14] += v3 * w2;
+            acc[15] += v3 * w3;
+        }
+    } else if tn == 1 && rn == 4 {
+        // single-token fast path: the shape of every decode step
+        for (c, w) in wt.chunks_exact(4).enumerate() {
+            let v0 = x[c];
+            acc[0] += v0 * w[0] as f32;
+            acc[1] += v0 * w[1] as f32;
+            acc[2] += v0 * w[2] as f32;
+            acc[3] += v0 * w[3] as f32;
+        }
+    } else {
+        for c in 0..k {
+            let wcol = &wt[c * rn..(c + 1) * rn];
+            for t in 0..tn {
+                let xv = x[t * k + c];
+                let arow = &mut acc[t * 4..t * 4 + rn];
+                for (o, &wv) in arow.iter_mut().zip(wcol) {
+                    *o += xv * wv as f32;
+                }
+            }
+        }
+    }
 }
 
 /// Fused unpack of weight rows `[r0, r0+n)` from an LSB-first packed
@@ -267,6 +428,48 @@ mod tests {
                 .map(|(&x, &y)| x * y as f32).sum();
             let tol = wantf.abs() * 1e-5 + 1e-2;
             assert!((dot_f32_u8(&xf, &b) - wantf).abs() < tol);
+        }
+    }
+
+    #[test]
+    fn block_dots_match_scalar_dots() {
+        let mut rng = Rng::new(8);
+        for k in [1usize, 3, 4, 17, 64, 130] {
+            // 4 token rows of codes + FP rows, one interleaved 4-row tile
+            let a: Vec<u8> =
+                (0..4 * k).map(|_| rng.below(256) as u8).collect();
+            let xf: Vec<f32> = (0..4 * k).map(|_| rng.normal()).collect();
+            let wrows: Vec<Vec<u8>> = (0..4)
+                .map(|_| (0..k).map(|_| rng.below(256) as u8).collect())
+                .collect();
+            for rn in 1..=4usize {
+                // interleave rn weight rows: [col][row-in-tile]
+                let mut wt = vec![0u8; k * rn];
+                for c in 0..k {
+                    for (r, wr) in wrows.iter().take(rn).enumerate() {
+                        wt[c * rn + r] = wr[c];
+                    }
+                }
+                for tn in 1..=4usize {
+                    let mut acc = [0i32; 16];
+                    dot_block_u8(&a[..tn * k], k, tn, &wt, rn, &mut acc);
+                    let mut facc = [0.0f32; 16];
+                    dot_block_f32_u8(&xf[..tn * k], k, tn, &wt, rn,
+                                     &mut facc);
+                    for t in 0..tn {
+                        for (r, wr) in wrows.iter().take(rn).enumerate() {
+                            let want = dot_u8(&a[t * k..(t + 1) * k], wr);
+                            assert_eq!(acc[t * 4 + r], want,
+                                       "k {k} tn {tn} rn {rn} t{t} r{r}");
+                            // identical sequential op order -> bit-equal
+                            let wantf =
+                                dot_f32_u8(&xf[t * k..(t + 1) * k], wr);
+                            assert_eq!(facc[t * 4 + r], wantf,
+                                       "fp k {k} tn {tn} rn {rn} t{t} r{r}");
+                        }
+                    }
+                }
+            }
         }
     }
 

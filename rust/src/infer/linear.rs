@@ -1,31 +1,41 @@
 //! [`QuantLinear`]: one packed linear layer executed natively.
 //!
-//! Two execution paths, both cache-blocked over weight-row tiles that are
-//! unpacked on the fly (the fused unpack-then-matmul of the 3/4-bit formats;
-//! 8-bit tiles are a straight copy):
+//! Two execution paths, both computing `y = x @ W.T` with identical
+//! per-element arithmetic (proved bit-exact in `tests/native.rs`):
 //!
-//! * **integer path** (`forward_q`): quantized activations × quantized
-//!   weights with an exact-integer inner product and a per-channel dequant
-//!   epilogue. With `x ≈ (a - z_a)·s_a` per token and `w = (q - z_w)·s_w`
-//!   per output channel,
+//! * **planned** ([`ExecMode::Planned`], the serving path) — weights were
+//!   repacked once at load into an interleaved [`TilePlan`]; the GEMM
+//!   streams those tiles through the register-blocked 4×4 micro-kernels
+//!   with **zero per-call unpack**, sharded over weight tiles across the
+//!   persistent [`WorkerPool`], every shard writing its output columns
+//!   straight into the final `[rows, cout]` buffer (no stitch copy).
+//! * **reference** ([`ExecMode::Reference`], the pre-plan engine) — single
+//!   threaded, unpacks `ROW_TILE` weight rows from the packed bitstream per
+//!   tile per call, scalar dots. Kept as the bit-exact oracle and the
+//!   baseline of the bench's speedup comparison.
+//!
+//! Dequant epilogues (identical formulas in both paths):
+//!
+//! * **integer path** (`forward_q`): with `x ≈ (a - z_a)·s_a` per token and
+//!   `w = (q - z_w)·s_w` per output channel,
 //!   `y[t,j] = s_a[t]·s_w[j]·(Σ a·q − z_a[t]·Σq_j − z_w[j]·Σa_t + K·z_a[t]·z_w[j])`
-//!   — everything inside the parentheses is integer arithmetic, so the only
-//!   difference from the fake-quant reference is f32 summation order.
+//!   — everything inside the parentheses is integer arithmetic.
 //! * **weight-only path** (`forward_fp`): FP activations × integer weights,
-//!   `y[t,j] = s_w[j]·(Σ x·q − z_w[j]·Σx_t)`.
-//!
-//! Row-sharded parallelism: output channels split into contiguous shards,
-//! one scoped worker thread per shard (the engine is `Send`, unlike PJRT).
+//!   `y[t,j] = s_w[j]·(Σ x·q − z_w[j]·Σx_t)`, with `Σx_t` computed once per
+//!   call into the scratch arena.
 
 use anyhow::{bail, Result};
 
 use crate::quant::PackedMatrix;
 use crate::tensor::Tensor;
 
-use super::kernels::{check_dot_k, dot_f32_u8, dot_u8, shard_ranges,
-                     unpack_rows, QuantActs};
+use super::kernels::{check_dot_k, dot_block_f32_u8, dot_block_u8,
+                     dot_f32_u8, dot_u8, shard_ranges, unpack_rows,
+                     QuantActs};
+use super::plan::{Exec, ExecMode, TilePlan, MR};
+use super::pool::{OutSlice, WorkerPool};
 
-/// Weight rows unpacked per tile: 16 rows × Cin bytes stays L1-resident for
+/// Reference-path tile height: 16 rows × Cin bytes stays L1-resident for
 /// every model dimension this repo ships.
 const ROW_TILE: usize = 16;
 
@@ -35,18 +45,23 @@ pub struct QuantLinear {
     pub cout: usize,
     pub cin: usize,
     pub bits: u32,
+    /// original packed bitstream (checkpoint bytes; reference path input)
     packed: Vec<u8>,
+    /// load-time interleaved repack (planned path input)
+    plan: TilePlan,
     pub scale: Vec<f32>,
     zp: Vec<i32>,
-    /// per-output-row Σ codes (dequant epilogue correction)
+    /// per-output-row Σ codes (dequant epilogue correction), computed
+    /// streaming during the plan repack
     code_sum: Vec<i64>,
 }
 
 impl QuantLinear {
     /// Build from a packed checkpoint matrix (any quantization method).
+    /// Unpacks the bitstream exactly once — into the interleaved tile plan,
+    /// accumulating the epilogue code sums in the same streaming pass.
     pub fn from_packed(pm: &PackedMatrix) -> Result<Self> {
         check_dot_k(pm.cols)?;
-        let codes = pm.unpack();
         let mut zp = Vec::with_capacity(pm.rows);
         for (r, &z) in pm.zp.iter().enumerate() {
             if z < 0.0 || z > 255.0 || z.fract() != 0.0 {
@@ -54,110 +69,187 @@ impl QuantLinear {
             }
             zp.push(z as i32);
         }
-        let mut code_sum = vec![0i64; pm.rows];
-        for r in 0..pm.rows {
-            code_sum[r] = codes[r * pm.cols..(r + 1) * pm.cols]
-                .iter()
-                .map(|&c| c as i64)
-                .sum();
-        }
+        let (plan, code_sum) = TilePlan::from_packed(pm);
         Ok(QuantLinear {
             cout: pm.rows,
             cin: pm.cols,
             bits: pm.bits,
             packed: pm.packed.clone(),
+            plan,
             scale: pm.scale.clone(),
             zp,
             code_sum,
         })
     }
 
-    /// Packed weight bytes (model-size accounting).
+    /// Packed weight bytes (model-size accounting — the checkpoint
+    /// representation, not the in-memory execution plan).
     pub fn storage_bytes(&self) -> usize {
         self.packed.len() + self.scale.len() * 4 + self.zp.len() * 4
     }
 
+    /// In-memory bytes of the load-time execution plan (one u8 per code).
+    pub fn plan_bytes(&self) -> usize {
+        self.plan.plan_bytes()
+    }
+
     /// Integer path: quantized activations -> `[acts.rows, cout]`.
-    pub fn forward_q(&self, acts: &QuantActs, shards: usize) -> Result<Tensor> {
+    pub fn forward_q(&self, acts: &QuantActs, exec: &mut Exec)
+                     -> Result<Tensor> {
         if acts.cols != self.cin {
             bail!("forward_q: act dim {} != Cin {}", acts.cols, self.cin);
         }
-        self.run_sharded(acts.rows, shards, |j0, j1, chunk| {
-            self.gemm_q_chunk(acts, j0, j1, chunk);
-        })
-    }
-
-    /// Weight-only path: FP activations `[rows, cin]` -> `[rows, cout]`.
-    pub fn forward_fp(&self, x: &[f32], rows: usize, shards: usize)
-                      -> Result<Tensor> {
-        if x.len() != rows * self.cin {
-            bail!("forward_fp: x len {} != {rows}x{}", x.len(), self.cin);
-        }
-        let xsum: Vec<f32> = (0..rows)
-            .map(|t| x[t * self.cin..(t + 1) * self.cin].iter().sum())
-            .collect();
-        self.run_sharded(rows, shards, |j0, j1, chunk| {
-            self.gemm_fp_chunk(x, rows, &xsum, j0, j1, chunk);
-        })
-    }
-
-    /// Split output channels into shards, run `body(j0, j1, chunk)` per
-    /// shard (scoped worker threads when `shards > 1`), stitch `[rows, cout]`.
-    fn run_sharded<F>(&self, rows: usize, shards: usize, body: F)
-                      -> Result<Tensor>
-    where
-        F: Fn(usize, usize, &mut [f32]) + Sync,
-    {
-        let ranges = shard_ranges(self.cout, shards);
-        if ranges.len() == 1 {
-            let mut out = vec![0.0f32; rows * self.cout];
-            body(0, self.cout, &mut out);
-            return Ok(Tensor::new(vec![rows, self.cout], out));
-        }
-        let chunks: Vec<Vec<f32>> = std::thread::scope(|s| {
-            let handles: Vec<_> = ranges
-                .iter()
-                .map(|&(j0, j1)| {
-                    let body = &body;
-                    s.spawn(move || {
-                        let mut chunk = vec![0.0f32; rows * (j1 - j0)];
-                        body(j0, j1, &mut chunk);
-                        chunk
-                    })
-                })
-                .collect();
-            handles.into_iter().map(|h| h.join().unwrap()).collect()
-        });
-        // stitch column blocks back into row-major [rows, cout]
-        let mut out = vec![0.0f32; rows * self.cout];
-        for (&(j0, j1), chunk) in ranges.iter().zip(&chunks) {
-            let jw = j1 - j0;
-            for t in 0..rows {
-                out[t * self.cout + j0..t * self.cout + j1]
-                    .copy_from_slice(&chunk[t * jw..(t + 1) * jw]);
+        let rows = acts.rows;
+        let mut out = exec.scratch.zeroed(rows * self.cout);
+        match exec.mode {
+            ExecMode::Planned => {
+                self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
+                    self.gemm_q_tiles(acts, t0, t1, o);
+                });
             }
+            ExecMode::Reference => self.gemm_q_ref(acts, &mut out),
         }
         Ok(Tensor::new(vec![rows, self.cout], out))
     }
 
-    /// Integer GEMM over output channels `[j0, j1)` into a `[rows, j1-j0]`
-    /// chunk.
-    fn gemm_q_chunk(&self, acts: &QuantActs, j0: usize, j1: usize,
-                    chunk: &mut [f32]) {
+    /// Weight-only path: FP activations `[rows, cin]` -> `[rows, cout]`.
+    pub fn forward_fp(&self, x: &[f32], rows: usize, exec: &mut Exec)
+                      -> Result<Tensor> {
+        if x.len() != rows * self.cin {
+            bail!("forward_fp: x len {} != {rows}x{}", x.len(), self.cin);
+        }
+        // per-token Σx in the scratch arena: single-row decode steps
+        // allocate nothing here in steady state
+        let mut xsum = exec.scratch.zeroed(rows);
+        for (t, o) in xsum.iter_mut().enumerate() {
+            *o = x[t * self.cin..(t + 1) * self.cin].iter().sum();
+        }
+        let mut out = exec.scratch.zeroed(rows * self.cout);
+        match exec.mode {
+            ExecMode::Planned => {
+                self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
+                    self.gemm_fp_tiles(x, rows, &xsum, t0, t1, o);
+                });
+            }
+            ExecMode::Reference => self.gemm_fp_ref(x, rows, &xsum, &mut out),
+        }
+        exec.scratch.put(xsum);
+        Ok(Tensor::new(vec![rows, self.cout], out))
+    }
+
+    /// Shard the tile range across the persistent pool; every shard writes
+    /// its (disjoint) output columns directly into `out`.
+    fn run_planned(&self, pool: &WorkerPool, out: &mut [f32],
+                   body: &(dyn Fn(usize, usize, OutSlice) + Sync)) {
+        let tiles = self.plan.n_tiles();
+        let o = OutSlice::new(out);
+        let shards = pool.threads().min(tiles).max(1);
+        if shards <= 1 {
+            body(0, tiles, o);
+            return;
+        }
+        let ranges = shard_ranges(tiles, shards);
+        pool.run(ranges.len(), |i| {
+            let (t0, t1) = ranges[i];
+            body(t0, t1, o);
+        });
+    }
+
+    /// Planned integer GEMM over weight tiles `[t0, t1)`: streams
+    /// interleaved tile bytes through the 4×4 micro-kernel — zero unpack,
+    /// 16 live accumulators — and applies the dequant epilogue into the
+    /// shard's output columns.
+    fn gemm_q_tiles(&self, acts: &QuantActs, t0: usize, t1: usize,
+                    out: OutSlice) {
         let k = self.cin;
-        let jw = j1 - j0;
+        let kk = k as i64;
+        let rows = acts.rows;
+        let mut acc = [0i32; 16];
+        for t in t0..t1 {
+            let (wt, rn) = self.plan.tile(t);
+            let j0 = t * MR;
+            let wsc = &self.scale[j0..j0 + rn];
+            let wzp = &self.zp[j0..j0 + rn];
+            let wsum = &self.code_sum[j0..j0 + rn];
+            let mut tb = 0usize;
+            while tb < rows {
+                let tn = MR.min(rows - tb);
+                dot_block_u8(&acts.codes[tb * k..(tb + tn) * k], k, tn, wt,
+                             rn, &mut acc);
+                for tt in 0..tn {
+                    let row = tb + tt;
+                    let sa = acts.scale[row];
+                    let za = acts.zp[row] as i64;
+                    let asum = acts.code_sum[row];
+                    // SAFETY: this shard owns output columns [j0, j0+rn) —
+                    // tile ranges are disjoint across shards — and
+                    // row*cout + j0 + rn <= rows*cout.
+                    let orow =
+                        unsafe { out.slice(row * self.cout + j0, rn) };
+                    for rr in 0..rn {
+                        let zw = wzp[rr] as i64;
+                        let corr = acc[tt * 4 + rr] as i64 - za * wsum[rr]
+                            - zw * asum
+                            + kk * za * zw;
+                        orow[rr] = sa * wsc[rr] * corr as f32;
+                    }
+                }
+                tb += tn;
+            }
+        }
+    }
+
+    /// Planned weight-only GEMM over weight tiles `[t0, t1)`.
+    fn gemm_fp_tiles(&self, x: &[f32], rows: usize, xsum: &[f32], t0: usize,
+                     t1: usize, out: OutSlice) {
+        let k = self.cin;
+        let mut acc = [0.0f32; 16];
+        for t in t0..t1 {
+            let (wt, rn) = self.plan.tile(t);
+            let j0 = t * MR;
+            let wsc = &self.scale[j0..j0 + rn];
+            let wzp = &self.zp[j0..j0 + rn];
+            let mut tb = 0usize;
+            while tb < rows {
+                let tn = MR.min(rows - tb);
+                dot_block_f32_u8(&x[tb * k..(tb + tn) * k], k, tn, wt, rn,
+                                 &mut acc);
+                for tt in 0..tn {
+                    let row = tb + tt;
+                    // SAFETY: disjoint columns per shard, in bounds (as in
+                    // `gemm_q_tiles`).
+                    let orow =
+                        unsafe { out.slice(row * self.cout + j0, rn) };
+                    for rr in 0..rn {
+                        orow[rr] = wsc[rr]
+                            * (acc[tt * 4 + rr]
+                               - wzp[rr] as f32 * xsum[row]);
+                    }
+                }
+                tb += tn;
+            }
+        }
+    }
+
+    /// Reference integer GEMM (the pre-plan engine): unpack `ROW_TILE`
+    /// weight rows from the packed bitstream per tile **per call**, scalar
+    /// dots, single thread. Identical per-element arithmetic to
+    /// [`QuantLinear::gemm_q_tiles`].
+    fn gemm_q_ref(&self, acts: &QuantActs, out: &mut [f32]) {
+        let k = self.cin;
         let kk = k as i64;
         let mut tile = vec![0u8; ROW_TILE * k];
-        let mut jt = j0;
-        while jt < j1 {
-            let jn = ROW_TILE.min(j1 - jt);
+        let mut jt = 0usize;
+        while jt < self.cout {
+            let jn = ROW_TILE.min(self.cout - jt);
             unpack_rows(&self.packed, self.bits, k, jt, jn, &mut tile);
             for t in 0..acts.rows {
                 let arow = &acts.codes[t * k..(t + 1) * k];
                 let sa = acts.scale[t];
                 let za = acts.zp[t] as i64;
                 let asum = acts.code_sum[t];
-                let orow = &mut chunk[t * jw..(t + 1) * jw];
+                let orow = &mut out[t * self.cout + jt..t * self.cout + jt
+                                    + jn];
                 for jj in 0..jn {
                     let j = jt + jj;
                     let q = &tile[jj * k..(jj + 1) * k];
@@ -165,31 +257,31 @@ impl QuantLinear {
                     let zw = self.zp[j] as i64;
                     let corr =
                         dot - za * self.code_sum[j] - zw * asum + kk * za * zw;
-                    orow[j - j0] = sa * self.scale[j] * corr as f32;
+                    orow[jj] = sa * self.scale[j] * corr as f32;
                 }
             }
             jt += jn;
         }
     }
 
-    /// Weight-only GEMM over output channels `[j0, j1)`.
-    fn gemm_fp_chunk(&self, x: &[f32], rows: usize, xsum: &[f32], j0: usize,
-                     j1: usize, chunk: &mut [f32]) {
+    /// Reference weight-only GEMM (the pre-plan engine).
+    fn gemm_fp_ref(&self, x: &[f32], rows: usize, xsum: &[f32],
+                   out: &mut [f32]) {
         let k = self.cin;
-        let jw = j1 - j0;
         let mut tile = vec![0u8; ROW_TILE * k];
-        let mut jt = j0;
-        while jt < j1 {
-            let jn = ROW_TILE.min(j1 - jt);
+        let mut jt = 0usize;
+        while jt < self.cout {
+            let jn = ROW_TILE.min(self.cout - jt);
             unpack_rows(&self.packed, self.bits, k, jt, jn, &mut tile);
             for t in 0..rows {
                 let xrow = &x[t * k..(t + 1) * k];
-                let orow = &mut chunk[t * jw..(t + 1) * jw];
+                let orow = &mut out[t * self.cout + jt..t * self.cout + jt
+                                    + jn];
                 for jj in 0..jn {
                     let j = jt + jj;
                     let q = &tile[jj * k..(jj + 1) * k];
                     let acc = dot_f32_u8(xrow, q);
-                    orow[j - j0] =
+                    orow[jj] =
                         self.scale[j] * (acc - self.zp[j] as f32 * xsum[t]);
                 }
             }
@@ -202,6 +294,7 @@ impl QuantLinear {
 mod tests {
     use super::*;
     use crate::infer::kernels::quantize_acts_per_token;
+    use crate::infer::plan::ExecState;
     use crate::quant::{self, grid::rtn_grid, lrq::quantize_int_codes};
     use crate::rng::Rng;
     use crate::tensor::Tensor;
@@ -223,12 +316,13 @@ mod tests {
     #[test]
     fn integer_path_matches_dequant_reference() {
         let mut rng = Rng::new(11);
+        let mut ex = ExecState::new(1);
         for bits in [3u32, 4, 8] {
             let (_, pm) = packed(&mut rng, 23, 36, bits);
             let ql = QuantLinear::from_packed(&pm).unwrap();
             let x = Tensor::randn(&mut rng, &[9, 36], 1.0);
             let qa = quantize_acts_per_token(&x.data, 9, 36, 255.0);
-            let got = ql.forward_q(&qa, 1).unwrap();
+            let got = ql.forward_q(&qa, &mut ex.exec()).unwrap();
             // reference: fake-quant acts (dequantized codes) × dequant W
             let mut xq = vec![0.0f32; 9 * 36];
             for t in 0..9 {
@@ -247,11 +341,12 @@ mod tests {
     #[test]
     fn weight_only_path_matches_dequant_reference() {
         let mut rng = Rng::new(12);
+        let mut ex = ExecState::new(1);
         for bits in [3u32, 4, 8] {
             let (_, pm) = packed(&mut rng, 17, 29, bits);
             let ql = QuantLinear::from_packed(&pm).unwrap();
             let x = Tensor::randn(&mut rng, &[7, 29], 1.0);
-            let got = ql.forward_fp(&x.data, 7, 1).unwrap();
+            let got = ql.forward_fp(&x.data, 7, &mut ex.exec()).unwrap();
             let want = x.matmul_bt(&pm.dequant());
             assert!(rel_rmse(&got, &want) < 1e-4,
                     "bits {bits}: {}", rel_rmse(&got, &want));
@@ -259,31 +354,79 @@ mod tests {
     }
 
     #[test]
+    fn planned_path_is_bit_exact_vs_preplan_reference() {
+        // same per-element arithmetic, only layout/threading changes: the
+        // planned micro-kernel path must equal the per-call-unpack engine
+        // bit for bit, for ragged tails included
+        let mut rng = Rng::new(15);
+        for bits in [3u32, 4, 8] {
+            for (cout, cin) in [(23usize, 36usize), (4, 8), (3, 5),
+                                (40, 24)] {
+                let (_, pm) = packed(&mut rng, cout, cin, bits);
+                let ql = QuantLinear::from_packed(&pm).unwrap();
+                for rows in [1usize, 3, 5] {
+                    let x = Tensor::randn(&mut rng, &[rows, cin], 1.0);
+                    let qa =
+                        quantize_acts_per_token(&x.data, rows, cin, 255.0);
+                    let mut pl = ExecState::new(1);
+                    let mut rf =
+                        ExecState::new(1).with_mode(ExecMode::Reference);
+                    let got = ql.forward_q(&qa, &mut pl.exec()).unwrap();
+                    let want = ql.forward_q(&qa, &mut rf.exec()).unwrap();
+                    assert_eq!(got, want,
+                               "q bits {bits} {cout}x{cin} rows {rows}");
+                    let gotf =
+                        ql.forward_fp(&x.data, rows, &mut pl.exec()).unwrap();
+                    let wantf =
+                        ql.forward_fp(&x.data, rows, &mut rf.exec()).unwrap();
+                    assert_eq!(gotf, wantf,
+                               "fp bits {bits} {cout}x{cin} rows {rows}");
+                }
+            }
+        }
+    }
+
+    #[test]
     fn sharding_is_invariant() {
+        // pool-vs-single-thread bit-exactness across shard counts: sharding
+        // only moves tiles across threads; per-element arithmetic (and the
+        // column each shard writes) is identical
         let mut rng = Rng::new(13);
         let (_, pm) = packed(&mut rng, 40, 24, 4);
         let ql = QuantLinear::from_packed(&pm).unwrap();
         let x = Tensor::randn(&mut rng, &[5, 24], 1.0);
         let qa = quantize_acts_per_token(&x.data, 5, 24, 255.0);
-        let one = ql.forward_q(&qa, 1).unwrap();
-        for shards in [2usize, 3, 7, 64] {
-            let many = ql.forward_q(&qa, shards).unwrap();
-            // same per-element arithmetic, only the thread changes
-            assert_eq!(one, many, "shards {shards}");
+        let mut one = ExecState::new(1);
+        let q1 = ql.forward_q(&qa, &mut one.exec()).unwrap();
+        let f1 = ql.forward_fp(&x.data, 5, &mut one.exec()).unwrap();
+        for threads in [2usize, 3, 7, 16] {
+            let mut many = ExecState::new(threads);
+            let qn = ql.forward_q(&qa, &mut many.exec()).unwrap();
+            assert_eq!(q1, qn, "threads {threads}");
+            let fn_ = ql.forward_fp(&x.data, 5, &mut many.exec()).unwrap();
+            assert_eq!(f1, fn_, "threads {threads}");
         }
-        let fone = ql.forward_fp(&x.data, 5, 1).unwrap();
-        let fmany = ql.forward_fp(&x.data, 5, 3).unwrap();
-        assert_eq!(fone, fmany);
     }
 
     #[test]
     fn rejects_mismatched_dims() {
         let mut rng = Rng::new(14);
+        let mut ex = ExecState::new(1);
         let (_, pm) = packed(&mut rng, 8, 16, 8);
         let ql = QuantLinear::from_packed(&pm).unwrap();
         let x = Tensor::randn(&mut rng, &[2, 12], 1.0);
-        assert!(ql.forward_fp(&x.data, 2, 1).is_err());
+        assert!(ql.forward_fp(&x.data, 2, &mut ex.exec()).is_err());
         let qa = quantize_acts_per_token(&x.data, 2, 12, 255.0);
-        assert!(ql.forward_q(&qa, 1).is_err());
+        assert!(ql.forward_q(&qa, &mut ex.exec()).is_err());
+    }
+
+    #[test]
+    fn plan_bytes_accounting() {
+        let mut rng = Rng::new(16);
+        let (_, pm) = packed(&mut rng, 12, 20, 4);
+        let ql = QuantLinear::from_packed(&pm).unwrap();
+        // plan holds one byte per code; storage stays the packed stream
+        assert_eq!(ql.plan_bytes(), 12 * 20);
+        assert_eq!(ql.storage_bytes(), pm.storage_bytes());
     }
 }

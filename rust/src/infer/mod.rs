@@ -9,14 +9,29 @@
 //! [`crate::methods`] (RTN / GPTQ / AWQ / FlexRound / LRQ — they all finalize
 //! into the same packed format).
 //!
+//! Execution is **planned**: model load repacks every linear's packed
+//! bitstream once into an interleaved tile layout ([`plan::TilePlan`]),
+//! spawns the persistent worker pool ([`pool::WorkerPool`]) once, and every
+//! forward call after that streams pre-unpacked tiles through
+//! register-blocked micro-kernels with scratch-arena buffers — zero per-call
+//! unpack, zero thread spawns, no steady-state allocation inside the model
+//! (DESIGN.md §8). The pre-plan engine survives as
+//! [`plan::ExecMode::Reference`], the bit-exact oracle of the planned path.
+//!
 //! Layer map:
 //! * [`kernels`] — primitives: per-token/static activation quantization to u8
-//!   codes (bit-exact with [`crate::quant::act`]'s grid math), unrolled
-//!   u8×u8→i32 dot products, and fused row-tile unpacking of 3/4/8-bit
-//!   packed streams.
-//! * [`linear`] — [`QuantLinear`]: cache-blocked integer GEMM with the
-//!   per-channel dequant epilogue, an FP-activation weight-only path, and
-//!   row-sharded multi-threaded execution.
+//!   codes (bit-exact with [`crate::quant::act`]'s grid math), the 4×4
+//!   register-blocked micro-kernels of the planned path, scalar dots and
+//!   fused row-tile unpacking for the reference path.
+//! * [`plan`] — load-time tile repacking ([`TilePlan`]), the [`Scratch`]
+//!   buffer arena, and the execution context ([`Exec`] / [`ExecState`] /
+//!   [`ExecMode`]) threaded through every forward.
+//! * [`pool`] — [`WorkerPool`]: persistent job-queue + barrier worker
+//!   threads (spawned once at model load), with shards writing their output
+//!   columns straight into the final buffer via [`pool::OutSlice`].
+//! * [`linear`] — [`QuantLinear`]: planned tile-streaming integer GEMM with
+//!   the per-channel dequant epilogue, an FP-activation weight-only path,
+//!   and the pre-plan reference GEMMs.
 //! * [`ops`] — the FP glue of a block: RMSNorm, RoPE, causal attention,
 //!   SiLU, and the scoring head (log-prob extraction).
 //! * [`block`] — [`QuantBlock`] / [`NativeModel`]: the Transformer forward
@@ -36,13 +51,16 @@
 //!   dynamic batcher serves the native engine for both score and generate
 //!   workloads (engine-owned KV caches, decode-step batching across active
 //!   sequences). Unlike the PJRT runtime the engine is `Send`, so it can be
-//!   built outside the engine thread and row-shard across worker threads.
+//!   built outside the engine thread and tile-shard its GEMMs across the
+//!   persistent worker pool it spawned at load.
 
 pub mod block;
 pub mod decode;
 pub mod kernels;
 pub mod linear;
 pub mod ops;
+pub mod plan;
+pub mod pool;
 pub mod quantize;
 pub mod reference;
 pub mod scorer;
@@ -51,6 +69,8 @@ pub use block::{NativeModel, QuantBlock};
 pub use decode::KvCache;
 pub use kernels::QuantActs;
 pub use linear::QuantLinear;
+pub use plan::{Exec, ExecMode, ExecState, Scratch, TilePlan, MR};
+pub use pool::WorkerPool;
 pub use quantize::{calibrate_stats, prepare_native, quantize_weights,
                    ScaleInit};
 pub use scorer::{start_native_server, NativeScorer};

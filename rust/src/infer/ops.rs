@@ -9,11 +9,12 @@ use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
 
-/// RMSNorm over the trailing dim: `x · rsqrt(mean(x²) + 1e-5) · g`.
-pub fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
+/// RMSNorm over the trailing dim into a caller-provided buffer
+/// (`out.len() == x.len()`) — the scratch-arena path of the decode loop.
+pub fn rmsnorm_into(x: &Tensor, g: &Tensor, out: &mut [f32]) {
     let (rows, d) = x.as_2d();
     debug_assert_eq!(g.len(), d);
-    let mut out = vec![0.0f32; x.len()];
+    debug_assert_eq!(out.len(), x.len());
     for r in 0..rows {
         let row = &x.data[r * d..(r + 1) * d];
         let ms: f32 =
@@ -27,6 +28,12 @@ pub fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
             *o = v * inv * gv;
         }
     }
+}
+
+/// RMSNorm over the trailing dim: `x · rsqrt(mean(x²) + 1e-5) · g`.
+pub fn rmsnorm(x: &Tensor, g: &Tensor) -> Tensor {
+    let mut out = vec![0.0f32; x.len()];
+    rmsnorm_into(x, g, &mut out);
     Tensor::new(x.dims.clone(), out)
 }
 
@@ -142,10 +149,13 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// Embedding gather: `ids[b*s]` -> `[b*s, d]`.
-pub fn embed(emb: &Tensor, ids: &[i32]) -> Result<Tensor> {
+/// Embedding gather into a caller-provided buffer (cleared first; capacity
+/// is recycled across decode steps by the scratch arena).
+pub fn embed_into(emb: &Tensor, ids: &[i32], out: &mut Vec<f32>)
+                  -> Result<()> {
     let (vocab, d) = emb.rc();
-    let mut out = Vec::with_capacity(ids.len() * d);
+    out.clear();
+    out.reserve(ids.len() * d);
     for &id in ids {
         let idx = id as usize;
         if id < 0 || idx >= vocab {
@@ -153,6 +163,14 @@ pub fn embed(emb: &Tensor, ids: &[i32]) -> Result<Tensor> {
         }
         out.extend_from_slice(emb.row(idx));
     }
+    Ok(())
+}
+
+/// Embedding gather: `ids[b*s]` -> `[b*s, d]`.
+pub fn embed(emb: &Tensor, ids: &[i32]) -> Result<Tensor> {
+    let d = emb.rc().1;
+    let mut out = Vec::new();
+    embed_into(emb, ids, &mut out)?;
     Ok(Tensor::new(vec![ids.len(), d], out))
 }
 

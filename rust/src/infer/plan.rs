@@ -1,0 +1,318 @@
+//! Load-time execution planning: repack weights once, allocate never.
+//!
+//! The pre-plan engine re-unpacked the same 3/4-bit weight tiles from the
+//! packed bitstream on **every** forward call and allocated fresh scratch
+//! everywhere. This module moves all of that to model-load time:
+//!
+//! * [`TilePlan`] — each [`PackedMatrix`] is unpacked **exactly once**
+//!   (bit-identical codes, streamed tile-by-tile) into an interleaved
+//!   row-tile layout `[tile][col][row-in-tile]` of one `u8` per code. Tile
+//!   `t` holds output rows `[t·MR, t·MR + rn)` (`rn < MR` only for the
+//!   ragged tail) as `rn` bytes per inner-dim column, so the register-
+//!   blocked micro-kernel ([`crate::infer::kernels::dot_block_u8`]) streams
+//!   contiguous bytes with zero per-call unpack work.
+//! * [`Scratch`] — a buffer arena recycled across forward calls: activation
+//!   code buffers, GEMM outputs, attention workspaces. In steady state a
+//!   decode step allocates nothing inside the model — the only escaping
+//!   allocation is the logits tensor handed back to the caller.
+//! * [`Exec`] / [`ExecState`] — the per-engine execution context bundling
+//!   the persistent [`WorkerPool`], the [`ExecMode`], and the arena; every
+//!   forward entry point borrows one `Exec` and threads it down to the
+//!   kernels.
+
+use std::sync::Arc;
+
+use crate::quant::PackedMatrix;
+use crate::tensor::Tensor;
+
+use super::kernels::{unpack_rows, QuantActs};
+use super::pool::WorkerPool;
+
+/// Micro-kernel register block: output rows per weight tile and token rows
+/// per activation block (4×4 = 16 independent accumulators).
+pub const MR: usize = 4;
+
+/// A weight matrix repacked for planned execution (see module docs).
+#[derive(Clone, Debug)]
+pub struct TilePlan {
+    pub cout: usize,
+    pub cin: usize,
+    /// interleaved codes: tile `t` occupies
+    /// `data[t·MR·cin .. t·MR·cin + rn·cin]`, laid out `[col][row-in-tile]`
+    data: Vec<u8>,
+}
+
+impl TilePlan {
+    /// Unpack `pm` once (streaming, `MR` rows at a time — never the full
+    /// `rows × cols` temporary the pre-plan loader materialized) into the
+    /// interleaved layout, computing the per-row code sums of the dequant
+    /// epilogue in the same pass.
+    pub fn from_packed(pm: &PackedMatrix) -> (TilePlan, Vec<i64>) {
+        let (rows, cols) = (pm.rows, pm.cols);
+        let mut data = vec![0u8; rows * cols];
+        let mut code_sum = vec![0i64; rows];
+        let mut rowbuf = vec![0u8; MR * cols];
+        let mut r0 = 0usize;
+        while r0 < rows {
+            let rn = MR.min(rows - r0);
+            unpack_rows(&pm.packed, pm.bits, cols, r0, rn, &mut rowbuf);
+            let tile = &mut data[r0 * cols..(r0 + rn) * cols];
+            for r in 0..rn {
+                let src = &rowbuf[r * cols..(r + 1) * cols];
+                let mut sum = 0i64;
+                for (c, &code) in src.iter().enumerate() {
+                    sum += code as i64;
+                    tile[c * rn + r] = code;
+                }
+                code_sum[r0 + r] = sum;
+            }
+            r0 += rn;
+        }
+        (TilePlan { cout: rows, cin: cols, data }, code_sum)
+    }
+
+    /// Number of row tiles (the last may be ragged).
+    pub fn n_tiles(&self) -> usize {
+        self.cout.div_ceil(MR)
+    }
+
+    /// Tile `t`'s interleaved bytes and its row count `rn`.
+    pub fn tile(&self, t: usize) -> (&[u8], usize) {
+        let r0 = t * MR;
+        let rn = MR.min(self.cout - r0);
+        (&self.data[r0 * self.cin..(r0 + rn) * self.cin], rn)
+    }
+
+    /// Gather output row `j` back to row-major codes (round-trip proofs;
+    /// `out.len() == cin`).
+    pub fn row_codes(&self, j: usize, out: &mut [u8]) {
+        debug_assert_eq!(out.len(), self.cin);
+        let (tile, rn) = self.tile(j / MR);
+        let r = j % MR;
+        for (c, o) in out.iter_mut().enumerate() {
+            *o = tile[c * rn + r];
+        }
+    }
+
+    /// Repacked bytes held by the plan (capacity accounting).
+    pub fn plan_bytes(&self) -> usize {
+        self.data.len()
+    }
+}
+
+/// How a linear executes its GEMMs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ExecMode {
+    /// The planned engine: interleaved tiles + register-blocked micro-kernel
+    /// on the persistent pool.
+    Planned,
+    /// The pre-plan engine (single-threaded, per-call tile unpack) — the
+    /// bit-exact oracle the planned path is tested against, and the
+    /// baseline of the bench's speedup comparison.
+    Reference,
+}
+
+/// Recyclable buffer arena (see module docs). Buffers keep their capacity
+/// across calls, so steady-state forward/decode steps stop allocating once
+/// the working-set sizes have been seen once.
+#[derive(Clone, Debug, Default)]
+pub struct Scratch {
+    f32s: Vec<Vec<f32>>,
+    acts: Vec<QuantActs>,
+}
+
+impl Scratch {
+    /// A zero-filled `f32` buffer of exactly `len` elements.
+    pub fn zeroed(&mut self, len: usize) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v.resize(len, 0.0);
+        v
+    }
+
+    /// An empty `f32` buffer (capacity recycled; caller fills it).
+    pub fn take(&mut self) -> Vec<f32> {
+        let mut v = self.f32s.pop().unwrap_or_default();
+        v.clear();
+        v
+    }
+
+    pub fn put(&mut self, v: Vec<f32>) {
+        self.f32s.push(v);
+    }
+
+    /// A zero-filled `[rows, cols]` tensor backed by a recycled buffer.
+    pub fn tensor(&mut self, rows: usize, cols: usize) -> Tensor {
+        Tensor::new(vec![rows, cols], self.zeroed(rows * cols))
+    }
+
+    /// Recycle a tensor's backing buffer.
+    pub fn put_tensor(&mut self, t: Tensor) {
+        self.f32s.push(t.data);
+    }
+
+    /// A recycled activation-code holder (filled by
+    /// [`crate::infer::kernels::quantize_acts_per_token_into`] /
+    /// [`crate::infer::kernels::quantize_acts_static_into`]).
+    pub fn take_acts(&mut self) -> QuantActs {
+        self.acts.pop().unwrap_or_default()
+    }
+
+    pub fn put_acts(&mut self, a: QuantActs) {
+        self.acts.push(a);
+    }
+
+    /// Buffers currently parked in the arena (tests / introspection).
+    pub fn pooled(&self) -> usize {
+        self.f32s.len() + self.acts.len()
+    }
+}
+
+/// Borrowed execution context threaded through one forward call.
+pub struct Exec<'a> {
+    pub pool: &'a WorkerPool,
+    pub mode: ExecMode,
+    pub scratch: &'a mut Scratch,
+}
+
+/// Owned execution state of one engine instance: the shared persistent pool
+/// plus this instance's private arena. Clones share the pool (threads are
+/// spawned once) but get their own arena.
+#[derive(Clone, Debug)]
+pub struct ExecState {
+    pool: Arc<WorkerPool>,
+    mode: ExecMode,
+    scratch: Scratch,
+}
+
+impl ExecState {
+    /// Fresh state with its own `threads`-wide pool, planned mode.
+    pub fn new(threads: usize) -> ExecState {
+        ExecState::shared(Arc::new(WorkerPool::new(threads)))
+    }
+
+    /// State over an existing pool (model clones, multi-model hosts).
+    pub fn shared(pool: Arc<WorkerPool>) -> ExecState {
+        ExecState { pool, mode: ExecMode::Planned, scratch: Scratch::default() }
+    }
+
+    pub fn with_mode(mut self, mode: ExecMode) -> ExecState {
+        self.mode = mode;
+        self
+    }
+
+    pub fn set_mode(&mut self, mode: ExecMode) {
+        self.mode = mode;
+    }
+
+    pub fn mode(&self) -> ExecMode {
+        self.mode
+    }
+
+    pub fn threads(&self) -> usize {
+        self.pool.threads()
+    }
+
+    /// Borrow the context for one forward call.
+    pub fn exec(&mut self) -> Exec<'_> {
+        Exec {
+            pool: self.pool.as_ref(),
+            mode: self.mode,
+            scratch: &mut self.scratch,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::pack::pack_bits;
+    use crate::rng::Rng;
+
+    fn random_pm(rng: &mut Rng, rows: usize, cols: usize, bits: u32)
+                 -> (Vec<u32>, PackedMatrix) {
+        let codes: Vec<u32> =
+            (0..rows * cols).map(|_| rng.below(1 << bits) as u32).collect();
+        let packed = pack_bits(&codes, bits);
+        let pm = PackedMatrix::new(rows, cols, bits, vec![1.0; rows],
+                                   vec![0.0; rows], packed)
+            .unwrap();
+        (codes, pm)
+    }
+
+    #[test]
+    fn tile_plan_roundtrips_codes_and_sums() {
+        let mut rng = Rng::new(51);
+        for bits in [3u32, 4, 8] {
+            // ragged tails: cout % MR covers 0..=3 across these shapes
+            for (rows, cols) in [(1usize, 5usize), (3, 8), (4, 7), (9, 33),
+                                 (10, 6), (16, 16)] {
+                let (codes, pm) = random_pm(&mut rng, rows, cols, bits);
+                let (plan, sums) = TilePlan::from_packed(&pm);
+                assert_eq!(plan.n_tiles(), rows.div_ceil(MR));
+                assert_eq!(plan.plan_bytes(), rows * cols);
+                let mut row = vec![0u8; cols];
+                for j in 0..rows {
+                    plan.row_codes(j, &mut row);
+                    let mut want_sum = 0i64;
+                    for c in 0..cols {
+                        let want = codes[j * cols + c];
+                        want_sum += want as i64;
+                        assert_eq!(row[c] as u32, want,
+                                   "bits {bits} {rows}x{cols} j{j} c{c}");
+                    }
+                    assert_eq!(sums[j], want_sum, "bits {bits} row {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn tile_layout_is_col_major_within_tile() {
+        let mut rng = Rng::new(52);
+        let (codes, pm) = random_pm(&mut rng, 8, 10, 4);
+        let (plan, _) = TilePlan::from_packed(&pm);
+        let (tile, rn) = plan.tile(1); // rows 4..8
+        assert_eq!(rn, MR);
+        for c in 0..10 {
+            for r in 0..rn {
+                assert_eq!(tile[c * rn + r] as u32, codes[(MR + r) * 10 + c],
+                           "c{c} r{r}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_recycles_capacity() {
+        let mut s = Scratch::default();
+        let v = s.zeroed(64);
+        assert_eq!(v.len(), 64);
+        let p = v.as_ptr();
+        s.put(v);
+        assert_eq!(s.pooled(), 1);
+        let v2 = s.zeroed(32);
+        // same backing allocation comes back (shrunk in place)
+        assert_eq!(v2.as_ptr(), p);
+        assert!(v2.iter().all(|&x| x == 0.0));
+        s.put(v2);
+        let t = s.tensor(4, 8);
+        assert_eq!(t.as_2d(), (4, 8));
+        s.put_tensor(t);
+        let qa = s.take_acts();
+        s.put_acts(qa);
+        assert_eq!(s.pooled(), 2);
+    }
+
+    #[test]
+    fn exec_state_modes_and_threads() {
+        let mut st = ExecState::new(2).with_mode(ExecMode::Reference);
+        assert_eq!(st.mode(), ExecMode::Reference);
+        assert_eq!(st.threads(), 2);
+        st.set_mode(ExecMode::Planned);
+        let e = st.exec();
+        assert_eq!(e.mode, ExecMode::Planned);
+        // clones share the pool but not the arena
+        let st2 = st.clone();
+        assert_eq!(st2.threads(), 2);
+    }
+}

@@ -1,0 +1,334 @@
+//! [`WorkerPool`]: persistent GEMM worker threads, spawned once at model
+//! load and reused by every forward call.
+//!
+//! The pre-plan engine spawned fresh `std::thread::scope` workers per
+//! matmul, so a decode step paid thread spawn/join for every linear — fixed
+//! overhead that dominated the actual integer math at small batch sizes.
+//! This pool replaces that with a **job queue + barrier**: `run(jobs, body)`
+//! publishes a job count and a borrowed body under one mutex, wakes the
+//! workers, lets the *calling thread claim jobs too* (so a 1-thread pool is
+//! just an inline loop with zero synchronization), and returns only when
+//! every job has finished — the barrier that makes lending stack-borrowed
+//! closures to long-lived threads sound.
+//!
+//! Shard outputs are written straight into the final `[rows, cout]` buffer
+//! through [`OutSlice`] (each shard owns a disjoint set of output columns),
+//! which deletes the per-shard chunk allocation *and* the stitch copy the
+//! scoped-thread design needed.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+/// The caller's job body with its borrow lifetime erased. Sound because
+/// [`WorkerPool::run`] blocks until every claimed job has completed, and
+/// workers can only claim while `next < jobs` — state that is reset before
+/// `run` returns.
+#[derive(Clone, Copy)]
+struct Body(&'static (dyn Fn(usize) + Sync));
+
+struct State {
+    /// jobs published for the current `run` (claims allowed while
+    /// `next < jobs`)
+    jobs: usize,
+    /// next unclaimed job index
+    next: usize,
+    /// claimed-or-unclaimed jobs not yet finished (the barrier count)
+    active: usize,
+    body: Option<Body>,
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<State>,
+    /// workers park here between runs
+    go: Condvar,
+    /// the submitting thread parks here until `active == 0`
+    done: Condvar,
+}
+
+/// Persistent worker pool (see module docs). One per engine instance,
+/// shared by clones through an `Arc`.
+pub struct WorkerPool {
+    shared: Arc<Shared>,
+    /// serializes concurrent `run` calls (model clones share the pool)
+    submit: Mutex<()>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `threads - 1` persistent workers (the submitting thread is the
+    /// remaining executor). `threads <= 1` spawns nothing: `run` degrades to
+    /// an inline loop.
+    pub fn new(threads: usize) -> WorkerPool {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(State {
+                jobs: 0,
+                next: 0,
+                active: 0,
+                body: None,
+                panicked: false,
+                shutdown: false,
+            }),
+            go: Condvar::new(),
+            done: Condvar::new(),
+        });
+        let workers = (1..threads.max(1))
+            .map(|i| {
+                let sh = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("lrq-gemm-{i}"))
+                    .spawn(move || worker_loop(&sh))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { shared, submit: Mutex::new(()), workers }
+    }
+
+    /// Total executor count: spawned workers + the submitting thread.
+    pub fn threads(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// Execute `body(0)`, `body(1)`, ..., `body(jobs - 1)` across the pool
+    /// and the calling thread; returns after **all** jobs completed (the
+    /// barrier). Jobs may run in any order and must not call `run`
+    /// re-entrantly. Panics in any job are re-raised here after the barrier.
+    pub fn run<F: Fn(usize) + Sync>(&self, jobs: usize, body: F) {
+        if jobs == 0 {
+            return;
+        }
+        if jobs == 1 || self.workers.is_empty() {
+            // inline fast path: no locks, no wakeups
+            for i in 0..jobs {
+                body(i);
+            }
+            return;
+        }
+        let wide: &(dyn Fn(usize) + Sync) = &body;
+        // SAFETY: lifetime erasure only — the barrier below guarantees no
+        // worker touches `body` after `run` returns (claims require
+        // `next < jobs`, and we wait for `active == 0` before resetting).
+        #[allow(clippy::useless_transmute, clippy::transmute_ptr_to_ptr)]
+        let eternal: &'static (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<&(dyn Fn(usize) + Sync),
+                                  &'static (dyn Fn(usize) + Sync)>(wide)
+        };
+        // a panicking job unwinds through `run` with this guard held,
+        // poisoning the mutex — recover the lock rather than bricking the
+        // pool for every model clone (pool state is reset by the barrier
+        // logic itself, not protected by this guard)
+        let _epoch =
+            self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            debug_assert_eq!(st.active, 0, "pool run while a run is active");
+            st.jobs = jobs;
+            st.next = 0;
+            st.active = jobs;
+            st.body = Some(Body(eternal));
+            self.shared.go.notify_all();
+        }
+        // the submitting thread claims jobs like any worker, then becomes
+        // the barrier waiter once everything is claimed
+        let panicked = loop {
+            let mut st = self.shared.state.lock().unwrap();
+            if st.next < st.jobs {
+                let i = st.next;
+                st.next += 1;
+                drop(st);
+                let ok =
+                    catch_unwind(AssertUnwindSafe(|| body(i))).is_ok();
+                let mut st = self.shared.state.lock().unwrap();
+                if !ok {
+                    st.panicked = true;
+                }
+                st.active -= 1;
+                if st.active == 0 {
+                    self.shared.done.notify_all();
+                }
+            } else {
+                while st.active > 0 {
+                    st = self.shared.done.wait(st).unwrap();
+                }
+                st.body = None;
+                st.jobs = 0;
+                st.next = 0;
+                let p = st.panicked;
+                st.panicked = false;
+                break p;
+            }
+        };
+        if panicked {
+            panic!("worker pool job panicked");
+        }
+    }
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("threads", &self.threads())
+            .finish()
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            self.shared.go.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &Shared) {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        if st.next < st.jobs {
+            let i = st.next;
+            st.next += 1;
+            let body = st.body.expect("job body published while claims remain");
+            drop(st);
+            let ok = catch_unwind(AssertUnwindSafe(|| (body.0)(i))).is_ok();
+            st = shared.state.lock().unwrap();
+            if !ok {
+                st.panicked = true;
+            }
+            st.active -= 1;
+            if st.active == 0 {
+                shared.done.notify_all();
+            }
+        } else {
+            st = shared.go.wait(st).unwrap();
+        }
+    }
+}
+
+/// An unchecked window into a shared output buffer: shards write their
+/// (disjoint) output columns straight into the final `[rows, cout]` tensor,
+/// so there is no per-shard chunk and no stitch copy.
+#[derive(Clone, Copy)]
+pub struct OutSlice {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: raw access is gated behind `OutSlice::slice`, whose contract
+// requires callers to hold disjoint ranges; the pointer itself is fine to
+// move and share across the pool's threads.
+unsafe impl Send for OutSlice {}
+unsafe impl Sync for OutSlice {}
+
+impl OutSlice {
+    pub fn new(out: &mut [f32]) -> OutSlice {
+        OutSlice { ptr: out.as_mut_ptr(), len: out.len() }
+    }
+
+    /// Reborrow `n` elements starting at `off`.
+    ///
+    /// # Safety
+    /// Concurrent holders must use pairwise-disjoint `[off, off + n)`
+    /// ranges, every range in bounds of the buffer `new` wrapped, and no
+    /// slice may outlive the `run` call that received the `OutSlice`.
+    pub unsafe fn slice<'a>(self, off: usize, n: usize) -> &'a mut [f32] {
+        debug_assert!(off + n <= self.len);
+        std::slice::from_raw_parts_mut(self.ptr.add(off), n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_every_job_exactly_once_and_is_reusable() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.threads(), 4);
+        for jobs in [1usize, 3, 4, 17] {
+            let hits: Vec<AtomicUsize> =
+                (0..jobs).map(|_| AtomicUsize::new(0)).collect();
+            pool.run(jobs, |i| {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            });
+            for (i, h) in hits.iter().enumerate() {
+                assert_eq!(h.load(Ordering::SeqCst), 1, "jobs {jobs} i {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn single_thread_pool_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.threads(), 1);
+        let hits = AtomicUsize::new(0);
+        pool.run(5, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 5);
+    }
+
+    #[test]
+    fn out_slice_shards_write_disjoint_ranges() {
+        let pool = WorkerPool::new(3);
+        let mut buf = vec![0.0f32; 24];
+        let out = OutSlice::new(&mut buf);
+        pool.run(4, |i| {
+            // SAFETY: job i owns [6i, 6i + 6) — disjoint and in bounds
+            let s = unsafe { out.slice(i * 6, 6) };
+            for (k, v) in s.iter_mut().enumerate() {
+                *v = (i * 6 + k) as f32;
+            }
+        });
+        for (k, &v) in buf.iter().enumerate() {
+            assert_eq!(v, k as f32);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "worker pool job panicked")]
+    fn job_panic_propagates_after_barrier() {
+        let pool = WorkerPool::new(2);
+        pool.run(4, |i| {
+            if i == 2 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn zero_jobs_is_a_noop() {
+        let pool = WorkerPool::new(2);
+        pool.run(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn pool_survives_a_job_panic() {
+        // a panicking job must not brick the pool (shared by model clones):
+        // the barrier drains the epoch, the submit lock recovers from
+        // poisoning, and the next run proceeds normally
+        let pool = WorkerPool::new(2);
+        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.run(3, |i| {
+                if i == 1 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(caught.is_err());
+        let hits = AtomicUsize::new(0);
+        pool.run(3, |_| {
+            hits.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+}

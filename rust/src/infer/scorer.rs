@@ -9,8 +9,9 @@
 //!
 //! Unlike the PJRT engine the native model is `Send`: it can be
 //! quantized/calibrated on the caller's thread and *moved* into the engine
-//! thread ([`start_native_server`]), and its GEMMs row-shard across
-//! `model.shards` scoped worker threads.
+//! thread ([`start_native_server`]), and its GEMMs tile-shard across the
+//! persistent `model.shards`-wide worker pool spawned once at model load
+//! (no per-call thread spawns — see `infer::pool`).
 
 use std::collections::HashMap;
 

@@ -265,10 +265,21 @@ fn sort_request(r: Request, scores: &mut Vec<ScoreRequest>,
     }
 }
 
+/// Reusable padded-row buffers for score batches: capacities converge after
+/// the first full batch, so the steady-state batch-assembly path stops
+/// allocating (the serving-side twin of the engine's scratch arena).
+#[derive(Default)]
+struct ScoreRows {
+    ids: Vec<i32>,
+    tgt: Vec<i32>,
+    lens: Vec<usize>,
+}
+
 fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
                rx: Receiver<Request>, metrics: Arc<Mutex<Metrics>>) {
     let bcap = cfg.max_batch.min(scorer.batch_size()).max(1);
     let seq = scorer.seq_len();
+    let mut rows = ScoreRows::default();
     let mut scores: Vec<ScoreRequest> = Vec::new();
     let mut gens: VecDeque<GenerateRequest> = VecDeque::new();
     let mut active: Vec<ActiveSeq> = Vec::new();
@@ -321,7 +332,7 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
         if !scores.is_empty() {
             let take = scores.len().min(bcap);
             let batch: Vec<ScoreRequest> = scores.drain(..take).collect();
-            run_batch(scorer, seq, batch, &metrics);
+            run_batch(scorer, seq, batch, &mut rows, &metrics);
         }
         // ---- admit new generations (validate, prefill, first sample) ----
         // bounded admission: each active sequence pins a KV cache in the
@@ -346,7 +357,8 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
 /// can drive it directly) — only valid rows reach the scorer, and
 /// `batch_size` reflects valid rows only.
 fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
-             batch: Vec<ScoreRequest>, metrics: &Arc<Mutex<Metrics>>) {
+             batch: Vec<ScoreRequest>, rows: &mut ScoreRows,
+             metrics: &Arc<Mutex<Metrics>>) {
     // reject invalid requests up front: no batch row, no reported occupancy
     let mut valid: Vec<ScoreRequest> = Vec::with_capacity(batch.len());
     for r in batch {
@@ -368,25 +380,29 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
     } else {
         scorer.batch_size()
     };
-    let mut ids = vec![0i32; b * seq];
-    let mut tgt = vec![0i32; b * seq];
-    let mut lens = vec![0usize; n];
+    // clear + resize refills the reused buffers with the padding zeros
+    rows.ids.clear();
+    rows.ids.resize(b * seq, 0);
+    rows.tgt.clear();
+    rows.tgt.resize(b * seq, 0);
+    rows.lens.clear();
+    rows.lens.resize(n, 0);
     for (i, r) in valid.iter().enumerate() {
-        lens[i] = r.ids.len();
-        ids[i * seq..i * seq + r.ids.len()].copy_from_slice(&r.ids);
+        rows.lens[i] = r.ids.len();
+        rows.ids[i * seq..i * seq + r.ids.len()].copy_from_slice(&r.ids);
         for (p, w) in r.ids[1..].iter().enumerate() {
-            tgt[i * seq + p] = *w;
+            rows.tgt[i * seq + p] = *w;
         }
     }
     let t0 = Instant::now();
-    let scored = scorer.score(&ids, &tgt);
+    let scored = scorer.score(&rows.ids, &rows.tgt);
     let exec_time = t0.elapsed();
     metrics.lock().unwrap().record_batch(exec_time, n);
     match scored {
         Ok(logp) => {
             for (i, r) in valid.into_iter().enumerate() {
                 let row = &logp[i * seq..(i + 1) * seq];
-                let sum: f32 = row[..lens[i] - 1].iter().sum();
+                let sum: f32 = row[..rows.lens[i] - 1].iter().sum();
                 let latency = r.submitted.elapsed();
                 metrics.lock().unwrap().record(latency);
                 let _ = r.resp.send(Ok(ScoreResponse {

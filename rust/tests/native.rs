@@ -13,8 +13,8 @@ use lrq::config::Scheme;
 use lrq::data::{Corpus, CorpusConfig};
 use lrq::infer::ops::head_logits;
 use lrq::infer::{calibrate_stats, prepare_native, quantize_weights,
-                 reference, start_native_server, NativeModel, QuantBlock,
-                 ScaleInit};
+                 reference, start_native_server, ExecMode, ExecState,
+                 NativeModel, QuantBlock, ScaleInit};
 use lrq::model::{ModelDim, Weights};
 use lrq::rng::Rng;
 use lrq::serve::ServerConfig;
@@ -46,13 +46,14 @@ fn native_block_matches_reference_fakequant_path() {
     let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 5));
     let stats = calibrate_stats(&weights, &corpus, 2, 9).unwrap();
     let x = Tensor::randn(&mut rng, &[2 * dim.seq, dim.d], 1.0);
+    let mut ex = ExecState::new(1);
     for scheme in schemes_under_test() {
         let qm = quantize_weights(&weights, scheme.w_bits,
                                   ScaleInit::GridSearch).unwrap();
         for (bi, qb) in qm.blocks.iter().enumerate() {
             let native_block = QuantBlock::from_quantized(qb).unwrap();
             let got = native_block
-                .forward(&x, &dim, &stats[bi], &scheme, 1)
+                .forward(&x, &dim, &stats[bi], &scheme, &mut ex.exec())
                 .unwrap();
             let want = reference::ref_block_forward(
                 &x, &qb.dequant_ws(), &qb.norm_attn, &qb.norm_ffn, &dim,
@@ -94,6 +95,10 @@ fn native_model_matches_reference_end_to_end() {
     }
 }
 
+/// Pool-vs-single-thread bit-exactness: tile-sharding across the persistent
+/// pool only moves tiles between threads; arithmetic per output element (and
+/// the output column each shard writes) is identical, for both the
+/// full-context forward and the cached decode path, integer and weight-only.
 #[test]
 fn sharding_does_not_change_model_output() {
     let dim = micro_dim();
@@ -101,18 +106,81 @@ fn sharding_does_not_change_model_output() {
     let weights = Weights::init(&dim, &mut rng);
     let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 8));
     let (ids, tgt) = corpus.eval_stream(dim.calib_batch, dim.seq, &mut rng);
-    let scheme = Scheme::w4a8_token();
-    let one = prepare_native(&weights, scheme, ScaleInit::Rtn, &corpus, 1,
-                             11, 1).unwrap();
-    let (loss1, logp1) = one.forward(&ids, &tgt).unwrap();
-    for shards in [2usize, 3, 8] {
-        let many = prepare_native(&weights, scheme, ScaleInit::Rtn, &corpus,
-                                  1, 11, shards).unwrap();
-        let (lossn, logpn) = many.forward(&ids, &tgt).unwrap();
-        // row-sharding only moves work across threads; arithmetic per output
-        // element is identical
-        assert_eq!(loss1, lossn, "shards {shards}");
-        assert_eq!(logp1, logpn, "shards {shards}");
+    let step_ids: Vec<i32> =
+        (0..6).map(|_| rng.below(dim.vocab) as i32).collect();
+    for scheme in [Scheme::w4a8_token(), Scheme::weight_only(4)] {
+        let one = prepare_native(&weights, scheme, ScaleInit::Rtn, &corpus,
+                                 1, 11, 1).unwrap();
+        let (loss1, logp1) = one.forward(&ids, &tgt).unwrap();
+        let mut cache1 = one.new_cache();
+        let steps1: Vec<Tensor> = step_ids
+            .iter()
+            .map(|&id| {
+                one.decode_step(&[id], std::slice::from_mut(&mut cache1))
+                    .unwrap()
+            })
+            .collect();
+        for shards in [2usize, 3, 8] {
+            let many = prepare_native(&weights, scheme, ScaleInit::Rtn,
+                                      &corpus, 1, 11, shards).unwrap();
+            assert_eq!(many.threads(), shards);
+            let (lossn, logpn) = many.forward(&ids, &tgt).unwrap();
+            assert_eq!(loss1, lossn, "{} shards {shards}", scheme.label());
+            assert_eq!(logp1, logpn, "{} shards {shards}", scheme.label());
+            let mut cachen = many.new_cache();
+            for (t, &id) in step_ids.iter().enumerate() {
+                let sn = many
+                    .decode_step(&[id], std::slice::from_mut(&mut cachen))
+                    .unwrap();
+                assert_eq!(steps1[t], sn,
+                           "{} shards {shards} step {t}", scheme.label());
+            }
+        }
+    }
+}
+
+/// The planned engine (interleaved tiles + micro-kernel + pool) must equal
+/// the pre-plan reference engine (per-call unpack, scalar dots) **bit for
+/// bit** — same per-element arithmetic, only layout/threading changed — for
+/// W8A8(static), W4A8(per-token), and weight-only, across the full-context
+/// forward, incremental decode, and prefill.
+#[test]
+fn planned_execution_is_bit_exact_vs_preplan_reference() {
+    let dim = micro_dim();
+    let mut rng = Rng::new(35);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 18));
+    let (ids, tgt) = corpus.eval_stream(dim.calib_batch, dim.seq, &mut rng);
+    let step_ids: Vec<i32> =
+        (0..8).map(|_| rng.below(dim.vocab) as i32).collect();
+    for scheme in schemes_under_test() {
+        let planned = prepare_native(&weights, scheme, ScaleInit::GridSearch,
+                                     &corpus, 2, 21, 1).unwrap();
+        assert_eq!(planned.mode(), ExecMode::Planned);
+        let reference = planned.clone().with_mode(ExecMode::Reference);
+        // full-context forward: identical loss and per-position logprobs
+        let (lp, pp) = planned.forward(&ids, &tgt).unwrap();
+        let (lr, pr) = reference.forward(&ids, &tgt).unwrap();
+        assert_eq!(lp, lr, "{} loss", scheme.label());
+        assert_eq!(pp, pr, "{} logp", scheme.label());
+        // incremental decode: identical logits at every step
+        let mut cp = planned.new_cache();
+        let mut cr = reference.new_cache();
+        for (t, &id) in step_ids.iter().enumerate() {
+            let sp = planned
+                .decode_step(&[id], std::slice::from_mut(&mut cp))
+                .unwrap();
+            let sr = reference
+                .decode_step(&[id], std::slice::from_mut(&mut cr))
+                .unwrap();
+            assert_eq!(sp, sr, "{} step {t}", scheme.label());
+        }
+        // vectorized prefill: identical next-token logits
+        let mut fp = planned.new_cache();
+        let mut fr = reference.new_cache();
+        let gp = planned.prefill(&step_ids, &mut fp).unwrap();
+        let gr = reference.prefill(&step_ids, &mut fr).unwrap();
+        assert_eq!(gp, gr, "{} prefill", scheme.label());
     }
 }
 

@@ -2,7 +2,7 @@
 //! unavailable offline; failures reproduce from the printed seed).
 
 use lrq::infer::kernels::quantize_acts_per_token;
-use lrq::infer::QuantLinear;
+use lrq::infer::{ExecMode, ExecState, QuantLinear, TilePlan, MR};
 use lrq::methods::fold::{fold_block, smooth_scales, weight_col_amax};
 use lrq::model::BlockWeights;
 use lrq::quant::{self, grid_search_scales, per_token_quant, rtn_grid,
@@ -223,7 +223,9 @@ fn prop_native_linear_matches_fakequant_reference() {
         let ql = QuantLinear::from_packed(&pm).map_err(|e| e.to_string())?;
         let x = Tensor::randn(rng, &[rows, cin], 1.0);
         let qa = quantize_acts_per_token(&x.data, rows, cin, 255.0);
-        let got = ql.forward_q(&qa, 1).map_err(|e| e.to_string())?;
+        let mut ex = ExecState::new(1);
+        let got = ql.forward_q(&qa, &mut ex.exec())
+            .map_err(|e| e.to_string())?;
         // fake-quant acts = dequantized act codes
         let mut xq = vec![0.0f32; rows * cin];
         for t in 0..rows {
@@ -238,6 +240,95 @@ fn prop_native_linear_matches_fakequant_reference() {
         if rel > 1e-4 {
             return Err(format!(
                 "bits {bits} {rows}x{cin}->{cout}: rel rmse {rel}"));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tile_plan_roundtrips_packed_codes() {
+    // The interleaved [tile][col][row-in-tile] layout must round-trip to
+    // exactly the codes `PackedMatrix::unpack` produces — bits 3/4/8,
+    // ragged tail tiles (cout % MR in 0..=3) included — and the streaming
+    // per-row code sums must match the unpacked rows.
+    check("tile plan round-trips packed codes", 40, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let cout = rng.range(1, 42);
+        let cin = rng.range(1, 70);
+        let ints: Vec<u32> =
+            (0..cout * cin).map(|_| rng.below(1 << bits) as u32).collect();
+        let codes = Tensor::new(vec![cout, cin],
+                                ints.iter().map(|&v| v as f32).collect());
+        let scale = vec![1.0f32; cout];
+        let zp = vec![0.0f32; cout];
+        let pm = PackedMatrix::from_codes(&codes, &scale, &zp, bits)
+            .map_err(|e| e.to_string())?;
+        let flat = pm.unpack();
+        let (plan, sums) = TilePlan::from_packed(&pm);
+        if plan.n_tiles() != cout.div_ceil(MR) {
+            return Err(format!("{} tiles for cout {cout}", plan.n_tiles()));
+        }
+        let mut row = vec![0u8; cin];
+        for j in 0..cout {
+            plan.row_codes(j, &mut row);
+            let mut want_sum = 0i64;
+            for c in 0..cin {
+                let want = flat[j * cin + c];
+                want_sum += want as i64;
+                if row[c] as u32 != want {
+                    return Err(format!(
+                        "bits {bits} {cout}x{cin} j{j} c{c}: plan {} vs \
+                         unpack {want}", row[c]));
+                }
+            }
+            if sums[j] != want_sum {
+                return Err(format!(
+                    "bits {bits} row {j}: streamed sum {} vs {want_sum}",
+                    sums[j]));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_planned_linear_is_bit_exact_vs_reference_across_threads() {
+    // Planned pool execution (any thread count) must equal the pre-plan
+    // reference engine bit for bit on both GEMM paths.
+    check("planned linear bit-exact vs reference", 15, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let rows = rng.range(1, 9);
+        let cout = rng.range(1, 33);
+        let cin = rng.range(4, 64);
+        let w = Tensor::randn(rng, &[cout, cin], 0.1);
+        let g = rtn_grid(&w, quant::qmax(bits));
+        let codes = quant::quantize_int_codes(&w, &g, None);
+        let pm = PackedMatrix::from_codes(&codes, &g.scale, &g.zp, bits)
+            .map_err(|e| e.to_string())?;
+        let ql = QuantLinear::from_packed(&pm).map_err(|e| e.to_string())?;
+        let x = Tensor::randn(rng, &[rows, cin], 1.0);
+        let qa = quantize_acts_per_token(&x.data, rows, cin, 255.0);
+        let mut rf = ExecState::new(1).with_mode(ExecMode::Reference);
+        let want_q =
+            ql.forward_q(&qa, &mut rf.exec()).map_err(|e| e.to_string())?;
+        let want_f = ql.forward_fp(&x.data, rows, &mut rf.exec())
+            .map_err(|e| e.to_string())?;
+        for threads in [1usize, 3] {
+            let mut pl = ExecState::new(threads);
+            let got_q = ql.forward_q(&qa, &mut pl.exec())
+                .map_err(|e| e.to_string())?;
+            if got_q != want_q {
+                return Err(format!(
+                    "q path diverged: bits {bits} {rows}x{cin}->{cout} \
+                     threads {threads}"));
+            }
+            let got_f = ql.forward_fp(&x.data, rows, &mut pl.exec())
+                .map_err(|e| e.to_string())?;
+            if got_f != want_f {
+                return Err(format!(
+                    "fp path diverged: bits {bits} {rows}x{cin}->{cout} \
+                     threads {threads}"));
+            }
         }
         Ok(())
     });
