@@ -8,9 +8,13 @@
 //! Run: `cargo bench --bench native` (full) or
 //! `cargo bench --bench native -- --smoke` (CI: seconds, not minutes).
 //! Either way the headline rates land in **`BENCH_native.json`**
-//! (machine-readable: prefill tok/s, decode tok/s, and the planned-vs-
-//! pre-plan decode speedup, per bit-width) so the perf trajectory is
-//! tracked across PRs.
+//! (machine-readable: prefill tok/s, decode tok/s, the planned-vs-pre-plan
+//! decode speedup per bit-width, and the observability-overhead row —
+//! decode tok/s with the profiler + tracer on vs off) so the perf
+//! trajectory is tracked across PRs. `-- --compare PATH` additionally
+//! gates against a committed baseline: exit nonzero when planned decode
+//! tok/s regresses more than 30% (zero-valued baseline entries are
+//! provisional and skipped).
 
 use std::time::Duration;
 
@@ -36,12 +40,19 @@ struct BitRates {
     decode_preplan_tok_s: f64,
 }
 
+/// Decode tok/s with all instrumentation off vs profiler + tracing on (the
+/// observability overhead row).
+struct ObsRates {
+    decode_tok_s_off: f64,
+    decode_tok_s_on: f64,
+}
+
 fn rate(st: &BenchStats) -> f64 {
     st.units_per_iter.unwrap_or(0.0) / st.mean.as_secs_f64()
 }
 
-fn write_json(path: &str, smoke: bool, cfg: &str, rates: &[BitRates])
-              -> std::io::Result<()> {
+fn write_json(path: &str, smoke: bool, cfg: &str, rates: &[BitRates],
+              obs: &ObsRates) -> std::io::Result<()> {
     let mut s = String::new();
     s.push_str("{\n");
     s.push_str(&format!(
@@ -57,14 +68,29 @@ fn write_json(path: &str, smoke: bool, cfg: &str, rates: &[BitRates])
             r.bits, r.prefill_tok_s, r.decode_tok_s, r.decode_preplan_tok_s,
             speedup, if i + 1 < rates.len() { "," } else { "" }));
     }
-    s.push_str("  ]\n}\n");
+    s.push_str("  ],\n");
+    let overhead_pct = if obs.decode_tok_s_on > 0.0 {
+        (obs.decode_tok_s_off / obs.decode_tok_s_on - 1.0) * 100.0
+    } else {
+        0.0
+    };
+    s.push_str(&format!(
+        "  \"obs\": {{\"decode_tok_s_off\": {:.1}, \
+         \"decode_tok_s_on\": {:.1}, \"overhead_pct\": {:.1}}}\n",
+        obs.decode_tok_s_off, obs.decode_tok_s_on, overhead_pct));
+    s.push_str("}\n");
     std::fs::write(path, &s)?;
     println!("\nwrote {path} ({} bytes)", s.len());
     Ok(())
 }
 
 fn main() -> anyhow::Result<()> {
-    let smoke = std::env::args().any(|a| a == "--smoke");
+    let argv: Vec<String> = std::env::args().collect();
+    let smoke = argv.iter().any(|a| a == "--smoke");
+    let compare = argv
+        .iter()
+        .position(|a| a == "--compare")
+        .and_then(|i| argv.get(i + 1).cloned());
     let mut b = if smoke {
         // CI mode: keep it compiling and emitting, not statistically deep
         Bench {
@@ -206,6 +232,38 @@ fn main() -> anyhow::Result<()> {
         });
     }
 
+    // ---- observability overhead: decode tok/s, instrumentation off vs on -
+    println!("\nobservability overhead (tiny W4A8 decode, profiler + \
+              tracing on vs off):");
+    let obs = {
+        let model = prepare_native(&weights, Scheme::w4a8_token(),
+                                   ScaleInit::Rtn, &corpus, 1, 7, 1)?;
+        let decode_tok_s_off = rate(b.run_units(
+            "decode W4A8 obs off", Some(gen_n as f64), &mut || {
+                std::hint::black_box(
+                    model.generate(&prompt, gen_n, 1, 9).unwrap());
+            }));
+        let tpath = std::env::temp_dir().join(format!(
+            "lrq_bench_obs_{}.trace.json", std::process::id()));
+        lrq::obs::trace::init(&tpath)?;
+        model.profiler().set_enabled(true);
+        let decode_tok_s_on = rate(b.run_units(
+            "decode W4A8 obs on (profile + trace)", Some(gen_n as f64),
+            &mut || {
+                std::hint::black_box(
+                    model.generate(&prompt, gen_n, 1, 9).unwrap());
+            }));
+        model.profiler().set_enabled(false);
+        let events = lrq::obs::trace::shutdown()?;
+        let _ = std::fs::remove_file(&tpath);
+        println!("  -> {:.1} tok/s instrumented vs {:.1} plain \
+                  ({:+.1}% overhead, {events} trace events)",
+                 decode_tok_s_on, decode_tok_s_off,
+                 (decode_tok_s_off / decode_tok_s_on.max(1e-9) - 1.0)
+                     * 100.0);
+        ObsRates { decode_tok_s_off, decode_tok_s_on }
+    };
+
     // ---- decode level: quantized KV cache on vs full-context re-forward --
     if !smoke {
         println!("\ndecode tokens/sec: kv-cache incremental vs full-context \
@@ -281,6 +339,36 @@ fn main() -> anyhow::Result<()> {
                  m.throughput(wall) * dim.seq as f64, dim.seq);
     }
 
-    write_json("BENCH_native.json", smoke, &dim.name, &rates)?;
+    write_json("BENCH_native.json", smoke, &dim.name, &rates, &obs)?;
+
+    // ---- regression gate: --compare BASELINE.json ------------------------
+    // fail (exit nonzero) when planned decode tok/s drops > 30% below the
+    // committed baseline; zero-valued (provisional) baseline entries are
+    // skipped so the gate only arms once real numbers are committed
+    if let Some(bpath) = compare {
+        let baseline = std::fs::read_to_string(&bpath)
+            .map_err(|e| anyhow::anyhow!("reading baseline {bpath}: {e}"))?;
+        let current = std::fs::read_to_string("BENCH_native.json")?;
+        let provisional = lrq::bench::json_key_numbers(
+            &baseline, "decode_tok_s")
+            .iter()
+            .filter(|v| **v <= 0.0)
+            .count();
+        if provisional > 0 {
+            println!("bench compare: skipping {provisional} provisional \
+                      (zero-valued) baseline entries");
+        }
+        let regs = lrq::bench::regressions(&baseline, &current,
+                                           "decode_tok_s", 0.30);
+        if regs.is_empty() {
+            println!("bench compare vs {bpath}: ok");
+        } else {
+            for r in &regs {
+                eprintln!("bench regression: {r}");
+            }
+            anyhow::bail!("{} decode-throughput regression(s) vs {bpath}",
+                          regs.len());
+        }
+    }
     Ok(())
 }

@@ -137,6 +137,63 @@ impl Bench {
     }
 }
 
+/// Every numeric value of `"key"` in `text`, in order of appearance — a
+/// hand-rolled scan (no serde in the offline image) good enough for the flat
+/// `BENCH_*.json` files this repo emits. Non-numeric values and keys that
+/// merely share a prefix (`"key_x"`) are ignored.
+pub fn json_key_numbers(text: &str, key: &str) -> Vec<f64> {
+    let pat = format!("\"{key}\"");
+    let mut out = Vec::new();
+    let mut rest = text;
+    while let Some(i) = rest.find(&pat) {
+        rest = &rest[i + pat.len()..];
+        let after = rest.trim_start();
+        let Some(tail) = after.strip_prefix(':') else { continue };
+        let tail = tail.trim_start();
+        let end = tail
+            .find(|c: char| {
+                !(c.is_ascii_digit()
+                  || matches!(c, '.' | '-' | '+' | 'e' | 'E'))
+            })
+            .unwrap_or(tail.len());
+        if let Ok(v) = tail[..end].parse::<f64>() {
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Compare every `key` value between a baseline JSON and the current run;
+/// returns one message per regression where `current < baseline * (1 -
+/// tolerance)`. Baseline entries `<= 0` are **provisional** (committed
+/// before a measurement existed) and are skipped, so a zero-valued seed
+/// baseline never fails the gate — it only starts enforcing once a real
+/// measurement is committed. An entry-count mismatch is itself reported
+/// (the bench matrix changed without updating the baseline).
+pub fn regressions(baseline: &str, current: &str, key: &str,
+                   tolerance: f64) -> Vec<String> {
+    let b = json_key_numbers(baseline, key);
+    let c = json_key_numbers(current, key);
+    if b.len() != c.len() {
+        return vec![format!(
+            "{key}: baseline has {} entries but current run has {}",
+            b.len(), c.len())];
+    }
+    let mut out = Vec::new();
+    for (i, (bv, cv)) in b.iter().zip(&c).enumerate() {
+        if *bv <= 0.0 {
+            continue; // provisional baseline entry
+        }
+        if *cv < bv * (1.0 - tolerance) {
+            out.push(format!(
+                "{key}[{i}]: {cv:.1} is more than {:.0}% below the \
+                 baseline {bv:.1}",
+                tolerance * 100.0));
+        }
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -163,5 +220,57 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_nanos(500)), "500ns");
         assert!(fmt_dur(Duration::from_micros(1500)).ends_with("ms"));
         assert_eq!(fmt_rate(2_500_000.0), "2.50M");
+    }
+
+    const SAMPLE: &str = r#"{
+      "bench": "native",
+      "per_bit": [
+        {"w_bits": 3, "decode_tok_s": 100.0, "decode_tok_s_on": 90.0},
+        {"w_bits": 4, "decode_tok_s": 200.5},
+        {"w_bits": 8, "decode_tok_s": 300}
+      ]
+    }"#;
+
+    #[test]
+    fn json_key_numbers_scans_exact_keys() {
+        let v = json_key_numbers(SAMPLE, "decode_tok_s");
+        assert_eq!(v, vec![100.0, 200.5, 300.0]);
+        // prefix-sharing key is its own key, not a match of the short one
+        assert_eq!(json_key_numbers(SAMPLE, "decode_tok_s_on"), vec![90.0]);
+        assert_eq!(json_key_numbers(SAMPLE, "w_bits"), vec![3.0, 4.0, 8.0]);
+        // string values and absent keys yield nothing
+        assert!(json_key_numbers(SAMPLE, "bench").is_empty());
+        assert!(json_key_numbers(SAMPLE, "nope").is_empty());
+    }
+
+    #[test]
+    fn regressions_flags_only_real_drops() {
+        let base = r#"{"per_bit": [{"decode_tok_s": 100.0},
+                                   {"decode_tok_s": 200.0}]}"#;
+        // within tolerance: 80 >= 100 * (1 - 0.3)
+        let ok = r#"{"per_bit": [{"decode_tok_s": 80.0},
+                                 {"decode_tok_s": 190.0}]}"#;
+        assert!(regressions(base, ok, "decode_tok_s", 0.30).is_empty());
+        // 60 < 70: one regression, the healthy entry stays quiet
+        let bad = r#"{"per_bit": [{"decode_tok_s": 60.0},
+                                  {"decode_tok_s": 210.0}]}"#;
+        let r = regressions(base, bad, "decode_tok_s", 0.30);
+        assert_eq!(r.len(), 1, "{r:?}");
+        assert!(r[0].contains("60.0"), "{r:?}");
+    }
+
+    #[test]
+    fn regressions_skips_provisional_and_catches_shape_drift() {
+        // zero-valued (provisional) baseline entries never fail the gate
+        let base = r#"{"per_bit": [{"decode_tok_s": 0.0},
+                                   {"decode_tok_s": 0.0}]}"#;
+        let cur = r#"{"per_bit": [{"decode_tok_s": 5.0},
+                                  {"decode_tok_s": 1.0}]}"#;
+        assert!(regressions(base, cur, "decode_tok_s", 0.30).is_empty());
+        // entry-count mismatch is reported as its own failure
+        let short = r#"{"per_bit": [{"decode_tok_s": 5.0}]}"#;
+        let r = regressions(base, short, "decode_tok_s", 0.30);
+        assert_eq!(r.len(), 1);
+        assert!(r[0].contains("entries"), "{r:?}");
     }
 }

@@ -20,12 +20,14 @@
 //! the only escaping allocation is the logits tensor handed to the caller.
 
 use std::cell::RefCell;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::config::{ActScheme, Scheme};
 use crate::coordinator::engine::BlockStats;
 use crate::model::{ModelDim, QuantizedBlock, QuantizedModel};
+use crate::obs::{trace, KernelKind, Profiler, MODEL_SLOT};
 use crate::quant::{act::per_token_quant, qmax};
 use crate::rng::{sample_top_k, Rng};
 use crate::tensor::Tensor;
@@ -93,22 +95,28 @@ impl QuantBlock {
     /// Quantize (or pass through) the activations at one quant point. The
     /// code holder comes from the arena — `recycle` it after the matmuls.
     fn act_input<'a>(&self, x: &'a Tensor, point: usize, stats: &BlockStats,
-                     scheme: &Scheme, scratch: &mut Scratch) -> ActInput<'a> {
+                     scheme: &Scheme, exec: &mut Exec) -> ActInput<'a> {
         let (rows, cols) = x.as_2d();
         let qa = qmax(scheme.a_bits);
         match scheme.act {
             ActScheme::None => ActInput::Fp(x),
             ActScheme::PerToken => {
-                let mut acts = scratch.take_acts();
+                let t0 = exec.prof.t0();
+                let mut acts = exec.scratch.take_acts();
                 quantize_acts_per_token_into(&x.data, rows, cols, qa,
                                              &mut acts);
+                exec.prof.rec(exec.layer, KernelKind::ActQuant, t0,
+                              rows as u64, 0);
                 ActInput::Quant(acts)
             }
             ActScheme::PerTensorStatic => {
+                let t0 = exec.prof.t0();
                 let (s, z) = stats[point].range.grid(qa);
-                let mut acts = scratch.take_acts();
+                let mut acts = exec.scratch.take_acts();
                 quantize_acts_static_into(&x.data, rows, cols, s, z, qa,
                                           &mut acts);
+                exec.prof.rec(exec.layer, KernelKind::ActQuant, t0,
+                              rows as u64, 0);
                 ActInput::Quant(acts)
             }
         }
@@ -122,35 +130,43 @@ impl QuantBlock {
     /// so `o += x` is bitwise `x + o`).
     fn attn_ffn_tail(&self, x: &Tensor, attn: &Tensor, stats: &BlockStats,
                      scheme: &Scheme, exec: &mut Exec) -> Result<Tensor> {
-        let oin = self.act_input(attn, 1, stats, scheme, exec.scratch); // o_in
+        let oin = self.act_input(attn, 1, stats, scheme, exec); // o_in
         let o = oin.matmul(&self.ws[3], exec)?;
         oin.recycle(exec.scratch);
         let mut hidd = o;
+        let t0 = exec.prof.t0();
         for (h, &xv) in hidd.data.iter_mut().zip(&x.data) {
             *h += xv;
         }
-
         let (t, d) = hidd.as_2d();
+        exec.prof.rec(exec.layer, KernelKind::Eltwise, t0, t as u64, 0);
+
         let mut xf = exec.scratch.tensor(t, d);
+        let t0 = exec.prof.t0();
         rmsnorm_into(&hidd, &self.norm_ffn, &mut xf.data);
-        let fin = self.act_input(&xf, 2, stats, scheme, exec.scratch); // ffn_in
+        exec.prof.rec(exec.layer, KernelKind::Norm, t0, t as u64, 0);
+        let fin = self.act_input(&xf, 2, stats, scheme, exec); // ffn_in
         let g = fin.matmul(&self.ws[4], exec)?;
         let u = fin.matmul(&self.ws[5], exec)?;
         fin.recycle(exec.scratch);
         exec.scratch.put_tensor(xf);
         let mut gate = g;
+        let t0 = exec.prof.t0();
         for (gv, &uv) in gate.data.iter_mut().zip(&u.data) {
             *gv = silu(*gv) * uv;
         }
+        exec.prof.rec(exec.layer, KernelKind::Eltwise, t0, t as u64, 0);
         exec.scratch.put_tensor(u);
-        let din = self.act_input(&gate, 3, stats, scheme, exec.scratch); // down_in
+        let din = self.act_input(&gate, 3, stats, scheme, exec); // down_in
         let down = din.matmul(&self.ws[6], exec)?;
         din.recycle(exec.scratch);
         exec.scratch.put_tensor(gate);
         let mut out = down;
+        let t0 = exec.prof.t0();
         for (ov, &hv) in out.data.iter_mut().zip(&hidd.data) {
             *ov += hv;
         }
+        exec.prof.rec(exec.layer, KernelKind::Eltwise, t0, t as u64, 0);
         exec.scratch.put_tensor(hidd);
         Ok(out)
     }
@@ -168,16 +184,21 @@ impl QuantBlock {
 
         // ---- attention ----
         let mut xa = exec.scratch.tensor(t, d);
+        let t0 = exec.prof.t0();
         rmsnorm_into(x, &self.norm_attn, &mut xa.data);
-        let ain = self.act_input(&xa, 0, stats, scheme, exec.scratch); // attn_in
+        exec.prof.rec(exec.layer, KernelKind::Norm, t0, t as u64, 0);
+        let ain = self.act_input(&xa, 0, stats, scheme, exec); // attn_in
         let mut q = ain.matmul(&self.ws[0], exec)?;
         let mut k = ain.matmul(&self.ws[1], exec)?;
         let v = ain.matmul(&self.ws[2], exec)?;
         ain.recycle(exec.scratch);
         exec.scratch.put_tensor(xa);
+        let t0 = exec.prof.t0();
         rope(&mut q.data, b, s, h, hd);
         rope(&mut k.data, b, s, h, hd);
+        exec.prof.rec(exec.layer, KernelKind::Rope, t0, t as u64, 0);
         // per-token KV quantization (post-RoPE, over the flattened d)
+        let t0 = exec.prof.t0();
         let (k, v) = if scheme.kv_quant {
             let qkv = qmax(scheme.kv_bits);
             let kq = per_token_quant(&k, qkv);
@@ -192,6 +213,7 @@ impl QuantBlock {
             vec![t, d],
             causal_attention(&q.data, &k.data, &v.data, b, s, h, hd),
         );
+        exec.prof.rec(exec.layer, KernelKind::Attn, t0, t as u64, 0);
         exec.scratch.put_tensor(q);
         exec.scratch.put_tensor(k);
         exec.scratch.put_tensor(v);
@@ -223,29 +245,41 @@ impl QuantBlock {
 
         // ---- attention (incremental) ----
         let mut xa = exec.scratch.tensor(n, d);
+        let t0 = exec.prof.t0();
         rmsnorm_into(x, &self.norm_attn, &mut xa.data);
-        let ain = self.act_input(&xa, 0, stats, scheme, exec.scratch); // attn_in
+        exec.prof.rec(exec.layer, KernelKind::Norm, t0, n as u64, 0);
+        let ain = self.act_input(&xa, 0, stats, scheme, exec); // attn_in
         let mut q = ain.matmul(&self.ws[0], exec)?;
         let mut k = ain.matmul(&self.ws[1], exec)?;
         let v = ain.matmul(&self.ws[2], exec)?;
         ain.recycle(exec.scratch);
         exec.scratch.put_tensor(xa);
         // per-row RoPE at each sequence's next position
+        let t0 = exec.prof.t0();
         for (i, cache) in caches.iter().enumerate() {
             let pos = cache.layer_len(layer);
             rope_row(&mut q.data[i * d..(i + 1) * d], pos, h, hd);
             rope_row(&mut k.data[i * d..(i + 1) * d], pos, h, hd);
         }
+        exec.prof.rec(exec.layer, KernelKind::Rope, t0, n as u64, 0);
         // append quantized K/V (post-RoPE, the cache applies the per-token
         // grid), then attend the new token against its full cached prefix
-        let mut attn = exec.scratch.tensor(n, d);
-        let mut att_ws = exec.scratch.take();
+        let t0 = exec.prof.t0();
         for (i, cache) in caches.iter_mut().enumerate() {
             cache.push(layer, &k.data[i * d..(i + 1) * d],
                        &v.data[i * d..(i + 1) * d]);
+        }
+        exec.prof.rec(exec.layer, KernelKind::KvAppend, t0, n as u64, 0);
+        let mut attn = exec.scratch.tensor(n, d);
+        let mut att_ws = exec.scratch.take();
+        let t0 = exec.prof.t0();
+        let mut kv_rows = 0u64;
+        for (i, cache) in caches.iter_mut().enumerate() {
+            kv_rows += cache.layer_len(layer) as u64;
             cache.attend(layer, &q.data[i * d..(i + 1) * d], h, hd,
                          &mut attn.data[i * d..(i + 1) * d], &mut att_ws);
         }
+        exec.prof.rec(exec.layer, KernelKind::Attn, t0, n as u64, kv_rows);
         exec.scratch.put(att_ws);
         exec.scratch.put_tensor(q);
         exec.scratch.put_tensor(k);
@@ -277,20 +311,27 @@ impl QuantBlock {
 
         // ---- attention (positions 0..p, cache == in-batch prefix) ----
         let mut xa = exec.scratch.tensor(p, d);
+        let t0 = exec.prof.t0();
         rmsnorm_into(x, &self.norm_attn, &mut xa.data);
-        let ain = self.act_input(&xa, 0, stats, scheme, exec.scratch); // attn_in
+        exec.prof.rec(exec.layer, KernelKind::Norm, t0, p as u64, 0);
+        let ain = self.act_input(&xa, 0, stats, scheme, exec); // attn_in
         let mut q = ain.matmul(&self.ws[0], exec)?;
         let mut k = ain.matmul(&self.ws[1], exec)?;
         let v = ain.matmul(&self.ws[2], exec)?;
         ain.recycle(exec.scratch);
         exec.scratch.put_tensor(xa);
+        let t0 = exec.prof.t0();
         rope(&mut q.data, 1, p, h, hd);
         rope(&mut k.data, 1, p, h, hd);
+        exec.prof.rec(exec.layer, KernelKind::Rope, t0, p as u64, 0);
         // the cache applies the same per-token grid the fake-quant below
         // uses, so cached rows dequantize to exactly what we attend over
+        let t0 = exec.prof.t0();
         for t in 0..p {
             cache.push(layer, k.row(t), v.row(t));
         }
+        exec.prof.rec(exec.layer, KernelKind::KvAppend, t0, p as u64, 0);
+        let t0 = exec.prof.t0();
         let (k, v) = if scheme.kv_quant {
             let qkv = qmax(scheme.kv_bits);
             let kq = per_token_quant(&k, qkv);
@@ -305,6 +346,7 @@ impl QuantBlock {
             vec![p, d],
             causal_attention(&q.data, &k.data, &v.data, 1, p, h, hd),
         );
+        exec.prof.rec(exec.layer, KernelKind::Attn, t0, p as u64, 0);
         exec.scratch.put_tensor(q);
         exec.scratch.put_tensor(k);
         exec.scratch.put_tensor(v);
@@ -354,23 +396,32 @@ impl NativeModel {
         }
         let blocks: Result<Vec<QuantBlock>> =
             qm.blocks.iter().map(QuantBlock::from_quantized).collect();
+        let blocks = blocks?;
         let stats: Vec<BlockStats> = if stats.is_empty() {
             (0..qm.blocks.len()).map(|_| Default::default()).collect()
         } else {
             stats.to_vec()
         };
         let shards = shards.max(1);
+        let mut state = ExecState::new(shards);
+        state.set_profiler(Arc::new(Profiler::new(blocks.len())));
         Ok(NativeModel {
             dim: qm.dim.clone(),
             scheme,
             shards,
-            exec: RefCell::new(ExecState::new(shards)),
+            exec: RefCell::new(state),
             emb: qm.emb.clone(),
-            blocks: blocks?,
+            blocks,
             final_norm: qm.final_norm.clone(),
             head: qm.head.clone(),
             stats,
         })
+    }
+
+    /// This model's profiler — shared by clones (server shards aggregate
+    /// into one profile). Disabled until [`Profiler::set_enabled`].
+    pub fn profiler(&self) -> Arc<Profiler> {
+        self.exec.borrow().profiler().clone()
     }
 
     /// Switch execution mode: [`ExecMode::Planned`] (default) or
@@ -400,12 +451,20 @@ impl NativeModel {
         }
         let mut state = self.exec.borrow_mut();
         let mut exec = state.exec();
+        let t0 = exec.prof.t0();
         let mut x = embed(&self.emb, ids)?;
-        for (blk, st) in self.blocks.iter().zip(&self.stats) {
+        exec.prof.rec(MODEL_SLOT, KernelKind::Embed, t0, ids.len() as u64, 0);
+        for (l, (blk, st)) in
+            self.blocks.iter().zip(&self.stats).enumerate()
+        {
+            exec.layer = l;
+            let sp = trace::begin();
             let nx = blk.forward(&x, &self.dim, st, &self.scheme,
                                  &mut exec)?;
+            trace::complete(sp, || (format!("layer{l}"), None));
             exec.scratch.put_tensor(std::mem::replace(&mut x, nx));
         }
+        exec.layer = MODEL_SLOT;
         Ok(x)
     }
 
@@ -457,19 +516,28 @@ impl NativeModel {
         }
         let mut state = self.exec.borrow_mut();
         let mut exec = state.exec();
+        let t0 = exec.prof.t0();
         let mut x = {
             let mut buf = exec.scratch.take();
             embed_into(&self.emb, ids, &mut buf)?;
             Tensor::new(vec![ids.len(), self.dim.d], buf)
         };
+        exec.prof.rec(MODEL_SLOT, KernelKind::Embed, t0, ids.len() as u64, 0);
         for (l, (blk, st)) in
             self.blocks.iter().zip(&self.stats).enumerate()
         {
+            exec.layer = l;
+            let sp = trace::begin();
             let nx = blk.forward_step(&x, &self.dim, st, &self.scheme,
                                       &mut exec, l, caches)?;
+            trace::complete(sp, || (format!("layer{l}"), None));
+            exec.prof.add_step_tokens(l, ids.len() as u64);
             exec.scratch.put_tensor(std::mem::replace(&mut x, nx));
         }
+        exec.layer = MODEL_SLOT;
+        let t0 = exec.prof.t0();
         let logits = head_logits(&x, &self.final_norm, &self.head);
+        exec.prof.rec(MODEL_SLOT, KernelKind::Head, t0, ids.len() as u64, 0);
         exec.scratch.put_tensor(x);
         Ok(logits)
     }
@@ -499,19 +567,28 @@ impl NativeModel {
         cache.reserve(ids.len());
         let mut state = self.exec.borrow_mut();
         let mut exec = state.exec();
+        let t0 = exec.prof.t0();
         let mut x = embed(&self.emb, ids)?;
+        exec.prof.rec(MODEL_SLOT, KernelKind::Embed, t0, ids.len() as u64, 0);
         for (l, (blk, st)) in
             self.blocks.iter().zip(&self.stats).enumerate()
         {
+            exec.layer = l;
+            let sp = trace::begin();
             let nx = blk.forward_prefill(&x, &self.dim, st, &self.scheme,
                                          &mut exec, l, cache)?;
+            trace::complete(sp, || (format!("layer{l}"), None));
             exec.scratch.put_tensor(std::mem::replace(&mut x, nx));
         }
+        exec.layer = MODEL_SLOT;
         // only the last prompt position feeds the next-token distribution
         let last =
             Tensor::new(vec![1, self.dim.d], x.row(ids.len() - 1).to_vec());
         exec.scratch.put_tensor(x);
-        Ok(head_logits(&last, &self.final_norm, &self.head).data)
+        let t0 = exec.prof.t0();
+        let logits = head_logits(&last, &self.final_norm, &self.head).data;
+        exec.prof.rec(MODEL_SLOT, KernelKind::Head, t0, 1, 0);
+        Ok(logits)
     }
 
     /// Generate `max_new` tokens after `prompt` with a fresh KV cache —
@@ -529,8 +606,11 @@ impl NativeModel {
         let mut logits = self.prefill(prompt, &mut cache)?;
         let mut rng = Rng::new(seed);
         let mut out = Vec::with_capacity(max_new);
+        let prof = self.profiler();
         for step in 0..max_new {
+            let t0 = prof.t0();
             let t = sample_top_k(&logits, top_k, &mut rng) as i32;
+            prof.rec(MODEL_SLOT, KernelKind::Sample, t0, 1, 0);
             out.push(t);
             if step + 1 < max_new {
                 logits = self

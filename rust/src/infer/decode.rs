@@ -201,6 +201,7 @@ impl KvCache {
         lk.k.push(krow, self.mode);
         lk.v.push(vrow, self.mode);
         lk.len += 1;
+        crate::obs::registry::engine::KV_TOKENS_APPENDED.inc();
     }
 
     /// Softmax attention of one query row `q [d]` against every cached token
@@ -218,6 +219,7 @@ impl KvCache {
         let lk = &self.layers[layer];
         let len = lk.len;
         debug_assert!(len > 0, "attend on empty cache layer {layer}");
+        crate::obs::registry::engine::KV_ROWS_ATTENDED.add(len as u64);
         let scale = 1.0 / (hd as f32).sqrt();
         // scratch = [len score slots | hd-wide dequant row]
         scratch.clear();

@@ -43,6 +43,7 @@ fn quantize_rows_into(x: &[f32], rows: usize, cols: usize,
                       out: &mut QuantActs) {
     debug_assert_eq!(x.len(), rows * cols);
     debug_assert!(qmax <= 255.0, "u8 codes need qmax <= 255, got {qmax}");
+    crate::obs::registry::engine::ACT_ROWS_QUANTIZED.add(rows as u64);
     out.rows = rows;
     out.cols = cols;
     out.codes.clear();
@@ -302,6 +303,7 @@ pub fn unpack_rows(packed: &[u8], bits: u32, cols: usize, r0: usize, n: usize,
                    out: &mut [u8]) {
     debug_assert!(out.len() >= n * cols);
     debug_assert!(packed.len() >= packed_len((r0 + n) * cols, bits));
+    crate::obs::registry::engine::BYTES_UNPACKED.add((n * cols) as u64);
     match bits {
         8 => {
             out[..n * cols]

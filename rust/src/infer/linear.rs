@@ -26,6 +26,8 @@
 
 use anyhow::{bail, Result};
 
+use crate::obs::registry::engine;
+use crate::obs::{trace, KernelKind};
 use crate::quant::PackedMatrix;
 use crate::tensor::Tensor;
 
@@ -101,6 +103,7 @@ impl QuantLinear {
         }
         let rows = acts.rows;
         let mut out = exec.scratch.zeroed(rows * self.cout);
+        let (p0, s0) = (exec.prof.t0(), trace::begin());
         match exec.mode {
             ExecMode::Planned => {
                 self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
@@ -109,7 +112,26 @@ impl QuantLinear {
             }
             ExecMode::Reference => self.gemm_q_ref(acts, &mut out),
         }
+        self.tally_gemm(exec, rows, p0);
+        trace::complete(s0, || {
+            (format!("gemm{}x{}", self.cout, self.cin),
+             Some(format!("{{\"rows\":{rows}}}")))
+        });
         Ok(Tensor::new(vec![rows, self.cout], out))
+    }
+
+    /// GEMM accounting shared by both forward flavors: wall time at the
+    /// call site (includes the pool barrier — the true GEMM cost the caller
+    /// pays), tile×block passes, and plan bytes streamed.
+    fn tally_gemm(&self, exec: &mut Exec, rows: usize,
+                  p0: Option<std::time::Instant>) {
+        let passes = (self.plan.n_tiles() * rows.div_ceil(MR)) as u64;
+        let bytes = (self.plan.plan_bytes() * rows.div_ceil(MR)) as u64;
+        if exec.mode == ExecMode::Planned {
+            engine::TILES_EXECUTED.add(passes);
+            engine::PLAN_BYTES_STREAMED.add(bytes);
+        }
+        exec.prof.rec(exec.layer, KernelKind::Gemm, p0, passes, bytes);
     }
 
     /// Weight-only path: FP activations `[rows, cin]` -> `[rows, cout]`.
@@ -125,6 +147,7 @@ impl QuantLinear {
             *o = x[t * self.cin..(t + 1) * self.cin].iter().sum();
         }
         let mut out = exec.scratch.zeroed(rows * self.cout);
+        let (p0, s0) = (exec.prof.t0(), trace::begin());
         match exec.mode {
             ExecMode::Planned => {
                 self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
@@ -133,6 +156,11 @@ impl QuantLinear {
             }
             ExecMode::Reference => self.gemm_fp_ref(x, rows, &xsum, &mut out),
         }
+        self.tally_gemm(exec, rows, p0);
+        trace::complete(s0, || {
+            (format!("gemm_fp{}x{}", self.cout, self.cin),
+             Some(format!("{{\"rows\":{rows}}}")))
+        });
         exec.scratch.put(xsum);
         Ok(Tensor::new(vec![rows, self.cout], out))
     }
@@ -151,7 +179,13 @@ impl QuantLinear {
         let ranges = shard_ranges(tiles, shards);
         pool.run(ranges.len(), |i| {
             let (t0, t1) = ranges[i];
+            // worker-thread shard spans cost a probe per job, so they are
+            // compiled in only under the `obs-trace` feature
+            #[cfg(feature = "obs-trace")]
+            let sp = trace::begin();
             body(t0, t1, o);
+            #[cfg(feature = "obs-trace")]
+            trace::complete(sp, || (format!("shard[{t0},{t1})"), None));
         });
     }
 

@@ -53,6 +53,14 @@
 //!   sequences). Unlike the PJRT runtime the engine is `Send`, so it can be
 //!   built outside the engine thread and tile-shard its GEMMs across the
 //!   persistent worker pool it spawned at load.
+//!
+//! The whole engine is instrumented through [`crate::obs`] (DESIGN.md §9):
+//! every kernel records ns/items/bytes into the model's per-layer
+//! [`crate::obs::Profiler`] (one relaxed atomic load when disabled),
+//! layer/GEMM/prefill spans go to the chrome trace when `--trace` is
+//! active, and engine-global counters (bytes unpacked, tiles executed,
+//! pool jobs, KV rows attended) live in
+//! [`crate::obs::registry::engine`].
 
 pub mod block;
 pub mod decode;

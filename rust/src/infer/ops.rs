@@ -154,6 +154,7 @@ pub fn silu(x: f32) -> f32 {
 pub fn embed_into(emb: &Tensor, ids: &[i32], out: &mut Vec<f32>)
                   -> Result<()> {
     let (vocab, d) = emb.rc();
+    crate::obs::registry::engine::TOKENS_EMBEDDED.add(ids.len() as u64);
     out.clear();
     out.reserve(ids.len() * d);
     for &id in ids {

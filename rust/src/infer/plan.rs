@@ -22,6 +22,7 @@
 
 use std::sync::Arc;
 
+use crate::obs::Profiler;
 use crate::quant::PackedMatrix;
 use crate::tensor::Tensor;
 
@@ -173,6 +174,12 @@ pub struct Exec<'a> {
     pub pool: &'a WorkerPool,
     pub mode: ExecMode,
     pub scratch: &'a mut Scratch,
+    /// the owning model's profiler; every hook is a no-op relaxed load
+    /// until [`Profiler::set_enabled`] flips it on
+    pub prof: &'a Profiler,
+    /// layer the profiling hooks attribute work to — set by the model's
+    /// block loop, [`crate::obs::MODEL_SLOT`] outside the layer stack
+    pub layer: usize,
 }
 
 /// Owned execution state of one engine instance: the shared persistent pool
@@ -183,6 +190,9 @@ pub struct ExecState {
     pool: Arc<WorkerPool>,
     mode: ExecMode,
     scratch: Scratch,
+    /// shared with every clone of the owning model, so profiles aggregate
+    /// across server shards
+    prof: Arc<Profiler>,
 }
 
 impl ExecState {
@@ -193,7 +203,21 @@ impl ExecState {
 
     /// State over an existing pool (model clones, multi-model hosts).
     pub fn shared(pool: Arc<WorkerPool>) -> ExecState {
-        ExecState { pool, mode: ExecMode::Planned, scratch: Scratch::default() }
+        ExecState {
+            pool,
+            mode: ExecMode::Planned,
+            scratch: Scratch::default(),
+            prof: Arc::new(Profiler::disabled()),
+        }
+    }
+
+    /// Install the model-sized profiler (called once at model load).
+    pub fn set_profiler(&mut self, prof: Arc<Profiler>) {
+        self.prof = prof;
+    }
+
+    pub fn profiler(&self) -> &Arc<Profiler> {
+        &self.prof
     }
 
     pub fn with_mode(mut self, mode: ExecMode) -> ExecState {
@@ -219,6 +243,8 @@ impl ExecState {
             pool: self.pool.as_ref(),
             mode: self.mode,
             scratch: &mut self.scratch,
+            prof: self.prof.as_ref(),
+            layer: crate::obs::MODEL_SLOT,
         }
     }
 }

@@ -99,6 +99,7 @@ impl WorkerPool {
         if jobs == 0 {
             return;
         }
+        crate::obs::registry::engine::POOL_JOBS.add(jobs as u64);
         if jobs == 1 || self.workers.is_empty() {
             // inline fast path: no locks, no wakeups
             for i in 0..jobs {

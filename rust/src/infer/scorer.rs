@@ -17,6 +17,7 @@ use std::collections::HashMap;
 
 use anyhow::{bail, Result};
 
+use crate::obs::trace;
 use crate::serve::{BatchScorer, SeqId, Server, ServerConfig};
 
 use super::block::NativeModel;
@@ -76,11 +77,17 @@ impl BatchScorer for NativeScorer {
     }
 
     fn begin_decode(&mut self, prompt: &[i32]) -> Result<(SeqId, Vec<f32>)> {
+        let sp = trace::begin();
         let mut cache = self.model.new_cache();
         let logits = self.model.prefill(prompt, &mut cache)?;
         let sid = self.next_seq;
         self.next_seq += 1;
         self.seqs.insert(sid, cache);
+        trace::complete(sp, || {
+            ("prefill".to_string(),
+             Some(format!("{{\"seq\":{sid},\"prompt_len\":{}}}",
+                          prompt.len())))
+        });
         Ok((sid, logits))
     }
 

@@ -31,6 +31,7 @@ pub mod eval;
 pub mod infer;
 pub mod methods;
 pub mod model;
+pub mod obs;
 pub mod quant;
 pub mod report;
 pub mod rng;

@@ -24,6 +24,7 @@ use lrq::eval::{evaluate, ModelView};
 use lrq::infer::{prepare_native, start_native_server, NativeModel,
                  ScaleInit};
 use lrq::model::{ModelDim, Weights};
+use lrq::obs::{export, trace, HttpExporter};
 use lrq::rng::Rng;
 use lrq::runtime::{Manifest, Runtime};
 use lrq::serve::ServerConfig;
@@ -56,6 +57,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => serve(args),
         "serve-native" => serve_native(args),
         "generate-native" => generate_native(args),
+        "stats" => stats(args),
         "bench-table" => {
             let id = args
                 .positional
@@ -95,12 +97,22 @@ commands:
            [...same engine flags as serve-native]
            token-by-token generation through the dynamic batcher with a
            quantized KV cache (decode steps batched across sequences)
+  stats    --cfg C [--requests N] [--prompt-len N] [--max-new N]
+           [...same engine flags as serve-native]
+           run a profiled generate workload on the native engine and print
+           the per-layer / per-kernel model profile
   bench-table ID                     regenerate one paper table/figure
                                      (fig1 fig2 fig3 fig4a fig4b fig5
                                       t1 t3 t5 t7 t9 t13 t29 t30 t31 kvq)
   report                             regenerate all tables/figures
 
-common flags: --artifacts DIR (default ./artifacts), --seed S";
+common flags: --artifacts DIR (default ./artifacts), --seed S
+observability (serve-native / generate-native / stats):
+  --trace PATH        record a chrome://tracing JSON trace of the run
+  --profile           enable the per-layer/per-kernel profiler, print report
+  --metrics-out PATH  write a Prometheus text snapshot after the run
+  --metrics-addr A    serve live metrics over HTTP during the run
+                      (e.g. 127.0.0.1:9184; serve-native/generate-native)";
 
 fn scheme_from(args: &Args) -> Result<Scheme> {
     let w_bits: u32 = args.parse_as("wbits", 8)?;
@@ -313,6 +325,64 @@ fn native_model_from_args(args: &Args) -> Result<(ModelDim, NativeModel)> {
     Ok((dim, model))
 }
 
+/// Start tracing when `--trace PATH` was given; returns whether a trace is
+/// active so the caller knows to [`trace::shutdown`] at the end of the run.
+fn trace_from(args: &Args) -> Result<bool> {
+    match args.get("trace") {
+        Some(path) => {
+            trace::init(Path::new(path))
+                .with_context(|| format!("starting trace {path}"))?;
+            println!("tracing to {path}");
+            Ok(true)
+        }
+        None => Ok(false),
+    }
+}
+
+/// Shared end-of-run observability outputs: close the trace file and write
+/// the `--metrics-out` Prometheus snapshot (serving registries + the
+/// engine-global kernel counters).
+fn obs_finish(args: &Args, trace_on: bool, regs: &[&lrq::obs::Registry])
+              -> Result<()> {
+    if trace_on {
+        let n = trace::shutdown().context("closing trace file")?;
+        println!("trace closed ({n} events)");
+    }
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(Path::new(path), export::snapshot(regs))
+            .with_context(|| format!("writing metrics snapshot {path}"))?;
+        println!("metrics snapshot written to {path}");
+    }
+    Ok(())
+}
+
+/// Start the live HTTP metrics endpoint when `--metrics-addr` was given.
+fn exporter_from(args: &Args, reg: std::sync::Arc<lrq::obs::Registry>)
+                 -> Result<Option<HttpExporter>> {
+    match args.get("metrics-addr") {
+        Some(addr) => {
+            let ex = HttpExporter::start(addr, vec![reg])
+                .with_context(|| format!("binding metrics on {addr}"))?;
+            println!("serving metrics on http://{}/metrics", ex.addr());
+            Ok(Some(ex))
+        }
+        None => Ok(None),
+    }
+}
+
+/// Print the per-layer / per-kernel model profile plus its coverage of the
+/// run's wall clock.
+fn print_profile(prof: &lrq::obs::Profiler, wall: Duration) {
+    let report = prof.report();
+    println!("{}", report.render());
+    println!(
+        "profiled kernel time {:.2}s = {:.1}% of the {:.2}s wall clock",
+        report.total().as_secs_f64(),
+        report.coverage(wall) * 100.0,
+        wall.as_secs_f64(),
+    );
+}
+
 /// `serve-native`: serve a packed checkpoint through the dynamic batcher
 /// with the pure-Rust integer engine — no PJRT, no AOT artifacts.
 fn serve_native(args: &Args) -> Result<()> {
@@ -322,10 +392,17 @@ fn serve_native(args: &Args) -> Result<()> {
 
     let (dim, model) = native_model_from_args(args)?;
     let tokens_per_req = dim.seq; // each scored row is one seq-length batch row
+    let prof = model.profiler();
+    if args.flag("profile") {
+        prof.set_enabled(true);
+    }
+    let trace_on = trace_from(args)?;
     let server = start_native_server(
         model,
         ServerConfig { max_batch, max_wait: Duration::from_millis(2) },
     )?;
+    let exporter =
+        exporter_from(args, server.metrics.lock().unwrap().registry())?;
     let t1 = Instant::now();
     let mut handles = Vec::new();
     let n_clients = clients.max(1);
@@ -360,7 +437,14 @@ fn serve_native(args: &Args) -> Result<()> {
         m.throughput(wall) * tokens_per_req as f64,
         tokens_per_req,
     );
-    Ok(())
+    if args.flag("profile") {
+        print_profile(&prof, wall);
+    }
+    if let Some(ex) = exporter {
+        ex.shutdown();
+    }
+    let reg = m.registry();
+    obs_finish(args, trace_on, &[reg.as_ref()])
 }
 
 /// `generate-native`: token-by-token generation through the dynamic batcher
@@ -384,10 +468,17 @@ fn generate_native(args: &Args) -> Result<()> {
         );
     }
 
+    let prof = model.profiler();
+    if args.flag("profile") {
+        prof.set_enabled(true);
+    }
+    let trace_on = trace_from(args)?;
     let server = start_native_server(
         model,
         ServerConfig { max_batch, max_wait: Duration::from_millis(2) },
     )?;
+    let exporter =
+        exporter_from(args, server.metrics.lock().unwrap().registry())?;
     let t1 = Instant::now();
     let mut handles = Vec::new();
     let n_clients = clients.max(1);
@@ -433,9 +524,61 @@ fn generate_native(args: &Args) -> Result<()> {
         "wall {:.2}s, {:.0} generated tokens/s end-to-end \
          (prompt {prompt_len} + {max_new} new, top-k {top_k})",
         wall.as_secs_f64(),
-        m.gen_tokens as f64 / wall.as_secs_f64(),
+        m.gen_tokens() as f64 / wall.as_secs_f64(),
     );
-    Ok(())
+    if args.flag("profile") {
+        print_profile(&prof, wall);
+    }
+    if let Some(ex) = exporter {
+        ex.shutdown();
+    }
+    let reg = m.registry();
+    obs_finish(args, trace_on, &[reg.as_ref()])
+}
+
+/// `stats`: run a profiled generate workload directly on the native engine
+/// (no batcher) and print the per-layer / per-kernel model profile — the
+/// observability twin of `generate-native` for answering "where does a
+/// decode step's time go?".
+fn stats(args: &Args) -> Result<()> {
+    let requests: usize = args.parse_as("requests", 8)?;
+    let prompt_len: usize = args.parse_as("prompt-len", 8)?;
+    let max_new: usize = args.parse_as("max-new", 32)?;
+    let top_k: usize = args.parse_as("top-k", 1)?;
+    let seed: u64 = args.parse_as("seed", 1234)?;
+
+    let (dim, model) = native_model_from_args(args)?;
+    if prompt_len == 0 || prompt_len + max_new > dim.seq {
+        anyhow::bail!(
+            "prompt-len {prompt_len} + max-new {max_new} must fit the \
+             {}-token context (and prompt-len must be >= 1)",
+            dim.seq
+        );
+    }
+    let prof = model.profiler();
+    prof.set_enabled(true);
+    let trace_on = trace_from(args)?;
+
+    let mut rng = Rng::new(seed ^ 0x57A7);
+    let t0 = Instant::now();
+    let mut generated = 0usize;
+    for _ in 0..requests.max(1) {
+        let prompt: Vec<i32> = (0..prompt_len)
+            .map(|_| rng.below(dim.vocab) as i32)
+            .collect();
+        let tokens = model.generate(&prompt, max_new, top_k, seed)?;
+        generated += tokens.len();
+    }
+    let wall = t0.elapsed();
+    println!(
+        "{} generations x (prompt {prompt_len} + {max_new} new) = {} tokens \
+         in {:.2}s",
+        requests.max(1),
+        generated,
+        wall.as_secs_f64(),
+    );
+    print_profile(&prof, wall);
+    obs_finish(args, trace_on, &[])
 }
 
 /// Consistency probe: loss reported by the train_step artifact (lr=0) vs the

@@ -1,0 +1,127 @@
+//! Exporters: Prometheus text snapshots and a zero-dependency HTTP
+//! endpoint (`std::net` only) for scraping a live server.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::registry::{engine, Registry};
+
+/// One text-exposition snapshot: every passed registry plus the
+/// engine-global kernel counters ([`engine`]).
+pub fn snapshot(regs: &[&Registry]) -> String {
+    let mut out = String::new();
+    for r in regs {
+        out.push_str(&r.render());
+    }
+    out.push_str(&engine::render());
+    out
+}
+
+/// Minimal blocking HTTP exporter: one accept loop on a background thread,
+/// every request answered with the current [`snapshot`]. Not a web server —
+/// a scrape endpoint.
+pub struct HttpExporter {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl HttpExporter {
+    /// Bind `bind` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and serve
+    /// snapshots of `regs` until [`HttpExporter::shutdown`] / drop.
+    pub fn start(bind: &str, regs: Vec<Arc<Registry>>)
+                 -> std::io::Result<HttpExporter> {
+        let listener = TcpListener::bind(bind)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::spawn(move || {
+            for conn in listener.incoming() {
+                if stop2.load(Relaxed) {
+                    break;
+                }
+                let Ok(mut c) = conn else { continue };
+                let _ = c.set_read_timeout(Some(Duration::from_millis(250)));
+                let mut req = [0u8; 1024];
+                let _ = c.read(&mut req);
+                let refs: Vec<&Registry> =
+                    regs.iter().map(|r| r.as_ref()).collect();
+                let body = snapshot(&refs);
+                let _ = write!(
+                    c,
+                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; \
+                     version=0.0.4\r\nContent-Length: {}\r\nConnection: \
+                     close\r\n\r\n{}",
+                    body.len(),
+                    body
+                );
+            }
+        });
+        Ok(HttpExporter { addr, stop, handle: Some(handle) })
+    }
+
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn stop_inner(&mut self) {
+        if let Some(h) = self.handle.take() {
+            self.stop.store(true, Relaxed);
+            // unblock the accept loop
+            let _ = TcpStream::connect(self.addr);
+            let _ = h.join();
+        }
+    }
+
+    pub fn shutdown(mut self) {
+        self.stop_inner();
+    }
+}
+
+impl Drop for HttpExporter {
+    fn drop(&mut self) {
+        self.stop_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn snapshot_merges_registries_and_engine_counters() {
+        let r = Registry::new();
+        r.counter("lrq_export_test_total", "x").add(3);
+        let txt = snapshot(&[&r]);
+        assert!(txt.contains("lrq_export_test_total 3"), "{txt}");
+        assert!(txt.contains("lrq_engine_tiles_executed_total"), "{txt}");
+    }
+
+    #[test]
+    fn http_exporter_serves_snapshot() {
+        let reg = Arc::new(Registry::new());
+        reg.counter("lrq_http_test_total", "x").add(9);
+        // sandboxes without loopback: skip rather than fail
+        let Ok(exp) = HttpExporter::start("127.0.0.1:0", vec![reg.clone()])
+        else {
+            eprintln!("skipping http exporter test: cannot bind loopback");
+            return;
+        };
+        let Ok(mut c) = TcpStream::connect(exp.addr()) else {
+            eprintln!("skipping http exporter test: cannot connect");
+            exp.shutdown();
+            return;
+        };
+        c.write_all(b"GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut resp = String::new();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        c.read_to_string(&mut resp).unwrap();
+        assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
+        assert!(resp.contains("lrq_http_test_total 9"), "{resp}");
+        exp.shutdown();
+    }
+}

@@ -1,0 +1,37 @@
+//! Observability: telemetry registry, structured tracing, per-layer
+//! profiling, and exporters for the native serving stack (DESIGN.md §9).
+//!
+//! Zero external dependencies; everything here is `std` + atomics. The
+//! subsystem has four parts:
+//!
+//! * [`registry`] — [`Counter`] / [`Gauge`] / [`Histogram`] primitives
+//!   (lock-free relaxed atomics on the hot path) plus a named [`Registry`]
+//!   that renders a Prometheus-style text snapshot. Engine-global monotonic
+//!   counters (bytes unpacked, tiles executed, KV traffic) live in
+//!   [`registry::engine`] as statics so kernels can tally without plumbing
+//!   a handle through every call.
+//! * [`trace`] — structured spans with per-request trace IDs, emitted as a
+//!   `chrome://tracing`-compatible JSON array (`ph:"X"` complete events,
+//!   `ph:"b"/"e"` async request envelopes) behind a runtime flag. Recording
+//!   is thread-local (one uncontended mutex per thread) with periodic
+//!   aggregation into the trace file; when disabled every probe is a single
+//!   relaxed atomic load.
+//! * [`profile`] — [`Profiler`]: per-layer × per-kernel-kind time/call/
+//!   item/byte accumulators (GEMM vs activation-quant vs norm vs attention
+//!   vs KV-cache ...), owned by each [`crate::infer::NativeModel`] and
+//!   aggregated into a [`ProfileReport`] (`lrq stats`, `--profile`).
+//! * [`export`] — the Prometheus text snapshot combinator and an optional
+//!   `std::net`-only HTTP exporter for scraping a live server.
+//!
+//! The shard level of the span taxonomy (request → batch → shard → layer →
+//! kernel) costs one probe per worker-pool job, so it is compiled in only
+//! under the `obs-trace` cargo feature; everything else is runtime-flagged.
+
+pub mod export;
+pub mod profile;
+pub mod registry;
+pub mod trace;
+
+pub use export::HttpExporter;
+pub use profile::{KernelKind, ProfileReport, Profiler, MODEL_SLOT};
+pub use registry::{Counter, Gauge, Histogram, Registry};

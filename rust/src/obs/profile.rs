@@ -1,0 +1,416 @@
+//! Per-layer / per-kernel-kind profiling: where does forward time actually
+//! go — GEMM vs dequant epilogue vs norm/softmax vs KV-cache traffic?
+//!
+//! Each [`crate::infer::NativeModel`] owns one [`Profiler`] (shared by
+//! clones through the execution state), sized to its layer count plus one
+//! extra slot for model-level work (embedding, head, sampling). Hooks in
+//! the forward path call [`Profiler::t0`] / [`Profiler::rec`] around each
+//! kernel region; when profiling is disabled `t0` is a single relaxed load
+//! and `rec` returns on its first branch, so the steady-state overhead is
+//! a few nanoseconds per region. Accumulators are relaxed atomics — safe
+//! to read live from another thread, exact once the engine is quiesced.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::time::{Duration, Instant};
+
+/// Kernel region taxonomy. `items`/`bytes` units per kind are noted inline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelKind {
+    /// integer/FP GEMM incl. dequant epilogue; items = tile×block passes,
+    /// bytes = plan bytes streamed
+    Gemm,
+    /// activation quantization to u8 codes; items = rows
+    ActQuant,
+    /// RMSNorm; items = rows
+    Norm,
+    /// rotary embedding; items = rows
+    Rope,
+    /// attention scores+mix (incl. cached-KV dequant reads); items = query
+    /// rows, bytes = KV rows read
+    Attn,
+    /// KV-cache append (quantize + store); items = tokens
+    KvAppend,
+    /// elementwise glue: residual adds, SiLU-gate; items = rows
+    Eltwise,
+    /// token embedding gather; items = tokens
+    Embed,
+    /// LM head logits; items = rows
+    Head,
+    /// top-k sampling; items = tokens
+    Sample,
+}
+
+impl KernelKind {
+    pub const COUNT: usize = 10;
+
+    pub const ALL: [KernelKind; KernelKind::COUNT] = [
+        KernelKind::Gemm,
+        KernelKind::ActQuant,
+        KernelKind::Norm,
+        KernelKind::Rope,
+        KernelKind::Attn,
+        KernelKind::KvAppend,
+        KernelKind::Eltwise,
+        KernelKind::Embed,
+        KernelKind::Head,
+        KernelKind::Sample,
+    ];
+
+    fn idx(self) -> usize {
+        match self {
+            KernelKind::Gemm => 0,
+            KernelKind::ActQuant => 1,
+            KernelKind::Norm => 2,
+            KernelKind::Rope => 3,
+            KernelKind::Attn => 4,
+            KernelKind::KvAppend => 5,
+            KernelKind::Eltwise => 6,
+            KernelKind::Embed => 7,
+            KernelKind::Head => 8,
+            KernelKind::Sample => 9,
+        }
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelKind::Gemm => "gemm",
+            KernelKind::ActQuant => "actq",
+            KernelKind::Norm => "norm",
+            KernelKind::Rope => "rope",
+            KernelKind::Attn => "attn",
+            KernelKind::KvAppend => "kvapp",
+            KernelKind::Eltwise => "eltw",
+            KernelKind::Embed => "embed",
+            KernelKind::Head => "head",
+            KernelKind::Sample => "sample",
+        }
+    }
+}
+
+/// Layer index that attributes work to the model-level slot (embedding,
+/// head, sampling) instead of a transformer layer.
+pub const MODEL_SLOT: usize = usize::MAX;
+
+#[derive(Debug, Default)]
+struct Cell {
+    ns: AtomicU64,
+    calls: AtomicU64,
+    items: AtomicU64,
+    bytes: AtomicU64,
+}
+
+#[derive(Debug, Default)]
+struct Slot {
+    kinds: [Cell; KernelKind::COUNT],
+    /// decode tokens this layer has stepped (token-attribution accounting)
+    step_tokens: AtomicU64,
+}
+
+/// Per-layer × per-kind accumulators; see module docs.
+#[derive(Debug)]
+pub struct Profiler {
+    enabled: AtomicBool,
+    layers: usize,
+    /// `layers + 1` slots; the last is the model-level slot
+    slots: Vec<Slot>,
+}
+
+impl Profiler {
+    pub fn new(layers: usize) -> Profiler {
+        let slots = (0..layers + 1).map(|_| Slot::default()).collect();
+        Profiler { enabled: AtomicBool::new(false), layers, slots }
+    }
+
+    /// Placeholder for execution states not yet bound to a model.
+    pub fn disabled() -> Profiler {
+        Profiler::new(0)
+    }
+
+    pub fn layers(&self) -> usize {
+        self.layers
+    }
+
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Relaxed)
+    }
+
+    fn slot(&self, layer: usize) -> &Slot {
+        &self.slots[layer.min(self.layers)]
+    }
+
+    /// Region start: `Some(now)` when profiling, else `None`. One relaxed
+    /// load when disabled.
+    #[inline]
+    pub fn t0(&self) -> Option<Instant> {
+        if self.is_enabled() {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a region opened by [`Profiler::t0`] (no-op on `None`),
+    /// attributing elapsed time plus `items`/`bytes` to `(layer, kind)`.
+    #[inline]
+    pub fn rec(&self, layer: usize, kind: KernelKind, t0: Option<Instant>,
+               items: u64, bytes: u64) {
+        let Some(t0) = t0 else { return };
+        let ns = t0.elapsed().as_nanos() as u64;
+        let cell = &self.slot(layer).kinds[kind.idx()];
+        cell.ns.fetch_add(ns, Relaxed);
+        cell.calls.fetch_add(1, Relaxed);
+        cell.items.fetch_add(items, Relaxed);
+        cell.bytes.fetch_add(bytes, Relaxed);
+    }
+
+    /// Attribute `n` decode-step tokens to `layer` (token accounting:
+    /// after a generate run, each layer's total equals the decode tokens
+    /// produced).
+    #[inline]
+    pub fn add_step_tokens(&self, layer: usize, n: u64) {
+        if self.is_enabled() {
+            self.slot(layer).step_tokens.fetch_add(n, Relaxed);
+        }
+    }
+
+    pub fn step_tokens(&self, layer: usize) -> u64 {
+        self.slot(layer).step_tokens.load(Relaxed)
+    }
+
+    /// Total profiled time across every slot and kind.
+    pub fn total(&self) -> Duration {
+        let ns: u64 = self
+            .slots
+            .iter()
+            .flat_map(|s| s.kinds.iter())
+            .map(|c| c.ns.load(Relaxed))
+            .sum();
+        Duration::from_nanos(ns)
+    }
+
+    pub fn reset(&self) {
+        for s in &self.slots {
+            for c in &s.kinds {
+                c.ns.store(0, Relaxed);
+                c.calls.store(0, Relaxed);
+                c.items.store(0, Relaxed);
+                c.bytes.store(0, Relaxed);
+            }
+            s.step_tokens.store(0, Relaxed);
+        }
+    }
+
+    /// Snapshot the accumulators into an owned report.
+    pub fn report(&self) -> ProfileReport {
+        let rows = self
+            .slots
+            .iter()
+            .map(|s| LayerProfile {
+                kinds: KernelKind::ALL
+                    .iter()
+                    .map(|&k| {
+                        let c = &s.kinds[k.idx()];
+                        KindStat {
+                            kind: k,
+                            ns: c.ns.load(Relaxed),
+                            calls: c.calls.load(Relaxed),
+                            items: c.items.load(Relaxed),
+                            bytes: c.bytes.load(Relaxed),
+                        }
+                    })
+                    .collect(),
+                step_tokens: s.step_tokens.load(Relaxed),
+            })
+            .collect();
+        ProfileReport { layers: self.layers, rows }
+    }
+}
+
+/// One `(kind)` accumulator snapshot within a layer.
+#[derive(Clone, Debug)]
+pub struct KindStat {
+    pub kind: KernelKind,
+    pub ns: u64,
+    pub calls: u64,
+    pub items: u64,
+    pub bytes: u64,
+}
+
+/// One layer's (or the model slot's) profile.
+#[derive(Clone, Debug)]
+pub struct LayerProfile {
+    pub kinds: Vec<KindStat>,
+    pub step_tokens: u64,
+}
+
+impl LayerProfile {
+    pub fn total_ns(&self) -> u64 {
+        self.kinds.iter().map(|k| k.ns).sum()
+    }
+}
+
+/// Owned snapshot of a [`Profiler`]; renders the `lrq stats` / `--profile`
+/// table.
+#[derive(Clone, Debug)]
+pub struct ProfileReport {
+    pub layers: usize,
+    /// `layers + 1` rows; the last is the model-level slot
+    pub rows: Vec<LayerProfile>,
+}
+
+impl ProfileReport {
+    pub fn total(&self) -> Duration {
+        Duration::from_nanos(self.rows.iter().map(|r| r.total_ns()).sum())
+    }
+
+    pub fn kind_ns(&self, kind: KernelKind) -> u64 {
+        self.rows
+            .iter()
+            .flat_map(|r| r.kinds.iter())
+            .filter(|k| k.kind == kind)
+            .map(|k| k.ns)
+            .sum()
+    }
+
+    fn kind_items(&self, kind: KernelKind) -> u64 {
+        self.rows
+            .iter()
+            .flat_map(|r| r.kinds.iter())
+            .filter(|k| k.kind == kind)
+            .map(|k| k.items)
+            .sum()
+    }
+
+    fn kind_bytes(&self, kind: KernelKind) -> u64 {
+        self.rows
+            .iter()
+            .flat_map(|r| r.kinds.iter())
+            .filter(|k| k.kind == kind)
+            .map(|k| k.bytes)
+            .sum()
+    }
+
+    /// Fraction of `wall` covered by profiled regions (sanity: the
+    /// breakdown should explain most of the measured wall time).
+    pub fn coverage(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.total().as_secs_f64() / wall.as_secs_f64()
+    }
+
+    /// Per-layer × per-kind time table (milliseconds), with a TOTAL row,
+    /// a share line per kind, and GEMM traffic totals.
+    pub fn render(&self) -> String {
+        let ms = |ns: u64| ns as f64 * 1e-6;
+        let mut out = String::new();
+        out.push_str("layer ");
+        for k in KernelKind::ALL {
+            out.push_str(&format!("{:>9}", k.label()));
+        }
+        out.push_str(&format!("{:>10}  {:>7}\n", "total_ms", "steptok"));
+        for (i, row) in self.rows.iter().enumerate() {
+            let label = if i == self.layers {
+                "model".to_string()
+            } else {
+                format!("L{i:02}")
+            };
+            out.push_str(&format!("{label:<6}"));
+            for k in &row.kinds {
+                out.push_str(&format!("{:>9.2}", ms(k.ns)));
+            }
+            out.push_str(&format!("{:>10.2}  {:>7}\n", ms(row.total_ns()),
+                                  row.step_tokens));
+        }
+        let total_ns: u64 = self.rows.iter().map(|r| r.total_ns()).sum();
+        out.push_str(&format!("{:<6}", "TOTAL"));
+        for k in KernelKind::ALL {
+            out.push_str(&format!("{:>9.2}", ms(self.kind_ns(k))));
+        }
+        out.push_str(&format!("{:>10.2}\n", ms(total_ns)));
+        if total_ns > 0 {
+            out.push_str("share ");
+            for k in KernelKind::ALL {
+                out.push_str(&format!(
+                    "{:>8.1}%",
+                    self.kind_ns(k) as f64 / total_ns as f64 * 100.0
+                ));
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "gemm traffic: {} tile-passes, {:.1} MiB plan bytes streamed\n",
+            self.kind_items(KernelKind::Gemm),
+            self.kind_bytes(KernelKind::Gemm) as f64 / (1024.0 * 1024.0)
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_records_nothing() {
+        let p = Profiler::new(2);
+        assert!(!p.is_enabled());
+        assert!(p.t0().is_none());
+        p.rec(0, KernelKind::Gemm, p.t0(), 10, 10);
+        p.add_step_tokens(0, 5);
+        assert_eq!(p.total(), Duration::ZERO);
+        assert_eq!(p.step_tokens(0), 0);
+    }
+
+    #[test]
+    fn records_attribute_to_layer_and_kind() {
+        let p = Profiler::new(2);
+        p.set_enabled(true);
+        let t = p.t0();
+        assert!(t.is_some());
+        std::thread::sleep(Duration::from_millis(1));
+        p.rec(1, KernelKind::Gemm, t, 8, 64);
+        p.rec(1, KernelKind::Norm, p.t0(), 4, 0);
+        // out-of-range layers land in the model slot instead of panicking
+        p.rec(MODEL_SLOT, KernelKind::Head, p.t0(), 1, 0);
+        p.add_step_tokens(0, 3);
+        p.add_step_tokens(0, 2);
+        assert_eq!(p.step_tokens(0), 5);
+        let rep = p.report();
+        assert_eq!(rep.rows.len(), 3);
+        let gemm = &rep.rows[1].kinds[0];
+        assert_eq!(gemm.kind, KernelKind::Gemm);
+        assert_eq!(gemm.calls, 1);
+        assert_eq!(gemm.items, 8);
+        assert_eq!(gemm.bytes, 64);
+        assert!(gemm.ns >= 1_000_000, "gemm ns {}", gemm.ns);
+        assert_eq!(rep.rows[2].kinds[8].calls, 1); // head in model slot
+        assert!(rep.total() >= Duration::from_millis(1));
+        assert!(rep.kind_ns(KernelKind::Gemm) >= 1_000_000);
+        let txt = rep.render();
+        assert!(txt.contains("L01"), "{txt}");
+        assert!(txt.contains("model"), "{txt}");
+        assert!(txt.contains("TOTAL"), "{txt}");
+        assert!(txt.contains("gemm traffic"), "{txt}");
+        p.reset();
+        assert_eq!(p.total(), Duration::ZERO);
+        assert_eq!(p.step_tokens(0), 0);
+    }
+
+    #[test]
+    fn coverage_is_ratio_of_wall() {
+        let p = Profiler::new(1);
+        p.set_enabled(true);
+        let t = p.t0();
+        std::thread::sleep(Duration::from_millis(2));
+        p.rec(0, KernelKind::Attn, t, 1, 1);
+        let rep = p.report();
+        let cov = rep.coverage(Duration::from_millis(4));
+        assert!(cov > 0.2 && cov <= 1.5, "cov {cov}");
+        assert_eq!(rep.coverage(Duration::ZERO), 0.0);
+    }
+}

@@ -1,0 +1,395 @@
+//! Telemetry registry: counters, gauges, fixed-bucket histograms, and a
+//! named registry that renders Prometheus text-exposition snapshots.
+//!
+//! Hot-path contract: recording into any instrument is a handful of relaxed
+//! atomic ops — no locks, no allocation. The registry's mutex is touched
+//! only at registration and render time (both cold).
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+/// Monotonic counter. `const`-constructible so it can back both registered
+/// instruments (`Arc<Counter>`) and the engine-global statics in [`engine`].
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter { v: AtomicU64::new(0) }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Relaxed);
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Relaxed)
+    }
+}
+
+/// Instantaneous signed value (queue depths, active sequences).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    v: AtomicI64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge { v: AtomicI64::new(0) }
+    }
+
+    #[inline]
+    pub fn set(&self, n: i64) {
+        self.v.store(n, Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: i64) {
+        self.v.fetch_add(n, Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.v.load(Relaxed)
+    }
+}
+
+/// Fixed-bucket histogram: `bounds` are inclusive upper bounds in recording
+/// units; one implicit `+Inf` overflow bucket is appended. Recording is a
+/// linear scan over a handful of bounds plus three relaxed adds.
+#[derive(Debug)]
+pub struct Histogram {
+    bounds: Vec<u64>,
+    buckets: Vec<AtomicU64>,
+    sum: AtomicU64,
+    count: AtomicU64,
+}
+
+/// Default request-latency bounds in microseconds: 50µs .. 1s.
+pub const LATENCY_US_BOUNDS: &[u64] = &[
+    50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000, 100_000,
+    250_000, 500_000, 1_000_000,
+];
+
+impl Histogram {
+    pub fn new(bounds: &[u64]) -> Histogram {
+        let mut b = bounds.to_vec();
+        b.sort_unstable();
+        b.dedup();
+        let buckets = (0..b.len() + 1).map(|_| AtomicU64::new(0)).collect();
+        Histogram {
+            bounds: b,
+            buckets,
+            sum: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn record(&self, v: u64) {
+        let i = self
+            .bounds
+            .iter()
+            .position(|&b| v <= b)
+            .unwrap_or(self.bounds.len());
+        self.buckets[i].fetch_add(1, Relaxed);
+        self.sum.fetch_add(v, Relaxed);
+        self.count.fetch_add(1, Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Relaxed)
+    }
+
+    /// Upper-bound estimate of quantile `p` (0..=1): the smallest bucket
+    /// bound whose cumulative count covers `ceil(p * count)`. Returns 0 on
+    /// an empty histogram; values past the last bound report that bound
+    /// (the `+Inf` bucket has no finite upper edge).
+    pub fn quantile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((n as f64 * p).ceil() as u64).clamp(1, n);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b.load(Relaxed);
+            if cum >= rank {
+                return self.bounds.get(i).copied().unwrap_or_else(|| {
+                    self.bounds.last().copied().unwrap_or(0)
+                });
+            }
+        }
+        self.bounds.last().copied().unwrap_or(0)
+    }
+}
+
+enum Instrument {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+struct Entry {
+    name: String,
+    help: String,
+    inst: Instrument,
+}
+
+/// A named set of instruments rendered together. Registration returns the
+/// existing instrument when the name is already present (same kind), so
+/// independent components can share counters by name.
+#[derive(Default)]
+pub struct Registry {
+    entries: Mutex<Vec<Entry>>,
+}
+
+impl std::fmt::Debug for Registry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.entries.lock().map(|g| g.len()).unwrap_or(0);
+        write!(f, "Registry({n} instruments)")
+    }
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str, help: &str) -> Arc<Counter> {
+        let mut g = self.entries.lock().unwrap();
+        for e in g.iter() {
+            if e.name == name {
+                if let Instrument::Counter(c) = &e.inst {
+                    return c.clone();
+                }
+            }
+        }
+        let c = Arc::new(Counter::new());
+        g.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            inst: Instrument::Counter(c.clone()),
+        });
+        c
+    }
+
+    pub fn gauge(&self, name: &str, help: &str) -> Arc<Gauge> {
+        let mut g = self.entries.lock().unwrap();
+        for e in g.iter() {
+            if e.name == name {
+                if let Instrument::Gauge(v) = &e.inst {
+                    return v.clone();
+                }
+            }
+        }
+        let v = Arc::new(Gauge::new());
+        g.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            inst: Instrument::Gauge(v.clone()),
+        });
+        v
+    }
+
+    pub fn histogram(&self, name: &str, help: &str, bounds: &[u64])
+                     -> Arc<Histogram> {
+        let mut g = self.entries.lock().unwrap();
+        for e in g.iter() {
+            if e.name == name {
+                if let Instrument::Histogram(h) = &e.inst {
+                    return h.clone();
+                }
+            }
+        }
+        let h = Arc::new(Histogram::new(bounds));
+        g.push(Entry {
+            name: name.to_string(),
+            help: help.to_string(),
+            inst: Instrument::Histogram(h.clone()),
+        });
+        h
+    }
+
+    /// Prometheus text-exposition snapshot of every registered instrument.
+    pub fn render(&self) -> String {
+        let g = self.entries.lock().unwrap();
+        let mut out = String::new();
+        for e in g.iter() {
+            out.push_str(&format!("# HELP {} {}\n", e.name, e.help));
+            match &e.inst {
+                Instrument::Counter(c) => {
+                    out.push_str(&format!("# TYPE {} counter\n", e.name));
+                    out.push_str(&format!("{} {}\n", e.name, c.get()));
+                }
+                Instrument::Gauge(v) => {
+                    out.push_str(&format!("# TYPE {} gauge\n", e.name));
+                    out.push_str(&format!("{} {}\n", e.name, v.get()));
+                }
+                Instrument::Histogram(h) => {
+                    out.push_str(&format!("# TYPE {} histogram\n", e.name));
+                    let mut cum = 0u64;
+                    for (i, b) in h.buckets.iter().enumerate() {
+                        cum += b.load(Relaxed);
+                        let le = match h.bounds.get(i) {
+                            Some(bound) => bound.to_string(),
+                            None => "+Inf".to_string(),
+                        };
+                        out.push_str(&format!(
+                            "{}_bucket{{le=\"{}\"}} {}\n",
+                            e.name, le, cum
+                        ));
+                    }
+                    out.push_str(&format!("{}_sum {}\n", e.name, h.sum()));
+                    out.push_str(&format!("{}_count {}\n", e.name, h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Engine-global monotonic counters, tallied directly by the kernels
+/// (`infer/kernels.rs`, `infer/decode.rs`, `infer/ops.rs`, `infer/pool.rs`)
+/// without plumbing a registry handle through every call. Each tally is one
+/// relaxed atomic add on a coarse-grained path (per GEMM call / per tile
+/// unpack / per attend), never inside an inner dot-product loop. The counts
+/// are process-wide totals across all model instances.
+pub mod engine {
+    use super::Counter;
+
+    /// bytes of weight codes unpacked from packed bitstreams
+    pub static BYTES_UNPACKED: Counter = Counter::new();
+    /// register-blocked weight-tile executions (tile × token-block passes)
+    pub static TILES_EXECUTED: Counter = Counter::new();
+    /// planned-plan bytes streamed through the GEMM micro-kernels
+    pub static PLAN_BYTES_STREAMED: Counter = Counter::new();
+    /// jobs executed by the persistent worker pool (shards, all callers)
+    pub static POOL_JOBS: Counter = Counter::new();
+    /// activation rows quantized to u8 codes
+    pub static ACT_ROWS_QUANTIZED: Counter = Counter::new();
+    /// tokens appended to quantized KV caches (per layer track pair)
+    pub static KV_TOKENS_APPENDED: Counter = Counter::new();
+    /// cached KV rows dequantized + attended during incremental decode
+    pub static KV_ROWS_ATTENDED: Counter = Counter::new();
+    /// tokens embedded (all forward entry points)
+    pub static TOKENS_EMBEDDED: Counter = Counter::new();
+
+    pub static ALL: &[(&str, &str, &Counter)] = &[
+        ("lrq_engine_bytes_unpacked_total",
+         "bytes of weight codes unpacked from packed bitstreams",
+         &BYTES_UNPACKED),
+        ("lrq_engine_tiles_executed_total",
+         "register-blocked weight tile executions",
+         &TILES_EXECUTED),
+        ("lrq_engine_plan_bytes_streamed_total",
+         "planned tile bytes streamed through GEMM micro-kernels",
+         &PLAN_BYTES_STREAMED),
+        ("lrq_engine_pool_jobs_total",
+         "jobs executed by the persistent worker pool",
+         &POOL_JOBS),
+        ("lrq_engine_act_rows_quantized_total",
+         "activation rows quantized to u8 codes",
+         &ACT_ROWS_QUANTIZED),
+        ("lrq_engine_kv_tokens_appended_total",
+         "tokens appended to quantized KV caches",
+         &KV_TOKENS_APPENDED),
+        ("lrq_engine_kv_rows_attended_total",
+         "cached KV rows dequantized and attended during decode",
+         &KV_ROWS_ATTENDED),
+        ("lrq_engine_tokens_embedded_total",
+         "tokens embedded across all forward entry points",
+         &TOKENS_EMBEDDED),
+    ];
+
+    /// Prometheus text lines for the engine-global counters.
+    pub fn render() -> String {
+        let mut out = String::new();
+        for (name, help, c) in ALL {
+            out.push_str(&format!("# HELP {name} {help}\n"));
+            out.push_str(&format!("# TYPE {name} counter\n"));
+            out.push_str(&format!("{name} {}\n", c.get()));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("lrq_test_total", "a counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name returns the same instrument
+        let c2 = r.counter("lrq_test_total", "a counter");
+        c2.inc();
+        assert_eq!(c.get(), 6);
+        let g = r.gauge("lrq_test_depth", "a gauge");
+        g.set(3);
+        g.add(-1);
+        assert_eq!(g.get(), 2);
+        let txt = r.render();
+        assert!(txt.contains("lrq_test_total 6"), "{txt}");
+        assert!(txt.contains("lrq_test_depth 2"), "{txt}");
+        assert!(txt.contains("# TYPE lrq_test_total counter"), "{txt}");
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::new(&[10, 100, 1000]);
+        assert_eq!(h.quantile(0.5), 0); // empty
+        for v in [1u64, 5, 50, 200, 2000] {
+            h.record(v);
+        }
+        assert_eq!(h.count(), 5);
+        assert_eq!(h.sum(), 2256);
+        // ranks: 2 in <=10, 1 in <=100, 1 in <=1000, 1 overflow
+        assert_eq!(h.quantile(0.2), 10);
+        assert_eq!(h.quantile(0.5), 100);
+        assert_eq!(h.quantile(0.8), 1000);
+        // overflow bucket reports the last finite bound
+        assert_eq!(h.quantile(1.0), 1000);
+    }
+
+    #[test]
+    fn histogram_renders_cumulative_prometheus_buckets() {
+        let r = Registry::new();
+        let h = r.histogram("lrq_test_lat_us", "latency", &[10, 100]);
+        h.record(5);
+        h.record(50);
+        h.record(500);
+        let txt = r.render();
+        assert!(txt.contains("lrq_test_lat_us_bucket{le=\"10\"} 1"), "{txt}");
+        assert!(txt.contains("lrq_test_lat_us_bucket{le=\"100\"} 2"), "{txt}");
+        assert!(txt.contains("lrq_test_lat_us_bucket{le=\"+Inf\"} 3"),
+                "{txt}");
+        assert!(txt.contains("lrq_test_lat_us_sum 555"), "{txt}");
+        assert!(txt.contains("lrq_test_lat_us_count 3"), "{txt}");
+    }
+
+    #[test]
+    fn engine_counters_render_and_accumulate() {
+        let before = engine::TILES_EXECUTED.get();
+        engine::TILES_EXECUTED.add(7);
+        assert!(engine::TILES_EXECUTED.get() >= before + 7);
+        let txt = engine::render();
+        assert!(txt.contains("lrq_engine_tiles_executed_total"), "{txt}");
+        assert!(txt.contains("lrq_engine_bytes_unpacked_total"), "{txt}");
+    }
+}

@@ -1,0 +1,314 @@
+//! Structured tracing: `chrome://tracing`-compatible span recording behind
+//! a runtime flag.
+//!
+//! Format: the file is a JSON array of trace events (the Chrome Trace Event
+//! format), one event per line. Spans are `ph:"X"` complete events with
+//! `ts`/`dur` in microseconds since the trace epoch; requests are wrapped in
+//! `ph:"b"`/`ph:"e"` async envelopes keyed by their trace ID so overlapping
+//! in-flight requests render as parallel tracks. [`shutdown`] writes a final
+//! instant event and the closing bracket; a trace truncated by a crash is
+//! still loadable (the viewer tolerates a missing `]`).
+//!
+//! Recording is thread-local: each thread owns an uncontended
+//! `Arc<Mutex<Vec<String>>>` buffer registered in a global list, appends
+//! pre-serialized event lines to it, and drains into the shared file sink
+//! every [`FLUSH_AT`] events. [`shutdown`] drains every registered buffer —
+//! including those of threads that have already exited — so no completed
+//! span is lost. When tracing is disabled, [`begin`] and [`enabled`] are a
+//! single relaxed atomic load and every `complete*` call returns before
+//! formatting anything.
+
+use std::fs::File;
+use std::io::{BufWriter, Error, ErrorKind, Result, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// Thread-local buffer drain threshold (events).
+const FLUSH_AT: usize = 256;
+
+struct Sink {
+    out: BufWriter<File>,
+    events: u64,
+}
+
+static SINK: Mutex<Option<Sink>> = Mutex::new(None);
+
+type Buf = Arc<Mutex<Vec<String>>>;
+
+/// Every thread's buffer, kept alive past thread exit so [`shutdown`] can
+/// drain stragglers.
+static BUFS: Mutex<Vec<Buf>> = Mutex::new(Vec::new());
+
+thread_local! {
+    static TL: (u64, Buf) = {
+        let buf: Buf = Arc::new(Mutex::new(Vec::new()));
+        BUFS.lock().unwrap().push(buf.clone());
+        (NEXT_TID.fetch_add(1, Ordering::Relaxed), buf)
+    };
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn ts_us(t: Instant) -> f64 {
+    t.saturating_duration_since(epoch()).as_secs_f64() * 1e6
+}
+
+/// Minimal JSON string escaping for span names (ours are plain ASCII, but a
+/// stray quote must not corrupt the file).
+fn escape(s: &str) -> String {
+    if s.contains(['"', '\\']) {
+        s.replace('\\', "\\\\").replace('"', "\\\"")
+    } else {
+        s.to_string()
+    }
+}
+
+fn write_lines(lines: Vec<String>) {
+    if lines.is_empty() {
+        return;
+    }
+    let mut g = SINK.lock().unwrap();
+    if let Some(sink) = g.as_mut() {
+        for l in &lines {
+            let _ = sink.out.write_all(l.as_bytes());
+            let _ = sink.out.write_all(b"\n");
+        }
+        sink.events += lines.len() as u64;
+    }
+}
+
+fn push_line(line: String) {
+    TL.with(|(_, buf)| {
+        let drained = {
+            let mut g = buf.lock().unwrap();
+            g.push(line);
+            if g.len() >= FLUSH_AT {
+                std::mem::take(&mut *g)
+            } else {
+                Vec::new()
+            }
+        };
+        write_lines(drained);
+    });
+}
+
+fn drain_all() -> Vec<String> {
+    let bufs: Vec<Buf> = BUFS.lock().unwrap().clone();
+    let mut all = Vec::new();
+    for b in bufs {
+        let mut g = b.lock().unwrap();
+        all.append(&mut *g);
+    }
+    all
+}
+
+/// Start tracing into `path`. Errors if a trace is already active.
+pub fn init(path: &Path) -> Result<()> {
+    let mut g = SINK.lock().unwrap();
+    if g.is_some() {
+        return Err(Error::new(ErrorKind::AlreadyExists,
+                              "trace already active"));
+    }
+    let mut out = BufWriter::new(File::create(path)?);
+    out.write_all(b"[\n")?;
+    *g = Some(Sink { out, events: 0 });
+    drop(g);
+    // discard events buffered after a previous shutdown — their timestamps
+    // belong to the old trace
+    drain_all();
+    let _ = epoch();
+    ENABLED.store(true, Ordering::Release);
+    Ok(())
+}
+
+/// Is tracing active? One relaxed load — the universal probe gate.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Span start: `Some(now)` when tracing, `None` (and nothing else) when not.
+#[inline]
+pub fn begin() -> Option<Instant> {
+    if enabled() {
+        Some(Instant::now())
+    } else {
+        None
+    }
+}
+
+fn emit_x<F>(start: Instant, dur: Duration, lane: Option<u64>, f: F)
+where
+    F: FnOnce() -> (String, Option<String>),
+{
+    let (name, args) = f();
+    let tid = lane.unwrap_or_else(|| TL.with(|(tid, _)| *tid));
+    let args = args.map(|a| format!(",\"args\":{a}")).unwrap_or_default();
+    push_line(format!(
+        "{{\"name\":\"{}\",\"cat\":\"lrq\",\"ph\":\"X\",\"ts\":{:.3},\
+         \"dur\":{:.3},\"pid\":1,\"tid\":{}{}}},",
+        escape(&name),
+        ts_us(start),
+        dur.as_secs_f64() * 1e6,
+        tid,
+        args
+    ));
+}
+
+/// Complete the span opened by [`begin`] (no-op on `None`). The closure
+/// builds `(name, args)` and runs only when tracing is active; `args`, when
+/// present, must be a JSON object literal (e.g. `{"rows":4}`).
+pub fn complete<F>(t0: Option<Instant>, f: F)
+where
+    F: FnOnce() -> (String, Option<String>),
+{
+    let Some(t0) = t0 else { return };
+    if !enabled() {
+        return;
+    }
+    emit_x(t0, t0.elapsed(), None, f);
+}
+
+/// Emit a span with an externally measured start/duration (e.g. a request's
+/// queue+exec window timed by the caller).
+pub fn complete_at<F>(start: Instant, dur: Duration, f: F)
+where
+    F: FnOnce() -> (String, Option<String>),
+{
+    if !enabled() {
+        return;
+    }
+    emit_x(start, dur, None, f);
+}
+
+/// Open an async envelope (`ph:"b"`) keyed by `id` — one per in-flight
+/// request, so overlapping requests render as parallel tracks.
+pub fn async_begin(name: &str, id: u64) {
+    if !enabled() {
+        return;
+    }
+    push_line(format!(
+        "{{\"name\":\"{}\",\"cat\":\"lrq\",\"ph\":\"b\",\"id\":{},\
+         \"ts\":{:.3},\"pid\":1,\"tid\":0}},",
+        escape(name),
+        id,
+        ts_us(Instant::now())
+    ));
+}
+
+/// Close the async envelope opened by [`async_begin`].
+pub fn async_end(name: &str, id: u64) {
+    if !enabled() {
+        return;
+    }
+    push_line(format!(
+        "{{\"name\":\"{}\",\"cat\":\"lrq\",\"ph\":\"e\",\"id\":{},\
+         \"ts\":{:.3},\"pid\":1,\"tid\":0}},",
+        escape(name),
+        id,
+        ts_us(Instant::now())
+    ));
+}
+
+/// Stop tracing, drain every thread buffer, close the file. Returns the
+/// number of events written; `Ok(0)` when no trace was active.
+pub fn shutdown() -> Result<u64> {
+    ENABLED.store(false, Ordering::SeqCst);
+    let lines = drain_all();
+    let mut g = SINK.lock().unwrap();
+    let Some(mut sink) = g.take() else {
+        return Ok(0);
+    };
+    for l in &lines {
+        sink.out.write_all(l.as_bytes())?;
+        sink.out.write_all(b"\n")?;
+    }
+    sink.events += lines.len() as u64;
+    sink.out.write_all(
+        format!(
+            "{{\"name\":\"trace_end\",\"cat\":\"lrq\",\"ph\":\"i\",\
+             \"ts\":{:.3},\"pid\":1,\"tid\":0,\"s\":\"g\"}}\n]\n",
+            ts_us(Instant::now())
+        )
+        .as_bytes(),
+    )?;
+    sink.out.flush()?;
+    Ok(sink.events)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_path(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!(
+            "lrq_trace_{}_{}_{}.json",
+            std::process::id(),
+            tag,
+            NEXT_TID.fetch_add(1, Ordering::Relaxed)
+        ))
+    }
+
+    #[test]
+    fn disabled_probes_are_inert() {
+        // may race with another test enabling tracing; begin() must still
+        // be safe to drop on the floor either way
+        let t = begin();
+        complete(t, || ("never".to_string(), None));
+        assert!(!enabled() || t.is_some());
+    }
+
+    #[test]
+    fn trace_file_roundtrip() {
+        let path = temp_path("roundtrip");
+        init(&path).unwrap();
+        assert!(enabled());
+        // a second init must refuse while active
+        assert!(init(&path).is_err());
+        let t0 = begin();
+        std::thread::sleep(Duration::from_millis(1));
+        complete(t0, || {
+            ("layer0".to_string(), Some("{\"rows\":4}".to_string()))
+        });
+        async_begin("request", 7);
+        complete_at(Instant::now(), Duration::from_micros(250), || {
+            ("decode_step".to_string(), None)
+        });
+        async_end("request", 7);
+        // spans recorded on another thread must survive its exit
+        std::thread::spawn(|| {
+            let t = begin();
+            complete(t, || ("shard".to_string(), None));
+        })
+        .join()
+        .unwrap();
+        let n = shutdown().unwrap();
+        assert!(n >= 5, "events {n}");
+        let txt = std::fs::read_to_string(&path).unwrap();
+        assert!(txt.starts_with("[\n"), "{txt}");
+        assert!(txt.trim_end().ends_with(']'), "{txt}");
+        assert!(txt.contains("\"ph\":\"X\""), "{txt}");
+        assert!(txt.contains("\"name\":\"layer0\""), "{txt}");
+        assert!(txt.contains("\"args\":{\"rows\":4}"), "{txt}");
+        assert!(txt.contains("\"ph\":\"b\""), "{txt}");
+        assert!(txt.contains("\"ph\":\"e\""), "{txt}");
+        assert!(txt.contains("\"name\":\"shard\""), "{txt}");
+        assert!(txt.contains("trace_end"), "{txt}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn escape_handles_quotes() {
+        assert_eq!(escape("plain"), "plain");
+        assert_eq!(escape("a\"b"), "a\\\"b");
+        assert_eq!(escape("a\\b"), "a\\\\b");
+    }
+}

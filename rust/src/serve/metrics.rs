@@ -3,11 +3,21 @@
 //! counters — the measurements behind Fig. 5 / Table 15 and the `serve` /
 //! `serve-native` / `generate-native` CLI summaries.
 //!
+//! Every scalar counter lives in an [`obs::Registry`](crate::obs::Registry)
+//! as an `Arc<Counter>`, so the same numbers the CLI summary prints are
+//! exportable as a Prometheus text snapshot (and servable over HTTP by
+//! [`crate::obs::HttpExporter`]) with no parallel bookkeeping. The one
+//! deliberate exception is the raw latency sample vector: fixed-bucket
+//! histograms can only bound a percentile, and the existing tests (and Fig. 5
+//! replication) assert exact nearest-rank values, so `latencies_us` keeps
+//! every sample while the registry's histogram carries the exportable
+//! bucketed view of the same stream.
+//!
 //! Accounting contract:
 //! * [`Metrics::record`] — once per completed *request* (score or generate,
 //!   success or scorer-error). Requests rejected up front (invalid length)
 //!   never executed and are not recorded.
-//! * [`Metrics::record_batch`] — once per executed *score batch*: `exec_us`
+//! * [`Metrics::record_batch`] — once per executed *score batch*: exec time
 //!   is per batch, so `mean_exec` is a per-execution mean rather than being
 //!   skewed toward large batches.
 //! * [`Metrics::record_decode`] — once per executed *decode step* across
@@ -15,36 +25,107 @@
 //! * Percentiles use nearest-rank (ceil), so small sample counts no longer
 //!   understate tail latency.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-#[derive(Clone, Debug, Default)]
+use crate::obs::registry::LATENCY_US_BOUNDS;
+use crate::obs::{Counter, Histogram, Registry};
+
+/// Serving counters on top of an [`obs::Registry`](Registry). `Clone` shares
+/// the underlying instruments (`Arc`), so a cloned snapshot keeps reading
+/// live counters; only the exact latency sample vector is copied at clone
+/// time.
+#[derive(Clone, Debug)]
 pub struct Metrics {
+    registry: Arc<Registry>,
     /// completed requests (score + generate)
-    pub requests: usize,
+    requests: Arc<Counter>,
     /// executed score batches
-    pub batches: usize,
+    batches: Arc<Counter>,
     /// completed generate requests
-    pub gen_requests: usize,
+    gen_requests: Arc<Counter>,
     /// generated tokens across all completed generate requests
-    pub gen_tokens: usize,
+    gen_tokens: Arc<Counter>,
     /// executed decode steps (each covers >= 1 active sequences)
-    pub decode_steps: usize,
+    decode_steps: Arc<Counter>,
     /// tokens produced by decode steps (Σ per-step sequence counts)
-    decode_step_tokens: usize,
-    /// total decode execution time
-    decode_exec_us: u64,
+    decode_step_tokens: Arc<Counter>,
+    /// total decode execution time (µs)
+    decode_exec_us: Arc<Counter>,
+    /// total score-batch execution time (µs)
+    batch_exec_us: Arc<Counter>,
+    /// Σ valid rows across executed score batches
+    batch_rows: Arc<Counter>,
+    /// bucketed request-latency view for export
+    latency_hist: Arc<Histogram>,
+    /// exact latency samples for nearest-rank percentiles
     latencies_us: Vec<u64>,
-    /// per executed batch
-    exec_us: Vec<u64>,
-    /// per executed batch
-    batch_sizes: Vec<usize>,
     /// first/last record times — the observation window for the built-in
     /// requests/sec counter
     first_record: Option<Instant>,
     last_record: Option<Instant>,
 }
 
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics::new()
+    }
+}
+
 impl Metrics {
+    pub fn new() -> Metrics {
+        let registry = Arc::new(Registry::new());
+        let requests = registry.counter(
+            "lrq_requests_total",
+            "completed requests (score + generate)");
+        let batches = registry.counter(
+            "lrq_score_batches_total", "executed score batches");
+        let gen_requests = registry.counter(
+            "lrq_gen_requests_total", "completed generate requests");
+        let gen_tokens = registry.counter(
+            "lrq_gen_tokens_total",
+            "generated tokens across completed generate requests");
+        let decode_steps = registry.counter(
+            "lrq_decode_steps_total", "executed decode steps");
+        let decode_step_tokens = registry.counter(
+            "lrq_decode_step_tokens_total",
+            "tokens produced by decode steps");
+        let decode_exec_us = registry.counter(
+            "lrq_decode_exec_us_total",
+            "total decode execution time in microseconds");
+        let batch_exec_us = registry.counter(
+            "lrq_batch_exec_us_total",
+            "total score-batch execution time in microseconds");
+        let batch_rows = registry.counter(
+            "lrq_batch_rows_total",
+            "valid rows across executed score batches");
+        let latency_hist = registry.histogram(
+            "lrq_request_latency_us",
+            "request latency in microseconds",
+            LATENCY_US_BOUNDS);
+        Metrics {
+            registry,
+            requests,
+            batches,
+            gen_requests,
+            gen_tokens,
+            decode_steps,
+            decode_step_tokens,
+            decode_exec_us,
+            batch_exec_us,
+            batch_rows,
+            latency_hist,
+            latencies_us: Vec::new(),
+            first_record: None,
+            last_record: None,
+        }
+    }
+
+    /// The registry backing these counters (for export / HTTP snapshots).
+    pub fn registry(&self) -> Arc<Registry> {
+        self.registry.clone()
+    }
+
     fn touch(&mut self) {
         let now = Instant::now();
         self.first_record.get_or_insert(now);
@@ -55,31 +136,62 @@ impl Metrics {
     /// success *and* the scorer-error path).
     pub fn record(&mut self, latency: Duration) {
         self.touch();
-        self.requests += 1;
-        self.latencies_us.push(latency.as_micros() as u64);
+        self.requests.inc();
+        let us = latency.as_micros() as u64;
+        self.latencies_us.push(us);
+        self.latency_hist.record(us);
     }
 
     /// Record one executed score batch (called once per engine execution).
     pub fn record_batch(&mut self, exec: Duration, batch_size: usize) {
-        self.batches += 1;
-        self.exec_us.push(exec.as_micros() as u64);
-        self.batch_sizes.push(batch_size);
+        self.batches.inc();
+        self.batch_exec_us.add(exec.as_micros() as u64);
+        self.batch_rows.add(batch_size as u64);
     }
 
     /// Record one completed generate request and its token count.
     pub fn record_gen(&mut self, latency: Duration, tokens: usize) {
         self.touch();
-        self.requests += 1;
-        self.gen_requests += 1;
-        self.gen_tokens += tokens;
-        self.latencies_us.push(latency.as_micros() as u64);
+        self.requests.inc();
+        self.gen_requests.inc();
+        self.gen_tokens.add(tokens as u64);
+        let us = latency.as_micros() as u64;
+        self.latencies_us.push(us);
+        self.latency_hist.record(us);
     }
 
     /// Record one executed decode step batched across `seqs` sequences.
     pub fn record_decode(&mut self, seqs: usize, exec: Duration) {
-        self.decode_steps += 1;
-        self.decode_step_tokens += seqs;
-        self.decode_exec_us += exec.as_micros() as u64;
+        self.decode_steps.inc();
+        self.decode_step_tokens.add(seqs as u64);
+        self.decode_exec_us.add(exec.as_micros() as u64);
+    }
+
+    pub fn requests(&self) -> usize {
+        self.requests.get() as usize
+    }
+
+    pub fn batches(&self) -> usize {
+        self.batches.get() as usize
+    }
+
+    pub fn gen_requests(&self) -> usize {
+        self.gen_requests.get() as usize
+    }
+
+    pub fn gen_tokens(&self) -> usize {
+        self.gen_tokens.get() as usize
+    }
+
+    pub fn decode_steps(&self) -> usize {
+        self.decode_steps.get() as usize
+    }
+
+    /// Tokens produced by decode steps (one per stepped sequence). Prefill's
+    /// first sampled token is *not* a decode-step token, so after a batched
+    /// generate run `gen_tokens == decode_step_tokens + gen_requests`.
+    pub fn decode_step_tokens(&self) -> usize {
+        self.decode_step_tokens.get() as usize
     }
 
     /// Nearest-rank percentile over a sorted sample: the smallest value
@@ -120,38 +232,40 @@ impl Metrics {
         )
     }
 
-    /// Mean execution time per score batch.
+    /// Mean execution time per score batch (0 before any batch executed).
     pub fn mean_exec(&self) -> Duration {
-        if self.exec_us.is_empty() {
+        let n = self.batches.get();
+        if n == 0 {
             return Duration::ZERO;
         }
-        Duration::from_micros(
-            self.exec_us.iter().sum::<u64>() / self.exec_us.len() as u64)
+        Duration::from_micros(self.batch_exec_us.get() / n)
     }
 
-    /// Mean occupancy per executed score batch.
+    /// Mean occupancy per executed score batch (0.0 before any batch).
     pub fn mean_batch(&self) -> f64 {
-        if self.batch_sizes.is_empty() {
+        let n = self.batches.get();
+        if n == 0 {
             return 0.0;
         }
-        self.batch_sizes.iter().sum::<usize>() as f64
-            / self.batch_sizes.len() as f64
+        self.batch_rows.get() as f64 / n as f64
     }
 
     /// Mean active sequences per decode step (decode-batching occupancy).
     pub fn mean_decode_batch(&self) -> f64 {
-        if self.decode_steps == 0 {
+        let n = self.decode_steps.get();
+        if n == 0 {
             return 0.0;
         }
-        self.decode_step_tokens as f64 / self.decode_steps as f64
+        self.decode_step_tokens.get() as f64 / n as f64
     }
 
     /// Decode throughput: tokens produced per second of decode execution.
     pub fn decode_tokens_per_sec(&self) -> f64 {
-        if self.decode_exec_us == 0 {
+        let us = self.decode_exec_us.get();
+        if us == 0 {
             return 0.0;
         }
-        self.decode_step_tokens as f64 / (self.decode_exec_us as f64 * 1e-6)
+        self.decode_step_tokens.get() as f64 / (us as f64 * 1e-6)
     }
 
     /// Requests per second over an externally measured wall window.
@@ -159,26 +273,34 @@ impl Metrics {
         if wall.is_zero() {
             return 0.0;
         }
-        self.requests as f64 / wall.as_secs_f64()
+        self.requests() as f64 / wall.as_secs_f64()
     }
 
     /// Steady-state completion rate: requests per second over the window
-    /// between the first and last recorded response (0.0 until two requests
-    /// have landed). Caveat: the window excludes the first batch's queue +
+    /// between the first and last recorded response. A single record has no
+    /// window (first == last), and sub-microsecond windows collapse to zero
+    /// — both report 0.0 rather than dividing by zero or claiming infinite
+    /// throughput. Caveat: the window excludes the first batch's queue +
     /// exec time, so with few batches this overstates throughput — CLI
     /// summaries use [`Metrics::throughput`] with an external wall clock.
     pub fn requests_per_sec(&self) -> f64 {
         match (self.first_record, self.last_record) {
-            (Some(a), Some(b)) if self.requests > 1 => {
+            (Some(a), Some(b)) if self.requests() > 1 => {
                 let w = b.saturating_duration_since(a);
                 if w.is_zero() {
                     0.0
                 } else {
-                    (self.requests - 1) as f64 / w.as_secs_f64()
+                    (self.requests() - 1) as f64 / w.as_secs_f64()
                 }
             }
             _ => 0.0,
         }
+    }
+
+    /// Prometheus text snapshot of every serving counter (plus the bucketed
+    /// latency histogram) — what the HTTP exporter and `--metrics-out` emit.
+    pub fn render(&self) -> String {
+        self.registry.render()
     }
 
     /// One-line CLI summary (shared by `serve`, `serve-native`, and
@@ -191,8 +313,8 @@ impl Metrics {
         let mut s = format!(
             "{} requests in {} batches (mean batch {:.2}): latency p50 \
              {:.2}ms p95 {:.2}ms p99 {:.2}ms, mean exec {:.2}ms, {:.1} req/s",
-            self.requests,
-            self.batches,
+            self.requests(),
+            self.batches(),
             self.mean_batch(),
             Self::pct_sorted(&lat, 0.50).as_secs_f64() * 1e3,
             Self::pct_sorted(&lat, 0.95).as_secs_f64() * 1e3,
@@ -200,13 +322,13 @@ impl Metrics {
             self.mean_exec().as_secs_f64() * 1e3,
             self.throughput(wall),
         );
-        if self.decode_steps > 0 {
+        if self.decode_steps() > 0 {
             s.push_str(&format!(
                 "; {} generations, {} tokens in {} decode steps (mean step \
                  batch {:.2}, {:.0} tok/s decode)",
-                self.gen_requests,
-                self.gen_tokens,
-                self.decode_steps,
+                self.gen_requests(),
+                self.gen_tokens(),
+                self.decode_steps(),
                 self.mean_decode_batch(),
                 self.decode_tokens_per_sec(),
             ));
@@ -231,8 +353,8 @@ mod tests {
         }
         assert!(m.p50_latency() < m.p95_latency());
         assert!(m.p95_latency() <= m.p99_latency());
-        assert_eq!(m.requests, 100);
-        assert_eq!(m.batches, 50);
+        assert_eq!(m.requests(), 100);
+        assert_eq!(m.batches(), 50);
         assert!((m.mean_batch() - 2.0).abs() < 1e-9);
         assert!(m.throughput(Duration::from_secs(1)) > 0.0);
     }
@@ -271,10 +393,11 @@ mod tests {
         m.record_decode(4, Duration::from_micros(200));
         m.record_decode(2, Duration::from_micros(100));
         m.record_gen(Duration::from_millis(3), 7);
-        assert_eq!(m.decode_steps, 2);
-        assert_eq!(m.gen_requests, 1);
-        assert_eq!(m.gen_tokens, 7);
-        assert_eq!(m.requests, 1);
+        assert_eq!(m.decode_steps(), 2);
+        assert_eq!(m.decode_step_tokens(), 6);
+        assert_eq!(m.gen_requests(), 1);
+        assert_eq!(m.gen_tokens(), 7);
+        assert_eq!(m.requests(), 1);
         assert!((m.mean_decode_batch() - 3.0).abs() < 1e-9);
         // 6 tokens over 300us = 20k tok/s
         assert!((m.decode_tokens_per_sec() - 20_000.0).abs() < 1.0);
@@ -287,11 +410,30 @@ mod tests {
         assert_eq!(m.p50_latency(), Duration::ZERO);
         assert_eq!(m.p99_latency(), Duration::ZERO);
         assert_eq!(m.mean_latency(), Duration::ZERO);
+        assert_eq!(m.mean_exec(), Duration::ZERO);
         assert_eq!(m.mean_batch(), 0.0);
         assert_eq!(m.mean_decode_batch(), 0.0);
         assert_eq!(m.decode_tokens_per_sec(), 0.0);
         assert_eq!(m.requests_per_sec(), 0.0);
         assert!(!m.summary(Duration::ZERO).is_empty());
+    }
+
+    #[test]
+    fn single_record_window_is_finite() {
+        // first_record == last_record after one request: the observation
+        // window is empty, and the rate must be 0.0 — not a division by
+        // zero, not +inf
+        let mut m = Metrics::default();
+        m.record(Duration::from_micros(5));
+        let rps = m.requests_per_sec();
+        assert_eq!(rps, 0.0);
+        assert!(rps.is_finite());
+        // two records in (almost) the same instant can still collapse to a
+        // zero-length window; the guard must hold there too
+        m.record(Duration::from_micros(5));
+        let rps = m.requests_per_sec();
+        assert!(rps.is_finite(), "rps {rps}");
+        assert!(rps >= 0.0, "rps {rps}");
     }
 
     #[test]
@@ -305,5 +447,21 @@ mod tests {
         let rps = m.requests_per_sec();
         // one inter-arrival over a >=5ms sleep: positive, below 1000 req/s
         assert!(rps > 0.0 && rps < 1000.0, "rps {rps}");
+    }
+
+    #[test]
+    fn clone_shares_counters_and_renders() {
+        let mut m = Metrics::default();
+        m.record_batch(Duration::from_micros(10), 3);
+        m.record(Duration::from_micros(42));
+        let snap = m.clone();
+        // counters are shared through the registry: the clone sees later
+        // increments (it is a live view, not a frozen copy)
+        m.record(Duration::from_micros(50));
+        assert_eq!(snap.requests(), 2);
+        let txt = snap.render();
+        assert!(txt.contains("lrq_requests_total 2"), "{txt}");
+        assert!(txt.contains("lrq_batch_rows_total 3"), "{txt}");
+        assert!(txt.contains("lrq_request_latency_us_bucket"), "{txt}");
     }
 }

@@ -22,10 +22,18 @@
 //! rejected immediately and never occupies a batch row, so it neither wastes
 //! engine compute (variable-batch engines execute only occupied rows) nor
 //! inflates the `batch_size` reported to the other requests in its batch.
+//!
+//! Observability: every request carries a process-unique trace ID assigned
+//! at submission. When tracing is active ([`crate::obs::trace`]), its
+//! lifetime renders as an async `ph:"b"`/`ph:"e"` envelope, and the engine
+//! loop emits `score_batch` / `decode_step` spans that nest the per-layer
+//! and per-kernel spans recorded inside the model — the request → batch →
+//! layer → kernel tree.
 
 pub mod metrics;
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender,
                       TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -34,9 +42,17 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
+use crate::obs::trace;
 use crate::rng::{sample_top_k, Rng};
 
 pub use metrics::Metrics;
+
+/// Process-unique request trace IDs (the async-envelope key in trace files).
+static NEXT_RID: AtomicU64 = AtomicU64::new(1);
+
+fn next_rid() -> u64 {
+    NEXT_RID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Engine-side handle of an active decode sequence (its KV cache lives
 /// inside the scorer).
@@ -86,6 +102,8 @@ pub struct ScoreRequest {
     pub ids: Vec<i32>,
     resp: Sender<Result<ScoreResponse, String>>,
     submitted: Instant,
+    /// trace ID (async-envelope key; assigned at submission)
+    rid: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -108,6 +126,8 @@ pub struct GenerateRequest {
     pub seed: u64,
     resp: Sender<Result<GenerateResponse, String>>,
     submitted: Instant,
+    /// trace ID (async-envelope key; assigned at submission)
+    rid: u64,
 }
 
 #[derive(Clone, Debug)]
@@ -149,13 +169,19 @@ impl Client {
     pub fn submit(&self, ids: Vec<i32>)
                   -> Result<Receiver<Result<ScoreResponse, String>>> {
         let (tx, rx) = channel();
+        let rid = next_rid();
+        trace::async_begin("score", rid);
         self.tx
             .send(Request::Score(ScoreRequest {
                 ids,
                 resp: tx,
                 submitted: Instant::now(),
+                rid,
             }))
-            .map_err(|_| anyhow!("server stopped"))?;
+            .map_err(|_| {
+                trace::async_end("score", rid);
+                anyhow!("server stopped")
+            })?;
         Ok(rx)
     }
 
@@ -172,6 +198,8 @@ impl Client {
     pub fn generate(&self, prompt: Vec<i32>, max_new: usize, top_k: usize,
                     seed: u64) -> Result<GenerateResponse> {
         let (tx, rx) = channel();
+        let rid = next_rid();
+        trace::async_begin("generate", rid);
         self.tx
             .send(Request::Generate(GenerateRequest {
                 prompt,
@@ -180,8 +208,12 @@ impl Client {
                 seed,
                 resp: tx,
                 submitted: Instant::now(),
+                rid,
             }))
-            .map_err(|_| anyhow!("server stopped"))?;
+            .map_err(|_| {
+                trace::async_end("generate", rid);
+                anyhow!("server stopped")
+            })?;
         rx.recv()
             .map_err(|_| anyhow!("server dropped request"))?
             .map_err(|e| anyhow!(e))
@@ -255,6 +287,7 @@ struct ActiveSeq {
     tokens: Vec<i32>,
     resp: Sender<Result<GenerateResponse, String>>,
     submitted: Instant,
+    rid: u64,
 }
 
 fn sort_request(r: Request, scores: &mut Vec<ScoreRequest>,
@@ -365,6 +398,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
         if r.ids.len() < 2 || r.ids.len() > seq {
             let _ = r.resp.send(Err(format!(
                 "sequence length {} not in [2, {seq}]", r.ids.len())));
+            trace::async_end("score", r.rid);
         } else {
             valid.push(r);
         }
@@ -397,6 +431,9 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
     let t0 = Instant::now();
     let scored = scorer.score(&rows.ids, &rows.tgt);
     let exec_time = t0.elapsed();
+    trace::complete_at(t0, exec_time, || {
+        ("score_batch".to_string(), Some(format!("{{\"rows\":{n}}}")))
+    });
     metrics.lock().unwrap().record_batch(exec_time, n);
     match scored {
         Ok(logp) => {
@@ -410,6 +447,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
                     latency,
                     batch_size: n,
                 }));
+                trace::async_end("score", r.rid);
             }
         }
         Err(e) => {
@@ -419,6 +457,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
             for r in valid {
                 metrics.lock().unwrap().record(r.submitted.elapsed());
                 let _ = r.resp.send(Err(msg.clone()));
+                trace::async_end("score", r.rid);
             }
         }
     }
@@ -431,17 +470,20 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
     if g.prompt.is_empty() || g.max_new == 0 {
         let _ = g.resp.send(Err(
             "generate needs a non-empty prompt and max_new >= 1".into()));
+        trace::async_end("generate", g.rid);
         return;
     }
     if g.prompt.len() + g.max_new > seq {
         let _ = g.resp.send(Err(format!(
             "prompt {} + max_new {} exceeds the {seq}-token context",
             g.prompt.len(), g.max_new)));
+        trace::async_end("generate", g.rid);
         return;
     }
     if !scorer.supports_decode() {
         let _ = g.resp.send(Err(
             "this engine does not support incremental decode".into()));
+        trace::async_end("generate", g.rid);
         return;
     }
     match scorer.begin_decode(&g.prompt) {
@@ -450,6 +492,7 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
             // request still counts, like the score-batch error path
             metrics.lock().unwrap().record(g.submitted.elapsed());
             let _ = g.resp.send(Err(format!("{e:#}")));
+            trace::async_end("generate", g.rid);
         }
         Ok((sid, logits)) => {
             let mut rng = Rng::new(g.seed);
@@ -463,6 +506,7 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
                 tokens: vec![first],
                 resp: g.resp,
                 submitted: g.submitted,
+                rid: g.rid,
             };
             if seq_state.tokens.len() >= seq_state.max_new {
                 finish(scorer, seq_state, metrics);
@@ -484,6 +528,7 @@ fn finish(scorer: &mut dyn BatchScorer, a: ActiveSeq,
         latency,
         prompt_len: a.prompt_len,
     }));
+    trace::async_end("generate", a.rid);
 }
 
 /// One decode step batched across up to `bcap` active sequences; finished
@@ -499,6 +544,9 @@ fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
     let t0 = Instant::now();
     let stepped = scorer.decode_step(&batch);
     let exec = t0.elapsed();
+    trace::complete_at(t0, exec, || {
+        ("decode_step".to_string(), Some(format!("{{\"seqs\":{n}}}")))
+    });
     match stepped {
         Ok(all_logits) => {
             // recorded only on success: a failed step produced no tokens
@@ -534,6 +582,7 @@ fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
                 scorer.end_decode(a.sid);
                 metrics.lock().unwrap().record(a.submitted.elapsed());
                 let _ = a.resp.send(Err(msg.clone()));
+                trace::async_end("generate", a.rid);
             }
         }
     }
@@ -633,7 +682,7 @@ mod tests {
         want.sort_by(|a, b| a.partial_cmp(b).unwrap());
         assert_eq!(got, want);
         let m = s.metrics.lock().unwrap();
-        assert_eq!(m.requests, n);
+        assert_eq!(m.requests(), n);
     }
 
     #[test]
@@ -644,7 +693,7 @@ mod tests {
             c.score(vec![1, 2, 3]).unwrap();
         }
         let m = s.metrics.lock().unwrap();
-        assert_eq!(m.requests, 20);
+        assert_eq!(m.requests(), 20);
         assert!(m.p50_latency() <= m.p95_latency());
         assert!(m.mean_batch() >= 1.0);
     }
@@ -748,7 +797,7 @@ mod tests {
         assert_eq!(r.logp_sum, -5.0);
         // both were valid and executed -> both recorded
         let m = s.metrics.lock().unwrap();
-        assert_eq!(m.requests, 2);
+        assert_eq!(m.requests(), 2);
     }
 
     /// Decode-capable mock: the "model" deterministically continues with
@@ -845,9 +894,12 @@ mod tests {
         // every cache released
         assert_eq!(live.load(Ordering::SeqCst), 0);
         let m = s.metrics.lock().unwrap();
-        assert_eq!(m.gen_requests, 6);
-        assert_eq!(m.gen_tokens, 30);
-        assert!(m.decode_steps > 0);
+        assert_eq!(m.gen_requests(), 6);
+        assert_eq!(m.gen_tokens(), 30);
+        assert!(m.decode_steps() > 0);
+        // prefill's first sampled token is not a decode-step token
+        assert_eq!(m.gen_tokens(),
+                   m.decode_step_tokens() + m.gen_requests());
         assert!(m.mean_decode_batch() >= 1.0);
     }
 
@@ -891,7 +943,7 @@ mod tests {
         assert!(c.generate(vec![0; 30], 10, 1, 0).is_err());
         // nothing was admitted
         assert_eq!(live.load(Ordering::SeqCst), 0);
-        assert_eq!(s.metrics.lock().unwrap().gen_requests, 0);
+        assert_eq!(s.metrics.lock().unwrap().gen_requests(), 0);
     }
 
     #[test]

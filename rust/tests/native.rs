@@ -16,6 +16,7 @@ use lrq::infer::{calibrate_stats, prepare_native, quantize_weights,
                  reference, start_native_server, ExecMode, ExecState,
                  NativeModel, QuantBlock, ScaleInit};
 use lrq::model::{ModelDim, Weights};
+use lrq::obs::{trace, KernelKind};
 use lrq::rng::Rng;
 use lrq::serve::ServerConfig;
 use lrq::tensor::Tensor;
@@ -237,7 +238,7 @@ fn native_scorer_serves_w4a8_and_w8a8_through_batcher() {
                     resp.logp_sum);
         }
         let m = server.metrics.lock().unwrap();
-        assert_eq!(m.requests, 12, "{}", scheme.label());
+        assert_eq!(m.requests(), 12, "{}", scheme.label());
         assert!(m.p50_latency() <= m.p99_latency());
         // with 12 concurrent clients and a 10ms window, at least one batch
         // should have coalesced
@@ -397,9 +398,101 @@ fn generate_through_batcher_matches_direct_decode() {
         assert_eq!(resp.tokens, want, "prompt {prompt:?}");
     }
     let m = server.metrics.lock().unwrap();
-    assert_eq!(m.gen_requests, 8);
-    assert_eq!(m.gen_tokens, 8 * max_new);
-    assert!(m.decode_steps > 0);
+    assert_eq!(m.gen_requests(), 8);
+    assert_eq!(m.gen_tokens(), 8 * max_new);
+    assert!(m.decode_steps() > 0);
+    // decode accounting: every generated token beyond the prefill's first
+    // sample came from exactly one decode step
+    assert_eq!(m.gen_tokens(), m.decode_step_tokens() + m.gen_requests());
+}
+
+/// Observability acceptance: after a batched generate run through the
+/// server, (a) the serve counters and the model profiler agree on decode
+/// accounting — `gen_tokens == decode_step_tokens + gen_requests` and every
+/// layer stepped exactly `decode_step_tokens` tokens; (b) the per-layer
+/// profile shows real kernel time with internally consistent sums; (c) the
+/// trace file is loadable chrome-trace JSON containing the request → batch
+/// → layer → kernel span tree.
+#[test]
+fn decode_accounting_and_trace_tree_after_batched_generate() {
+    let dim = micro_dim();
+    let mut rng = Rng::new(41);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 21));
+    let model = prepare_native(&weights, Scheme::w4a8_token(), ScaleInit::Rtn,
+                               &corpus, 1, 23, 1)
+        .unwrap();
+    let prof = model.profiler();
+    prof.set_enabled(true);
+    let tpath = std::env::temp_dir().join(format!(
+        "lrq_native_trace_{}.json", std::process::id()));
+    trace::init(&tpath).unwrap();
+
+    let server = start_native_server(
+        model,
+        ServerConfig { max_batch: 4, max_wait: Duration::from_millis(5) },
+    )
+    .unwrap();
+    let max_new = 5usize;
+    let mut handles = Vec::new();
+    for k in 0..6u64 {
+        let client = server.client();
+        let vocab = dim.vocab;
+        handles.push(std::thread::spawn(move || {
+            let mut r = Rng::new(0xACC0 ^ k);
+            let prompt: Vec<i32> =
+                (0..4).map(|_| r.below(vocab) as i32).collect();
+            client.generate(prompt, max_new, 1, k).unwrap()
+        }));
+    }
+    for h in handles {
+        let resp = h.join().unwrap();
+        assert_eq!(resp.tokens.len(), max_new);
+    }
+    let m = server.metrics.lock().unwrap().clone();
+    drop(server); // quiesce the engine thread before reading the profiler
+
+    // (a) decode accounting: serve counters vs profiler token attribution
+    assert_eq!(m.gen_requests(), 6);
+    assert_eq!(m.gen_tokens(), 6 * max_new);
+    assert!(m.decode_steps() > 0);
+    assert_eq!(m.gen_tokens(), m.decode_step_tokens() + m.gen_requests());
+    assert!(prof.layers() > 0);
+    for l in 0..prof.layers() {
+        assert_eq!(prof.step_tokens(l), m.decode_step_tokens() as u64,
+                   "layer {l} stepped a different token count");
+    }
+
+    // (b) the profile carries real kernel time and sums consistently
+    let report = prof.report();
+    assert!(report.total() > Duration::ZERO);
+    assert!(report.kind_ns(KernelKind::Gemm) > 0);
+    assert!(report.kind_ns(KernelKind::Attn) > 0);
+    assert!(report.kind_ns(KernelKind::KvAppend) > 0);
+    let per_layer_ns: u64 = report.rows.iter().map(|r| r.total_ns()).sum();
+    assert_eq!(report.total(), Duration::from_nanos(per_layer_ns));
+    assert!(!report.render().is_empty());
+
+    // (c) the trace is loadable JSON with the span tree. Other tests in
+    // this binary may interleave their own spans — only presence is
+    // asserted, never exclusivity.
+    let events = trace::shutdown().unwrap();
+    assert!(events > 0, "no trace events written");
+    let txt = std::fs::read_to_string(&tpath).unwrap();
+    assert!(txt.starts_with("[\n"), "not a JSON array");
+    assert!(txt.trim_end().ends_with(']'));
+    for needle in [
+        "\"name\":\"generate\"", // request envelope (ph b/e)
+        "\"ph\":\"b\"",
+        "\"ph\":\"e\"",
+        "\"name\":\"prefill\"",
+        "\"name\":\"decode_step\"",
+        "\"name\":\"layer0\"",
+        "\"name\":\"gemm", // gemm{cout}x{cin} kernel spans
+    ] {
+        assert!(txt.contains(needle), "trace missing {needle}");
+    }
+    let _ = std::fs::remove_file(&tpath);
 }
 
 #[test]
