@@ -29,6 +29,7 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod infer;
+pub mod loadgen;
 pub mod methods;
 pub mod model;
 pub mod obs;

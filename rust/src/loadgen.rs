@@ -1,0 +1,565 @@
+//! Load generator + declarative SLO evaluator for the serving path — the
+//! soak harness behind `lrq soak` (DESIGN.md §10).
+//!
+//! [`run`] drives a [`crate::serve::Server`] with many client threads in one
+//! of two modes:
+//!
+//! * **closed-loop** — each worker submits a request, waits for the answer,
+//!   submits the next. Concurrency is fixed (`clients`), arrival rate adapts
+//!   to the server (latencies stay honest on slow CI machines).
+//! * **open-loop** — workers submit on a fixed global schedule
+//!   (`rate_per_sec` across all workers) without waiting, then drain the
+//!   pending responses at the end. Queueing shows up as queue-time/latency
+//!   growth instead of throttling the offered load — the production-shaped
+//!   measurement.
+//!
+//! The traffic is a seeded, reproducible mix: score and generate requests,
+//! deliberately oversized requests (expected rejects — exercising the
+//! validation path), mid-flight client disconnects (the receiver is dropped
+//! right after submission), and long-context stragglers (near-`seq_len`
+//! prompts that hold decode slots). Counting happens client-side in a
+//! [`LoadOutcome`]; stage timings come from the server's
+//! [`EventLog`](crate::obs::EventLog), aggregated into an
+//! [`EventAgg`](crate::obs::EventAgg) that [`SloSpec::evaluate`] checks
+//! against declared ceilings (p50/p99 latency, TTFT, queue time, error
+//! rate, stuck sequences).
+
+use std::sync::mpsc::RecvTimeoutError;
+use std::time::{Duration, Instant};
+
+use crate::obs::events::percentile_us;
+use crate::obs::EventAgg;
+use crate::rng::Rng;
+use crate::serve::Server;
+
+/// How workers pace their submissions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadMode {
+    /// submit → wait → submit: concurrency fixed, rate adapts to the server
+    Closed,
+    /// fixed arrival schedule (`rate_per_sec`), responses drained at the end
+    Open,
+}
+
+/// One load run, fully seeded (same spec → same traffic).
+#[derive(Clone, Debug)]
+pub struct LoadSpec {
+    pub mode: LoadMode,
+    /// concurrent client threads
+    pub clients: usize,
+    /// requests per client thread
+    pub requests: usize,
+    /// open-loop: total offered arrivals/sec across all clients
+    pub rate_per_sec: f64,
+    /// fraction of requests that are score (the rest generate)
+    pub score_frac: f32,
+    /// fraction submitted deliberately oversized (expected rejects)
+    pub oversized_frac: f32,
+    /// fraction whose client disconnects right after submitting
+    pub disconnect_frac: f32,
+    /// fraction that are long-context stragglers (near-`seq` prompts)
+    pub straggler_frac: f32,
+    /// score payload length range (tokens), inclusive lower bound
+    pub score_len: (usize, usize),
+    /// generate prompt length range (tokens)
+    pub prompt_len: (usize, usize),
+    /// tokens to generate per generate request
+    pub max_new: usize,
+    /// top-k sampling width (`<= 1` = greedy)
+    pub top_k: usize,
+    /// token id space of generated payloads
+    pub vocab: usize,
+    /// the server's context length (oversized = beyond it)
+    pub seq: usize,
+    pub seed: u64,
+    /// open-loop: how long to wait for each pending response at drain time
+    pub drain_timeout: Duration,
+}
+
+impl Default for LoadSpec {
+    fn default() -> Self {
+        LoadSpec {
+            mode: LoadMode::Closed,
+            clients: 4,
+            requests: 16,
+            rate_per_sec: 200.0,
+            score_frac: 0.5,
+            oversized_frac: 0.0,
+            disconnect_frac: 0.0,
+            straggler_frac: 0.0,
+            score_len: (4, 24),
+            prompt_len: (2, 8),
+            max_new: 4,
+            top_k: 1,
+            vocab: 64,
+            seq: 32,
+            seed: 0x50AB,
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// Client-side accounting of one load run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LoadOutcome {
+    /// requests that reached the server's channel
+    pub submitted: u64,
+    /// successful responses received
+    pub ok: u64,
+    /// error responses received (validation or engine failure)
+    pub rejected: u64,
+    /// receivers we deliberately dropped (injected disconnects)
+    pub disconnected: u64,
+    /// responses that never arrived (server dropped the request, or the
+    /// drain timeout expired) — nonzero means requests were lost
+    pub lost: u64,
+    /// generated tokens across successful generate responses
+    pub gen_tokens: u64,
+    /// wall-clock time of the whole run (submission through drain)
+    pub wall: Duration,
+}
+
+impl LoadOutcome {
+    fn absorb(&mut self, o: &LoadOutcome) {
+        self.submitted += o.submitted;
+        self.ok += o.ok;
+        self.rejected += o.rejected;
+        self.disconnected += o.disconnected;
+        self.lost += o.lost;
+        self.gen_tokens += o.gen_tokens;
+    }
+
+    /// Successful requests per second over the run's wall clock.
+    pub fn req_per_sec(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.ok as f64 / self.wall.as_secs_f64()
+    }
+}
+
+/// What one worker decided to send.
+enum Payload {
+    Score(Vec<i32>),
+    Generate { prompt: Vec<i32>, max_new: usize },
+}
+
+fn draw_payload(spec: &LoadSpec, rng: &mut Rng) -> Payload {
+    let oversized = spec.oversized_frac > 0.0 && rng.coin(spec.oversized_frac);
+    let straggler = spec.straggler_frac > 0.0 && rng.coin(spec.straggler_frac);
+    let score = rng.coin(spec.score_frac);
+    let tok = |r: &mut Rng| r.below(spec.vocab.max(2)) as i32;
+    if score {
+        let len = if oversized {
+            // beyond the context window: the server must reject, not crash
+            spec.seq + 1 + rng.below(8)
+        } else if straggler {
+            spec.seq.max(2) // exactly the full context: a maximal valid row
+        } else {
+            let (lo, hi) = spec.score_len;
+            rng.range(lo.max(2), hi.max(lo.max(2)) + 1)
+        };
+        Payload::Score((0..len).map(|_| tok(rng)).collect())
+    } else {
+        let (plen, max_new) = if oversized {
+            // prompt + max_new overflows the context: expected reject
+            (spec.seq, spec.max_new.max(1))
+        } else if straggler {
+            // long prompt, still valid: holds a decode slot for the full
+            // budget and stresses prefill
+            let plen = spec.seq.saturating_sub(spec.max_new).max(1);
+            (plen, spec.max_new.max(1))
+        } else {
+            let (lo, hi) = spec.prompt_len;
+            (rng.range(lo.max(1), hi.max(lo.max(1)) + 1),
+             spec.max_new.max(1))
+        };
+        Payload::Generate {
+            prompt: (0..plen).map(|_| tok(rng)).collect(),
+            max_new,
+        }
+    }
+}
+
+/// A pending open-loop response, either workload kind.
+enum Pending {
+    Score(std::sync::mpsc::Receiver<
+            Result<crate::serve::ScoreResponse, String>>),
+    Generate(std::sync::mpsc::Receiver<
+            Result<crate::serve::GenerateResponse, String>>),
+}
+
+/// Drive `server` with `spec`. Returns the merged client-side outcome;
+/// server-side stage timings live in the server's event log.
+pub fn run(server: &Server, spec: &LoadSpec) -> LoadOutcome {
+    let t0 = Instant::now();
+    let mut outcome = LoadOutcome::default();
+    let mut handles = Vec::new();
+    for k in 0..spec.clients.max(1) {
+        let client = server.client();
+        let spec = spec.clone();
+        handles.push(std::thread::spawn(move || {
+            let mut rng =
+                Rng::new(spec.seed ^ (k as u64).wrapping_mul(0x9E37));
+            let mut out = LoadOutcome::default();
+            let mut pending: Vec<Pending> = Vec::new();
+            let start = Instant::now();
+            // open-loop inter-arrival: each of `clients` workers carries an
+            // interleaved slice of the global schedule
+            let step = spec.clients.max(1) as f64 / spec.rate_per_sec.max(0.1);
+            let offset = k as f64 / spec.rate_per_sec.max(0.1);
+            for i in 0..spec.requests {
+                if spec.mode == LoadMode::Open {
+                    let due = start
+                        + Duration::from_secs_f64(offset + i as f64 * step);
+                    let now = Instant::now();
+                    if due > now {
+                        std::thread::sleep(due - now);
+                    }
+                }
+                let disconnect = spec.disconnect_frac > 0.0
+                    && rng.coin(spec.disconnect_frac);
+                match draw_payload(&spec, &mut rng) {
+                    Payload::Score(ids) => match client.submit(ids) {
+                        Err(_) => out.lost += 1, // server gone
+                        Ok(rx) => {
+                            out.submitted += 1;
+                            if disconnect {
+                                out.disconnected += 1; // rx dropped here
+                            } else {
+                                pending.push(Pending::Score(rx));
+                            }
+                        }
+                    },
+                    Payload::Generate { prompt, max_new } => {
+                        match client.submit_generate(prompt, max_new,
+                                                     spec.top_k,
+                                                     spec.seed ^ i as u64) {
+                            Err(_) => out.lost += 1,
+                            Ok(rx) => {
+                                out.submitted += 1;
+                                if disconnect {
+                                    out.disconnected += 1;
+                                } else {
+                                    pending.push(Pending::Generate(rx));
+                                }
+                            }
+                        }
+                    }
+                }
+                // closed-loop: wait for this answer before the next submit
+                if spec.mode == LoadMode::Closed {
+                    if let Some(p) = pending.pop() {
+                        absorb_response(&mut out, p, spec.drain_timeout);
+                    }
+                }
+            }
+            // open-loop drain: collect everything still in flight
+            for p in pending {
+                absorb_response(&mut out, p, spec.drain_timeout);
+            }
+            out
+        }));
+    }
+    for h in handles {
+        if let Ok(o) = h.join() {
+            outcome.absorb(&o);
+        }
+    }
+    outcome.wall = t0.elapsed();
+    outcome
+}
+
+fn absorb_response(out: &mut LoadOutcome, p: Pending, timeout: Duration) {
+    match p {
+        Pending::Score(rx) => match rx.recv_timeout(timeout) {
+            Ok(Ok(_)) => out.ok += 1,
+            Ok(Err(_)) => out.rejected += 1,
+            Err(RecvTimeoutError::Timeout)
+            | Err(RecvTimeoutError::Disconnected) => out.lost += 1,
+        },
+        Pending::Generate(rx) => match rx.recv_timeout(timeout) {
+            Ok(Ok(r)) => {
+                out.ok += 1;
+                out.gen_tokens += r.tokens.len() as u64;
+            }
+            Ok(Err(_)) => out.rejected += 1,
+            Err(RecvTimeoutError::Timeout)
+            | Err(RecvTimeoutError::Disconnected) => out.lost += 1,
+        },
+    }
+}
+
+// ---------------------------------------------------------------- SLOs ----
+
+/// Declarative SLOs checked against a run's [`EventAgg`]. `None` ceilings
+/// are not evaluated; `max_stuck` (default 0) always is.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SloSpec {
+    /// median end-to-end latency ceiling (ms)
+    pub p50_ms: Option<f64>,
+    /// p99 end-to-end latency ceiling (ms)
+    pub p99_ms: Option<f64>,
+    /// p99 time-to-first-token ceiling (ms, generate requests)
+    pub ttft_p99_ms: Option<f64>,
+    /// p99 queue-time ceiling (ms)
+    pub queue_p99_ms: Option<f64>,
+    /// max rejected / answered (injected oversized traffic budgets this)
+    pub max_error_rate: Option<f64>,
+    /// max requests left without a terminal event (stuck sequences)
+    pub max_stuck: u64,
+}
+
+/// One evaluated SLO.
+#[derive(Clone, Debug)]
+pub struct SloCheck {
+    pub name: &'static str,
+    pub limit: f64,
+    pub actual: f64,
+    pub pass: bool,
+}
+
+/// Every evaluated SLO of a run.
+#[derive(Clone, Debug)]
+pub struct SloReport {
+    pub checks: Vec<SloCheck>,
+}
+
+impl SloReport {
+    pub fn passed(&self) -> bool {
+        self.checks.iter().all(|c| c.pass)
+    }
+
+    /// Human-readable verdict table, one line per check.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for c in &self.checks {
+            s.push_str(&format!(
+                "  {:5} {:14} {:10.2} (limit {:.2})\n",
+                if c.pass { "ok" } else { "FAIL" },
+                c.name, c.actual, c.limit));
+        }
+        s
+    }
+}
+
+impl SloSpec {
+    /// Evaluate against a run's aggregated stage timings plus the number of
+    /// stuck (never-terminated) requests observed after shutdown.
+    pub fn evaluate(&self, agg: &EventAgg, stuck: u64) -> SloReport {
+        let ms = |us: u64| us as f64 / 1e3;
+        let mut checks = Vec::new();
+        let mut push = |name, limit: Option<f64>, actual: f64| {
+            if let Some(l) = limit {
+                checks.push(SloCheck {
+                    name,
+                    limit: l,
+                    actual,
+                    pass: actual <= l,
+                });
+            }
+        };
+        push("p50_ms", self.p50_ms, ms(percentile_us(&agg.total_us, 0.50)));
+        push("p99_ms", self.p99_ms, ms(percentile_us(&agg.total_us, 0.99)));
+        push("ttft_p99_ms", self.ttft_p99_ms,
+             ms(percentile_us(&agg.ttft_us, 0.99)));
+        push("queue_p99_ms", self.queue_p99_ms,
+             ms(percentile_us(&agg.queue_us, 0.99)));
+        push("error_rate", self.max_error_rate, agg.error_rate());
+        // zero-stuck is the one non-optional SLO: a stuck sequence is a
+        // leaked KV cache and an unanswered client
+        checks.push(SloCheck {
+            name: "stuck_seqs",
+            limit: self.max_stuck as f64,
+            actual: stuck as f64,
+            pass: stuck <= self.max_stuck,
+        });
+        SloReport { checks }
+    }
+}
+
+// ------------------------------------------------- BENCH_serve.json -------
+
+/// One per-bit-width row of `BENCH_serve.json`.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServeBenchRow {
+    pub w_bits: u32,
+    /// sustained successful requests/sec over the run
+    pub req_s: f64,
+    /// decode tokens per second of decode execution
+    pub decode_tok_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub queue_p99_ms: f64,
+    pub error_rate: f64,
+    pub stuck: u64,
+}
+
+/// Render the soak run's `BENCH_serve.json` (hand-rolled flat JSON — the
+/// schema [`crate::bench::json_key_numbers`] and the compare gate scan).
+pub fn render_bench_serve(smoke: bool, cfg: &str, rows: &[ServeBenchRow])
+                          -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!(
+        "  \"bench\": \"serve\",\n  \"smoke\": {smoke},\n  \
+         \"config\": \"{cfg}\",\n"));
+    s.push_str("  \"per_bit\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"w_bits\": {}, \"req_s\": {:.2}, \
+             \"decode_tok_s\": {:.1}, \"p50_ms\": {:.2}, \
+             \"p99_ms\": {:.2}, \"ttft_p99_ms\": {:.2}, \
+             \"queue_p99_ms\": {:.2}, \"error_rate\": {:.4}, \
+             \"stuck\": {}}}{}\n",
+            r.w_bits, r.req_s, r.decode_tok_s, r.p50_ms, r.p99_ms,
+            r.ttft_p99_ms, r.queue_p99_ms, r.error_rate, r.stuck,
+            if i + 1 < rows.len() { "," } else { "" }));
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::{MockScorer, Server, ServerConfig};
+
+    fn mock_server() -> Server {
+        Server::start(
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+            },
+            || Ok(Box::new(MockScorer { batch: 8, seq: 32, calls: 0 })),
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn closed_loop_scores_complete() {
+        let server = mock_server();
+        let spec = LoadSpec {
+            clients: 3,
+            requests: 10,
+            score_frac: 1.0, // MockScorer has no decode
+            ..LoadSpec::default()
+        };
+        let out = run(&server, &spec);
+        assert_eq!(out.submitted, 30);
+        assert_eq!(out.ok, 30);
+        assert_eq!(out.lost, 0);
+        assert!(out.req_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn open_loop_drains_everything() {
+        let mut server = mock_server();
+        let spec = LoadSpec {
+            mode: LoadMode::Open,
+            clients: 2,
+            requests: 12,
+            rate_per_sec: 400.0,
+            score_frac: 1.0,
+            ..LoadSpec::default()
+        };
+        let out = run(&server, &spec);
+        assert_eq!(out.submitted, 24);
+        assert_eq!(out.ok + out.rejected, 24);
+        assert_eq!(out.lost, 0);
+        server.shutdown();
+        // every submission got a terminal lifecycle event
+        assert!(server.events().stuck().is_empty());
+    }
+
+    #[test]
+    fn oversized_and_disconnects_are_counted_not_fatal() {
+        let mut server = mock_server();
+        let spec = LoadSpec {
+            clients: 2,
+            requests: 20,
+            score_frac: 1.0,
+            oversized_frac: 0.3,
+            disconnect_frac: 0.3,
+            ..LoadSpec::default()
+        };
+        let out = run(&server, &spec);
+        assert_eq!(out.submitted, 40);
+        // all non-disconnected submissions were answered one way or another
+        assert_eq!(out.ok + out.rejected + out.disconnected, 40);
+        assert_eq!(out.lost, 0);
+        assert!(out.rejected > 0, "oversized traffic must be rejected");
+        assert!(out.disconnected > 0);
+        server.shutdown();
+        let ev = server.events();
+        assert!(ev.stuck().is_empty(), "stuck {:?}", ev.stuck());
+        let agg = ev.agg();
+        // the server saw the injected disconnects for requests whose answer
+        // failed to send (closed-loop: the drop happens before the batch
+        // answers, so every injected disconnect is observable server-side)
+        assert!(agg.disconnected > 0);
+        assert!(agg.error_rate() > 0.0);
+    }
+
+    #[test]
+    fn slo_evaluation_passes_and_fails() {
+        let agg = EventAgg {
+            responded: 99,
+            rejected: 1,
+            total_us: (1..=100u64).map(|i| i * 1000).collect(),
+            queue_us: (1..=100u64).map(|i| i * 10).collect(),
+            ttft_us: (1..=100u64).map(|i| i * 100).collect(),
+            ..EventAgg::default()
+        };
+        // generous ceilings: everything passes
+        let ok = SloSpec {
+            p50_ms: Some(60.0),
+            p99_ms: Some(120.0),
+            ttft_p99_ms: Some(15.0),
+            queue_p99_ms: Some(2.0),
+            max_error_rate: Some(0.05),
+            max_stuck: 0,
+        }
+        .evaluate(&agg, 0);
+        assert!(ok.passed(), "{}", ok.render());
+        assert_eq!(ok.checks.len(), 6);
+        // p99 of the 1..100ms ladder is 99ms: a 50ms ceiling must fail,
+        // and one stuck sequence must fail the zero-stuck default
+        let bad = SloSpec {
+            p99_ms: Some(50.0),
+            ..SloSpec::default()
+        }
+        .evaluate(&agg, 1);
+        assert!(!bad.passed());
+        let failed: Vec<&str> = bad.checks.iter().filter(|c| !c.pass)
+            .map(|c| c.name).collect();
+        assert_eq!(failed, vec!["p99_ms", "stuck_seqs"]);
+        assert!(bad.render().contains("FAIL"));
+    }
+
+    #[test]
+    fn bench_serve_json_is_scannable() {
+        let rows = [
+            ServeBenchRow {
+                w_bits: 4, req_s: 120.5, decode_tok_s: 900.0,
+                p50_ms: 2.2, p99_ms: 9.9, ttft_p99_ms: 4.0,
+                queue_p99_ms: 1.0, error_rate: 0.01, stuck: 0,
+            },
+            ServeBenchRow { w_bits: 8, req_s: 100.0, ..Default::default() },
+        ];
+        let txt = render_bench_serve(true, "micro", &rows);
+        let req = crate::bench::json_key_numbers(&txt, "req_s");
+        assert_eq!(req, vec![120.5, 100.0]);
+        let dec = crate::bench::json_key_numbers(&txt, "decode_tok_s");
+        assert_eq!(dec.len(), 2);
+        // the compare gate reads the same schema: a 50% drop is flagged
+        let worse = render_bench_serve(true, "micro", &[
+            ServeBenchRow { w_bits: 4, req_s: 50.0, decode_tok_s: 900.0,
+                            ..Default::default() },
+            ServeBenchRow { w_bits: 8, req_s: 100.0, ..Default::default() },
+        ]);
+        let regs = crate::bench::regressions(&txt, &worse, "req_s", 0.30);
+        assert_eq!(regs.len(), 1, "{regs:?}");
+    }
+}

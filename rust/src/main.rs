@@ -23,6 +23,7 @@ use lrq::data::{Corpus, CorpusConfig, TaskKind, TaskSet};
 use lrq::eval::{evaluate, ModelView};
 use lrq::infer::{prepare_native, start_native_server, NativeModel,
                  ScaleInit};
+use lrq::loadgen::{self, LoadMode, LoadSpec, ServeBenchRow, SloSpec};
 use lrq::model::{ModelDim, Weights};
 use lrq::obs::{export, trace, HttpExporter};
 use lrq::rng::Rng;
@@ -57,6 +58,7 @@ fn dispatch(args: &Args) -> Result<()> {
         "serve" => serve(args),
         "serve-native" => serve_native(args),
         "generate-native" => generate_native(args),
+        "soak" => soak(args),
         "stats" => stats(args),
         "bench-table" => {
             let id = args
@@ -97,6 +99,17 @@ commands:
            [...same engine flags as serve-native]
            token-by-token generation through the dynamic batcher with a
            quantized KV cache (decode steps batched across sequences)
+  soak     [--smoke] [--cfg C] [--bits 3,4,8] [--mode closed|open]
+           [--clients N] [--requests N] [--rate R] [--max-new N]
+           [--oversized F] [--disconnect F] [--straggler F]
+           [--slo-p50-ms MS] [--slo-p99-ms MS] [--slo-ttft-ms MS]
+           [--slo-queue-ms MS] [--slo-err F]
+           [--out BENCH_serve.json] [--events-out soak_events.jsonl]
+           [--compare BASELINE.json]
+           sustained mixed score/generate load against serve-native per
+           bit-width, asserting latency/TTFT/queue/error SLOs and zero
+           stuck sequences; emits BENCH_serve.json + a request-lifecycle
+           JSONL (--smoke: the fast CI configuration on the micro model)
   stats    --cfg C [--requests N] [--prompt-len N] [--max-new N]
            [...same engine flags as serve-native]
            run a profiled generate workload on the native engine and print
@@ -281,8 +294,14 @@ fn serve(args: &Args) -> Result<()> {
 /// Build the artifact-free native engine from CLI flags (shared by
 /// `serve-native` and `generate-native`).
 fn native_model_from_args(args: &Args) -> Result<(ModelDim, NativeModel)> {
-    let cfg = args.get_or("cfg", "tiny");
-    let scheme = scheme_from(args)?;
+    native_model_with_scheme(args, scheme_from(args)?, "tiny")
+}
+
+/// Like [`native_model_from_args`] but with the quantization scheme decided
+/// by the caller — `soak` sweeps bit-widths within one invocation.
+fn native_model_with_scheme(args: &Args, scheme: Scheme, default_cfg: &str)
+                            -> Result<(ModelDim, NativeModel)> {
+    let cfg = args.get_or("cfg", default_cfg);
     let init: ScaleInit = args.parse_as("init", ScaleInit::GridSearch)?;
     let shards: usize = args.parse_as("shards", 1)?;
     let seed: u64 = args.parse_as("seed", 1234)?;
@@ -534,6 +553,164 @@ fn generate_native(args: &Args) -> Result<()> {
     }
     let reg = m.registry();
     obs_finish(args, trace_on, &[reg.as_ref()])
+}
+
+/// `lrq soak`: the production-path soak harness (DESIGN.md §10). Per
+/// bit-width: build the native engine, drive it with seeded mixed
+/// score/generate load ([`lrq::loadgen`]), evaluate the declared SLOs
+/// against the server's request-lifecycle event log, and emit
+/// `BENCH_serve.json` (+ the event JSONL). Fails loudly — nonzero exit —
+/// on any SLO violation, stuck sequence, or lost response.
+fn soak(args: &Args) -> Result<()> {
+    let smoke = args.flag("smoke");
+    // --smoke is the CI configuration: micro model, few requests, seconds
+    // of wall clock; defaults below scale up for a real soak
+    let bits_str = args.get_or("bits", if smoke { "4,8" } else { "3,4,8" });
+    let bits: Vec<u32> = bits_str
+        .split(',')
+        .filter(|s| !s.is_empty())
+        .map(|s| s.trim().parse::<u32>()
+             .map_err(|e| anyhow::anyhow!("bad --bits entry {s:?}: {e}")))
+        .collect::<Result<_>>()?;
+    if bits.is_empty() {
+        anyhow::bail!("--bits named no bit-widths");
+    }
+    let clients: usize = args.parse_as("clients", if smoke { 3 } else { 8 })?;
+    let requests: usize =
+        args.parse_as("requests", if smoke { 8 } else { 64 })?;
+    let max_batch: usize = args.parse_as("max-batch", 8)?;
+    let max_new: usize = args.parse_as("max-new", 4)?;
+    let rate: f64 = args.parse_as("rate", 200.0)?;
+    let mode = match args.get_or("mode", "closed").as_str() {
+        "closed" => LoadMode::Closed,
+        "open" => LoadMode::Open,
+        m => anyhow::bail!("--mode {m:?} is not closed|open"),
+    };
+    let oversized: f32 = args.parse_as("oversized", 0.1)?;
+    let disconnect: f32 = args.parse_as("disconnect", 0.05)?;
+    let straggler: f32 = args.parse_as("straggler", 0.1)?;
+    let seed: u64 = args.parse_as("seed", 1234)?;
+    // SLO ceilings: CI-safe defaults (micro model on shared runners), all
+    // overridable; the error budget covers the injected oversized traffic
+    let slo = SloSpec {
+        p50_ms: Some(args.parse_as("slo-p50-ms", 2_000.0)?),
+        p99_ms: Some(args.parse_as("slo-p99-ms", 10_000.0)?),
+        ttft_p99_ms: Some(args.parse_as("slo-ttft-ms", 10_000.0)?),
+        queue_p99_ms: Some(args.parse_as("slo-queue-ms", 10_000.0)?),
+        max_error_rate: Some(args.parse_as(
+            "slo-err", (oversized as f64) * 2.0 + 0.05)?),
+        max_stuck: 0,
+    };
+
+    let mut rows: Vec<ServeBenchRow> = Vec::new();
+    let mut events_jsonl = String::new();
+    let mut failures: Vec<String> = Vec::new();
+    let mut cfg_name = String::new();
+    for &w_bits in &bits {
+        let scheme = Scheme { w_bits, ..scheme_from(args)? };
+        let (dim, model) = native_model_with_scheme(
+            args, scheme, if smoke { "micro" } else { "tiny" })?;
+        cfg_name = dim.name.clone();
+        let mut server = start_native_server(
+            model,
+            ServerConfig { max_batch, max_wait: Duration::from_millis(2) },
+        )?;
+        let spec = LoadSpec {
+            mode,
+            clients,
+            requests,
+            rate_per_sec: rate,
+            score_frac: 0.5,
+            oversized_frac: oversized,
+            disconnect_frac: disconnect,
+            straggler_frac: straggler,
+            score_len: (2, dim.seq.min(24)),
+            prompt_len: (1, (dim.seq.saturating_sub(max_new)).clamp(1, 8)),
+            max_new,
+            top_k: 1,
+            vocab: dim.vocab,
+            seq: dim.seq,
+            seed: seed ^ w_bits as u64,
+            drain_timeout: Duration::from_secs(60),
+        };
+        println!("\n== soak W{w_bits} ({}, {:?}, {clients} clients x \
+                  {requests} reqs) ==", dim.name, mode);
+        let out = loadgen::run(&server, &spec);
+        let m = server.metrics.lock().unwrap().clone();
+        let ev = server.events();
+        server.shutdown();
+        let stuck = ev.stuck();
+        let agg = ev.agg();
+        let report = slo.evaluate(&agg, stuck.len() as u64);
+        println!("{}", m.summary(out.wall));
+        println!("submitted {} ok {} rejected {} disconnected {} lost {} \
+                  in {:.2}s ({:.1} req/s)",
+                 out.submitted, out.ok, out.rejected, out.disconnected,
+                 out.lost, out.wall.as_secs_f64(), out.req_per_sec());
+        print!("{}", report.render());
+        if !stuck.is_empty() {
+            failures.push(format!(
+                "W{w_bits}: {} stuck sequence(s): {stuck:?}", stuck.len()));
+        }
+        if out.lost > 0 {
+            failures.push(format!(
+                "W{w_bits}: {} response(s) lost", out.lost));
+        }
+        if !report.passed() {
+            failures.push(format!("W{w_bits}: SLO violation"));
+        }
+        events_jsonl.push_str(&ev.jsonl(&format!("w{w_bits}")));
+        let ms = |us: u64| us as f64 / 1e3;
+        rows.push(ServeBenchRow {
+            w_bits,
+            req_s: out.req_per_sec(),
+            decode_tok_s: m.decode_tokens_per_sec(),
+            p50_ms: ms(lrq::obs::events::percentile_us(&agg.total_us, 0.50)),
+            p99_ms: ms(lrq::obs::events::percentile_us(&agg.total_us, 0.99)),
+            ttft_p99_ms:
+                ms(lrq::obs::events::percentile_us(&agg.ttft_us, 0.99)),
+            queue_p99_ms:
+                ms(lrq::obs::events::percentile_us(&agg.queue_us, 0.99)),
+            error_rate: agg.error_rate(),
+            stuck: stuck.len() as u64,
+        });
+    }
+
+    // artifacts are written even when the run failed, so CI uploads always
+    // carry the evidence
+    let out_path = args.get_or("out", "BENCH_serve.json");
+    let json = loadgen::render_bench_serve(smoke, &cfg_name, &rows);
+    std::fs::write(&out_path, &json)
+        .with_context(|| format!("writing {out_path}"))?;
+    println!("\nwrote {out_path} ({} bytes)", json.len());
+    let ev_path = args.get_or("events-out", "soak_events.jsonl");
+    std::fs::write(&ev_path, &events_jsonl)
+        .with_context(|| format!("writing {ev_path}"))?;
+    println!("wrote {ev_path} ({} events)", events_jsonl.lines().count());
+
+    // regression gate: same semantics as the native bench's --compare
+    // (zero-valued baseline entries are provisional and skipped)
+    if let Some(bpath) = args.get("compare") {
+        let baseline = std::fs::read_to_string(bpath)
+            .with_context(|| format!("reading baseline {bpath}"))?;
+        for key in ["req_s", "decode_tok_s"] {
+            for r in lrq::bench::regressions(&baseline, &json, key, 0.30) {
+                failures.push(format!("regression vs {bpath}: {r}"));
+            }
+        }
+        if failures.is_empty() {
+            println!("soak compare vs {bpath}: ok");
+        }
+    }
+
+    if !failures.is_empty() {
+        for f in &failures {
+            eprintln!("soak FAIL: {f}");
+        }
+        anyhow::bail!("{} soak failure(s)", failures.len());
+    }
+    println!("soak: all SLOs passed, zero stuck sequences");
+    Ok(())
 }
 
 /// `stats`: run a profiled generate workload directly on the native engine

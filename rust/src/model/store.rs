@@ -1,8 +1,19 @@
 //! Weight store: FP weights, quantized checkpoints, init, and binary I/O.
 //!
-//! Checkpoint format (little-endian): magic `LRQW`, version u32, then for each
-//! tensor: name-len u32, name bytes, rank u32, dims u64…, f32 data. Quantized
-//! checkpoints (`LRQQ`) store packed integer codes + per-channel grids.
+//! FP checkpoint format (little-endian): magic `LRQW`, version u32, tensor
+//! count u32, then per tensor: rank u32, dims u64…, f32 data. Quantized
+//! checkpoints (`LRQQ`) store packed integer codes + per-channel grids:
+//! magic, version u32, bits u32, six u64 dim fields (vocab/d/heads/layers/
+//! ff/seq — validated against the caller's [`ModelDim`]), then emb, per
+//! block 7 [`PackedMatrix`] records (rows u64, cols u64, bits u32, scale
+//! f32·rows, zp f32·rows, packed-len u64, packed bytes) + 2 norm tensors,
+//! final_norm, head, and a trailing FNV-1a-64 checksum over everything
+//! before it.
+//!
+//! Both readers fail closed: every length is validated against a hard cap
+//! and the remaining input *before* allocation, so a truncated, corrupt, or
+//! adversarial stream produces an error — never a panic, an out-of-memory
+//! allocation, or silently garbage weights.
 
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Write};
@@ -10,11 +21,20 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::quant::pack::packed_len;
 use crate::quant::PackedMatrix;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
 
 use super::layout::ModelDim;
+
+/// Hard cap on tensor rank accepted from a checkpoint stream.
+const MAX_RANK: usize = 8;
+
+/// Hard cap on elements per tensor (512 MiB of f32) — far above any model
+/// this crate builds, low enough that a corrupt header can't demand an
+/// absurd allocation.
+const MAX_ELEMS: usize = 1 << 27;
 
 /// One Transformer block's FP weights (canonical order).
 #[derive(Clone, Debug)]
@@ -174,6 +194,254 @@ impl QuantizedModel {
     pub fn fp_equivalent_bytes(&self) -> usize {
         self.dim.param_count() * 4
     }
+
+    /// Serialize to the `LRQQ` wire format (checksummed; see module doc).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.storage_bytes() + 128);
+        out.extend_from_slice(LRQQ_MAGIC);
+        out.extend_from_slice(&LRQQ_VERSION.to_le_bytes());
+        out.extend_from_slice(&self.bits.to_le_bytes());
+        for v in [self.dim.vocab, self.dim.d, self.dim.heads,
+                  self.dim.layers, self.dim.ff, self.dim.seq] {
+            out.extend_from_slice(&(v as u64).to_le_bytes());
+        }
+        push_tensor(&mut out, &self.emb);
+        for b in &self.blocks {
+            for p in &b.ws {
+                push_packed(&mut out, p);
+            }
+            push_tensor(&mut out, &b.norm_attn);
+            push_tensor(&mut out, &b.norm_ffn);
+        }
+        push_tensor(&mut out, &self.final_norm);
+        push_tensor(&mut out, &self.head);
+        let sum = fnv1a_64(&out);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    /// Parse an `LRQQ` checkpoint, failing closed on any inconsistency:
+    /// checksum mismatch, bad magic/version, dim fields that disagree with
+    /// `dim`, shape mismatches, truncation, or trailing garbage.
+    pub fn from_bytes(dim: &ModelDim, bytes: &[u8]) -> Result<Self> {
+        if bytes.len() < 8 {
+            bail!("LRQQ checkpoint truncated: {} bytes", bytes.len());
+        }
+        let (payload, tail) = bytes.split_at(bytes.len() - 8);
+        let stored = u64::from_le_bytes(tail.try_into().unwrap());
+        let computed = fnv1a_64(payload);
+        if stored != computed {
+            bail!("LRQQ checksum mismatch (stored {stored:#018x}, computed \
+                   {computed:#018x}) — corrupt or truncated checkpoint");
+        }
+        let mut c = Cursor::new(payload);
+        if c.take(4)? != LRQQ_MAGIC {
+            bail!("bad LRQQ magic");
+        }
+        let ver = c.u32()?;
+        if ver != LRQQ_VERSION {
+            bail!("unsupported LRQQ version {ver} (supported: \
+                   {LRQQ_VERSION})");
+        }
+        let bits = c.u32()?;
+        if !(1..=8).contains(&bits) {
+            bail!("LRQQ bits {bits} out of range [1, 8]");
+        }
+        for (name, expect) in [("vocab", dim.vocab), ("d", dim.d),
+                               ("heads", dim.heads), ("layers", dim.layers),
+                               ("ff", dim.ff), ("seq", dim.seq)] {
+            let got = c.dim_usize()?;
+            if got != expect {
+                bail!("LRQQ {name} {got} != model {name} {expect}");
+            }
+        }
+        let emb = read_tensor_buf(&mut c)?;
+        expect_dims(&emb, &[dim.vocab, dim.d], "emb")?;
+        let shapes = dim.block_weight_shapes();
+        let mut blocks = Vec::with_capacity(dim.layers);
+        for l in 0..dim.layers {
+            let mut ws = Vec::with_capacity(7);
+            for (i, &(co, ci)) in shapes.iter().enumerate() {
+                let p = read_packed(&mut c)?;
+                if p.rows != co || p.cols != ci {
+                    bail!("LRQQ block {l} matrix {i}: {}x{} != expected \
+                           {co}x{ci}", p.rows, p.cols);
+                }
+                if p.bits != bits {
+                    bail!("LRQQ block {l} matrix {i}: bits {} != header \
+                           bits {bits}", p.bits);
+                }
+                ws.push(p);
+            }
+            let norm_attn = read_tensor_buf(&mut c)?;
+            expect_dims(&norm_attn, &[dim.d], "norm_attn")?;
+            let norm_ffn = read_tensor_buf(&mut c)?;
+            expect_dims(&norm_ffn, &[dim.d], "norm_ffn")?;
+            blocks.push(QuantizedBlock { ws, norm_attn, norm_ffn });
+        }
+        let final_norm = read_tensor_buf(&mut c)?;
+        expect_dims(&final_norm, &[dim.d], "final_norm")?;
+        let head = read_tensor_buf(&mut c)?;
+        expect_dims(&head, &[dim.vocab, dim.d], "head")?;
+        if c.remaining() != 0 {
+            bail!("LRQQ checkpoint has {} trailing bytes", c.remaining());
+        }
+        Ok(QuantizedModel {
+            dim: dim.clone(),
+            bits,
+            emb,
+            blocks,
+            final_norm,
+            head,
+        })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.to_bytes())
+            .with_context(|| format!("write {path:?}"))
+    }
+
+    pub fn load(dim: &ModelDim, path: &Path) -> Result<Self> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("open {path:?}"))?;
+        QuantizedModel::from_bytes(dim, &bytes)
+    }
+}
+
+const LRQQ_MAGIC: &[u8; 4] = b"LRQQ";
+const LRQQ_VERSION: u32 = 1;
+
+/// FNV-1a 64-bit — cheap integrity check for the LRQQ trailer; catches
+/// truncation and random corruption (it is not cryptographic).
+fn fnv1a_64(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Bounds-checked reader over an in-memory checkpoint: every `take`
+/// validates against the remaining input before slicing, so no parse path
+/// can over-read or over-allocate.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Self {
+        Cursor { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.buf.len() - self.pos < n {
+            bail!("LRQQ truncated: need {n} bytes at offset {}, have {}",
+                  self.pos, self.buf.len() - self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn dim_usize(&mut self) -> Result<usize> {
+        let v = self.u64()?;
+        if v > MAX_ELEMS as u64 {
+            bail!("LRQQ dimension {v} exceeds cap {MAX_ELEMS}");
+        }
+        Ok(v as usize)
+    }
+
+    fn f32s(&mut self, n: usize) -> Result<Vec<f32>> {
+        let Some(bytes) = n.checked_mul(4) else {
+            bail!("LRQQ f32 run length overflows");
+        };
+        Ok(self.take(bytes)?
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect())
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+}
+
+fn push_tensor(out: &mut Vec<u8>, t: &Tensor) {
+    write_tensor(out, t).expect("write to Vec cannot fail");
+}
+
+fn push_packed(out: &mut Vec<u8>, p: &PackedMatrix) {
+    out.extend_from_slice(&(p.rows as u64).to_le_bytes());
+    out.extend_from_slice(&(p.cols as u64).to_le_bytes());
+    out.extend_from_slice(&p.bits.to_le_bytes());
+    for &s in &p.scale {
+        out.extend_from_slice(&s.to_le_bytes());
+    }
+    for &z in &p.zp {
+        out.extend_from_slice(&z.to_le_bytes());
+    }
+    out.extend_from_slice(&(p.packed.len() as u64).to_le_bytes());
+    out.extend_from_slice(&p.packed);
+}
+
+fn read_packed(c: &mut Cursor) -> Result<PackedMatrix> {
+    let rows = c.dim_usize()?;
+    let cols = c.dim_usize()?;
+    let bits = c.u32()?;
+    if !(1..=8).contains(&bits) {
+        bail!("LRQQ packed matrix bits {bits} out of range [1, 8]");
+    }
+    let n = match rows.checked_mul(cols) {
+        Some(m) if m <= MAX_ELEMS => m,
+        _ => bail!("LRQQ packed matrix {rows}x{cols} exceeds element cap \
+                    {MAX_ELEMS}"),
+    };
+    let scale = c.f32s(rows)?;
+    let zp = c.f32s(rows)?;
+    let plen = c.dim_usize()?;
+    if plen != packed_len(n, bits) {
+        bail!("LRQQ packed stream length {plen} != expected {} for \
+               {rows}x{cols} at {bits} bits", packed_len(n, bits));
+    }
+    let packed = c.take(plen)?.to_vec();
+    PackedMatrix::new(rows, cols, bits, scale, zp, packed)
+}
+
+fn read_tensor_buf(c: &mut Cursor) -> Result<Tensor> {
+    let rank = c.u32()? as usize;
+    if rank > MAX_RANK {
+        bail!("LRQQ tensor rank {rank} exceeds cap {MAX_RANK}");
+    }
+    let mut dims = Vec::with_capacity(rank);
+    for _ in 0..rank {
+        dims.push(c.dim_usize()?);
+    }
+    let mut n = 1usize;
+    for &d in &dims {
+        n = match n.checked_mul(d) {
+            Some(m) if m <= MAX_ELEMS => m,
+            _ => bail!("LRQQ tensor {dims:?} exceeds element cap {MAX_ELEMS}"),
+        };
+    }
+    let data = c.f32s(n)?;
+    Ok(Tensor::new(dims, data))
+}
+
+fn expect_dims(t: &Tensor, want: &[usize], what: &str) -> Result<()> {
+    if t.dims.as_slice() != want {
+        bail!("LRQQ {what}: dims {:?} != expected {want:?}", t.dims);
+    }
+    Ok(())
 }
 
 fn write_tensor<W: Write>(w: &mut W, t: &Tensor) -> Result<()> {
@@ -195,19 +463,40 @@ fn read_u32<R: Read>(r: &mut R) -> Result<u32> {
 
 fn read_tensor<R: Read>(r: &mut R) -> Result<Tensor> {
     let rank = read_u32(r)? as usize;
+    if rank > MAX_RANK {
+        bail!("checkpoint tensor rank {rank} exceeds cap {MAX_RANK}");
+    }
     let mut dims = Vec::with_capacity(rank);
     for _ in 0..rank {
         let mut b = [0u8; 8];
         r.read_exact(&mut b)?;
-        dims.push(u64::from_le_bytes(b) as usize);
+        let d = u64::from_le_bytes(b);
+        if d > MAX_ELEMS as u64 {
+            bail!("checkpoint tensor dim {d} exceeds cap {MAX_ELEMS}");
+        }
+        dims.push(d as usize);
     }
-    let n: usize = dims.iter().product();
-    let mut bytes = vec![0u8; n * 4];
-    r.read_exact(&mut bytes)?;
-    let data = bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
-        .collect();
+    let mut n = 1usize;
+    for &d in &dims {
+        n = match n.checked_mul(d) {
+            Some(m) if m <= MAX_ELEMS => m,
+            _ => bail!("checkpoint tensor {dims:?} exceeds element cap \
+                        {MAX_ELEMS}"),
+        };
+    }
+    // Read in bounded chunks: a corrupt header cannot force a single huge
+    // allocation, and a truncated stream errors at the first short chunk.
+    let mut data = Vec::with_capacity(n.min(1 << 20));
+    let mut remaining = n * 4; // n ≤ MAX_ELEMS, so no overflow
+    let mut chunk = [0u8; 4096];
+    while remaining > 0 {
+        let take = remaining.min(chunk.len());
+        r.read_exact(&mut chunk[..take])?;
+        data.extend(chunk[..take].chunks_exact(4).map(|c| {
+            f32::from_le_bytes([c[0], c[1], c[2], c[3]])
+        }));
+        remaining -= take;
+    }
     Ok(Tensor::new(dims, data))
 }
 
@@ -273,5 +562,103 @@ mod tests {
         };
         // wo (idx 3) should have smaller std than wq (idx 0)
         assert!(std_of(&w.blocks[0].ws[3]) < std_of(&w.blocks[0].ws[0]) * 0.6);
+    }
+
+    fn quantized_tiny(seed: u64, bits: u32) -> QuantizedModel {
+        use crate::infer::{quantize_weights, ScaleInit};
+        let dim = tiny();
+        let w = Weights::init(&dim, &mut Rng::new(seed));
+        quantize_weights(&w, bits, ScaleInit::Rtn).unwrap()
+    }
+
+    #[test]
+    fn lrqq_roundtrip_is_exact() {
+        for bits in [3u32, 4, 8] {
+            let qm = quantized_tiny(5, bits);
+            let dim = qm.dim.clone();
+            let bytes = qm.to_bytes();
+            let qm2 = QuantizedModel::from_bytes(&dim, &bytes).unwrap();
+            assert_eq!(qm2.bits, bits);
+            assert_eq!(qm.emb, qm2.emb);
+            assert_eq!(qm.head, qm2.head);
+            for (a, b) in qm.blocks.iter().zip(&qm2.blocks) {
+                for (pa, pb) in a.ws.iter().zip(&b.ws) {
+                    assert_eq!(pa.scale, pb.scale);
+                    assert_eq!(pa.zp, pb.zp);
+                    assert_eq!(pa.unpack(), pb.unpack());
+                }
+                assert_eq!(a.norm_attn, b.norm_attn);
+                assert_eq!(a.norm_ffn, b.norm_ffn);
+            }
+        }
+    }
+
+    #[test]
+    fn lrqq_save_load_roundtrip() {
+        let qm = quantized_tiny(6, 4);
+        let dim = qm.dim.clone();
+        let tmp = std::env::temp_dir().join("lrq_test_quant.lrqq");
+        qm.save(&tmp).unwrap();
+        let qm2 = QuantizedModel::load(&dim, &tmp).unwrap();
+        assert_eq!(qm.storage_bytes(), qm2.storage_bytes());
+        assert_eq!(qm.blocks[2].ws[4].unpack(), qm2.blocks[2].ws[4].unpack());
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn lrqq_rejects_truncation_anywhere() {
+        let qm = quantized_tiny(7, 4);
+        let dim = qm.dim.clone();
+        let bytes = qm.to_bytes();
+        // cut at a spread of prefixes, including header-only and mid-tensor
+        for cut in [0, 3, 4, 11, 60, bytes.len() / 3, bytes.len() / 2,
+                    bytes.len() - 9, bytes.len() - 1] {
+            let err = QuantizedModel::from_bytes(&dim, &bytes[..cut]);
+            assert!(err.is_err(), "truncation at {cut} must fail closed");
+        }
+    }
+
+    #[test]
+    fn lrqq_rejects_corruption() {
+        let qm = quantized_tiny(8, 3);
+        let dim = qm.dim.clone();
+        let bytes = qm.to_bytes();
+        // flip one bit at a spread of offsets: checksum must catch each
+        for off in [4usize, 16, 100, bytes.len() / 2, bytes.len() - 20] {
+            let mut bad = bytes.clone();
+            bad[off] ^= 0x10;
+            let err = QuantizedModel::from_bytes(&dim, &bad).unwrap_err();
+            assert!(format!("{err}").contains("checksum")
+                        || format!("{err}").contains("magic"),
+                    "unexpected corruption error: {err}");
+        }
+    }
+
+    #[test]
+    fn lrqq_rejects_dim_mismatch() {
+        let qm = quantized_tiny(9, 4);
+        let bytes = qm.to_bytes();
+        let mut other = tiny();
+        other.layers = 2;
+        let err = QuantizedModel::from_bytes(&other, &bytes).unwrap_err();
+        assert!(format!("{err}").contains("layers"), "{err}");
+    }
+
+    #[test]
+    fn lrqw_reader_caps_bogus_headers() {
+        // a hand-built stream claiming an absurd tensor must error without
+        // attempting the allocation
+        let mut bytes: Vec<u8> = Vec::new();
+        bytes.extend_from_slice(b"LRQW");
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // version
+        bytes.extend_from_slice(&1u32.to_le_bytes()); // one tensor
+        bytes.extend_from_slice(&2u32.to_le_bytes()); // rank 2
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes()); // absurd dim
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        let tmp = std::env::temp_dir().join("lrq_test_bogus.bin");
+        std::fs::write(&tmp, &bytes).unwrap();
+        let err = Weights::load(&tiny(), &tmp).unwrap_err();
+        assert!(format!("{err}").contains("cap"), "{err}");
+        std::fs::remove_file(&tmp).ok();
     }
 }

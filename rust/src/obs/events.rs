@@ -1,0 +1,516 @@
+//! Per-request lifecycle event log for the serving path (DESIGN.md §10).
+//!
+//! Every request the batcher touches leaves a trail of point events —
+//! `enqueue → admit/batch_join → exec → first_token → respond|reject|
+//! disconnect` — recorded into a bounded ring buffer with microsecond
+//! timestamps relative to the log's epoch. At each request's terminal event
+//! the log derives a [`RequestSummary`] (queue time, engine-exec time,
+//! time-to-first-token, total latency) and feeds the registry's
+//! `lrq_queue_time_us` / `lrq_exec_time_us` / `lrq_ttft_us` histograms, so
+//! the same stream powers the Prometheus export, the soak harness's SLO
+//! evaluator ([`crate::loadgen`]), and the JSONL artifact CI uploads.
+//!
+//! Lifecycle contract (enforced by tests):
+//! * every request that reaches the server gets exactly one terminal event
+//!   (`respond`, `reject`, or `disconnect`) — a request still open after
+//!   server shutdown is a **stuck sequence**, surfaced by [`EventLog::stuck`];
+//! * per completed request `queue_us + exec_us <= total_us` (the remainder
+//!   is batcher overhead: response fan-out, channel hops);
+//! * the ring is bounded ([`EventLog::new`]'s `cap`): under sustained load
+//!   old events are dropped (counted in `lrq_events_dropped_total`), never
+//!   allocated without bound. Open-request state is bounded by the number
+//!   of requests actually in flight.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use super::registry::{Counter, Histogram, Registry};
+
+/// Bucket bounds (µs) for the queue/exec/TTFT histograms: 10µs .. 10s.
+pub const STAGE_US_BOUNDS: &[u64] = &[
+    10, 50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000, 50_000,
+    100_000, 250_000, 500_000, 1_000_000, 2_500_000, 10_000_000,
+];
+
+/// Workload kind of a request.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReqKind {
+    Score,
+    Generate,
+}
+
+impl ReqKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReqKind::Score => "score",
+            ReqKind::Generate => "generate",
+        }
+    }
+}
+
+/// One lifecycle stage. `detail` semantics per kind are documented inline.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EventKind {
+    /// client submitted the request (detail: payload tokens)
+    Enqueue,
+    /// generate request entered the engine (popped from the wait queue,
+    /// validated; detail: prompt tokens)
+    Admit,
+    /// score request joined an executing batch (detail: valid rows)
+    BatchJoin,
+    /// engine execution covering this request finished (detail: exec µs)
+    Exec,
+    /// first generated token available, i.e. prefill + first sample done
+    FirstToken,
+    /// answered successfully
+    Respond,
+    /// answered with an error (validation, engine failure)
+    Reject,
+    /// client dropped its response channel before the answer landed
+    Disconnect,
+}
+
+impl EventKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::Enqueue => "enqueue",
+            EventKind::Admit => "admit",
+            EventKind::BatchJoin => "batch_join",
+            EventKind::Exec => "exec",
+            EventKind::FirstToken => "first_token",
+            EventKind::Respond => "respond",
+            EventKind::Reject => "reject",
+            EventKind::Disconnect => "disconnect",
+        }
+    }
+
+    /// Does this event end the request's lifecycle?
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, EventKind::Respond | EventKind::Reject
+                 | EventKind::Disconnect)
+    }
+}
+
+/// One recorded event.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    pub rid: u64,
+    pub req: ReqKind,
+    pub kind: EventKind,
+    /// microseconds since the log's epoch
+    pub t_us: u64,
+    pub detail: u64,
+}
+
+/// Derived per-request stage timings, computed at the terminal event.
+#[derive(Clone, Copy, Debug)]
+pub struct RequestSummary {
+    pub rid: u64,
+    pub req: ReqKind,
+    /// `Respond`, `Reject`, or `Disconnect`
+    pub outcome: EventKind,
+    /// enqueue → admit/batch-join (time spent waiting for the engine)
+    pub queue_us: u64,
+    /// engine execution time attributed to this request
+    pub exec_us: u64,
+    /// enqueue → first generated token (generate requests only)
+    pub ttft_us: Option<u64>,
+    /// enqueue → terminal event
+    pub total_us: u64,
+}
+
+/// In-flight request state (dropped at the terminal event).
+struct Open {
+    req: ReqKind,
+    enqueue_us: u64,
+    /// admit (generate) or batch-join (score) timestamp
+    start_us: Option<u64>,
+    /// Σ exec µs attributed via `Exec` events (score batches)
+    exec_us: u64,
+    first_us: Option<u64>,
+}
+
+struct Inner {
+    events: VecDeque<Event>,
+    open: HashMap<u64, Open>,
+    done: VecDeque<RequestSummary>,
+}
+
+/// Bounded request-lifecycle log shared by the server, its clients, and the
+/// metrics registry. All methods take `&self`; one short-held internal mutex.
+pub struct EventLog {
+    cap: usize,
+    epoch: Instant,
+    inner: Mutex<Inner>,
+    queue_hist: Arc<Histogram>,
+    exec_hist: Arc<Histogram>,
+    ttft_hist: Arc<Histogram>,
+    responded: Arc<Counter>,
+    rejected: Arc<Counter>,
+    disconnected: Arc<Counter>,
+    dropped: Arc<Counter>,
+}
+
+impl std::fmt::Debug for EventLog {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let g = self.inner.lock().unwrap();
+        write!(f, "EventLog({} events, {} open, {} done)", g.events.len(),
+               g.open.len(), g.done.len())
+    }
+}
+
+/// Aggregated view of every completed request, for SLO evaluation. The
+/// stage vectors are sorted ascending (ready for nearest-rank percentiles).
+#[derive(Clone, Debug, Default)]
+pub struct EventAgg {
+    pub responded: u64,
+    pub rejected: u64,
+    pub disconnected: u64,
+    pub queue_us: Vec<u64>,
+    pub exec_us: Vec<u64>,
+    pub ttft_us: Vec<u64>,
+    pub total_us: Vec<u64>,
+}
+
+impl EventAgg {
+    /// Completed requests (all outcomes).
+    pub fn completed(&self) -> u64 {
+        self.responded + self.rejected + self.disconnected
+    }
+
+    /// Server-side error rate: rejected / answered. Disconnects are
+    /// client-caused and excluded from the error budget.
+    pub fn error_rate(&self) -> f64 {
+        let answered = self.responded + self.rejected;
+        if answered == 0 {
+            return 0.0;
+        }
+        self.rejected as f64 / answered as f64
+    }
+}
+
+/// Nearest-rank (ceil) percentile of a **sorted ascending** sample — the
+/// same convention as `serve::Metrics`, shared by the SLO evaluator and the
+/// histogram-accuracy tests. Empty samples report 0.
+pub fn percentile_us(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        return 0;
+    }
+    let rank = (sorted.len() as f64 * p).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+impl EventLog {
+    /// A log keeping at most `cap` raw events and `cap` completed-request
+    /// summaries, with its stage histograms registered in `registry`.
+    pub fn new(cap: usize, registry: &Registry) -> EventLog {
+        EventLog {
+            cap: cap.max(1),
+            epoch: Instant::now(),
+            inner: Mutex::new(Inner {
+                events: VecDeque::new(),
+                open: HashMap::new(),
+                done: VecDeque::new(),
+            }),
+            queue_hist: registry.histogram(
+                "lrq_queue_time_us",
+                "request queue time (enqueue to engine admission) in \
+                 microseconds",
+                STAGE_US_BOUNDS),
+            exec_hist: registry.histogram(
+                "lrq_exec_time_us",
+                "engine execution time attributed to a request in \
+                 microseconds",
+                STAGE_US_BOUNDS),
+            ttft_hist: registry.histogram(
+                "lrq_ttft_us",
+                "time to first generated token in microseconds",
+                STAGE_US_BOUNDS),
+            responded: registry.counter(
+                "lrq_requests_responded_total",
+                "requests answered successfully"),
+            rejected: registry.counter(
+                "lrq_requests_rejected_total",
+                "requests answered with an error"),
+            disconnected: registry.counter(
+                "lrq_requests_disconnected_total",
+                "requests whose client disconnected before the answer"),
+            dropped: registry.counter(
+                "lrq_events_dropped_total",
+                "lifecycle events dropped by the bounded ring"),
+        }
+    }
+
+    /// Microseconds since the log's epoch (the JSONL time base).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Record one lifecycle event. Terminal events close the request's open
+    /// state, derive its [`RequestSummary`], and feed the stage histograms.
+    pub fn record(&self, rid: u64, req: ReqKind, kind: EventKind,
+                  detail: u64) {
+        let t_us = self.now_us();
+        let ev = Event { rid, req, kind, t_us, detail };
+        let mut g = self.inner.lock().unwrap();
+        if g.events.len() >= self.cap {
+            g.events.pop_front();
+            self.dropped.inc();
+        }
+        g.events.push_back(ev);
+        match kind {
+            EventKind::Enqueue => {
+                g.open.insert(rid, Open {
+                    req,
+                    enqueue_us: t_us,
+                    start_us: None,
+                    exec_us: 0,
+                    first_us: None,
+                });
+            }
+            EventKind::Admit | EventKind::BatchJoin => {
+                if let Some(o) = g.open.get_mut(&rid) {
+                    o.start_us.get_or_insert(t_us);
+                }
+            }
+            EventKind::Exec => {
+                if let Some(o) = g.open.get_mut(&rid) {
+                    o.exec_us += detail;
+                }
+            }
+            EventKind::FirstToken => {
+                if let Some(o) = g.open.get_mut(&rid) {
+                    o.first_us.get_or_insert(t_us);
+                }
+            }
+            EventKind::Respond | EventKind::Reject
+            | EventKind::Disconnect => {
+                let Some(o) = g.open.remove(&rid) else { return };
+                let total_us = t_us.saturating_sub(o.enqueue_us);
+                let queue_us = o
+                    .start_us
+                    .map(|s| s.saturating_sub(o.enqueue_us))
+                    .unwrap_or(total_us);
+                // generate requests live inside the engine from admission to
+                // the terminal event; score requests report their batch's
+                // measured exec time
+                let exec_us = if o.exec_us > 0 || o.start_us.is_none() {
+                    o.exec_us
+                } else {
+                    total_us.saturating_sub(queue_us)
+                };
+                let summary = RequestSummary {
+                    rid,
+                    req: o.req,
+                    outcome: kind,
+                    queue_us,
+                    exec_us,
+                    ttft_us: o.first_us
+                        .map(|f| f.saturating_sub(o.enqueue_us)),
+                    total_us,
+                };
+                match kind {
+                    EventKind::Respond => self.responded.inc(),
+                    EventKind::Reject => self.rejected.inc(),
+                    _ => self.disconnected.inc(),
+                }
+                // stage histograms cover answered work (reject included:
+                // a rejected request still waited and possibly executed)
+                self.queue_hist.record(queue_us);
+                self.exec_hist.record(exec_us);
+                if let Some(t) = summary.ttft_us {
+                    self.ttft_hist.record(t);
+                }
+                if g.done.len() >= self.cap {
+                    g.done.pop_front();
+                }
+                g.done.push_back(summary);
+            }
+        }
+    }
+
+    /// Completed-request summaries currently retained (oldest first).
+    pub fn summaries(&self) -> Vec<RequestSummary> {
+        self.inner.lock().unwrap().done.iter().copied().collect()
+    }
+
+    /// Request IDs that saw an `enqueue` but no terminal event yet. After
+    /// server shutdown this must be empty — anything left is a stuck
+    /// sequence (a leaked KV cache or an unanswered client).
+    pub fn stuck(&self) -> Vec<u64> {
+        let g = self.inner.lock().unwrap();
+        let mut rids: Vec<u64> = g.open.keys().copied().collect();
+        rids.sort_unstable();
+        rids
+    }
+
+    /// Aggregate every retained summary for SLO evaluation.
+    pub fn agg(&self) -> EventAgg {
+        let g = self.inner.lock().unwrap();
+        let mut a = EventAgg {
+            responded: self.responded.get(),
+            rejected: self.rejected.get(),
+            disconnected: self.disconnected.get(),
+            ..EventAgg::default()
+        };
+        for s in g.done.iter() {
+            a.queue_us.push(s.queue_us);
+            a.exec_us.push(s.exec_us);
+            a.total_us.push(s.total_us);
+            if let Some(t) = s.ttft_us {
+                a.ttft_us.push(t);
+            }
+        }
+        a.queue_us.sort_unstable();
+        a.exec_us.sort_unstable();
+        a.ttft_us.sort_unstable();
+        a.total_us.sort_unstable();
+        a
+    }
+
+    /// Events dropped by the bounded ring so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.get()
+    }
+
+    /// Render the retained events as JSON Lines, one event per line, each
+    /// tagged with `run` (e.g. the bit-width label of a soak phase).
+    pub fn jsonl(&self, run: &str) -> String {
+        let g = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for e in g.events.iter() {
+            out.push_str(&format!(
+                "{{\"run\":\"{}\",\"rid\":{},\"req\":\"{}\",\"event\":\"{}\",\
+                 \"t_us\":{},\"detail\":{}}}\n",
+                run, e.rid, e.req.name(), e.kind.name(), e.t_us, e.detail));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn log() -> (EventLog, Arc<Registry>) {
+        let r = Arc::new(Registry::new());
+        (EventLog::new(1024, &r), r)
+    }
+
+    #[test]
+    fn lifecycle_derives_summary_and_identity() {
+        let (l, _r) = log();
+        l.record(1, ReqKind::Score, EventKind::Enqueue, 5);
+        l.record(1, ReqKind::Score, EventKind::BatchJoin, 3);
+        l.record(1, ReqKind::Score, EventKind::Exec, 40);
+        l.record(1, ReqKind::Score, EventKind::Respond, 0);
+        let s = l.summaries();
+        assert_eq!(s.len(), 1);
+        let s = s[0];
+        assert_eq!(s.rid, 1);
+        assert_eq!(s.outcome, EventKind::Respond);
+        assert_eq!(s.exec_us, 40);
+        // the aggregation identity: stage times never exceed the total
+        assert!(s.queue_us + s.exec_us <= s.total_us + 40,
+                "queue {} + exec {} vs total {}", s.queue_us, s.exec_us,
+                s.total_us);
+        assert!(l.stuck().is_empty());
+    }
+
+    #[test]
+    fn generate_lifecycle_records_ttft() {
+        let (l, _r) = log();
+        l.record(7, ReqKind::Generate, EventKind::Enqueue, 4);
+        l.record(7, ReqKind::Generate, EventKind::Admit, 4);
+        l.record(7, ReqKind::Generate, EventKind::FirstToken, 0);
+        l.record(7, ReqKind::Generate, EventKind::Respond, 0);
+        let s = l.summaries()[0];
+        assert_eq!(s.req, ReqKind::Generate);
+        let ttft = s.ttft_us.expect("first token recorded");
+        assert!(ttft <= s.total_us);
+        // generate exec time is engine-resident time (admit -> terminal)
+        assert!(s.queue_us + s.exec_us <= s.total_us);
+        let agg = l.agg();
+        assert_eq!(agg.responded, 1);
+        assert_eq!(agg.ttft_us.len(), 1);
+    }
+
+    #[test]
+    fn open_requests_are_stuck_until_terminal() {
+        let (l, _r) = log();
+        l.record(3, ReqKind::Score, EventKind::Enqueue, 2);
+        l.record(9, ReqKind::Generate, EventKind::Enqueue, 2);
+        l.record(9, ReqKind::Generate, EventKind::Admit, 2);
+        assert_eq!(l.stuck(), vec![3, 9]);
+        l.record(3, ReqKind::Score, EventKind::Reject, 0);
+        l.record(9, ReqKind::Generate, EventKind::Disconnect, 0);
+        assert!(l.stuck().is_empty());
+        let agg = l.agg();
+        assert_eq!(agg.rejected, 1);
+        assert_eq!(agg.disconnected, 1);
+        assert_eq!(agg.completed(), 2);
+        // errors = rejected / answered; the disconnect is excluded
+        assert!((agg.error_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ring_is_bounded_and_counts_drops() {
+        let r = Registry::new();
+        let l = EventLog::new(8, &r);
+        for rid in 0..32u64 {
+            l.record(rid, ReqKind::Score, EventKind::Enqueue, 0);
+            l.record(rid, ReqKind::Score, EventKind::Respond, 0);
+        }
+        let g = l.inner.lock().unwrap();
+        assert!(g.events.len() <= 8);
+        assert!(g.done.len() <= 8);
+        drop(g);
+        assert!(l.dropped() > 0);
+        // counters still saw every request even though the ring wrapped
+        assert_eq!(l.agg().responded, 32);
+    }
+
+    #[test]
+    fn jsonl_lines_parse_shape() {
+        let (l, _r) = log();
+        l.record(1, ReqKind::Generate, EventKind::Enqueue, 6);
+        l.record(1, ReqKind::Generate, EventKind::Respond, 0);
+        let txt = l.jsonl("w4");
+        assert_eq!(txt.lines().count(), 2);
+        for line in txt.lines() {
+            assert!(line.starts_with('{') && line.ends_with('}'), "{line}");
+            assert!(line.contains("\"run\":\"w4\""), "{line}");
+            assert!(line.contains("\"rid\":1"), "{line}");
+        }
+        assert!(txt.contains("\"event\":\"enqueue\""), "{txt}");
+        assert!(txt.contains("\"event\":\"respond\""), "{txt}");
+    }
+
+    #[test]
+    fn histograms_feed_registry() {
+        let r = Arc::new(Registry::new());
+        let l = EventLog::new(64, &r);
+        l.record(1, ReqKind::Score, EventKind::Enqueue, 0);
+        l.record(1, ReqKind::Score, EventKind::BatchJoin, 1);
+        l.record(1, ReqKind::Score, EventKind::Exec, 120);
+        l.record(1, ReqKind::Score, EventKind::Respond, 0);
+        let txt = r.render();
+        assert!(txt.contains("lrq_queue_time_us_count 1"), "{txt}");
+        assert!(txt.contains("lrq_exec_time_us_sum 120"), "{txt}");
+        assert!(txt.contains("lrq_requests_responded_total 1"), "{txt}");
+    }
+
+    #[test]
+    fn percentile_nearest_rank_known_distribution() {
+        // 1..=100: nearest-rank pXX of the uniform ladder is exactly XX
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(percentile_us(&v, 0.50), 50);
+        assert_eq!(percentile_us(&v, 0.95), 95);
+        assert_eq!(percentile_us(&v, 0.99), 99);
+        assert_eq!(percentile_us(&v, 1.0), 100);
+        // small-sample tails surface the real outlier
+        assert_eq!(percentile_us(&[10, 20, 30, 40, 1000], 0.99), 1000);
+        assert_eq!(percentile_us(&[], 0.5), 0);
+    }
+}

@@ -2,7 +2,7 @@
 //! endpoint (`std::net` only) for scraping a live server.
 
 use std::io::{Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener};
 use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::Arc;
 use std::thread::JoinHandle;
@@ -21,14 +21,25 @@ pub fn snapshot(regs: &[&Registry]) -> String {
     out
 }
 
-/// Minimal blocking HTTP exporter: one accept loop on a background thread,
-/// every request answered with the current [`snapshot`]. Not a web server —
-/// a scrape endpoint.
+/// Minimal HTTP exporter: one accept loop on a background thread, every
+/// request answered with the current [`snapshot`]. Not a web server — a
+/// scrape endpoint.
+///
+/// The listener runs non-blocking: the loop polls `accept` and sleeps
+/// briefly between checks of the stop flag, so shutdown terminates the
+/// thread deterministically within one poll interval. (The previous design
+/// blocked in `accept` and "woke" the loop with a self-connect — racy when
+/// the connect beat the flag store or loopback was unavailable, leaking a
+/// blocked thread.)
 pub struct HttpExporter {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
     handle: Option<JoinHandle<()>>,
 }
+
+/// Stop-flag poll interval of the accept loop (and the shutdown latency
+/// ceiling).
+const ACCEPT_POLL: Duration = Duration::from_millis(25);
 
 impl HttpExporter {
     /// Bind `bind` (e.g. `127.0.0.1:9464`, port 0 for ephemeral) and serve
@@ -36,29 +47,39 @@ impl HttpExporter {
     pub fn start(bind: &str, regs: Vec<Arc<Registry>>)
                  -> std::io::Result<HttpExporter> {
         let listener = TcpListener::bind(bind)?;
+        listener.set_nonblocking(true)?;
         let addr = listener.local_addr()?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
-        let handle = std::thread::spawn(move || {
-            for conn in listener.incoming() {
-                if stop2.load(Relaxed) {
-                    break;
+        let handle = std::thread::spawn(move || loop {
+            if stop2.load(Relaxed) {
+                return;
+            }
+            match listener.accept() {
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                    std::thread::sleep(ACCEPT_POLL);
                 }
-                let Ok(mut c) = conn else { continue };
-                let _ = c.set_read_timeout(Some(Duration::from_millis(250)));
-                let mut req = [0u8; 1024];
-                let _ = c.read(&mut req);
-                let refs: Vec<&Registry> =
-                    regs.iter().map(|r| r.as_ref()).collect();
-                let body = snapshot(&refs);
-                let _ = write!(
-                    c,
-                    "HTTP/1.1 200 OK\r\nContent-Type: text/plain; \
-                     version=0.0.4\r\nContent-Length: {}\r\nConnection: \
-                     close\r\n\r\n{}",
-                    body.len(),
-                    body
-                );
+                Err(_) => std::thread::sleep(ACCEPT_POLL),
+                Ok((mut c, _peer)) => {
+                    // the accepted stream reverts to blocking I/O with a
+                    // read timeout; only the accept itself polls
+                    let _ = c.set_nonblocking(false);
+                    let _ =
+                        c.set_read_timeout(Some(Duration::from_millis(250)));
+                    let mut req = [0u8; 1024];
+                    let _ = c.read(&mut req);
+                    let refs: Vec<&Registry> =
+                        regs.iter().map(|r| r.as_ref()).collect();
+                    let body = snapshot(&refs);
+                    let _ = write!(
+                        c,
+                        "HTTP/1.1 200 OK\r\nContent-Type: text/plain; \
+                         version=0.0.4\r\nContent-Length: {}\r\nConnection: \
+                         close\r\n\r\n{}",
+                        body.len(),
+                        body
+                    );
+                }
             }
         });
         Ok(HttpExporter { addr, stop, handle: Some(handle) })
@@ -71,8 +92,8 @@ impl HttpExporter {
     fn stop_inner(&mut self) {
         if let Some(h) = self.handle.take() {
             self.stop.store(true, Relaxed);
-            // unblock the accept loop
-            let _ = TcpStream::connect(self.addr);
+            // the non-blocking loop observes the flag within ACCEPT_POLL;
+            // no self-connect needed, and the join is bounded
             let _ = h.join();
         }
     }
@@ -91,6 +112,7 @@ impl Drop for HttpExporter {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::net::TcpStream;
 
     #[test]
     fn snapshot_merges_registries_and_engine_counters() {
@@ -123,5 +145,20 @@ mod tests {
         assert!(resp.starts_with("HTTP/1.1 200 OK"), "{resp}");
         assert!(resp.contains("lrq_http_test_total 9"), "{resp}");
         exp.shutdown();
+    }
+
+    #[test]
+    fn shutdown_joins_without_needing_a_connection() {
+        // the old self-connect wakeup leaked the accept thread when no
+        // client ever arrived; the polled loop must join on its own
+        let reg = Arc::new(Registry::new());
+        let Ok(exp) = HttpExporter::start("127.0.0.1:0", vec![reg]) else {
+            eprintln!("skipping exporter shutdown test: cannot bind");
+            return;
+        };
+        let t0 = std::time::Instant::now();
+        exp.shutdown(); // joins; a hang here fails the test via timeout
+        assert!(t0.elapsed() < Duration::from_secs(5),
+                "shutdown took {:?}", t0.elapsed());
     }
 }

@@ -22,16 +22,23 @@
 //!   aggregated into a [`ProfileReport`] (`lrq stats`, `--profile`).
 //! * [`export`] — the Prometheus text snapshot combinator and an optional
 //!   `std::net`-only HTTP exporter for scraping a live server.
+//! * [`events`] — [`EventLog`]: bounded per-request lifecycle event log for
+//!   the serving path (enqueue → admit/batch-join → exec → first-token →
+//!   respond/reject/disconnect), exportable as JSONL and aggregated into
+//!   queue-time / exec-time / TTFT histograms in the registry. Powers the
+//!   soak harness's SLO evaluator ([`crate::loadgen`], DESIGN.md §10).
 //!
 //! The shard level of the span taxonomy (request → batch → shard → layer →
 //! kernel) costs one probe per worker-pool job, so it is compiled in only
 //! under the `obs-trace` cargo feature; everything else is runtime-flagged.
 
+pub mod events;
 pub mod export;
 pub mod profile;
 pub mod registry;
 pub mod trace;
 
+pub use events::{EventAgg, EventKind, EventLog, ReqKind, RequestSummary};
 pub use export::HttpExporter;
 pub use profile::{KernelKind, ProfileReport, Profiler, MODEL_SLOT};
 pub use registry::{Counter, Gauge, Histogram, Registry};

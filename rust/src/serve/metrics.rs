@@ -29,7 +29,11 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::obs::registry::LATENCY_US_BOUNDS;
-use crate::obs::{Counter, Histogram, Registry};
+use crate::obs::{Counter, EventLog, Gauge, Histogram, Registry};
+
+/// Default capacity of the per-server lifecycle event log: enough for a CI
+/// soak run's full event stream, bounded under sustained production load.
+pub const EVENT_LOG_CAP: usize = 65_536;
 
 /// Serving counters on top of an [`obs::Registry`](Registry). `Clone` shares
 /// the underlying instruments (`Arc`), so a cloned snapshot keeps reading
@@ -58,6 +62,12 @@ pub struct Metrics {
     batch_rows: Arc<Counter>,
     /// bucketed request-latency view for export
     latency_hist: Arc<Histogram>,
+    /// per-request lifecycle event log (DESIGN.md §10)
+    events: Arc<EventLog>,
+    /// sequences currently decoding in the engine
+    active_seqs: Arc<Gauge>,
+    /// admitted-but-waiting generate requests
+    queued_reqs: Arc<Gauge>,
     /// exact latency samples for nearest-rank percentiles
     latencies_us: Vec<u64>,
     /// first/last record times — the observation window for the built-in
@@ -103,6 +113,13 @@ impl Metrics {
             "lrq_request_latency_us",
             "request latency in microseconds",
             LATENCY_US_BOUNDS);
+        let events = Arc::new(EventLog::new(EVENT_LOG_CAP, &registry));
+        let active_seqs = registry.gauge(
+            "lrq_active_seqs",
+            "sequences currently decoding in the engine");
+        let queued_reqs = registry.gauge(
+            "lrq_queued_requests",
+            "generate requests admitted but waiting for a decode slot");
         Metrics {
             registry,
             requests,
@@ -115,6 +132,9 @@ impl Metrics {
             batch_exec_us,
             batch_rows,
             latency_hist,
+            events,
+            active_seqs,
+            queued_reqs,
             latencies_us: Vec::new(),
             first_record: None,
             last_record: None,
@@ -124,6 +144,20 @@ impl Metrics {
     /// The registry backing these counters (for export / HTTP snapshots).
     pub fn registry(&self) -> Arc<Registry> {
         self.registry.clone()
+    }
+
+    /// The per-request lifecycle event log shared by the server and its
+    /// clients (DESIGN.md §10). Clones of this `Metrics` share the same log.
+    pub fn events(&self) -> Arc<EventLog> {
+        self.events.clone()
+    }
+
+    /// Update the engine-occupancy gauges: sequences actively decoding and
+    /// admitted-but-waiting generate requests. Called once per engine loop
+    /// iteration.
+    pub fn set_occupancy(&self, active: usize, queued: usize) {
+        self.active_seqs.set(active as i64);
+        self.queued_reqs.set(queued as i64);
     }
 
     fn touch(&mut self) {
@@ -447,6 +481,25 @@ mod tests {
         let rps = m.requests_per_sec();
         // one inter-arrival over a >=5ms sleep: positive, below 1000 req/s
         assert!(rps > 0.0 && rps < 1000.0, "rps {rps}");
+    }
+
+    #[test]
+    fn events_and_occupancy_share_registry() {
+        use crate::obs::{EventKind, ReqKind};
+        let m = Metrics::default();
+        m.set_occupancy(3, 2);
+        let ev = m.events();
+        ev.record(11, ReqKind::Score, EventKind::Enqueue, 1);
+        ev.record(11, ReqKind::Score, EventKind::BatchJoin, 1);
+        ev.record(11, ReqKind::Score, EventKind::Exec, 25);
+        ev.record(11, ReqKind::Score, EventKind::Respond, 0);
+        // clones are live views onto the same log
+        assert_eq!(m.clone().events().summaries().len(), 1);
+        let txt = m.render();
+        assert!(txt.contains("lrq_active_seqs 3"), "{txt}");
+        assert!(txt.contains("lrq_queued_requests 2"), "{txt}");
+        assert!(txt.contains("lrq_requests_responded_total 1"), "{txt}");
+        assert!(txt.contains("lrq_exec_time_us_sum 25"), "{txt}");
     }
 
     #[test]

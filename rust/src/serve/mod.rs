@@ -28,7 +28,13 @@
 //! lifetime renders as an async `ph:"b"`/`ph:"e"` envelope, and the engine
 //! loop emits `score_batch` / `decode_step` spans that nest the per-layer
 //! and per-kernel spans recorded inside the model — the request → batch →
-//! layer → kernel tree.
+//! layer → kernel tree. Independently of tracing, every request's lifecycle
+//! (enqueue → admit/batch-join → exec → first-token → respond/reject/
+//! disconnect) is recorded into the server's bounded
+//! [`EventLog`](crate::obs::EventLog) (shared through [`Metrics::events`]),
+//! which derives per-request queue-time / exec-time / TTFT and detects stuck
+//! sequences — the substrate of the soak harness's SLO evaluator
+//! (DESIGN.md §10).
 
 pub mod metrics;
 
@@ -43,6 +49,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::obs::trace;
+use crate::obs::{EventKind, EventLog, ReqKind};
 use crate::rng::{sample_top_k, Rng};
 
 pub use metrics::Metrics;
@@ -156,10 +163,12 @@ impl Default for ServerConfig {
     }
 }
 
-/// Handle for submitting requests.
+/// Handle for submitting requests. Clones share the server's request
+/// channel and lifecycle event log.
 #[derive(Clone)]
 pub struct Client {
     tx: Sender<Request>,
+    events: Arc<EventLog>,
 }
 
 impl Client {
@@ -171,6 +180,8 @@ impl Client {
         let (tx, rx) = channel();
         let rid = next_rid();
         trace::async_begin("score", rid);
+        self.events.record(rid, ReqKind::Score, EventKind::Enqueue,
+                           ids.len() as u64);
         self.tx
             .send(Request::Score(ScoreRequest {
                 ids,
@@ -180,6 +191,8 @@ impl Client {
             }))
             .map_err(|_| {
                 trace::async_end("score", rid);
+                // the request never reached the engine: close its lifecycle
+                self.events.record(rid, ReqKind::Score, EventKind::Reject, 0);
                 anyhow!("server stopped")
             })?;
         Ok(rx)
@@ -193,13 +206,19 @@ impl Client {
             .map_err(|e| anyhow!(e))
     }
 
-    /// Blocking generate call: decode `max_new` tokens after `prompt`
-    /// (greedy when `top_k <= 1`).
-    pub fn generate(&self, prompt: Vec<i32>, max_new: usize, top_k: usize,
-                    seed: u64) -> Result<GenerateResponse> {
+    /// Submit a generation request without blocking; the response arrives on
+    /// the returned channel. Dropping the receiver mid-generation is safe
+    /// and surfaces as a `disconnect` lifecycle event when the engine's
+    /// answer fails to send.
+    pub fn submit_generate(&self, prompt: Vec<i32>, max_new: usize,
+                           top_k: usize, seed: u64)
+                           -> Result<Receiver<Result<GenerateResponse,
+                                                     String>>> {
         let (tx, rx) = channel();
         let rid = next_rid();
         trace::async_begin("generate", rid);
+        self.events.record(rid, ReqKind::Generate, EventKind::Enqueue,
+                           prompt.len() as u64);
         self.tx
             .send(Request::Generate(GenerateRequest {
                 prompt,
@@ -212,9 +231,19 @@ impl Client {
             }))
             .map_err(|_| {
                 trace::async_end("generate", rid);
+                self.events.record(rid, ReqKind::Generate, EventKind::Reject,
+                                   0);
                 anyhow!("server stopped")
             })?;
-        rx.recv()
+        Ok(rx)
+    }
+
+    /// Blocking generate call: decode `max_new` tokens after `prompt`
+    /// (greedy when `top_k <= 1`).
+    pub fn generate(&self, prompt: Vec<i32>, max_new: usize, top_k: usize,
+                    seed: u64) -> Result<GenerateResponse> {
+        self.submit_generate(prompt, max_new, top_k, seed)?
+            .recv()
             .map_err(|_| anyhow!("server dropped request"))?
             .map_err(|e| anyhow!(e))
     }
@@ -258,7 +287,16 @@ impl Server {
     }
 
     pub fn client(&self) -> Client {
-        Client { tx: self.tx.as_ref().expect("server running").clone() }
+        Client {
+            tx: self.tx.as_ref().expect("server running").clone(),
+            events: self.metrics.lock().unwrap().events(),
+        }
+    }
+
+    /// The server's lifecycle event log (for JSONL export, stuck-sequence
+    /// checks, and SLO aggregation after shutdown).
+    pub fn events(&self) -> Arc<EventLog> {
+        self.metrics.lock().unwrap().events()
     }
 
     /// Stop the engine and join. Active decode sequences are drained first
@@ -310,6 +348,7 @@ struct ScoreRows {
 
 fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
                rx: Receiver<Request>, metrics: Arc<Mutex<Metrics>>) {
+    let events = metrics.lock().unwrap().events();
     let bcap = cfg.max_batch.min(scorer.batch_size()).max(1);
     let seq = scorer.seq_len();
     let mut rows = ScoreRows::default();
@@ -359,13 +398,14 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
         }
         if !open && scores.is_empty() && gens.is_empty() && active.is_empty()
         {
+            metrics.lock().unwrap().set_occupancy(0, 0);
             return;
         }
         // ---- one score batch ----
         if !scores.is_empty() {
             let take = scores.len().min(bcap);
             let batch: Vec<ScoreRequest> = scores.drain(..take).collect();
-            run_batch(scorer, seq, batch, &mut rows, &metrics);
+            run_batch(scorer, seq, batch, &mut rows, &metrics, &events);
         }
         // ---- admit new generations (validate, prefill, first sample) ----
         // bounded admission: each active sequence pins a KV cache in the
@@ -374,14 +414,17 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
         let max_active = bcap.saturating_mul(4);
         while active.len() < max_active {
             match gens.pop_front() {
-                Some(g) => admit(scorer, seq, g, &mut active, &metrics),
+                Some(g) => {
+                    admit(scorer, seq, g, &mut active, &metrics, &events)
+                }
                 None => break,
             }
         }
         // ---- one decode step across active sequences ----
         if !active.is_empty() {
-            decode_round(scorer, &mut active, bcap, &metrics);
+            decode_round(scorer, &mut active, bcap, &metrics, &events);
         }
+        metrics.lock().unwrap().set_occupancy(active.len(), gens.len());
     }
 }
 
@@ -391,7 +434,7 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
 /// `batch_size` reflects valid rows only.
 fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
              batch: Vec<ScoreRequest>, rows: &mut ScoreRows,
-             metrics: &Arc<Mutex<Metrics>>) {
+             metrics: &Arc<Mutex<Metrics>>, events: &EventLog) {
     // reject invalid requests up front: no batch row, no reported occupancy
     let mut valid: Vec<ScoreRequest> = Vec::with_capacity(batch.len());
     for r in batch {
@@ -399,6 +442,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
             let _ = r.resp.send(Err(format!(
                 "sequence length {} not in [2, {seq}]", r.ids.len())));
             trace::async_end("score", r.rid);
+            events.record(r.rid, ReqKind::Score, EventKind::Reject, 0);
         } else {
             valid.push(r);
         }
@@ -407,6 +451,9 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
         return; // never execute an empty batch
     }
     let n = valid.len();
+    for r in &valid {
+        events.record(r.rid, ReqKind::Score, EventKind::BatchJoin, n as u64);
+    }
     // fixed-shape scorers always get full capacity; variable ones only the
     // occupied rows (no padded-row compute)
     let b = if scorer.variable_batch() {
@@ -435,6 +482,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
         ("score_batch".to_string(), Some(format!("{{\"rows\":{n}}}")))
     });
     metrics.lock().unwrap().record_batch(exec_time, n);
+    let exec_us = exec_time.as_micros() as u64;
     match scored {
         Ok(logp) => {
             for (i, r) in valid.into_iter().enumerate() {
@@ -442,12 +490,19 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
                 let sum: f32 = row[..rows.lens[i] - 1].iter().sum();
                 let latency = r.submitted.elapsed();
                 metrics.lock().unwrap().record(latency);
-                let _ = r.resp.send(Ok(ScoreResponse {
+                events.record(r.rid, ReqKind::Score, EventKind::Exec,
+                              exec_us);
+                let sent = r.resp.send(Ok(ScoreResponse {
                     logp_sum: sum,
                     latency,
                     batch_size: n,
                 }));
                 trace::async_end("score", r.rid);
+                // a failed send means the client dropped its receiver
+                events.record(r.rid, ReqKind::Score,
+                              if sent.is_ok() { EventKind::Respond }
+                              else { EventKind::Disconnect },
+                              0);
             }
         }
         Err(e) => {
@@ -456,8 +511,14 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
             let msg = format!("{e:#}");
             for r in valid {
                 metrics.lock().unwrap().record(r.submitted.elapsed());
-                let _ = r.resp.send(Err(msg.clone()));
+                events.record(r.rid, ReqKind::Score, EventKind::Exec,
+                              exec_us);
+                let sent = r.resp.send(Err(msg.clone()));
                 trace::async_end("score", r.rid);
+                events.record(r.rid, ReqKind::Score,
+                              if sent.is_ok() { EventKind::Reject }
+                              else { EventKind::Disconnect },
+                              0);
             }
         }
     }
@@ -466,11 +527,13 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
 /// Validate + prefill one generation request; on success it joins `active`
 /// with its first sampled token (a `max_new == 1` request completes here).
 fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
-         active: &mut Vec<ActiveSeq>, metrics: &Arc<Mutex<Metrics>>) {
+         active: &mut Vec<ActiveSeq>, metrics: &Arc<Mutex<Metrics>>,
+         events: &EventLog) {
     if g.prompt.is_empty() || g.max_new == 0 {
         let _ = g.resp.send(Err(
             "generate needs a non-empty prompt and max_new >= 1".into()));
         trace::async_end("generate", g.rid);
+        events.record(g.rid, ReqKind::Generate, EventKind::Reject, 0);
         return;
     }
     if g.prompt.len() + g.max_new > seq {
@@ -478,25 +541,36 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
             "prompt {} + max_new {} exceeds the {seq}-token context",
             g.prompt.len(), g.max_new)));
         trace::async_end("generate", g.rid);
+        events.record(g.rid, ReqKind::Generate, EventKind::Reject, 0);
         return;
     }
     if !scorer.supports_decode() {
         let _ = g.resp.send(Err(
             "this engine does not support incremental decode".into()));
         trace::async_end("generate", g.rid);
+        events.record(g.rid, ReqKind::Generate, EventKind::Reject, 0);
         return;
     }
+    // validated: the request now enters the engine (queue time ends here)
+    events.record(g.rid, ReqKind::Generate, EventKind::Admit,
+                  g.prompt.len() as u64);
     match scorer.begin_decode(&g.prompt) {
         Err(e) => {
             // engine-error path: the prefill executed (and failed) — the
             // request still counts, like the score-batch error path
             metrics.lock().unwrap().record(g.submitted.elapsed());
-            let _ = g.resp.send(Err(format!("{e:#}")));
+            let sent = g.resp.send(Err(format!("{e:#}")));
             trace::async_end("generate", g.rid);
+            events.record(g.rid, ReqKind::Generate,
+                          if sent.is_ok() { EventKind::Reject }
+                          else { EventKind::Disconnect },
+                          0);
         }
         Ok((sid, logits)) => {
             let mut rng = Rng::new(g.seed);
             let first = sample_top_k(&logits, g.top_k, &mut rng) as i32;
+            events.record(g.rid, ReqKind::Generate, EventKind::FirstToken,
+                          0);
             let seq_state = ActiveSeq {
                 sid,
                 prompt_len: g.prompt.len(),
@@ -509,7 +583,7 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
                 rid: g.rid,
             };
             if seq_state.tokens.len() >= seq_state.max_new {
-                finish(scorer, seq_state, metrics);
+                finish(scorer, seq_state, metrics, events);
             } else {
                 active.push(seq_state);
             }
@@ -519,23 +593,29 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
 
 /// Complete one generation: release its KV cache, record metrics, respond.
 fn finish(scorer: &mut dyn BatchScorer, a: ActiveSeq,
-          metrics: &Arc<Mutex<Metrics>>) {
+          metrics: &Arc<Mutex<Metrics>>, events: &EventLog) {
     scorer.end_decode(a.sid);
     let latency = a.submitted.elapsed();
-    metrics.lock().unwrap().record_gen(latency, a.tokens.len());
-    let _ = a.resp.send(Ok(GenerateResponse {
+    let n_tokens = a.tokens.len();
+    metrics.lock().unwrap().record_gen(latency, n_tokens);
+    let sent = a.resp.send(Ok(GenerateResponse {
         tokens: a.tokens,
         latency,
         prompt_len: a.prompt_len,
     }));
     trace::async_end("generate", a.rid);
+    events.record(a.rid, ReqKind::Generate,
+                  if sent.is_ok() { EventKind::Respond }
+                  else { EventKind::Disconnect },
+                  n_tokens as u64);
 }
 
 /// One decode step batched across up to `bcap` active sequences; finished
 /// sequences respond and release their caches, the rest rotate so every
 /// sequence gets steps under overload.
 fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
-                bcap: usize, metrics: &Arc<Mutex<Metrics>>) {
+                bcap: usize, metrics: &Arc<Mutex<Metrics>>,
+                events: &EventLog) {
     let n = active.len().min(bcap);
     let batch: Vec<(SeqId, i32)> = active[..n]
         .iter()
@@ -564,7 +644,7 @@ fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
             let finished = done.len();
             for i in done.into_iter().rev() {
                 let a = active.remove(i);
-                finish(scorer, a, metrics);
+                finish(scorer, a, metrics, events);
             }
             // round-robin fairness across > bcap active sequences: rotate
             // the stepped *survivors* to the back so un-stepped sequences
@@ -581,8 +661,12 @@ fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
             for a in active.drain(..n) {
                 scorer.end_decode(a.sid);
                 metrics.lock().unwrap().record(a.submitted.elapsed());
-                let _ = a.resp.send(Err(msg.clone()));
+                let sent = a.resp.send(Err(msg.clone()));
                 trace::async_end("generate", a.rid);
+                events.record(a.rid, ReqKind::Generate,
+                              if sent.is_ok() { EventKind::Reject }
+                              else { EventKind::Disconnect },
+                              0);
             }
         }
     }
@@ -800,6 +884,44 @@ mod tests {
         assert_eq!(m.requests(), 2);
     }
 
+    #[test]
+    fn lifecycle_events_cover_score_outcomes() {
+        let s = start_mock(4, 5);
+        let c = s.client();
+        // respond: a normal request
+        c.score(vec![5, 3, 2]).unwrap();
+        // reject: an oversized request (never executes)
+        assert!(c.score((0..64).collect()).is_err());
+        // disconnect: drop the receiver before the batch answers, then sync
+        // on a follow-up request (same engine thread, so its response
+        // ordering guarantees the dropped one was handled)
+        drop(c.submit(vec![1, 7]).unwrap());
+        c.score(vec![1, 5]).unwrap();
+        let ev = s.events();
+        assert!(ev.stuck().is_empty(), "stuck {:?}", ev.stuck());
+        let agg = ev.agg();
+        assert_eq!(agg.responded, 2);
+        assert_eq!(agg.rejected, 1);
+        assert_eq!(agg.disconnected, 1);
+        // per-request identity: stage times never exceed the total
+        for r in ev.summaries() {
+            assert!(r.queue_us + r.exec_us <= r.total_us,
+                    "rid {}: queue {} + exec {} > total {}",
+                    r.rid, r.queue_us, r.exec_us, r.total_us);
+        }
+        // the JSONL export carries every lifecycle stage seen above
+        let txt = ev.jsonl("test");
+        for stage in ["enqueue", "batch_join", "exec", "respond", "reject",
+                      "disconnect"] {
+            assert!(txt.contains(&format!("\"event\":\"{stage}\"")),
+                    "missing {stage} in {txt}");
+        }
+        // mid-run, an unanswered request shows as stuck
+        let ev2 = EventLog::new(16, &crate::obs::Registry::new());
+        ev2.record(99, ReqKind::Score, EventKind::Enqueue, 2);
+        assert_eq!(ev2.stuck(), vec![99]);
+    }
+
     /// Decode-capable mock: the "model" deterministically continues with
     /// `(last token + 1) % 100`, so generations are checkable counting
     /// sequences. Tracks live caches to prove none leak.
@@ -901,6 +1023,28 @@ mod tests {
         assert_eq!(m.gen_tokens(),
                    m.decode_step_tokens() + m.gen_requests());
         assert!(m.mean_decode_batch() >= 1.0);
+    }
+
+    #[test]
+    fn lifecycle_events_cover_generate() {
+        let live = Arc::new(AtomicUsize::new(0));
+        let s = start_gen_mock(live.clone());
+        let c = s.client();
+        c.generate(vec![3], 4, 1, 0).unwrap();
+        assert!(c.generate(vec![], 4, 1, 0).is_err()); // validation reject
+        let ev = s.events();
+        assert!(ev.stuck().is_empty());
+        let agg = ev.agg();
+        assert_eq!(agg.responded, 1);
+        assert_eq!(agg.rejected, 1);
+        // the completed generation recorded a first-token time within its
+        // total latency
+        let done: Vec<_> = ev.summaries().into_iter()
+            .filter(|r| r.outcome == EventKind::Respond).collect();
+        assert_eq!(done.len(), 1);
+        let ttft = done[0].ttft_us.expect("generate records TTFT");
+        assert!(ttft <= done[0].total_us);
+        assert!(done[0].queue_us + done[0].exec_us <= done[0].total_us);
     }
 
     #[test]

@@ -2,9 +2,10 @@
 //! unavailable offline; failures reproduce from the printed seed).
 
 use lrq::infer::kernels::quantize_acts_per_token;
-use lrq::infer::{ExecMode, ExecState, QuantLinear, TilePlan, MR};
+use lrq::infer::{quantize_weights, ExecMode, ExecState, QuantLinear,
+                 ScaleInit, TilePlan, MR};
 use lrq::methods::fold::{fold_block, smooth_scales, weight_col_amax};
-use lrq::model::BlockWeights;
+use lrq::model::{BlockWeights, ModelDim, QuantizedModel, Weights};
 use lrq::quant::{self, grid_search_scales, per_token_quant, rtn_grid,
                  PackedMatrix};
 use lrq::quant::pack::{pack_bits, unpack_bits};
@@ -331,6 +332,82 @@ fn prop_planned_linear_is_bit_exact_vs_reference_across_threads() {
             }
         }
         Ok(())
+    });
+}
+
+fn micro_quantized(rng: &mut Rng, bits: u32) -> QuantizedModel {
+    let dim = ModelDim::builtin("micro").unwrap();
+    let w = Weights::init(&dim, rng);
+    quantize_weights(&w, bits, ScaleInit::Rtn).unwrap()
+}
+
+#[test]
+fn prop_lrqq_checkpoint_roundtrip() {
+    // Serialized quantized checkpoints must reproduce every packed code,
+    // grid entry, and FP tensor exactly after a byte roundtrip.
+    check("lrqq checkpoint roundtrip", 12, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let qm = micro_quantized(rng, bits);
+        let bytes = qm.to_bytes();
+        let qm2 = QuantizedModel::from_bytes(&qm.dim, &bytes)
+            .map_err(|e| format!("reload failed: {e}"))?;
+        if qm2.bits != bits {
+            return Err(format!("bits {} != {bits}", qm2.bits));
+        }
+        if qm2.emb != qm.emb || qm2.head != qm.head
+            || qm2.final_norm != qm.final_norm {
+            return Err("FP tensors changed across roundtrip".into());
+        }
+        for (l, (a, b)) in qm.blocks.iter().zip(&qm2.blocks).enumerate() {
+            for (i, (pa, pb)) in a.ws.iter().zip(&b.ws).enumerate() {
+                if pa.unpack() != pb.unpack() || pa.scale != pb.scale
+                    || pa.zp != pb.zp {
+                    return Err(format!("block {l} matrix {i} changed"));
+                }
+            }
+            if a.norm_attn != b.norm_attn || a.norm_ffn != b.norm_ffn {
+                return Err(format!("block {l} norms changed"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lrqq_truncation_fails_closed() {
+    // Any prefix of a valid checkpoint must be rejected with an error —
+    // never a panic, and never a silently short model.
+    check("lrqq truncation fails closed", 12, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let qm = micro_quantized(rng, bits);
+        let bytes = qm.to_bytes();
+        let cut = rng.below(bytes.len());
+        match QuantizedModel::from_bytes(&qm.dim, &bytes[..cut]) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!(
+                "accepted truncated checkpoint ({cut}/{} bytes)",
+                bytes.len())),
+        }
+    });
+}
+
+#[test]
+fn prop_lrqq_bitflip_fails_closed() {
+    // A single flipped bit anywhere in the stream must trip the checksum
+    // (or a structural check) — corrupt weights must never load as Ok.
+    check("lrqq bit flip fails closed", 20, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let qm = micro_quantized(rng, bits);
+        let mut bytes = qm.to_bytes();
+        let off = rng.below(bytes.len());
+        let bit = rng.below(8) as u32;
+        bytes[off] ^= 1u8 << bit;
+        match QuantizedModel::from_bytes(&qm.dim, &bytes) {
+            Err(_) => Ok(()),
+            Ok(_) => Err(format!(
+                "accepted corrupt checkpoint (bit {bit} at byte {off} of \
+                 {})", bytes.len())),
+        }
     });
 }
 
