@@ -11,10 +11,13 @@
 //! (machine-readable: prefill tok/s, decode tok/s, the planned-vs-pre-plan
 //! decode speedup per bit-width, and the observability-overhead row —
 //! decode tok/s with the profiler + tracer on vs off) so the perf
-//! trajectory is tracked across PRs. `-- --compare PATH` additionally
-//! gates against a committed baseline: exit nonzero when planned decode
-//! tok/s regresses more than 30% (zero-valued baseline entries are
-//! provisional and skipped).
+//! trajectory is tracked across PRs. The `obs` row also records which
+//! micro-kernel backend ran (`avx2`/`sse2`/`scalar` — the SIMD dispatch of
+//! DESIGN.md §11; pin it with `LRQ_FORCE_SCALAR=1`), and `-- --out PATH`
+//! redirects the JSON so CI's forced-scalar lane can emit its own artifact.
+//! `-- --compare PATH` additionally gates against a committed baseline:
+//! exit nonzero when planned decode tok/s regresses more than 30%
+//! (zero-valued baseline entries are provisional and skipped).
 
 use std::time::Duration;
 
@@ -75,8 +78,9 @@ fn write_json(path: &str, smoke: bool, cfg: &str, rates: &[BitRates],
         0.0
     };
     s.push_str(&format!(
-        "  \"obs\": {{\"decode_tok_s_off\": {:.1}, \
+        "  \"obs\": {{\"kernel\": \"{}\", \"decode_tok_s_off\": {:.1}, \
          \"decode_tok_s_on\": {:.1}, \"overhead_pct\": {:.1}}}\n",
+        lrq::infer::simd::active().name(),
         obs.decode_tok_s_off, obs.decode_tok_s_on, overhead_pct));
     s.push_str("}\n");
     std::fs::write(path, &s)?;
@@ -91,6 +95,12 @@ fn main() -> anyhow::Result<()> {
         .iter()
         .position(|a| a == "--compare")
         .and_then(|i| argv.get(i + 1).cloned());
+    let out_path = argv
+        .iter()
+        .position(|a| a == "--out")
+        .and_then(|i| argv.get(i + 1).cloned())
+        .unwrap_or_else(|| "BENCH_native.json".to_string());
+    println!("kernel dispatch: {}", lrq::infer::simd::describe());
     let mut b = if smoke {
         // CI mode: keep it compiling and emitting, not statistically deep
         Bench {
@@ -339,7 +349,7 @@ fn main() -> anyhow::Result<()> {
                  m.throughput(wall) * dim.seq as f64, dim.seq);
     }
 
-    write_json("BENCH_native.json", smoke, &dim.name, &rates, &obs)?;
+    write_json(&out_path, smoke, &dim.name, &rates, &obs)?;
 
     // ---- regression gate: --compare BASELINE.json ------------------------
     // fail (exit nonzero) when planned decode tok/s drops > 30% below the
@@ -348,7 +358,7 @@ fn main() -> anyhow::Result<()> {
     if let Some(bpath) = compare {
         let baseline = std::fs::read_to_string(&bpath)
             .map_err(|e| anyhow::anyhow!("reading baseline {bpath}: {e}"))?;
-        let current = std::fs::read_to_string("BENCH_native.json")?;
+        let current = std::fs::read_to_string(&out_path)?;
         let provisional = lrq::bench::json_key_numbers(
             &baseline, "decode_tok_s")
             .iter()

@@ -436,6 +436,21 @@ impl NativeModel {
         self.exec.borrow().mode()
     }
 
+    /// Pin the integer-GEMM kernel backend for this instance (the planned
+    /// path's SIMD dispatch). Instances default to [`simd::active()`], so
+    /// this is only needed to force a slower tier — e.g. the scalar oracle
+    /// in differential tests, or `--kernel scalar` at the CLI.
+    ///
+    /// [`simd::active()`]: crate::infer::simd::active
+    pub fn with_kernel(self, backend: crate::infer::simd::Backend) -> Self {
+        self.exec.borrow_mut().set_kernel(backend);
+        self
+    }
+
+    pub fn kernel(&self) -> crate::infer::simd::Backend {
+        self.exec.borrow().kernel()
+    }
+
     /// Worker threads in the persistent pool (shared across clones).
     pub fn threads(&self) -> usize {
         self.exec.borrow().threads()

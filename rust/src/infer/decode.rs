@@ -68,8 +68,11 @@ impl KvTrack {
 
     /// Dequantize `out.len()` features of token `t` starting at feature
     /// `off` (one head slice at a time — the cache itself stays packed).
+    /// The `Codes` branch is the dequant epilogue of cached attention; it
+    /// runs the vectorized [`crate::infer::simd::dequant`] (elementwise,
+    /// bit-equal to the scalar form on every backend).
     fn read(&self, t: usize, off: usize, d: usize, mode: KvMode,
-            out: &mut [f32]) {
+            backend: crate::infer::simd::Backend, out: &mut [f32]) {
         match mode {
             KvMode::Fp | KvMode::FakeFp(_) => {
                 out.copy_from_slice(&self.fp[t * d + off..t * d + off
@@ -78,9 +81,7 @@ impl KvTrack {
             KvMode::Codes(_) => {
                 let (s, z) = (self.scale[t], self.zp[t]);
                 let src = &self.codes[t * d + off..t * d + off + out.len()];
-                for (o, &c) in out.iter_mut().zip(src) {
-                    *o = (c as f32 - z) * s;
-                }
+                crate::infer::simd::dequant_with(backend, src, s, z, out);
             }
         }
     }
@@ -226,20 +227,15 @@ impl KvCache {
         scratch.resize(len + hd, 0.0);
         let (scores, row) = scratch.split_at_mut(len);
         out.fill(0.0);
+        let be = crate::infer::simd::active();
         for hi in 0..h {
             let qrow = &q[hi * hd..(hi + 1) * hd];
             // scores over the cached prefix (the causal set by construction)
-            let mut mx = f32::NEG_INFINITY;
-            for tj in 0..len {
-                lk.k.read(tj, hi * hd, self.d, self.mode, row);
-                let mut acc = 0.0f32;
-                for (a, b) in qrow.iter().zip(row.iter()) {
-                    acc += a * b;
-                }
-                let sc = acc * scale;
-                scores[tj] = sc;
-                mx = mx.max(sc);
+            for (tj, sc) in scores.iter_mut().enumerate() {
+                lk.k.read(tj, hi * hd, self.d, self.mode, be, row);
+                *sc = crate::infer::simd::dot_f32_with(be, qrow, row) * scale;
             }
+            let mx = crate::infer::simd::max_f32_with(be, scores);
             let mut denom = 0.0f32;
             for sc in scores.iter_mut() {
                 *sc = (*sc - mx).exp();
@@ -249,10 +245,8 @@ impl KvCache {
             let orow = &mut out[hi * hd..(hi + 1) * hd];
             for tj in 0..len {
                 let w = scores[tj] * inv;
-                lk.v.read(tj, hi * hd, self.d, self.mode, row);
-                for (o, &vv) in orow.iter_mut().zip(row.iter()) {
-                    *o += w * vv;
-                }
+                lk.v.read(tj, hi * hd, self.d, self.mode, be, row);
+                crate::infer::simd::axpy_with(be, w, row, orow);
             }
         }
     }

@@ -1,9 +1,16 @@
 //! Integer kernel primitives for the native engine: activation quantization
-//! to u8 codes, the register-blocked 4×4 micro-kernels of the planned path
-//! ([`dot_block_u8`] / [`dot_block_f32_u8`], streaming interleaved
-//! [`crate::infer::plan::TilePlan`] tiles), the scalar dots of the
-//! reference path, and fused unpacking of 3/4/8-bit weight rows into
-//! cache-resident tiles (plan construction + reference execution).
+//! to u8 codes, the register-blocked 4×4 **scalar-oracle** micro-kernels of
+//! the planned path ([`dot_block_u8_scalar`] / [`dot_block_f32_u8_scalar`],
+//! streaming lane-padded row-major [`crate::infer::plan::TilePlan`] tiles),
+//! the scalar dots of the reference path, and fused unpacking of 3/4/8-bit
+//! weight rows into cache-resident tiles (plan construction + reference
+//! execution).
+//!
+//! These scalar kernels are the bit-exact oracle of the runtime-dispatched
+//! vector kernels in [`crate::infer::simd`] (DESIGN.md §11): every SIMD
+//! path is differentially tested against them, and `--kernel scalar` /
+//! `LRQ_FORCE_SCALAR=1` pins execution here so both codegen paths stay
+//! live in CI.
 //!
 //! Grid math is kept bit-identical to [`crate::quant::act`] (the Rust oracle
 //! of the Pallas per-token kernel): same `(hi-lo)/qmax` scale floor, same
@@ -138,10 +145,16 @@ pub fn dot_u8(a: &[u8], b: &[u8]) -> i32 {
 ///
 /// Accumulation is **sequential** over the inner dim — one accumulator, in
 /// index order — because this is the `ExecMode::Reference` twin of the
-/// register-blocked [`dot_block_f32_u8`], whose per-output-element
+/// register-blocked [`dot_block_f32_u8_scalar`], whose per-output-element
 /// accumulation is also one sequential chain. Same per-element f32 op order
 /// ⇒ the planned and reference weight-only paths are bit-identical, not
 /// merely close.
+///
+/// This order is a **contract**: the weight-only GEMM is never vectorized
+/// (no SIMD dispatch arm exists for it in [`crate::infer::simd`]) because
+/// any lane split would reassociate f32 adds and break the planned ==
+/// reference bit-equality. `sequential_f32_accumulation_is_load_bearing`
+/// below fails if anyone reorders it.
 #[inline]
 pub fn dot_f32_u8(x: &[f32], q: &[u8]) -> f32 {
     debug_assert_eq!(x.len(), q.len());
@@ -152,141 +165,160 @@ pub fn dot_f32_u8(x: &[f32], q: &[u8]) -> f32 {
     acc
 }
 
-/// Register-blocked integer micro-kernel: one `tn × rn` output block
+/// Register-blocked integer micro-kernel (the **scalar oracle** of
+/// [`crate::infer::simd::dot_block_u8`]): one `tn × rn` output block
 /// (`tn <= 4` token rows × `rn <= 4` weight rows, [`super::plan::MR`]) per
 /// call, with 16 independent i32 accumulators so the autovectorizer can
 /// keep the whole block in registers.
 ///
 /// * `a` — `tn` contiguous token-code rows (`tn * k` bytes, row-major);
-/// * `wt` — one interleaved weight tile, `rn` bytes per column
-///   (`[col][row-in-tile]`, the [`super::plan::TilePlan`] layout), streamed
-///   front to back — no per-call unpack, no strided reads;
+/// * `wt` — one lane-padded row-major weight tile (the
+///   [`super::plan::TilePlan`] layout): weight row `r` is
+///   `wt[r*stride .. r*stride + k]`, `stride >= k` a multiple of
+///   [`crate::infer::simd::LANE`] so vector loads land on lane boundaries;
 /// * `acc[t * 4 + r]` — dot of token row `t` against weight row `r`.
 ///
 /// Integer accumulation is exact, so any tiling of the same codes produces
 /// identical results; the i32 bound is the same [`MAX_DOT_K`] contract as
 /// [`dot_u8`].
 #[inline]
-pub fn dot_block_u8(a: &[u8], k: usize, tn: usize, wt: &[u8], rn: usize,
-                    acc: &mut [i32; 16]) {
+pub fn dot_block_u8_scalar(a: &[u8], k: usize, tn: usize, wt: &[u8],
+                           stride: usize, rn: usize, acc: &mut [i32; 16]) {
     debug_assert!((1..=4).contains(&tn) && (1..=4).contains(&rn));
+    debug_assert!(stride >= k);
     debug_assert!(a.len() >= tn * k);
-    debug_assert!(wt.len() >= k * rn);
+    debug_assert!(wt.len() >= (rn - 1) * stride + k);
     acc.fill(0);
     if tn == 4 && rn == 4 {
         let (a0, rest) = a.split_at(k);
         let (a1, rest) = rest.split_at(k);
         let (a2, a3) = rest.split_at(k);
-        for (c, w) in wt.chunks_exact(4).enumerate() {
-            let w0 = w[0] as i32;
-            let w1 = w[1] as i32;
-            let w2 = w[2] as i32;
-            let w3 = w[3] as i32;
+        let w0 = &wt[..k];
+        let w1 = &wt[stride..stride + k];
+        let w2 = &wt[2 * stride..2 * stride + k];
+        let w3 = &wt[3 * stride..3 * stride + k];
+        for c in 0..k {
+            let w0c = w0[c] as i32;
+            let w1c = w1[c] as i32;
+            let w2c = w2[c] as i32;
+            let w3c = w3[c] as i32;
             let x0 = a0[c] as i32;
-            acc[0] += x0 * w0;
-            acc[1] += x0 * w1;
-            acc[2] += x0 * w2;
-            acc[3] += x0 * w3;
+            acc[0] += x0 * w0c;
+            acc[1] += x0 * w1c;
+            acc[2] += x0 * w2c;
+            acc[3] += x0 * w3c;
             let x1 = a1[c] as i32;
-            acc[4] += x1 * w0;
-            acc[5] += x1 * w1;
-            acc[6] += x1 * w2;
-            acc[7] += x1 * w3;
+            acc[4] += x1 * w0c;
+            acc[5] += x1 * w1c;
+            acc[6] += x1 * w2c;
+            acc[7] += x1 * w3c;
             let x2 = a2[c] as i32;
-            acc[8] += x2 * w0;
-            acc[9] += x2 * w1;
-            acc[10] += x2 * w2;
-            acc[11] += x2 * w3;
+            acc[8] += x2 * w0c;
+            acc[9] += x2 * w1c;
+            acc[10] += x2 * w2c;
+            acc[11] += x2 * w3c;
             let x3 = a3[c] as i32;
-            acc[12] += x3 * w0;
-            acc[13] += x3 * w1;
-            acc[14] += x3 * w2;
-            acc[15] += x3 * w3;
+            acc[12] += x3 * w0c;
+            acc[13] += x3 * w1c;
+            acc[14] += x3 * w2c;
+            acc[15] += x3 * w3c;
         }
     } else if tn == 1 && rn == 4 {
         // single-token fast path: the shape of every decode step
-        for (c, w) in wt.chunks_exact(4).enumerate() {
+        let w0 = &wt[..k];
+        let w1 = &wt[stride..stride + k];
+        let w2 = &wt[2 * stride..2 * stride + k];
+        let w3 = &wt[3 * stride..3 * stride + k];
+        for c in 0..k {
             let x0 = a[c] as i32;
-            acc[0] += x0 * w[0] as i32;
-            acc[1] += x0 * w[1] as i32;
-            acc[2] += x0 * w[2] as i32;
-            acc[3] += x0 * w[3] as i32;
+            acc[0] += x0 * w0[c] as i32;
+            acc[1] += x0 * w1[c] as i32;
+            acc[2] += x0 * w2[c] as i32;
+            acc[3] += x0 * w3[c] as i32;
         }
     } else {
-        // ragged edge (tail tile rows / tail token rows)
-        for c in 0..k {
-            let wcol = &wt[c * rn..(c + 1) * rn];
-            for t in 0..tn {
-                let xv = a[t * k + c] as i32;
-                let arow = &mut acc[t * 4..t * 4 + rn];
-                for (o, &wv) in arow.iter_mut().zip(wcol) {
-                    *o += xv * wv as i32;
-                }
+        // ragged edge (tail tile rows / tail token rows); integer dots are
+        // exact, so delegating per (t, r) keeps the same results
+        for t in 0..tn {
+            let arow = &a[t * k..(t + 1) * k];
+            for r in 0..rn {
+                acc[t * 4 + r] =
+                    dot_u8(arow, &wt[r * stride..r * stride + k]);
             }
         }
     }
 }
 
-/// Weight-only twin of [`dot_block_u8`]: FP token rows × interleaved
-/// integer weight tile, 16 independent f32 accumulators. Each output
-/// element is one sequential accumulation chain over the inner dim — the
-/// exact per-element op order of [`dot_f32_u8`], keeping planned and
-/// reference weight-only outputs bit-identical.
+/// Weight-only twin of [`dot_block_u8_scalar`]: FP token rows ×
+/// lane-padded row-major integer weight tile, 16 independent f32
+/// accumulators. Each output element is one **sequential** accumulation
+/// chain over the inner dim — the exact per-element op order of
+/// [`dot_f32_u8`], keeping planned and reference weight-only outputs
+/// bit-identical. Like [`dot_f32_u8`], this kernel is deliberately never
+/// vectorized (see the reassociation contract there).
 #[inline]
-pub fn dot_block_f32_u8(x: &[f32], k: usize, tn: usize, wt: &[u8], rn: usize,
-                        acc: &mut [f32; 16]) {
+pub fn dot_block_f32_u8_scalar(x: &[f32], k: usize, tn: usize, wt: &[u8],
+                               stride: usize, rn: usize,
+                               acc: &mut [f32; 16]) {
     debug_assert!((1..=4).contains(&tn) && (1..=4).contains(&rn));
+    debug_assert!(stride >= k);
     debug_assert!(x.len() >= tn * k);
-    debug_assert!(wt.len() >= k * rn);
+    debug_assert!(wt.len() >= (rn - 1) * stride + k);
     acc.fill(0.0);
     if tn == 4 && rn == 4 {
         let (x0, rest) = x.split_at(k);
         let (x1, rest) = rest.split_at(k);
         let (x2, x3) = rest.split_at(k);
-        for (c, w) in wt.chunks_exact(4).enumerate() {
-            let w0 = w[0] as f32;
-            let w1 = w[1] as f32;
-            let w2 = w[2] as f32;
-            let w3 = w[3] as f32;
+        let w0 = &wt[..k];
+        let w1 = &wt[stride..stride + k];
+        let w2 = &wt[2 * stride..2 * stride + k];
+        let w3 = &wt[3 * stride..3 * stride + k];
+        for c in 0..k {
+            let w0c = w0[c] as f32;
+            let w1c = w1[c] as f32;
+            let w2c = w2[c] as f32;
+            let w3c = w3[c] as f32;
             let v0 = x0[c];
-            acc[0] += v0 * w0;
-            acc[1] += v0 * w1;
-            acc[2] += v0 * w2;
-            acc[3] += v0 * w3;
+            acc[0] += v0 * w0c;
+            acc[1] += v0 * w1c;
+            acc[2] += v0 * w2c;
+            acc[3] += v0 * w3c;
             let v1 = x1[c];
-            acc[4] += v1 * w0;
-            acc[5] += v1 * w1;
-            acc[6] += v1 * w2;
-            acc[7] += v1 * w3;
+            acc[4] += v1 * w0c;
+            acc[5] += v1 * w1c;
+            acc[6] += v1 * w2c;
+            acc[7] += v1 * w3c;
             let v2 = x2[c];
-            acc[8] += v2 * w0;
-            acc[9] += v2 * w1;
-            acc[10] += v2 * w2;
-            acc[11] += v2 * w3;
+            acc[8] += v2 * w0c;
+            acc[9] += v2 * w1c;
+            acc[10] += v2 * w2c;
+            acc[11] += v2 * w3c;
             let v3 = x3[c];
-            acc[12] += v3 * w0;
-            acc[13] += v3 * w1;
-            acc[14] += v3 * w2;
-            acc[15] += v3 * w3;
+            acc[12] += v3 * w0c;
+            acc[13] += v3 * w1c;
+            acc[14] += v3 * w2c;
+            acc[15] += v3 * w3c;
         }
     } else if tn == 1 && rn == 4 {
         // single-token fast path: the shape of every decode step
-        for (c, w) in wt.chunks_exact(4).enumerate() {
+        let w0 = &wt[..k];
+        let w1 = &wt[stride..stride + k];
+        let w2 = &wt[2 * stride..2 * stride + k];
+        let w3 = &wt[3 * stride..3 * stride + k];
+        for c in 0..k {
             let v0 = x[c];
-            acc[0] += v0 * w[0] as f32;
-            acc[1] += v0 * w[1] as f32;
-            acc[2] += v0 * w[2] as f32;
-            acc[3] += v0 * w[3] as f32;
+            acc[0] += v0 * w0[c] as f32;
+            acc[1] += v0 * w1[c] as f32;
+            acc[2] += v0 * w2[c] as f32;
+            acc[3] += v0 * w3[c] as f32;
         }
     } else {
-        for c in 0..k {
-            let wcol = &wt[c * rn..(c + 1) * rn];
-            for t in 0..tn {
-                let xv = x[t * k + c];
-                let arow = &mut acc[t * 4..t * 4 + rn];
-                for (o, &wv) in arow.iter_mut().zip(wcol) {
-                    *o += xv * wv as f32;
-                }
+        // ragged edge: per-(t, r) sequential chains — the dot_f32_u8 order
+        for t in 0..tn {
+            let xrow = &x[t * k..(t + 1) * k];
+            for r in 0..rn {
+                acc[t * 4 + r] =
+                    dot_f32_u8(xrow, &wt[r * stride..r * stride + k]);
             }
         }
     }
@@ -437,42 +469,74 @@ mod tests {
     fn block_dots_match_scalar_dots() {
         let mut rng = Rng::new(8);
         for k in [1usize, 3, 4, 17, 64, 130] {
-            // 4 token rows of codes + FP rows, one interleaved 4-row tile
+            // 4 token rows of codes + FP rows, one lane-padded 4-row tile;
+            // exercise both a tight stride (== k) and a padded one
             let a: Vec<u8> =
                 (0..4 * k).map(|_| rng.below(256) as u8).collect();
             let xf: Vec<f32> = (0..4 * k).map(|_| rng.normal()).collect();
             let wrows: Vec<Vec<u8>> = (0..4)
                 .map(|_| (0..k).map(|_| rng.below(256) as u8).collect())
                 .collect();
-            for rn in 1..=4usize {
-                // interleave rn weight rows: [col][row-in-tile]
-                let mut wt = vec![0u8; k * rn];
-                for c in 0..k {
+            for stride in [k, k.div_ceil(16) * 16] {
+                for rn in 1..=4usize {
+                    // row-major rows at r*stride, zero-padded tails
+                    let mut wt = vec![0u8; rn * stride];
                     for (r, wr) in wrows.iter().take(rn).enumerate() {
-                        wt[c * rn + r] = wr[c];
+                        wt[r * stride..r * stride + k]
+                            .copy_from_slice(wr);
                     }
-                }
-                for tn in 1..=4usize {
-                    let mut acc = [0i32; 16];
-                    dot_block_u8(&a[..tn * k], k, tn, &wt, rn, &mut acc);
-                    let mut facc = [0.0f32; 16];
-                    dot_block_f32_u8(&xf[..tn * k], k, tn, &wt, rn,
-                                     &mut facc);
-                    for t in 0..tn {
-                        for (r, wr) in wrows.iter().take(rn).enumerate() {
-                            let want = dot_u8(&a[t * k..(t + 1) * k], wr);
-                            assert_eq!(acc[t * 4 + r], want,
-                                       "k {k} tn {tn} rn {rn} t{t} r{r}");
-                            // identical sequential op order -> bit-equal
-                            let wantf =
-                                dot_f32_u8(&xf[t * k..(t + 1) * k], wr);
-                            assert_eq!(facc[t * 4 + r], wantf,
-                                       "fp k {k} tn {tn} rn {rn} t{t} r{r}");
+                    for tn in 1..=4usize {
+                        let mut acc = [0i32; 16];
+                        dot_block_u8_scalar(&a[..tn * k], k, tn, &wt,
+                                            stride, rn, &mut acc);
+                        let mut facc = [0.0f32; 16];
+                        dot_block_f32_u8_scalar(&xf[..tn * k], k, tn, &wt,
+                                                stride, rn, &mut facc);
+                        for t in 0..tn {
+                            for (r, wr) in
+                                wrows.iter().take(rn).enumerate()
+                            {
+                                let want =
+                                    dot_u8(&a[t * k..(t + 1) * k], wr);
+                                assert_eq!(
+                                    acc[t * 4 + r], want,
+                                    "k {k} s {stride} tn {tn} rn {rn}");
+                                // identical sequential op order ->
+                                // bit-equal
+                                let wantf =
+                                    dot_f32_u8(&xf[t * k..(t + 1) * k],
+                                               wr);
+                                assert_eq!(
+                                    facc[t * 4 + r], wantf,
+                                    "fp k {k} s {stride} tn {tn} rn {rn}");
+                            }
                         }
                     }
                 }
             }
         }
+    }
+
+    #[test]
+    fn sequential_f32_accumulation_is_load_bearing() {
+        // Reassociation canary for the weight-only contract: summed left to
+        // right, 1e8 + 1 rounds back to 1e8 (f32 ulp at 1e8 is 8), so the
+        // sequential chain yields exactly 1.0. A pairwise/lane split that
+        // groups (1e8 - 1e8) + (1 + 1) yields 2.0 — this test fails the
+        // moment anyone vectorizes dot_f32_u8 or changes its order.
+        let x = [1.0e8f32, 1.0, -1.0e8, 1.0];
+        let q = [1u8, 1, 1, 1];
+        assert_eq!(dot_f32_u8(&x, &q), 1.0);
+        let mut acc = [0.0f32; 16];
+        for stride in [4usize, 16] {
+            let mut wt = vec![0u8; stride];
+            wt[..4].copy_from_slice(&q);
+            dot_block_f32_u8_scalar(&x, 4, 1, &wt, stride, 1, &mut acc);
+            assert_eq!(acc[0], 1.0, "stride {stride}");
+        }
+        // the reassociated grouping really is different — the canary bites
+        let pairwise = (x[0] + x[2]) + (x[1] + x[3]);
+        assert_eq!(pairwise, 2.0);
     }
 
     #[test]

@@ -4,11 +4,14 @@
 //! per-element arithmetic (proved bit-exact in `tests/native.rs`):
 //!
 //! * **planned** ([`ExecMode::Planned`], the serving path) — weights were
-//!   repacked once at load into an interleaved [`TilePlan`]; the GEMM
-//!   streams those tiles through the register-blocked 4×4 micro-kernels
-//!   with **zero per-call unpack**, sharded over weight tiles across the
-//!   persistent [`WorkerPool`], every shard writing its output columns
-//!   straight into the final `[rows, cout]` buffer (no stitch copy).
+//!   repacked once at load into a lane-padded [`TilePlan`]; the integer
+//!   GEMM streams those tiles through the runtime-dispatched micro-kernels
+//!   ([`crate::infer::simd`]: AVX2/SSE2/scalar, chosen per engine via
+//!   `Exec::backend`) with **zero per-call unpack**, sharded over weight
+//!   tiles across the persistent [`WorkerPool`], every shard writing its
+//!   output columns straight into the final `[rows, cout]` buffer (no
+//!   stitch copy). The weight-only GEMM always runs the scalar kernel —
+//!   its sequential f32 order is a bit-exactness contract.
 //! * **reference** ([`ExecMode::Reference`], the pre-plan engine) — single
 //!   threaded, unpacks `ROW_TILE` weight rows from the packed bitstream per
 //!   tile per call, scalar dots. Kept as the bit-exact oracle and the
@@ -31,11 +34,11 @@ use crate::obs::{trace, KernelKind};
 use crate::quant::PackedMatrix;
 use crate::tensor::Tensor;
 
-use super::kernels::{check_dot_k, dot_block_f32_u8, dot_block_u8,
-                     dot_f32_u8, dot_u8, shard_ranges, unpack_rows,
-                     QuantActs};
+use super::kernels::{check_dot_k, dot_block_f32_u8_scalar, dot_f32_u8,
+                     dot_u8, shard_ranges, unpack_rows, QuantActs};
 use super::plan::{Exec, ExecMode, TilePlan, MR};
 use super::pool::{OutSlice, WorkerPool};
+use super::simd::{self, Backend};
 
 /// Reference-path tile height: 16 rows × Cin bytes stays L1-resident for
 /// every model dimension this repo ships.
@@ -104,10 +107,11 @@ impl QuantLinear {
         let rows = acts.rows;
         let mut out = exec.scratch.zeroed(rows * self.cout);
         let (p0, s0) = (exec.prof.t0(), trace::begin());
+        let backend = exec.backend;
         match exec.mode {
             ExecMode::Planned => {
                 self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
-                    self.gemm_q_tiles(acts, t0, t1, o);
+                    self.gemm_q_tiles(backend, acts, t0, t1, o);
                 });
             }
             ExecMode::Reference => self.gemm_q_ref(acts, &mut out),
@@ -190,14 +194,16 @@ impl QuantLinear {
     }
 
     /// Planned integer GEMM over weight tiles `[t0, t1)`: streams
-    /// interleaved tile bytes through the 4×4 micro-kernel — zero unpack,
-    /// 16 live accumulators — and applies the dequant epilogue into the
-    /// shard's output columns.
-    fn gemm_q_tiles(&self, acts: &QuantActs, t0: usize, t1: usize,
-                    out: OutSlice) {
+    /// lane-padded tile rows through the runtime-dispatched micro-kernel
+    /// (`backend` — AVX2/SSE2/scalar oracle, all bit-equal since integer
+    /// accumulation is exact) — zero unpack, 16 live accumulators — and
+    /// applies the dequant epilogue into the shard's output columns.
+    fn gemm_q_tiles(&self, backend: Backend, acts: &QuantActs, t0: usize,
+                    t1: usize, out: OutSlice) {
         let k = self.cin;
         let kk = k as i64;
         let rows = acts.rows;
+        let stride = self.plan.stride();
         let mut acc = [0i32; 16];
         for t in t0..t1 {
             let (wt, rn) = self.plan.tile(t);
@@ -208,8 +214,9 @@ impl QuantLinear {
             let mut tb = 0usize;
             while tb < rows {
                 let tn = MR.min(rows - tb);
-                dot_block_u8(&acts.codes[tb * k..(tb + tn) * k], k, tn, wt,
-                             rn, &mut acc);
+                simd::dot_block_u8(backend,
+                                   &acts.codes[tb * k..(tb + tn) * k], k,
+                                   tn, wt, stride, rn, &mut acc);
                 for tt in 0..tn {
                     let row = tb + tt;
                     let sa = acts.scale[row];
@@ -233,10 +240,14 @@ impl QuantLinear {
         }
     }
 
-    /// Planned weight-only GEMM over weight tiles `[t0, t1)`.
+    /// Planned weight-only GEMM over weight tiles `[t0, t1)`. Stays on the
+    /// scalar kernel on every backend: its sequential f32 accumulation
+    /// order is the bit-exactness contract with `ExecMode::Reference`
+    /// (see `dot_f32_u8`), and SIMD would reassociate it.
     fn gemm_fp_tiles(&self, x: &[f32], rows: usize, xsum: &[f32], t0: usize,
                      t1: usize, out: OutSlice) {
         let k = self.cin;
+        let stride = self.plan.stride();
         let mut acc = [0.0f32; 16];
         for t in t0..t1 {
             let (wt, rn) = self.plan.tile(t);
@@ -246,8 +257,8 @@ impl QuantLinear {
             let mut tb = 0usize;
             while tb < rows {
                 let tn = MR.min(rows - tb);
-                dot_block_f32_u8(&x[tb * k..(tb + tn) * k], k, tn, wt, rn,
-                                 &mut acc);
+                dot_block_f32_u8_scalar(&x[tb * k..(tb + tn) * k], k, tn,
+                                        wt, stride, rn, &mut acc);
                 for tt in 0..tn {
                     let row = tb + tt;
                     // SAFETY: disjoint columns per shard, in bounds (as in
@@ -459,8 +470,37 @@ mod tests {
         let mut rng = Rng::new(16);
         let (_, pm) = packed(&mut rng, 12, 20, 4);
         let ql = QuantLinear::from_packed(&pm).unwrap();
-        // plan holds one byte per code; storage stays the packed stream
-        assert_eq!(ql.plan_bytes(), 12 * 20);
+        // plan holds one byte per code per lane-padded row; storage stays
+        // the packed stream
+        let stride = 20usize.div_ceil(simd::LANE) * simd::LANE;
+        assert_eq!(ql.plan_bytes(), 12 * stride);
         assert_eq!(ql.storage_bytes(), pm.storage_bytes());
+    }
+
+    #[test]
+    fn forced_backends_are_bit_exact_at_the_linear_level() {
+        // the per-instance kernel override: a scalar-pinned engine and a
+        // vector-pinned engine produce identical bytes for both GEMM
+        // flavors (integer accumulation is exact; the weight-only path is
+        // scalar on every backend by contract)
+        let mut rng = Rng::new(17);
+        for bits in [3u32, 4, 8] {
+            let (_, pm) = packed(&mut rng, 21, 37, bits);
+            let ql = QuantLinear::from_packed(&pm).unwrap();
+            let x = Tensor::randn(&mut rng, &[5, 37], 1.0);
+            let qa = quantize_acts_per_token(&x.data, 5, 37, 255.0);
+            let mut sc =
+                ExecState::new(2).with_kernel(simd::Backend::Scalar);
+            let qs = ql.forward_q(&qa, &mut sc.exec()).unwrap();
+            let fs = ql.forward_fp(&x.data, 5, &mut sc.exec()).unwrap();
+            for be in simd::backends() {
+                let mut ex = ExecState::new(2).with_kernel(be);
+                assert_eq!(ex.kernel(), be);
+                let q = ql.forward_q(&qa, &mut ex.exec()).unwrap();
+                assert_eq!(q, qs, "q bits {bits} {}", be.name());
+                let f = ql.forward_fp(&x.data, 5, &mut ex.exec()).unwrap();
+                assert_eq!(f, fs, "fp bits {bits} {}", be.name());
+            }
+        }
     }
 }

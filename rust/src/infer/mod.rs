@@ -10,19 +10,29 @@
 //! into the same packed format).
 //!
 //! Execution is **planned**: model load repacks every linear's packed
-//! bitstream once into an interleaved tile layout ([`plan::TilePlan`]),
-//! spawns the persistent worker pool ([`pool::WorkerPool`]) once, and every
-//! forward call after that streams pre-unpacked tiles through
-//! register-blocked micro-kernels with scratch-arena buffers — zero per-call
-//! unpack, zero thread spawns, no steady-state allocation inside the model
-//! (DESIGN.md §8). The pre-plan engine survives as
-//! [`plan::ExecMode::Reference`], the bit-exact oracle of the planned path.
+//! bitstream once into a lane-padded row-major tile layout
+//! ([`plan::TilePlan`]), spawns the persistent worker pool
+//! ([`pool::WorkerPool`]) once, and every forward call after that streams
+//! pre-unpacked tiles through register-blocked micro-kernels with
+//! scratch-arena buffers — zero per-call unpack, zero thread spawns, no
+//! steady-state allocation inside the model (DESIGN.md §8). The pre-plan
+//! engine survives as [`plan::ExecMode::Reference`], the bit-exact oracle
+//! of the planned path. The integer hot path is additionally vectorized
+//! with runtime-dispatched SIMD ([`simd`], DESIGN.md §11); the scalar
+//! kernels stay on as the oracle every vector backend must match
+//! bit-for-bit.
 //!
 //! Layer map:
 //! * [`kernels`] — primitives: per-token/static activation quantization to u8
-//!   codes (bit-exact with [`crate::quant::act`]'s grid math), the 4×4
-//!   register-blocked micro-kernels of the planned path, scalar dots and
-//!   fused row-tile unpacking for the reference path.
+//!   codes (bit-exact with [`crate::quant::act`]'s grid math), the **scalar
+//!   oracle** 4×4 register-blocked micro-kernels of the planned path, scalar
+//!   dots and fused row-tile unpacking for the reference path.
+//! * [`simd`] — runtime-dispatched vector backends (AVX2 / SSE2 / scalar)
+//!   for the integer micro-kernels and the FP glue helpers, plus the
+//!   dispatch policy ([`simd::KernelChoice`]: `--kernel` /
+//!   `LRQ_FORCE_SCALAR=1`). Integer kernels are bit-exact vs the scalar
+//!   oracle by construction; the f32 helpers keep bit-equal mirrored
+//!   accumulation structures (DESIGN.md §11).
 //! * [`plan`] — load-time tile repacking ([`TilePlan`]), the [`Scratch`]
 //!   buffer arena, and the execution context ([`Exec`] / [`ExecState`] /
 //!   [`ExecMode`]) threaded through every forward.
@@ -72,13 +82,15 @@ pub mod pool;
 pub mod quantize;
 pub mod reference;
 pub mod scorer;
+pub mod simd;
 
 pub use block::{NativeModel, QuantBlock};
 pub use decode::KvCache;
 pub use kernels::QuantActs;
 pub use linear::QuantLinear;
 pub use plan::{Exec, ExecMode, ExecState, Scratch, TilePlan, MR};
+pub use simd::{Backend, KernelChoice};
 pub use pool::WorkerPool;
-pub use quantize::{calibrate_stats, prepare_native, quantize_weights,
-                   ScaleInit};
+pub use quantize::{calibrate_stats, prepare_native, prepare_native_from,
+                   quantize_weights, ScaleInit};
 pub use scorer::{start_native_server, NativeScorer};

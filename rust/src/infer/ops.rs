@@ -4,10 +4,21 @@
 //! exactly: same eps, same base-10000 rotary angles, same masking constant,
 //! so the native engine and the AOT artifacts disagree only by f32
 //! accumulation order.
+//!
+//! The reductions here (RMSNorm mean-square, attention score dots, softmax
+//! max, weighted-V accumulation) dispatch through [`super::simd`]: the
+//! vector paths are bit-equal to their scalar mirrors (same lane
+//! structure), `exp` stays scalar libm, and — since both [`ExecMode`]s
+//! share these functions — planned vs reference equality is untouched by
+//! the dispatch decision.
+//!
+//! [`ExecMode`]: super::plan::ExecMode
 
 use anyhow::{bail, Result};
 
 use crate::tensor::Tensor;
+
+use super::simd;
 
 /// RMSNorm over the trailing dim into a caller-provided buffer
 /// (`out.len() == x.len()`) — the scratch-arena path of the decode loop.
@@ -15,10 +26,10 @@ pub fn rmsnorm_into(x: &Tensor, g: &Tensor, out: &mut [f32]) {
     let (rows, d) = x.as_2d();
     debug_assert_eq!(g.len(), d);
     debug_assert_eq!(out.len(), x.len());
+    let be = simd::active();
     for r in 0..rows {
         let row = &x.data[r * d..(r + 1) * d];
-        let ms: f32 =
-            row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let ms: f32 = simd::sum_sq_with(be, row) / d as f32;
         let inv = 1.0 / (ms + 1e-5).sqrt();
         for ((o, &v), &gv) in out[r * d..(r + 1) * d]
             .iter_mut()
@@ -94,10 +105,16 @@ pub fn rope_row(x: &mut [f32], pos: usize, h: usize, hd: usize) {
 
 /// Causal softmax attention: `q, k, v` are `[b*s, h*hd]` row-major; returns
 /// `attn [b*s, h*hd]` (heads re-interleaved, ready for the `wo` projection).
+///
+/// Accumulation structure (score dots, max-then-exp softmax, weighted-V
+/// `axpy`) is kept in lockstep with [`crate::infer::KvCache::attend`] —
+/// the cached-attention twin is tested against this function, so any
+/// change here must land there too.
 pub fn causal_attention(q: &[f32], k: &[f32], v: &[f32], b: usize, s: usize,
                         h: usize, hd: usize) -> Vec<f32> {
     let d = h * hd;
     let scale = 1.0 / (hd as f32).sqrt();
+    let be = simd::active();
     let mut out = vec![0.0f32; b * s * d];
     let mut scores = vec![0.0f32; s];
     for bi in 0..b {
@@ -106,19 +123,14 @@ pub fn causal_attention(q: &[f32], k: &[f32], v: &[f32], b: usize, s: usize,
                 let qoff = (bi * s + ti) * d + hi * hd;
                 let qrow = &q[qoff..qoff + hd];
                 // scores over the causal prefix
-                let mut mx = f32::NEG_INFINITY;
                 for tj in 0..=ti {
                     let koff = (bi * s + tj) * d + hi * hd;
-                    let krow = &k[koff..koff + hd];
-                    let mut acc = 0.0f32;
-                    for (a, b2) in qrow.iter().zip(krow) {
-                        acc += a * b2;
-                    }
-                    let sc = acc * scale;
-                    scores[tj] = sc;
-                    mx = mx.max(sc);
+                    scores[tj] =
+                        simd::dot_f32_with(be, qrow, &k[koff..koff + hd])
+                        * scale;
                 }
-                // softmax over the prefix
+                let mx = simd::max_f32_with(be, &scores[..=ti]);
+                // softmax over the prefix (exp stays scalar libm)
                 let mut denom = 0.0f32;
                 for sc in scores[..=ti].iter_mut() {
                     *sc = (*sc - mx).exp();
@@ -127,15 +139,11 @@ pub fn causal_attention(q: &[f32], k: &[f32], v: &[f32], b: usize, s: usize,
                 let inv = 1.0 / denom;
                 // weighted sum of v
                 let ooff = (bi * s + ti) * d + hi * hd;
+                let orow = &mut out[ooff..ooff + hd];
                 for tj in 0..=ti {
                     let w = scores[tj] * inv;
                     let voff = (bi * s + tj) * d + hi * hd;
-                    for (o, &vv) in out[ooff..ooff + hd]
-                        .iter_mut()
-                        .zip(&v[voff..voff + hd])
-                    {
-                        *o += w * vv;
-                    }
+                    simd::axpy_with(be, w, &v[voff..voff + hd], orow);
                 }
             }
         }

@@ -5,12 +5,16 @@
 //! everywhere. This module moves all of that to model-load time:
 //!
 //! * [`TilePlan`] — each [`PackedMatrix`] is unpacked **exactly once**
-//!   (bit-identical codes, streamed tile-by-tile) into an interleaved
-//!   row-tile layout `[tile][col][row-in-tile]` of one `u8` per code. Tile
-//!   `t` holds output rows `[t·MR, t·MR + rn)` (`rn < MR` only for the
-//!   ragged tail) as `rn` bytes per inner-dim column, so the register-
-//!   blocked micro-kernel ([`crate::infer::kernels::dot_block_u8`]) streams
-//!   contiguous bytes with zero per-call unpack work.
+//!   (bit-identical codes, streamed tile-by-tile) into a lane-padded
+//!   row-major tile layout of one `u8` per code: weight row `j` occupies
+//!   `data[j·stride .. j·stride + cin]` with `stride = cin` rounded up to
+//!   [`crate::infer::simd::LANE`] and zero-filled tails. Tile `t` is the
+//!   `MR` consecutive rows `[t·MR, t·MR + rn)` (`rn < MR` only for the
+//!   ragged tail), so both the scalar-oracle micro-kernel
+//!   ([`crate::infer::kernels::dot_block_u8_scalar`]) and the vector
+//!   kernels ([`crate::infer::simd::dot_block_u8`]) stream rows whose
+//!   vector steps never cross a row boundary — zero per-call unpack, one
+//!   layout for every backend.
 //! * [`Scratch`] — a buffer arena recycled across forward calls: activation
 //!   code buffers, GEMM outputs, attention workspaces. In steady state a
 //!   decode step allocates nothing inside the model — the only escaping
@@ -28,6 +32,7 @@ use crate::tensor::Tensor;
 
 use super::kernels::{unpack_rows, QuantActs};
 use super::pool::WorkerPool;
+use super::simd::{self, Backend, LANE};
 
 /// Micro-kernel register block: output rows per weight tile and token rows
 /// per activation block (4×4 = 16 independent accumulators).
@@ -38,38 +43,39 @@ pub const MR: usize = 4;
 pub struct TilePlan {
     pub cout: usize,
     pub cin: usize,
-    /// interleaved codes: tile `t` occupies
-    /// `data[t·MR·cin .. t·MR·cin + rn·cin]`, laid out `[col][row-in-tile]`
+    /// row length in `data`: `cin` rounded up to [`LANE`] (zero-padded
+    /// tail), so every row starts on a vector-lane boundary
+    stride: usize,
+    /// lane-padded row-major codes: weight row `j` occupies
+    /// `data[j·stride .. j·stride + cin]`
     data: Vec<u8>,
 }
 
 impl TilePlan {
     /// Unpack `pm` once (streaming, `MR` rows at a time — never the full
     /// `rows × cols` temporary the pre-plan loader materialized) into the
-    /// interleaved layout, computing the per-row code sums of the dequant
-    /// epilogue in the same pass.
+    /// lane-padded row-major layout, computing the per-row code sums of
+    /// the dequant epilogue in the same pass.
     pub fn from_packed(pm: &PackedMatrix) -> (TilePlan, Vec<i64>) {
         let (rows, cols) = (pm.rows, pm.cols);
-        let mut data = vec![0u8; rows * cols];
+        let stride = cols.div_ceil(LANE) * LANE;
+        let mut data = vec![0u8; rows * stride];
         let mut code_sum = vec![0i64; rows];
         let mut rowbuf = vec![0u8; MR * cols];
         let mut r0 = 0usize;
         while r0 < rows {
             let rn = MR.min(rows - r0);
             unpack_rows(&pm.packed, pm.bits, cols, r0, rn, &mut rowbuf);
-            let tile = &mut data[r0 * cols..(r0 + rn) * cols];
             for r in 0..rn {
                 let src = &rowbuf[r * cols..(r + 1) * cols];
-                let mut sum = 0i64;
-                for (c, &code) in src.iter().enumerate() {
-                    sum += code as i64;
-                    tile[c * rn + r] = code;
-                }
-                code_sum[r0 + r] = sum;
+                let dst = (r0 + r) * stride;
+                data[dst..dst + cols].copy_from_slice(src);
+                code_sum[r0 + r] =
+                    src.iter().map(|&c| c as i64).sum::<i64>();
             }
             r0 += rn;
         }
-        (TilePlan { cout: rows, cin: cols, data }, code_sum)
+        (TilePlan { cout: rows, cin: cols, stride, data }, code_sum)
     }
 
     /// Number of row tiles (the last may be ragged).
@@ -77,25 +83,30 @@ impl TilePlan {
         self.cout.div_ceil(MR)
     }
 
-    /// Tile `t`'s interleaved bytes and its row count `rn`.
+    /// Row stride in bytes inside [`TilePlan::tile`] slices (`>= cin`, a
+    /// [`LANE`] multiple).
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Tile `t`'s lane-padded row-major bytes and its row count `rn`:
+    /// weight row `r` of the tile is `bytes[r·stride .. r·stride + cin]`.
     pub fn tile(&self, t: usize) -> (&[u8], usize) {
         let r0 = t * MR;
         let rn = MR.min(self.cout - r0);
-        (&self.data[r0 * self.cin..(r0 + rn) * self.cin], rn)
+        (&self.data[r0 * self.stride..(r0 + rn) * self.stride], rn)
     }
 
     /// Gather output row `j` back to row-major codes (round-trip proofs;
     /// `out.len() == cin`).
     pub fn row_codes(&self, j: usize, out: &mut [u8]) {
         debug_assert_eq!(out.len(), self.cin);
-        let (tile, rn) = self.tile(j / MR);
-        let r = j % MR;
-        for (c, o) in out.iter_mut().enumerate() {
-            *o = tile[c * rn + r];
-        }
+        out.copy_from_slice(
+            &self.data[j * self.stride..j * self.stride + self.cin]);
     }
 
-    /// Repacked bytes held by the plan (capacity accounting).
+    /// Repacked bytes held by the plan (capacity accounting; includes the
+    /// lane padding).
     pub fn plan_bytes(&self) -> usize {
         self.data.len()
     }
@@ -173,6 +184,9 @@ impl Scratch {
 pub struct Exec<'a> {
     pub pool: &'a WorkerPool,
     pub mode: ExecMode,
+    /// integer-GEMM kernel backend of this engine instance (the planned
+    /// path dispatches on it; `ExecMode::Reference` is always scalar)
+    pub backend: Backend,
     pub scratch: &'a mut Scratch,
     /// the owning model's profiler; every hook is a no-op relaxed load
     /// until [`Profiler::set_enabled`] flips it on
@@ -189,6 +203,11 @@ pub struct Exec<'a> {
 pub struct ExecState {
     pool: Arc<WorkerPool>,
     mode: ExecMode,
+    /// integer-GEMM backend; defaults to the process-wide
+    /// [`simd::active`] resolution at construction, overridable per
+    /// instance ([`ExecState::with_kernel`]) so equivalence tests can run
+    /// forced-scalar and forced-SIMD engines side by side
+    backend: Backend,
     scratch: Scratch,
     /// shared with every clone of the owning model, so profiles aggregate
     /// across server shards
@@ -206,6 +225,7 @@ impl ExecState {
         ExecState {
             pool,
             mode: ExecMode::Planned,
+            backend: simd::active(),
             scratch: Scratch::default(),
             prof: Arc::new(Profiler::disabled()),
         }
@@ -233,6 +253,19 @@ impl ExecState {
         self.mode
     }
 
+    pub fn with_kernel(mut self, backend: Backend) -> ExecState {
+        self.backend = backend;
+        self
+    }
+
+    pub fn set_kernel(&mut self, backend: Backend) {
+        self.backend = backend;
+    }
+
+    pub fn kernel(&self) -> Backend {
+        self.backend
+    }
+
     pub fn threads(&self) -> usize {
         self.pool.threads()
     }
@@ -242,6 +275,7 @@ impl ExecState {
         Exec {
             pool: self.pool.as_ref(),
             mode: self.mode,
+            backend: self.backend,
             scratch: &mut self.scratch,
             prof: self.prof.as_ref(),
             layer: crate::obs::MODEL_SLOT,
@@ -276,7 +310,8 @@ mod tests {
                 let (codes, pm) = random_pm(&mut rng, rows, cols, bits);
                 let (plan, sums) = TilePlan::from_packed(&pm);
                 assert_eq!(plan.n_tiles(), rows.div_ceil(MR));
-                assert_eq!(plan.plan_bytes(), rows * cols);
+                assert_eq!(plan.stride(), cols.div_ceil(LANE) * LANE);
+                assert_eq!(plan.plan_bytes(), rows * plan.stride());
                 let mut row = vec![0u8; cols];
                 for j in 0..rows {
                     plan.row_codes(j, &mut row);
@@ -294,16 +329,24 @@ mod tests {
     }
 
     #[test]
-    fn tile_layout_is_col_major_within_tile() {
+    fn tile_layout_is_lane_padded_row_major() {
         let mut rng = Rng::new(52);
         let (codes, pm) = random_pm(&mut rng, 8, 10, 4);
         let (plan, _) = TilePlan::from_packed(&pm);
         let (tile, rn) = plan.tile(1); // rows 4..8
         assert_eq!(rn, MR);
-        for c in 0..10 {
-            for r in 0..rn {
-                assert_eq!(tile[c * rn + r] as u32, codes[(MR + r) * 10 + c],
-                           "c{c} r{r}");
+        let stride = plan.stride();
+        assert_eq!(stride, LANE); // 10 rounds up to one 16-byte lane
+        assert_eq!(tile.len(), rn * stride);
+        for r in 0..rn {
+            for c in 0..10 {
+                assert_eq!(tile[r * stride + c] as u32,
+                           codes[(MR + r) * 10 + c], "c{c} r{r}");
+            }
+            // padding past cin is zero, so vector loads that stop at the
+            // scalar tail never see garbage even if widened later
+            for c in 10..stride {
+                assert_eq!(tile[r * stride + c], 0, "pad r{r} c{c}");
             }
         }
     }
@@ -334,11 +377,15 @@ mod tests {
         let mut st = ExecState::new(2).with_mode(ExecMode::Reference);
         assert_eq!(st.mode(), ExecMode::Reference);
         assert_eq!(st.threads(), 2);
+        assert_eq!(st.kernel(), simd::active());
         st.set_mode(ExecMode::Planned);
+        st.set_kernel(Backend::Scalar);
         let e = st.exec();
         assert_eq!(e.mode, ExecMode::Planned);
+        assert_eq!(e.backend, Backend::Scalar);
         // clones share the pool but not the arena
-        let st2 = st.clone();
+        let st2 = st.clone().with_kernel(simd::detect());
         assert_eq!(st2.threads(), 2);
+        assert_eq!(st2.kernel(), simd::detect());
     }
 }

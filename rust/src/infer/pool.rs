@@ -15,6 +15,11 @@
 //! through [`OutSlice`] (each shard owns a disjoint set of output columns),
 //! which deletes the per-shard chunk allocation *and* the stitch copy the
 //! scoped-thread design needed.
+//!
+//! The pool is kernel-agnostic: each shard body captures the `Exec` it was
+//! handed, including its pinned [`crate::infer::simd::Backend`], so every
+//! worker of one forward runs the same (SIMD or scalar) micro-kernel tier
+//! and sharded outputs stay bit-identical to the single-thread result.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Condvar, Mutex};

@@ -99,12 +99,30 @@ pub fn prepare_native(weights: &Weights, scheme: Scheme, init: ScaleInit,
                       corpus: &Corpus, calib_batches: usize, seed: u64,
                       shards: usize) -> Result<NativeModel> {
     let qm = quantize_weights(weights, scheme.w_bits, init)?;
+    prepare_native_from(&qm, weights, scheme, corpus, calib_batches, seed,
+                        shards)
+}
+
+/// Like [`prepare_native`] but serving an already-quantized checkpoint (an
+/// `LRQQ` file from `lrq quantize --out`, loaded via
+/// [`QuantizedModel::load`]): skips weight quantization entirely. `weights`
+/// is still consulted when the scheme needs static activation grids — the
+/// calibration forward runs on FP weights by design.
+pub fn prepare_native_from(qm: &QuantizedModel, weights: &Weights,
+                           scheme: Scheme, corpus: &Corpus,
+                           calib_batches: usize, seed: u64, shards: usize)
+                           -> Result<NativeModel> {
+    anyhow::ensure!(
+        scheme.w_bits == qm.bits,
+        "scheme says W{} but the checkpoint is packed at W{}",
+        scheme.w_bits, qm.bits
+    );
     let stats = if matches!(scheme.act, ActScheme::PerTensorStatic) {
         calibrate_stats(weights, corpus, calib_batches, seed)?
     } else {
         Vec::new()
     };
-    NativeModel::from_quantized(&qm, &stats, scheme, shards)
+    NativeModel::from_quantized(qm, &stats, scheme, shards)
 }
 
 #[cfg(test)]

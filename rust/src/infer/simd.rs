@@ -1,0 +1,719 @@
+//! Runtime-dispatched SIMD kernels with a scalar oracle (DESIGN.md §11).
+//!
+//! The u8×u8→i32 dot is the hottest loop of every prefill and decode step
+//! (PR 6 profiles), so it gets explicit vector code here: an AVX2 kernel
+//! widening 16 u8 codes to i16 lanes per step (`vpmovzxbw` + `vpmaddwd` —
+//! exact, unlike `maddubs` whose u8×i8 products saturate in i16), an SSE2
+//! fallback (`punpcklbw` + `pmaddwd`, baseline on every x86_64), and the
+//! scalar micro-kernels of [`super::kernels`] kept as the bit-exact
+//! **oracle** every vector path is differentially tested against
+//! (`tests/properties.rs`).
+//!
+//! Dispatch is decided once per process from `is_x86_feature_detected!`,
+//! overridable by `LRQ_FORCE_SCALAR=1` or `--kernel scalar|simd|auto`
+//! ([`set_choice`]); the integer GEMM additionally carries a per-engine
+//! [`Backend`] (`ExecState::with_kernel`) so two engines in one process can
+//! pin different paths — that is how the end-to-end forced-scalar vs
+//! forced-SIMD equality tests run without racing on the global.
+//!
+//! Exactness contract, per kernel family:
+//!
+//! * **integer dots** — i32 accumulation is associative, so any lane split
+//!   is bit-equal to the scalar oracle by construction; the per-lane i32
+//!   bound under [`kernels::MAX_DOT_K`] is re-derived in the kernel docs.
+//! * **f32 helpers** (`sum_sq`, `dot_f32`, `axpy`, `dequant`, `max_f32`) —
+//!   f32 adds do NOT reassociate, so each vector helper has a scalar
+//!   mirror here with the *same* 8-lane accumulator structure and the same
+//!   horizontal-reduce order; the pair is bit-equal and both live behind
+//!   the dispatch. The weight-only GEMM (`dot_f32_u8` and friends) is
+//!   deliberately **not** vectorized: its documented sequential
+//!   accumulation order is a bit-exactness contract with
+//!   `ExecMode::Reference` (see `kernels.rs` and the reassociation
+//!   regression test).
+//! * **`exp`** — stays scalar libm everywhere; softmax vectorizes only the
+//!   score dots, the running max, and the weighted-V accumulation.
+//!
+//! Adding a vector backend (NEON, AVX-512) = a new [`Backend`] variant, a
+//! guarded arm per dispatch function, and nothing else: the property
+//! battery iterates [`backends`], so a new variant is tested against the
+//! oracle automatically.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use super::kernels;
+
+#[cfg(target_arch = "x86_64")]
+use core::arch::x86_64::*;
+
+/// u8 codes consumed per vector step (one 128-bit load widened to 16×i16).
+/// [`super::plan::TilePlan`] pads weight-row strides to this, so every row
+/// of a tile starts on a lane boundary and tails are shared per tile.
+pub const LANE: usize = 16;
+
+/// f32 lanes per vector step of the f32 helpers (one 256-bit register).
+pub const F32_LANE: usize = 8;
+
+// ------------------------------------------------------------ dispatch ----
+
+/// A code-generation path for the hot kernels. `Avx2`/`Sse2` arms only
+/// execute vector code after an `is_x86_feature_detected!` re-check, so a
+/// mis-constructed value degrades to the scalar oracle instead of UB.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    /// 256-bit integer path (`vpmaddwd`), f32 helpers vectorized too.
+    Avx2,
+    /// 128-bit integer path (baseline on x86_64); f32 helpers stay on the
+    /// scalar mirrors (SSE f32 reductions would need their own mirror
+    /// structure for marginal gain).
+    Sse2,
+    /// The oracle: the scalar micro-kernels in [`super::kernels`].
+    Scalar,
+}
+
+impl Backend {
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Avx2 => "avx2",
+            Backend::Sse2 => "sse2",
+            Backend::Scalar => "scalar",
+        }
+    }
+
+    pub fn is_simd(self) -> bool {
+        self != Backend::Scalar
+    }
+}
+
+/// User-facing kernel override (`--kernel`, `LRQ_FORCE_SCALAR`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum KernelChoice {
+    /// Best detected path (the default).
+    Auto,
+    /// Pin the scalar oracle.
+    Scalar,
+    /// Ask for vector code; degrades to scalar when nothing is detected.
+    Simd,
+}
+
+impl KernelChoice {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelChoice::Auto => "auto",
+            KernelChoice::Scalar => "scalar",
+            KernelChoice::Simd => "simd",
+        }
+    }
+}
+
+impl std::str::FromStr for KernelChoice {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Ok(KernelChoice::Auto),
+            "scalar" => Ok(KernelChoice::Scalar),
+            "simd" => Ok(KernelChoice::Simd),
+            other => Err(format!(
+                "unknown kernel choice '{other}' (auto|scalar|simd)")),
+        }
+    }
+}
+
+/// Best vector path this machine supports (`Scalar` off x86_64).
+pub fn detect() -> Backend {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("avx2") {
+            return Backend::Avx2;
+        }
+        if std::arch::is_x86_feature_detected!("sse2") {
+            return Backend::Sse2;
+        }
+    }
+    Backend::Scalar
+}
+
+/// Every backend runnable on this machine, scalar first — the property
+/// battery iterates this so each vector path is tested where it can run.
+pub fn backends() -> Vec<Backend> {
+    let mut v = vec![Backend::Scalar];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if std::arch::is_x86_feature_detected!("sse2") {
+            v.push(Backend::Sse2);
+        }
+        if std::arch::is_x86_feature_detected!("avx2") {
+            v.push(Backend::Avx2);
+        }
+    }
+    v
+}
+
+const CHOICE_UNSET: u8 = u8::MAX;
+static CHOICE: AtomicU8 = AtomicU8::new(CHOICE_UNSET);
+
+/// Install a process-wide kernel choice (the `--kernel` flag). Engines
+/// built afterwards default to the matching backend; the FP glue helpers
+/// re-resolve on every call.
+pub fn set_choice(c: KernelChoice) {
+    CHOICE.store(c as u8, Ordering::Relaxed);
+}
+
+/// The process-wide choice; first call latches `LRQ_FORCE_SCALAR` from the
+/// environment (accepted truthy spellings: `1`, `true`, `yes`).
+pub fn choice() -> KernelChoice {
+    match CHOICE.load(Ordering::Relaxed) {
+        x if x == KernelChoice::Auto as u8 => KernelChoice::Auto,
+        x if x == KernelChoice::Scalar as u8 => KernelChoice::Scalar,
+        x if x == KernelChoice::Simd as u8 => KernelChoice::Simd,
+        _ => {
+            let forced = std::env::var("LRQ_FORCE_SCALAR")
+                .map(|v| {
+                    let v = v.trim().to_ascii_lowercase();
+                    v == "1" || v == "true" || v == "yes"
+                })
+                .unwrap_or(false);
+            let c = if forced {
+                KernelChoice::Scalar
+            } else {
+                KernelChoice::Auto
+            };
+            CHOICE.store(c as u8, Ordering::Relaxed);
+            c
+        }
+    }
+}
+
+/// The backend the process-wide choice resolves to right now.
+pub fn active() -> Backend {
+    match choice() {
+        KernelChoice::Scalar => Backend::Scalar,
+        KernelChoice::Auto | KernelChoice::Simd => detect(),
+    }
+}
+
+/// One-line dispatch description for load-time logs and `lrq stats`.
+pub fn describe() -> String {
+    format!("{} (choice {}, detected {})",
+            active().name(), choice().name(), detect().name())
+}
+
+// -------------------------------------------------------- integer dots ----
+
+/// Vectorized u8×u8→i32 dot. Bit-equal to [`kernels::dot_u8`] on every
+/// backend (integer accumulation is exact); same [`kernels::MAX_DOT_K`]
+/// caller contract.
+pub fn dot_u8(backend: Backend, a: &[u8], b: &[u8]) -> i32 {
+    debug_assert_eq!(a.len(), b.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 presence just re-checked.
+            unsafe { dot_u8_avx2(a, b) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 if std::arch::is_x86_feature_detected!("sse2") => {
+            // SAFETY: SSE2 presence just re-checked.
+            unsafe { dot_u8_sse2(a, b) }
+        }
+        _ => kernels::dot_u8(a, b),
+    }
+}
+
+/// Vectorized register-blocked integer micro-kernel: `tn` token-code rows
+/// (contiguous, `k` bytes each) × `rn` weight rows living at `r·stride`
+/// inside a lane-padded [`super::plan::TilePlan`] tile. Widened form of
+/// the scalar oracle [`kernels::dot_block_u8_scalar`]: each 16-byte
+/// activation load is shared across all `rn` weight rows (the decode-shape
+/// `tn = 1` case runs 4 accumulator registers off one load), bit-equal to
+/// the oracle on every backend.
+#[allow(clippy::too_many_arguments)] // mirrors the oracle + backend
+pub fn dot_block_u8(backend: Backend, a: &[u8], k: usize, tn: usize,
+                    wt: &[u8], stride: usize, rn: usize,
+                    acc: &mut [i32; 16]) {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 presence just re-checked.
+            unsafe { dot_block_u8_avx2(a, k, tn, wt, stride, rn, acc) }
+        }
+        #[cfg(target_arch = "x86_64")]
+        Backend::Sse2 if std::arch::is_x86_feature_detected!("sse2") => {
+            // SAFETY: SSE2 presence just re-checked.
+            unsafe { dot_block_u8_sse2(a, k, tn, wt, stride, rn, acc) }
+        }
+        _ => kernels::dot_block_u8_scalar(a, k, tn, wt, stride, rn, acc),
+    }
+}
+
+/// i32-safety of the vector accumulators, re-derived: one `vpmaddwd` lane
+/// holds `2·255·255 = 130_050` max; with `k <= MAX_DOT_K = 33_000` the
+/// AVX2 path runs at most `⌈33_000/16⌉ = 2_063` steps per lane
+/// (`≈ 2.7e8 < 2^31`) and the SSE2 path two madds per step (`≈ 5.4e8`).
+/// The scalar total `255·255·33_000 ≈ 2.15e9` stays below `i32::MAX` too.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_u8_avx2(a: &[u8], b: &[u8]) -> i32 {
+    let k = a.len();
+    let mut vacc = _mm256_setzero_si256();
+    let mut p = 0usize;
+    while p + LANE <= k {
+        let va = _mm256_cvtepu8_epi16(
+            _mm_loadu_si128(a.as_ptr().add(p) as *const __m128i));
+        let vb = _mm256_cvtepu8_epi16(
+            _mm_loadu_si128(b.as_ptr().add(p) as *const __m128i));
+        vacc = _mm256_add_epi32(vacc, _mm256_madd_epi16(va, vb));
+        p += LANE;
+    }
+    let mut lanes = [0i32; 8];
+    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vacc);
+    let mut acc: i32 = lanes.iter().sum();
+    for i in p..k {
+        acc += a[i] as i32 * b[i] as i32;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn dot_u8_sse2(a: &[u8], b: &[u8]) -> i32 {
+    let k = a.len();
+    let zero = _mm_setzero_si128();
+    let mut vacc = _mm_setzero_si128();
+    let mut p = 0usize;
+    while p + LANE <= k {
+        let va = _mm_loadu_si128(a.as_ptr().add(p) as *const __m128i);
+        let vb = _mm_loadu_si128(b.as_ptr().add(p) as *const __m128i);
+        let lo = _mm_madd_epi16(_mm_unpacklo_epi8(va, zero),
+                                _mm_unpacklo_epi8(vb, zero));
+        let hi = _mm_madd_epi16(_mm_unpackhi_epi8(va, zero),
+                                _mm_unpackhi_epi8(vb, zero));
+        vacc = _mm_add_epi32(vacc, _mm_add_epi32(lo, hi));
+        p += LANE;
+    }
+    let mut lanes = [0i32; 4];
+    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, vacc);
+    let mut acc: i32 = lanes.iter().sum();
+    for i in p..k {
+        acc += a[i] as i32 * b[i] as i32;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_block_u8_avx2(a: &[u8], k: usize, tn: usize, wt: &[u8],
+                            stride: usize, rn: usize, acc: &mut [i32; 16]) {
+    debug_assert!((1..=4).contains(&tn) && (1..=4).contains(&rn));
+    debug_assert!(stride >= k);
+    debug_assert!(a.len() >= tn * k);
+    debug_assert!(wt.len() >= (rn - 1) * stride + k);
+    acc.fill(0);
+    for t in 0..tn {
+        let arow = a.as_ptr().add(t * k);
+        let mut vacc = [_mm256_setzero_si256(); 4];
+        let mut p = 0usize;
+        while p + LANE <= k {
+            // one widened activation load feeds all rn weight rows
+            let xv = _mm256_cvtepu8_epi16(
+                _mm_loadu_si128(arow.add(p) as *const __m128i));
+            for (r, vr) in vacc.iter_mut().take(rn).enumerate() {
+                let wv = _mm256_cvtepu8_epi16(_mm_loadu_si128(
+                    wt.as_ptr().add(r * stride + p) as *const __m128i));
+                *vr = _mm256_add_epi32(*vr, _mm256_madd_epi16(xv, wv));
+            }
+            p += LANE;
+        }
+        for (r, vr) in vacc.iter().take(rn).enumerate() {
+            let mut lanes = [0i32; 8];
+            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *vr);
+            let mut s: i32 = lanes.iter().sum();
+            for i in p..k {
+                s += a[t * k + i] as i32 * wt[r * stride + i] as i32;
+            }
+            acc[t * 4 + r] = s;
+        }
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "sse2")]
+unsafe fn dot_block_u8_sse2(a: &[u8], k: usize, tn: usize, wt: &[u8],
+                            stride: usize, rn: usize, acc: &mut [i32; 16]) {
+    debug_assert!((1..=4).contains(&tn) && (1..=4).contains(&rn));
+    debug_assert!(stride >= k);
+    debug_assert!(a.len() >= tn * k);
+    debug_assert!(wt.len() >= (rn - 1) * stride + k);
+    acc.fill(0);
+    let zero = _mm_setzero_si128();
+    for t in 0..tn {
+        let arow = a.as_ptr().add(t * k);
+        let mut vacc = [_mm_setzero_si128(); 4];
+        let mut p = 0usize;
+        while p + LANE <= k {
+            let xv = _mm_loadu_si128(arow.add(p) as *const __m128i);
+            let xlo = _mm_unpacklo_epi8(xv, zero);
+            let xhi = _mm_unpackhi_epi8(xv, zero);
+            for (r, vr) in vacc.iter_mut().take(rn).enumerate() {
+                let wv = _mm_loadu_si128(
+                    wt.as_ptr().add(r * stride + p) as *const __m128i);
+                let lo = _mm_madd_epi16(xlo, _mm_unpacklo_epi8(wv, zero));
+                let hi = _mm_madd_epi16(xhi, _mm_unpackhi_epi8(wv, zero));
+                *vr = _mm_add_epi32(*vr, _mm_add_epi32(lo, hi));
+            }
+            p += LANE;
+        }
+        for (r, vr) in vacc.iter().take(rn).enumerate() {
+            let mut lanes = [0i32; 4];
+            _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, *vr);
+            let mut s: i32 = lanes.iter().sum();
+            for i in p..k {
+                s += a[t * k + i] as i32 * wt[r * stride + i] as i32;
+            }
+            acc[t * 4 + r] = s;
+        }
+    }
+}
+
+// --------------------------------------------------------- f32 helpers ----
+//
+// Every vector helper below has a scalar mirror with the SAME 8-lane
+// accumulator structure and the SAME horizontal-reduce order, so the pair
+// is bit-equal (f32 ops in identical order; Rust never contracts mul+add
+// into fma, and the intrinsics used are explicit mul/add). The SSE2 tier
+// runs the mirrors: integer dots dominate the profile there and an SSE
+// mirror pair would double the surface for marginal gain.
+
+/// Σ x², 8-lane blocked. Dispatches on the process-wide [`active`] choice.
+#[inline]
+pub fn sum_sq(x: &[f32]) -> f32 {
+    sum_sq_with(active(), x)
+}
+
+pub fn sum_sq_with(backend: Backend, x: &[f32]) -> f32 {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 presence just re-checked.
+            unsafe { sum_sq_avx2(x) }
+        }
+        _ => sum_sq_scalar(x),
+    }
+}
+
+/// The oracle mirror of the vector `sum_sq`: identical lane structure.
+pub fn sum_sq_scalar(x: &[f32]) -> f32 {
+    let k = x.len();
+    let mut lanes = [0.0f32; F32_LANE];
+    let mut p = 0usize;
+    while p + F32_LANE <= k {
+        for (j, l) in lanes.iter_mut().enumerate() {
+            *l += x[p + j] * x[p + j];
+        }
+        p += F32_LANE;
+    }
+    let mut acc = 0.0f32;
+    for &l in &lanes {
+        acc += l;
+    }
+    for &v in &x[p..] {
+        acc += v * v;
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn sum_sq_avx2(x: &[f32]) -> f32 {
+    let k = x.len();
+    let mut vacc = _mm256_setzero_ps();
+    let mut p = 0usize;
+    while p + F32_LANE <= k {
+        let v = _mm256_loadu_ps(x.as_ptr().add(p));
+        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(v, v));
+        p += F32_LANE;
+    }
+    let mut lanes = [0.0f32; F32_LANE];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+    let mut acc = 0.0f32;
+    for &l in &lanes {
+        acc += l;
+    }
+    for &v in &x[p..] {
+        acc += v * v;
+    }
+    acc
+}
+
+/// f32 dot, 8-lane blocked (attention scores).
+#[inline]
+pub fn dot_f32(a: &[f32], b: &[f32]) -> f32 {
+    dot_f32_with(active(), a, b)
+}
+
+pub fn dot_f32_with(backend: Backend, a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 presence just re-checked.
+            unsafe { dot_f32_avx2(a, b) }
+        }
+        _ => dot_f32_scalar(a, b),
+    }
+}
+
+/// The oracle mirror of the vector `dot_f32`: identical lane structure.
+pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    let mut lanes = [0.0f32; F32_LANE];
+    let mut p = 0usize;
+    while p + F32_LANE <= k {
+        for (j, l) in lanes.iter_mut().enumerate() {
+            *l += a[p + j] * b[p + j];
+        }
+        p += F32_LANE;
+    }
+    let mut acc = 0.0f32;
+    for &l in &lanes {
+        acc += l;
+    }
+    for i in p..k {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
+    let k = a.len();
+    let mut vacc = _mm256_setzero_ps();
+    let mut p = 0usize;
+    while p + F32_LANE <= k {
+        let va = _mm256_loadu_ps(a.as_ptr().add(p));
+        let vb = _mm256_loadu_ps(b.as_ptr().add(p));
+        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
+        p += F32_LANE;
+    }
+    let mut lanes = [0.0f32; F32_LANE];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+    let mut acc = 0.0f32;
+    for &l in &lanes {
+        acc += l;
+    }
+    for i in p..k {
+        acc += a[i] * b[i];
+    }
+    acc
+}
+
+/// Max over a non-empty slice of non-NaN values (softmax running max).
+/// f32 max is order-insensitive for non-NaN inputs, so vector and scalar
+/// agree bit-for-bit without a mirrored structure.
+#[inline]
+pub fn max_f32(x: &[f32]) -> f32 {
+    max_f32_with(active(), x)
+}
+
+pub fn max_f32_with(backend: Backend, x: &[f32]) -> f32 {
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 presence just re-checked.
+            unsafe { max_f32_avx2(x) }
+        }
+        _ => max_f32_scalar(x),
+    }
+}
+
+pub fn max_f32_scalar(x: &[f32]) -> f32 {
+    x.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn max_f32_avx2(x: &[f32]) -> f32 {
+    let k = x.len();
+    let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+    let mut p = 0usize;
+    while p + F32_LANE <= k {
+        vmax = _mm256_max_ps(vmax, _mm256_loadu_ps(x.as_ptr().add(p)));
+        p += F32_LANE;
+    }
+    let mut lanes = [0.0f32; F32_LANE];
+    _mm256_storeu_ps(lanes.as_mut_ptr(), vmax);
+    let mut mx = f32::NEG_INFINITY;
+    for &l in &lanes {
+        mx = mx.max(l);
+    }
+    for &v in &x[p..] {
+        mx = mx.max(v);
+    }
+    mx
+}
+
+/// `out[i] += w·v[i]` (attention weighted-V). Purely elementwise — one
+/// mul + one add per element in both paths — so vector and scalar are
+/// bit-equal with no mirrored reduction needed.
+#[inline]
+pub fn axpy(w: f32, v: &[f32], out: &mut [f32]) {
+    axpy_with(active(), w, v, out)
+}
+
+pub fn axpy_with(backend: Backend, w: f32, v: &[f32], out: &mut [f32]) {
+    debug_assert_eq!(v.len(), out.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 presence just re-checked.
+            unsafe { axpy_avx2(w, v, out) }
+        }
+        _ => axpy_scalar(w, v, out),
+    }
+}
+
+pub fn axpy_scalar(w: f32, v: &[f32], out: &mut [f32]) {
+    for (o, &vv) in out.iter_mut().zip(v) {
+        *o += w * vv;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn axpy_avx2(w: f32, v: &[f32], out: &mut [f32]) {
+    let k = v.len();
+    let vw = _mm256_set1_ps(w);
+    let mut p = 0usize;
+    while p + F32_LANE <= k {
+        let vo = _mm256_loadu_ps(out.as_ptr().add(p));
+        let vv = _mm256_loadu_ps(v.as_ptr().add(p));
+        _mm256_storeu_ps(out.as_mut_ptr().add(p),
+                         _mm256_add_ps(vo, _mm256_mul_ps(vw, vv)));
+        p += F32_LANE;
+    }
+    for i in p..k {
+        out[i] += w * v[i];
+    }
+}
+
+/// Dequantize u8 codes: `out[i] = (codes[i] - z)·s` (KV-cache reads, the
+/// dequant epilogue of cached attention). u8→f32 conversion is exact and
+/// the sub/mul pair is elementwise, so vector and scalar are bit-equal.
+#[inline]
+pub fn dequant(codes: &[u8], s: f32, z: f32, out: &mut [f32]) {
+    dequant_with(active(), codes, s, z, out)
+}
+
+pub fn dequant_with(backend: Backend, codes: &[u8], s: f32, z: f32,
+                    out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len());
+    match backend {
+        #[cfg(target_arch = "x86_64")]
+        Backend::Avx2 if std::arch::is_x86_feature_detected!("avx2") => {
+            // SAFETY: AVX2 presence just re-checked.
+            unsafe { dequant_avx2(codes, s, z, out) }
+        }
+        _ => dequant_scalar(codes, s, z, out),
+    }
+}
+
+pub fn dequant_scalar(codes: &[u8], s: f32, z: f32, out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = (c as f32 - z) * s;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn dequant_avx2(codes: &[u8], s: f32, z: f32, out: &mut [f32]) {
+    let k = codes.len();
+    let vs = _mm256_set1_ps(s);
+    let vz = _mm256_set1_ps(z);
+    let mut p = 0usize;
+    while p + F32_LANE <= k {
+        // 8 codes zero-extended to i32, converted exactly to f32
+        let c = _mm256_cvtepu8_epi32(
+            _mm_loadl_epi64(codes.as_ptr().add(p) as *const __m128i));
+        let f = _mm256_cvtepi32_ps(c);
+        _mm256_storeu_ps(out.as_mut_ptr().add(p),
+                         _mm256_mul_ps(_mm256_sub_ps(f, vz), vs));
+        p += F32_LANE;
+    }
+    for i in p..k {
+        out[i] = (codes[i] as f32 - z) * s;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    #[test]
+    fn kernel_choice_parses() {
+        assert_eq!("auto".parse::<KernelChoice>(), Ok(KernelChoice::Auto));
+        assert_eq!("SCALAR".parse::<KernelChoice>(),
+                   Ok(KernelChoice::Scalar));
+        assert_eq!(" simd ".parse::<KernelChoice>(),
+                   Ok(KernelChoice::Simd));
+        assert!("avx9".parse::<KernelChoice>().is_err());
+    }
+
+    #[test]
+    fn backends_start_with_the_oracle() {
+        let bs = backends();
+        assert_eq!(bs[0], Backend::Scalar);
+        assert!(bs.contains(&detect()));
+        // the resolved active backend is always runnable here
+        assert!(bs.contains(&active()));
+        assert!(!Backend::Scalar.is_simd());
+    }
+
+    #[test]
+    fn vector_dots_match_oracle_smoke() {
+        // quick in-module sanity; the full battery (alignment offsets,
+        // saturation inputs, all tails) lives in tests/properties.rs
+        let mut rng = Rng::new(61);
+        for k in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 100] {
+            let a: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+            let b: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+            let want = kernels::dot_u8(&a, &b);
+            for be in backends() {
+                assert_eq!(dot_u8(be, &a, &b), want,
+                           "{} k {k}", be.name());
+            }
+        }
+    }
+
+    #[test]
+    fn f32_helpers_match_mirrors_smoke() {
+        let mut rng = Rng::new(62);
+        for k in [0usize, 1, 5, 8, 9, 24, 65] {
+            let a: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            let b: Vec<f32> = (0..k).map(|_| rng.normal()).collect();
+            let codes: Vec<u8> =
+                (0..k).map(|_| rng.below(256) as u8).collect();
+            for be in backends() {
+                assert_eq!(sum_sq_with(be, &a), sum_sq_scalar(&a),
+                           "sum_sq {} k {k}", be.name());
+                assert_eq!(dot_f32_with(be, &a, &b), dot_f32_scalar(&a, &b),
+                           "dot {} k {k}", be.name());
+                if k > 0 {
+                    assert_eq!(max_f32_with(be, &a), max_f32_scalar(&a),
+                               "max {} k {k}", be.name());
+                }
+                let mut o1: Vec<f32> = a.clone();
+                let mut o2: Vec<f32> = a.clone();
+                axpy_with(be, 0.37, &b, &mut o1);
+                axpy_scalar(0.37, &b, &mut o2);
+                assert_eq!(o1, o2, "axpy {} k {k}", be.name());
+                let mut d1 = vec![0.0f32; k];
+                let mut d2 = vec![0.0f32; k];
+                dequant_with(be, &codes, 3.0, 0.1, &mut d1);
+                dequant_scalar(&codes, 3.0, 0.1, &mut d2);
+                assert_eq!(d1, d2, "dequant {} k {k}", be.name());
+            }
+        }
+    }
+}

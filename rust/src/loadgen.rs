@@ -502,6 +502,103 @@ mod tests {
         assert!(agg.error_rate() > 0.0);
     }
 
+    // ---- per-fault-kind terminal-event contracts -------------------------
+    //
+    // One test per injected fault kind, each at frac 1.0 with a pinned
+    // seed: every submission must reach exactly the matching terminal
+    // lifecycle event in the server's event log, and an injected fault must
+    // never surface as `lost` (a lost response is a real bug, faults are
+    // expected traffic). All use score_frac 1.0 — MockScorer has no decode.
+
+    #[test]
+    fn injected_oversized_requests_all_terminate_as_rejects() {
+        let mut server = mock_server();
+        let spec = LoadSpec {
+            clients: 2,
+            requests: 10,
+            score_frac: 1.0,
+            oversized_frac: 1.0,
+            ..LoadSpec::default()
+        };
+        let out = run(&server, &spec);
+        assert_eq!(out.submitted, 20);
+        assert_eq!(out.rejected, 20, "every oversized request must reject");
+        assert_eq!(out.ok, 0);
+        assert_eq!(out.lost, 0, "a reject is an answer, never a loss");
+        server.shutdown();
+        let ev = server.events();
+        assert!(ev.stuck().is_empty(), "stuck {:?}", ev.stuck());
+        let agg = ev.agg();
+        assert_eq!(agg.rejected, 20);
+        assert_eq!(agg.responded, 0);
+        assert_eq!(agg.error_rate(), 1.0);
+        for s in ev.summaries() {
+            assert_eq!(s.outcome, crate::obs::events::EventKind::Reject,
+                       "rid {} ended as {:?}", s.rid, s.outcome);
+        }
+    }
+
+    #[test]
+    fn injected_disconnects_all_terminate_as_disconnects() {
+        let mut server = mock_server();
+        let spec = LoadSpec {
+            clients: 2,
+            requests: 10,
+            score_frac: 1.0,
+            disconnect_frac: 1.0,
+            ..LoadSpec::default()
+        };
+        let out = run(&server, &spec);
+        assert_eq!(out.submitted, 20);
+        assert_eq!(out.disconnected, 20);
+        assert_eq!(out.ok, 0);
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.lost, 0, "a disconnect is the client's choice, \
+                                 never a loss");
+        server.shutdown();
+        let ev = server.events();
+        assert!(ev.stuck().is_empty(), "stuck {:?}", ev.stuck());
+        let agg = ev.agg();
+        // closed-loop drops the receiver before the 2ms batch window
+        // closes, so every injected disconnect lands server-side too
+        assert_eq!(agg.disconnected, 20);
+        assert_eq!(agg.responded, 0);
+        // disconnects are client-caused and excluded from the error budget
+        assert_eq!(agg.error_rate(), 0.0);
+        for s in ev.summaries() {
+            assert_eq!(s.outcome, crate::obs::events::EventKind::Disconnect,
+                       "rid {} ended as {:?}", s.rid, s.outcome);
+        }
+    }
+
+    #[test]
+    fn injected_stragglers_all_terminate_as_responses() {
+        let mut server = mock_server();
+        let spec = LoadSpec {
+            clients: 2,
+            requests: 10,
+            score_frac: 1.0,
+            straggler_frac: 1.0,
+            ..LoadSpec::default()
+        };
+        let out = run(&server, &spec);
+        assert_eq!(out.submitted, 20);
+        // a straggler is a maximal *valid* row: it must succeed, just slowly
+        assert_eq!(out.ok, 20);
+        assert_eq!(out.rejected, 0);
+        assert_eq!(out.lost, 0);
+        server.shutdown();
+        let ev = server.events();
+        assert!(ev.stuck().is_empty(), "stuck {:?}", ev.stuck());
+        let agg = ev.agg();
+        assert_eq!(agg.responded, 20);
+        assert_eq!(agg.error_rate(), 0.0);
+        for s in ev.summaries() {
+            assert_eq!(s.outcome, crate::obs::events::EventKind::Respond,
+                       "rid {} ended as {:?}", s.rid, s.outcome);
+        }
+    }
+
     #[test]
     fn slo_evaluation_passes_and_fails() {
         let agg = EventAgg {

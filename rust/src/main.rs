@@ -21,10 +21,10 @@ use lrq::config::{ActScheme, Args, Method, ReconConfig, Scheme};
 use lrq::coordinator::{pretrain, quantize_model, Engine};
 use lrq::data::{Corpus, CorpusConfig, TaskKind, TaskSet};
 use lrq::eval::{evaluate, ModelView};
-use lrq::infer::{prepare_native, start_native_server, NativeModel,
-                 ScaleInit};
+use lrq::infer::{prepare_native, prepare_native_from, simd,
+                 start_native_server, KernelChoice, NativeModel, ScaleInit};
 use lrq::loadgen::{self, LoadMode, LoadSpec, ServeBenchRow, SloSpec};
-use lrq::model::{ModelDim, Weights};
+use lrq::model::{ModelDim, QuantizedModel, Weights};
 use lrq::obs::{export, trace, HttpExporter};
 use lrq::rng::Rng;
 use lrq::runtime::{Manifest, Runtime};
@@ -84,16 +84,21 @@ commands:
   train    --cfg C --steps N --lr F --out PATH [--seed S]
   quantize --cfg C --weights PATH --method M --wbits B
            [--act none|static|token] [--abits B] [--no-kv] [--steps N]
-           [--calib N] [--rank R] [--lr F]
+           [--calib N] [--rank R] [--lr F] [--out CKPT.lrqq]
+           (--out saves the packed model as a checksummed LRQQ checkpoint
+            servable by serve-native/generate-native --checkpoint)
   eval     --cfg C --weights PATH [--method M ...quantize flags]
   serve    --cfg C --weights PATH [--method M] [--requests N] [--wbits B]
   serve-native --cfg C [--weights PATH] [--wbits B] [--act none|static|token]
            [--abits B] [--no-kv] [--init rtn|grid] [--shards N]
            [--requests N] [--max-batch B] [--clients N]
-           [--calib-batches N] [--seed S]
+           [--calib-batches N] [--seed S] [--checkpoint CKPT.lrqq]
+           [--kernel auto|scalar|simd]
            pure-Rust integer engine over packed codes; needs no artifacts
            (dims fall back to built-ins micro|tiny|small, missing weights
-           are random-init)
+           are random-init); --checkpoint serves a saved LRQQ file instead
+           of quantizing at load; --kernel pins the micro-kernel dispatch
+           (also LRQ_FORCE_SCALAR=1; default auto-detects AVX2/SSE2)
   generate-native --cfg C [--prompt-len N] [--max-new N] [--top-k K]
            [--requests N] [--clients N] [--max-batch B]
            [...same engine flags as serve-native]
@@ -113,7 +118,8 @@ commands:
   stats    --cfg C [--requests N] [--prompt-len N] [--max-new N]
            [...same engine flags as serve-native]
            run a profiled generate workload on the native engine and print
-           the per-layer / per-kernel model profile
+           the per-layer / per-kernel model profile + the SIMD kernel
+           dispatch decision
   bench-table ID                     regenerate one paper table/figure
                                      (fig1 fig2 fig3 fig4a fig4b fig5
                                       t1 t3 t5 t7 t9 t13 t29 t30 t31 kvq)
@@ -222,6 +228,12 @@ fn quantize(args: &Args) -> Result<()> {
             println!("  block {b}: recon loss {first:.5} -> {last:.5}");
         }
     }
+    if let Some(ckpt) = args.get("out") {
+        out.model.save(Path::new(ckpt))?;
+        println!("saved LRQQ checkpoint {ckpt} ({:.2} MB); serve it with \
+                  `lrq serve-native --cfg {cfg} --checkpoint {ckpt}`",
+                 out.model.storage_bytes() as f64 / 1e6);
+    }
 
     // quick eval
     let mut rng = Rng::new(recon.seed ^ 0x5EED);
@@ -299,13 +311,23 @@ fn native_model_from_args(args: &Args) -> Result<(ModelDim, NativeModel)> {
 
 /// Like [`native_model_from_args`] but with the quantization scheme decided
 /// by the caller — `soak` sweeps bit-widths within one invocation.
-fn native_model_with_scheme(args: &Args, scheme: Scheme, default_cfg: &str)
+fn native_model_with_scheme(args: &Args, mut scheme: Scheme,
+                            default_cfg: &str)
                             -> Result<(ModelDim, NativeModel)> {
     let cfg = args.get_or("cfg", default_cfg);
     let init: ScaleInit = args.parse_as("init", ScaleInit::GridSearch)?;
     let shards: usize = args.parse_as("shards", 1)?;
     let seed: u64 = args.parse_as("seed", 1234)?;
     let calib: usize = args.parse_as("calib-batches", 4)?;
+
+    // kernel dispatch override, installed before any engine is built so the
+    // pinned backend is what every ExecState latches (LRQ_FORCE_SCALAR=1 is
+    // the flag-free spelling, latched on first dispatch query)
+    if let Some(k) = args.get("kernel") {
+        let choice: KernelChoice =
+            k.parse().map_err(|e: String| anyhow::anyhow!(e))?;
+        simd::set_choice(choice);
+    }
 
     // dims: manifest entry if present (authoritative), else built-ins —
     // `micro` is native-only and never appears in a manifest
@@ -330,16 +352,29 @@ fn native_model_with_scheme(args: &Args, scheme: Scheme, default_cfg: &str)
 
     let corpus = Corpus::new(CorpusConfig::for_vocab(dim.vocab));
     let t0 = Instant::now();
-    let model =
-        prepare_native(&weights, scheme, init, &corpus, calib, seed, shards)?;
+    // --checkpoint serves a saved LRQQ file (its packed bit-width wins over
+    // --wbits); otherwise quantize the FP weights at load as before
+    let model = match args.get("checkpoint") {
+        Some(ckpt) => {
+            let qm = QuantizedModel::load(&dim, Path::new(ckpt))?;
+            println!("loaded LRQQ checkpoint {ckpt} (W{})", qm.bits);
+            scheme = Scheme { w_bits: qm.bits, ..scheme };
+            prepare_native_from(&qm, &weights, scheme, &corpus, calib, seed,
+                                shards)?
+        }
+        None => prepare_native(&weights, scheme, init, &corpus, calib, seed,
+                               shards)?,
+    };
     println!(
         "native engine ready in {:.2}s: {cfg} W/A/KV {} ({:?} init), \
-         {:.2} MB packed ({:.2}x vs fp32), {shards} shard thread(s)",
+         {:.2} MB packed ({:.2}x vs fp32), {shards} shard thread(s), \
+         kernels {}",
         t0.elapsed().as_secs_f64(),
         scheme.label(),
         init,
         model.storage_bytes() as f64 / 1e6,
         (dim.param_count() * 4) as f64 / model.storage_bytes() as f64,
+        simd::describe(),
     );
     Ok((dim, model))
 }
@@ -755,6 +790,7 @@ fn stats(args: &Args) -> Result<()> {
         wall.as_secs_f64(),
     );
     print_profile(&prof, wall);
+    println!("kernel dispatch: {}", simd::describe());
     obs_finish(args, trace_on, &[])
 }
 

@@ -12,10 +12,11 @@ use std::time::Duration;
 use lrq::config::Scheme;
 use lrq::data::{Corpus, CorpusConfig};
 use lrq::infer::ops::head_logits;
-use lrq::infer::{calibrate_stats, prepare_native, quantize_weights,
-                 reference, start_native_server, ExecMode, ExecState,
-                 NativeModel, QuantBlock, ScaleInit};
-use lrq::model::{ModelDim, Weights};
+use lrq::infer::simd::{self, Backend};
+use lrq::infer::{calibrate_stats, prepare_native, prepare_native_from,
+                 quantize_weights, reference, start_native_server, ExecMode,
+                 ExecState, NativeModel, QuantBlock, ScaleInit};
+use lrq::model::{ModelDim, QuantizedModel, Weights};
 use lrq::obs::{trace, KernelKind};
 use lrq::rng::Rng;
 use lrq::serve::ServerConfig;
@@ -493,6 +494,129 @@ fn decode_accounting_and_trace_tree_after_batched_generate() {
         assert!(txt.contains(needle), "trace missing {needle}");
     }
     let _ = std::fs::remove_file(&tpath);
+}
+
+/// Tentpole acceptance (DESIGN.md §11): the SIMD-dispatched planned engine
+/// must equal the forced-scalar planned engine — and the pre-plan
+/// `ExecMode::Reference` engine — **bit for bit** end-to-end, across the
+/// full-context forward, incremental decode, and prefill, for every scheme.
+/// Backends are pinned per instance (`with_kernel`), never via the process
+/// global, so this test cannot race other tests in the parallel harness;
+/// the FP glue helpers resolve globally but are bit-equal across backends
+/// by the mirrored-accumulator contract, so only the integer GEMM actually
+/// differs between the instances compared here.
+#[test]
+fn forced_simd_and_forced_scalar_engines_are_bit_exact() {
+    let dim = micro_dim();
+    let mut rng = Rng::new(51);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 25));
+    let (ids, tgt) = corpus.eval_stream(dim.calib_batch, dim.seq, &mut rng);
+    let step_ids: Vec<i32> =
+        (0..6).map(|_| rng.below(dim.vocab) as i32).collect();
+    for scheme in schemes_under_test() {
+        let scalar = prepare_native(&weights, scheme, ScaleInit::Rtn,
+                                    &corpus, 1, 27, 1)
+            .unwrap()
+            .with_kernel(Backend::Scalar);
+        assert_eq!(scalar.kernel(), Backend::Scalar);
+        let (ls, ps) = scalar.forward(&ids, &tgt).unwrap();
+        // the pre-plan engine is always scalar; planned-SIMD must match it
+        let reference = scalar.clone().with_mode(ExecMode::Reference);
+        let (lr, pr) = reference.forward(&ids, &tgt).unwrap();
+        assert_eq!(ls, lr, "{} vs reference", scheme.label());
+        assert_eq!(ps, pr, "{} vs reference", scheme.label());
+        for be in simd::backends() {
+            let vec_model = prepare_native(&weights, scheme, ScaleInit::Rtn,
+                                           &corpus, 1, 27, 1)
+                .unwrap()
+                .with_kernel(be);
+            assert_eq!(vec_model.kernel(), be);
+            let (lv, pv) = vec_model.forward(&ids, &tgt).unwrap();
+            assert_eq!(ls, lv, "{} loss on {}", scheme.label(), be.name());
+            assert_eq!(ps, pv, "{} logp on {}", scheme.label(), be.name());
+            // incremental decode, step by step in lockstep
+            let mut cs = scalar.new_cache();
+            let mut cv = vec_model.new_cache();
+            for (t, &id) in step_ids.iter().enumerate() {
+                let ss = scalar
+                    .decode_step(&[id], std::slice::from_mut(&mut cs))
+                    .unwrap();
+                let sv = vec_model
+                    .decode_step(&[id], std::slice::from_mut(&mut cv))
+                    .unwrap();
+                assert_eq!(ss, sv, "{} step {t} on {}", scheme.label(),
+                           be.name());
+            }
+            // vectorized prefill
+            let mut fs = scalar.new_cache();
+            let mut fv = vec_model.new_cache();
+            let gs = scalar.prefill(&step_ids, &mut fs).unwrap();
+            let gv = vec_model.prefill(&step_ids, &mut fv).unwrap();
+            assert_eq!(gs, gv, "{} prefill on {}", scheme.label(),
+                       be.name());
+        }
+    }
+}
+
+/// Satellite acceptance: the `lrq quantize --out` → LRQQ file →
+/// `serve-native --checkpoint` round-trip, in-process. The engine built
+/// from the reloaded checkpoint must be bit-identical to the engine built
+/// from the in-memory quantized model, and must answer score requests
+/// through the dynamic batcher.
+#[test]
+fn lrqq_checkpoint_roundtrips_through_file_and_serves() {
+    let dim = micro_dim();
+    let mut rng = Rng::new(52);
+    let weights = Weights::init(&dim, &mut rng);
+    let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 26));
+    let qm = quantize_weights(&weights, 4, ScaleInit::GridSearch).unwrap();
+    let path = std::env::temp_dir()
+        .join(format!("lrq_ckpt_roundtrip_{}.lrqq", std::process::id()));
+    qm.save(&path).unwrap();
+    let loaded = QuantizedModel::load(&dim, &path).unwrap();
+    let _ = std::fs::remove_file(&path);
+    assert_eq!(loaded.bits, qm.bits);
+
+    let scheme = Scheme::w4a8_token();
+    let direct =
+        prepare_native_from(&qm, &weights, scheme, &corpus, 1, 29, 1)
+            .unwrap();
+    let reloaded =
+        prepare_native_from(&loaded, &weights, scheme, &corpus, 1, 29, 1)
+            .unwrap();
+    let (ids, tgt) = {
+        let mut r = Rng::new(61);
+        corpus.eval_stream(dim.calib_batch, dim.seq, &mut r)
+    };
+    let (ld, pd) = direct.forward(&ids, &tgt).unwrap();
+    let (lf, pf) = reloaded.forward(&ids, &tgt).unwrap();
+    assert_eq!(ld, lf, "loss diverged across the file roundtrip");
+    assert_eq!(pd, pf, "logp diverged across the file roundtrip");
+
+    // a mismatched declared bit-width must fail loudly, not serve garbage
+    assert!(prepare_native_from(&loaded, &weights, Scheme::w8a8_static(),
+                                &corpus, 1, 29, 1)
+        .is_err());
+
+    // and the reloaded engine serves through the batcher
+    let local = reloaded.clone();
+    let server = start_native_server(
+        reloaded,
+        ServerConfig { max_batch: 2, max_wait: Duration::from_millis(2) },
+    )
+    .unwrap();
+    let ids2: Vec<i32> =
+        (0..6).map(|_| rng.below(dim.vocab) as i32).collect();
+    let resp = server.client().score(ids2.clone()).unwrap();
+    let mut row = ids2.clone();
+    row.resize(dim.seq, 0);
+    let mut tgt2: Vec<i32> = row[1..].to_vec();
+    tgt2.push(0);
+    let (_, logp) = local.forward(&row, &tgt2).unwrap();
+    let want: f32 = logp.data[..ids2.len() - 1].iter().sum();
+    assert!((resp.logp_sum - want).abs() < 1e-3,
+            "served {} vs direct {want}", resp.logp_sum);
 }
 
 #[test]

@@ -1,7 +1,10 @@
 //! Property-based tests over the public API (in-repo harness — proptest is
 //! unavailable offline; failures reproduce from the printed seed).
 
-use lrq::infer::kernels::quantize_acts_per_token;
+use lrq::infer::kernels::{dot_block_f32_u8_scalar, dot_block_u8_scalar,
+                          dot_f32_u8, dot_u8, quantize_acts_per_token,
+                          MAX_DOT_K};
+use lrq::infer::simd::{self, LANE};
 use lrq::infer::{quantize_weights, ExecMode, ExecState, QuantLinear,
                  ScaleInit, TilePlan, MR};
 use lrq::methods::fold::{fold_block, smooth_scales, weight_col_amax};
@@ -408,6 +411,167 @@ fn prop_lrqq_bitflip_fails_closed() {
                 "accepted corrupt checkpoint (bit {bit} at byte {off} of \
                  {})", bytes.len())),
         }
+    });
+}
+
+// ---- SIMD vs scalar-oracle differential battery (DESIGN.md §11) ----------
+//
+// Every vector backend runnable on this machine (simd::backends() — scalar
+// always first) must reproduce the scalar oracle bit for bit. Integer
+// kernels are exact by associativity; the f32 helpers are exact because the
+// vector and mirror paths share one accumulator structure.
+
+#[test]
+fn simd_dot_u8_exhaustive_tails_and_alignments() {
+    // Every tail length 0..=2*LANE at every misalignment offset 0..LANE
+    // (unaligned loads are the contract — tiles are lane-padded but
+    // activations are not), with codes spanning the 3/4/8-bit ranges.
+    let mut rng = Rng::new(0x51D0);
+    for be in simd::backends() {
+        for bits in [3u32, 4, 8] {
+            let hi = 1usize << bits;
+            for k in 0..=2 * LANE {
+                for off in 0..LANE {
+                    let a: Vec<u8> =
+                        (0..off + k).map(|_| rng.below(hi) as u8).collect();
+                    let b: Vec<u8> =
+                        (0..off + k).map(|_| rng.below(hi) as u8).collect();
+                    let (sa, sb) = (&a[off..], &b[off..]);
+                    assert_eq!(
+                        simd::dot_u8(be, sa, sb), dot_u8(sa, sb),
+                        "{} bits {bits} k {k} off {off}", be.name());
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn simd_dot_u8_saturation_bound_is_exact() {
+    // The documented worst case: k = MAX_DOT_K of all-255 codes. The total
+    // 33_000 * 255 * 255 = 2_145_825_000 sits just under i32::MAX; every
+    // backend must land on it exactly (no lane ever saturates).
+    let a = vec![255u8; MAX_DOT_K];
+    let want = (MAX_DOT_K as i64 * 255 * 255) as i32;
+    assert!(i64::from(want) == MAX_DOT_K as i64 * 255 * 255);
+    for be in simd::backends() {
+        assert_eq!(simd::dot_u8(be, &a, &a), want, "{}", be.name());
+        let mut acc = [0i32; 16];
+        simd::dot_block_u8(be, &a, MAX_DOT_K, 1, &a, MAX_DOT_K, 1, &mut acc);
+        assert_eq!(acc[0], want, "block {}", be.name());
+    }
+}
+
+#[test]
+fn prop_simd_block_dot_matches_scalar_oracle() {
+    // The widened micro-kernel across backends: random (k, tn, rn), both a
+    // tight stride (reference layout) and the lane-padded plan stride,
+    // full-range codes per bit-width.
+    check("simd block dot vs oracle", 60, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let hi = 1usize << bits;
+        let k = rng.range(1, 80);
+        let tn = rng.range(1, 5);
+        let rn = rng.range(1, 5);
+        let stride =
+            if rng.below(2) == 0 { k } else { k.div_ceil(LANE) * LANE };
+        let a: Vec<u8> = (0..tn * k).map(|_| rng.below(hi) as u8).collect();
+        let wt: Vec<u8> = (0..(rn - 1) * stride + k)
+            .map(|_| rng.below(hi) as u8)
+            .collect();
+        let mut want = [0i32; 16];
+        dot_block_u8_scalar(&a, k, tn, &wt, stride, rn, &mut want);
+        for be in simd::backends() {
+            let mut got = [0i32; 16];
+            simd::dot_block_u8(be, &a, k, tn, &wt, stride, rn, &mut got);
+            if got != want {
+                return Err(format!(
+                    "{} bits {bits} k {k} tn {tn} rn {rn} stride {stride}: \
+                     {got:?} != {want:?}", be.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_simd_f32_helpers_are_bit_equal() {
+    // The FP glue helpers (RMSNorm sum-of-squares, attention score dot,
+    // softmax max, weighted-V axpy, KV dequant) must be bit-equal across
+    // every backend — the vector code mirrors the scalar accumulator
+    // structure exactly, so `==` on f32 is the right assertion.
+    check("simd f32 helpers bit-equal", 60, |rng| {
+        let k = rng.below(70);
+        let a: Vec<f32> =
+            (0..k).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let b: Vec<f32> =
+            (0..k).map(|_| rng.next_f32() * 4.0 - 2.0).collect();
+        let codes: Vec<u8> = (0..k).map(|_| rng.below(256) as u8).collect();
+        let (s, z) = (0.01 + rng.next_f32(), rng.next_f32() * 16.0);
+        let w = rng.next_f32() * 2.0 - 1.0;
+        for be in simd::backends() {
+            if simd::sum_sq_with(be, &a) != simd::sum_sq_scalar(&a) {
+                return Err(format!("sum_sq diverged on {}", be.name()));
+            }
+            if simd::dot_f32_with(be, &a, &b) != simd::dot_f32_scalar(&a, &b)
+            {
+                return Err(format!("dot_f32 diverged on {}", be.name()));
+            }
+            if simd::max_f32_with(be, &a) != simd::max_f32_scalar(&a) {
+                return Err(format!("max_f32 diverged on {}", be.name()));
+            }
+            let mut got = b.clone();
+            let mut want = b.clone();
+            simd::axpy_with(be, w, &a, &mut got);
+            simd::axpy_scalar(w, &a, &mut want);
+            if got != want {
+                return Err(format!("axpy diverged on {}", be.name()));
+            }
+            let mut got = vec![0.0f32; k];
+            let mut want = vec![0.0f32; k];
+            simd::dequant_with(be, &codes, s, z, &mut got);
+            simd::dequant_scalar(&codes, s, z, &mut want);
+            if got != want {
+                return Err(format!("dequant diverged on {}", be.name()));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weight_only_block_dot_stays_sequential() {
+    // The f32 weight-only micro-kernel is scalar by contract (kernels.rs):
+    // its accumulation must equal the plain sequential dot exactly, for
+    // both the tight and the lane-padded stride. A vectorized rewrite that
+    // reassociates the f32 adds fails this immediately.
+    check("weight-only block dot sequential", 40, |rng| {
+        let bits = [3u32, 4, 8][rng.below(3)];
+        let hi = 1usize << bits;
+        let k = rng.range(1, 80);
+        let tn = rng.range(1, 5);
+        let rn = rng.range(1, 5);
+        let stride =
+            if rng.below(2) == 0 { k } else { k.div_ceil(LANE) * LANE };
+        let x: Vec<f32> =
+            (0..tn * k).map(|_| rng.next_f32() * 2.0 - 1.0).collect();
+        let wt: Vec<u8> = (0..(rn - 1) * stride + k)
+            .map(|_| rng.below(hi) as u8)
+            .collect();
+        let mut acc = [0.0f32; 16];
+        dot_block_f32_u8_scalar(&x, k, tn, &wt, stride, rn, &mut acc);
+        for t in 0..tn {
+            for r in 0..rn {
+                let want = dot_f32_u8(&x[t * k..(t + 1) * k],
+                                      &wt[r * stride..r * stride + k]);
+                if acc[t * 4 + r] != want {
+                    return Err(format!(
+                        "bits {bits} k {k} t {t} r {r} stride {stride}: \
+                         {} != {want}", acc[t * 4 + r]));
+                }
+            }
+        }
+        Ok(())
     });
 }
 
