@@ -1,0 +1,17 @@
+//! Seeded violation for the linter self-test (never compiled, only
+//! scanned): a reassociated weight-only f32 kernel. The chunked
+//! iterator reduction below changes the accumulation order that the
+//! engine's planned == reference bit-equality contract depends on.
+
+pub fn dot_f32_u8(x: &[f32], q: &[u8]) -> f32 {
+    x.chunks(8)
+        .zip(q.chunks(8))
+        .map(|(xs, qs)| {
+            xs.iter().zip(qs).map(|(&a, &b)| a * b as f32).sum::<f32>()
+        })
+        .sum()
+}
+
+pub fn dot_block_f32_u8_scalar(x: &[f32], q: &[u8]) -> f32 {
+    dot_f32_u8(x, q)
+}

@@ -1,0 +1,11 @@
+//! Seeded violation for the linter self-test (never compiled, only
+//! scanned): `unsafe` escaping the allowlisted module set. The SAFETY
+//! comment is present on purpose — only the confinement rule may fire
+//! here, not undocumented-unsafe.
+
+fn sneaky(out: &mut [f32]) {
+    // SAFETY: index 0 is in bounds — the caller hands a non-empty slice.
+    unsafe {
+        *out.get_unchecked_mut(0) = 1.0;
+    }
+}

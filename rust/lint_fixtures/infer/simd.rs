@@ -1,0 +1,11 @@
+//! Seeded violations for the linter self-test (never compiled, only
+//! scanned by `lint::tests`): an undocumented `unsafe` in an allowlisted
+//! module, and a forbidden saturating intrinsic.
+
+fn undocumented(p: *const u8) -> u8 {
+    unsafe { *p }
+}
+
+fn saturating_dot(a: M256, b: M256) -> M256 {
+    _mm256_maddubs_epi16(a, b)
+}

@@ -1,0 +1,11 @@
+//! Seeded violation for the linter self-test (never compiled, only
+//! scanned): a relaxed atomic outside obs/registry.rs with no
+//! justification comment anywhere near it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static SEQ: AtomicU64 = AtomicU64::new(0);
+
+pub fn next() -> u64 {
+    SEQ.fetch_add(1, Ordering::Relaxed)
+}

@@ -1,0 +1,17 @@
+//! Seeded violations for the linter self-test (never compiled, only
+//! scanned): unjustified panic paths in request-reachable serving code,
+//! plus one justified site that must NOT fire.
+
+pub fn answer(resp: Option<&str>) -> &str {
+    resp.unwrap()
+}
+
+pub fn boom() {
+    panic!("request-reachable");
+}
+
+pub fn justified(resp: Option<&str>) -> &str {
+    // PANIC: exercised by the linter self-test — a justified unwrap is
+    // the escape hatch, and it must not be flagged.
+    resp.unwrap()
+}

@@ -229,9 +229,12 @@ pub struct OutSlice {
 }
 
 // SAFETY: raw access is gated behind `OutSlice::slice`, whose contract
-// requires callers to hold disjoint ranges; the pointer itself is fine to
-// move and share across the pool's threads.
+// requires callers to hold disjoint ranges; moving the pointer to another
+// of the pool's threads adds no aliasing that contract doesn't already
+// police.
 unsafe impl Send for OutSlice {}
+// SAFETY: same argument for shared references — `slice` hands out
+// pairwise-disjoint `&mut` windows, so concurrent use never aliases.
 unsafe impl Sync for OutSlice {}
 
 impl OutSlice {
@@ -247,7 +250,9 @@ impl OutSlice {
     /// slice may outlive the `run` call that received the `OutSlice`.
     pub unsafe fn slice<'a>(self, off: usize, n: usize) -> &'a mut [f32] {
         debug_assert!(off + n <= self.len);
-        std::slice::from_raw_parts_mut(self.ptr.add(off), n)
+        // SAFETY: in-bounds range, pairwise disjointness, and the
+        // lifetime cap are the caller's contract (`# Safety` above).
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.add(off), n) }
     }
 }
 
@@ -315,6 +320,56 @@ mod tests {
     fn zero_jobs_is_a_noop() {
         let pool = WorkerPool::new(2);
         pool.run(0, |_| panic!("must not run"));
+    }
+
+    #[test]
+    fn pool_lifecycle_stress() {
+        // repeated spawn → exec → drop cycles at every width: the TSan
+        // lane runs this to prove worker startup, the go/done barriers,
+        // and Drop's shutdown handshake race-free
+        for round in 0..8usize {
+            for width in 1..=4usize {
+                let pool = WorkerPool::new(width);
+                for jobs in [1usize, 2, 7, 16] {
+                    let hits: Vec<AtomicUsize> =
+                        (0..jobs).map(|_| AtomicUsize::new(0)).collect();
+                    pool.run(jobs, |i| {
+                        hits[i].fetch_add(1, Ordering::SeqCst);
+                    });
+                    for (i, h) in hits.iter().enumerate() {
+                        assert_eq!(h.load(Ordering::SeqCst), 1,
+                                   "round {round} width {width} jobs \
+                                    {jobs} i {i}");
+                    }
+                }
+                // `pool` drops here: joins every worker
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_submitters_share_the_pool() {
+        // model clones share one Arc<WorkerPool>; `run` serializes epochs
+        // on the submit lock. Hammer it from several threads and count
+        // every job exactly once.
+        let pool = std::sync::Arc::new(WorkerPool::new(3));
+        let total = std::sync::Arc::new(AtomicUsize::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let pool = pool.clone();
+            let total = total.clone();
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..25 {
+                    pool.run(5, |_| {
+                        total.fetch_add(1, Ordering::SeqCst);
+                    });
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(total.load(Ordering::SeqCst), 4 * 25 * 5);
     }
 
     #[test]

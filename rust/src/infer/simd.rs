@@ -156,12 +156,16 @@ static CHOICE: AtomicU8 = AtomicU8::new(CHOICE_UNSET);
 /// built afterwards default to the matching backend; the FP glue helpers
 /// re-resolve on every call.
 pub fn set_choice(c: KernelChoice) {
+    // Relaxed: the choice byte is a standalone policy latch — no other
+    // memory is published through it, readers re-resolve per call.
     CHOICE.store(c as u8, Ordering::Relaxed);
 }
 
 /// The process-wide choice; first call latches `LRQ_FORCE_SCALAR` from the
 /// environment (accepted truthy spellings: `1`, `true`, `yes`).
 pub fn choice() -> KernelChoice {
+    // Relaxed: reads the standalone policy byte; a racing first-call
+    // latch at worst repeats the idempotent env lookup below.
     match CHOICE.load(Ordering::Relaxed) {
         x if x == KernelChoice::Auto as u8 => KernelChoice::Auto,
         x if x == KernelChoice::Scalar as u8 => KernelChoice::Scalar,
@@ -178,6 +182,8 @@ pub fn choice() -> KernelChoice {
             } else {
                 KernelChoice::Auto
             };
+            // Relaxed: same standalone latch — every racer stores the
+            // same value computed from the same environment.
             CHOICE.store(c as u8, Ordering::Relaxed);
             c
         }
@@ -251,55 +257,75 @@ pub fn dot_block_u8(backend: Backend, a: &[u8], k: usize, tn: usize,
 /// AVX2 path runs at most `⌈33_000/16⌉ = 2_063` steps per lane
 /// (`≈ 2.7e8 < 2^31`) and the SSE2 path two madds per step (`≈ 5.4e8`).
 /// The scalar total `255·255·33_000 ≈ 2.15e9` stays below `i32::MAX` too.
+///
+/// # Safety
+/// Caller must guarantee AVX2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dot_u8_avx2(a: &[u8], b: &[u8]) -> i32 {
-    let k = a.len();
-    let mut vacc = _mm256_setzero_si256();
-    let mut p = 0usize;
-    while p + LANE <= k {
-        let va = _mm256_cvtepu8_epi16(
-            _mm_loadu_si128(a.as_ptr().add(p) as *const __m128i));
-        let vb = _mm256_cvtepu8_epi16(
-            _mm_loadu_si128(b.as_ptr().add(p) as *const __m128i));
-        vacc = _mm256_add_epi32(vacc, _mm256_madd_epi16(va, vb));
-        p += LANE;
+    // SAFETY: AVX2 is the caller's contract (`# Safety`); every 16-byte
+    // load sits inside `a`/`b` because the loop requires `p + LANE <= k`
+    // and the store targets a local 32-byte array.
+    unsafe {
+        let k = a.len();
+        let mut vacc = _mm256_setzero_si256();
+        let mut p = 0usize;
+        while p + LANE <= k {
+            let va = _mm256_cvtepu8_epi16(
+                _mm_loadu_si128(a.as_ptr().add(p) as *const __m128i));
+            let vb = _mm256_cvtepu8_epi16(
+                _mm_loadu_si128(b.as_ptr().add(p) as *const __m128i));
+            vacc = _mm256_add_epi32(vacc, _mm256_madd_epi16(va, vb));
+            p += LANE;
+        }
+        let mut lanes = [0i32; 8];
+        _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vacc);
+        let mut acc: i32 = lanes.iter().sum();
+        for i in p..k {
+            acc += a[i] as i32 * b[i] as i32;
+        }
+        acc
     }
-    let mut lanes = [0i32; 8];
-    _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, vacc);
-    let mut acc: i32 = lanes.iter().sum();
-    for i in p..k {
-        acc += a[i] as i32 * b[i] as i32;
-    }
-    acc
 }
 
+/// # Safety
+/// Caller must guarantee SSE2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn dot_u8_sse2(a: &[u8], b: &[u8]) -> i32 {
-    let k = a.len();
-    let zero = _mm_setzero_si128();
-    let mut vacc = _mm_setzero_si128();
-    let mut p = 0usize;
-    while p + LANE <= k {
-        let va = _mm_loadu_si128(a.as_ptr().add(p) as *const __m128i);
-        let vb = _mm_loadu_si128(b.as_ptr().add(p) as *const __m128i);
-        let lo = _mm_madd_epi16(_mm_unpacklo_epi8(va, zero),
-                                _mm_unpacklo_epi8(vb, zero));
-        let hi = _mm_madd_epi16(_mm_unpackhi_epi8(va, zero),
-                                _mm_unpackhi_epi8(vb, zero));
-        vacc = _mm_add_epi32(vacc, _mm_add_epi32(lo, hi));
-        p += LANE;
+    // SAFETY: SSE2 is the caller's contract (`# Safety`); every 16-byte
+    // load sits inside `a`/`b` because the loop requires `p + LANE <= k`
+    // and the store targets a local 16-byte array.
+    unsafe {
+        let k = a.len();
+        let zero = _mm_setzero_si128();
+        let mut vacc = _mm_setzero_si128();
+        let mut p = 0usize;
+        while p + LANE <= k {
+            let va = _mm_loadu_si128(a.as_ptr().add(p) as *const __m128i);
+            let vb = _mm_loadu_si128(b.as_ptr().add(p) as *const __m128i);
+            let lo = _mm_madd_epi16(_mm_unpacklo_epi8(va, zero),
+                                    _mm_unpacklo_epi8(vb, zero));
+            let hi = _mm_madd_epi16(_mm_unpackhi_epi8(va, zero),
+                                    _mm_unpackhi_epi8(vb, zero));
+            vacc = _mm_add_epi32(vacc, _mm_add_epi32(lo, hi));
+            p += LANE;
+        }
+        let mut lanes = [0i32; 4];
+        _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, vacc);
+        let mut acc: i32 = lanes.iter().sum();
+        for i in p..k {
+            acc += a[i] as i32 * b[i] as i32;
+        }
+        acc
     }
-    let mut lanes = [0i32; 4];
-    _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, vacc);
-    let mut acc: i32 = lanes.iter().sum();
-    for i in p..k {
-        acc += a[i] as i32 * b[i] as i32;
-    }
-    acc
 }
 
+/// # Safety
+/// Caller must guarantee AVX2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dot_block_u8_avx2(a: &[u8], k: usize, tn: usize, wt: &[u8],
@@ -309,33 +335,42 @@ unsafe fn dot_block_u8_avx2(a: &[u8], k: usize, tn: usize, wt: &[u8],
     debug_assert!(a.len() >= tn * k);
     debug_assert!(wt.len() >= (rn - 1) * stride + k);
     acc.fill(0);
-    for t in 0..tn {
-        let arow = a.as_ptr().add(t * k);
-        let mut vacc = [_mm256_setzero_si256(); 4];
-        let mut p = 0usize;
-        while p + LANE <= k {
-            // one widened activation load feeds all rn weight rows
-            let xv = _mm256_cvtepu8_epi16(
-                _mm_loadu_si128(arow.add(p) as *const __m128i));
-            for (r, vr) in vacc.iter_mut().take(rn).enumerate() {
-                let wv = _mm256_cvtepu8_epi16(_mm_loadu_si128(
-                    wt.as_ptr().add(r * stride + p) as *const __m128i));
-                *vr = _mm256_add_epi32(*vr, _mm256_madd_epi16(xv, wv));
+    // SAFETY: AVX2 is the caller's contract (`# Safety`). Activation loads
+    // reach at most `(tn-1)·k + p + 16 <= tn·k <= a.len()` and weight
+    // loads at most `(rn-1)·stride + p + 16 <= (rn-1)·stride + k <=
+    // wt.len()` (asserted above); stores hit local arrays only.
+    unsafe {
+        for t in 0..tn {
+            let arow = a.as_ptr().add(t * k);
+            let mut vacc = [_mm256_setzero_si256(); 4];
+            let mut p = 0usize;
+            while p + LANE <= k {
+                // one widened activation load feeds all rn weight rows
+                let xv = _mm256_cvtepu8_epi16(
+                    _mm_loadu_si128(arow.add(p) as *const __m128i));
+                for (r, vr) in vacc.iter_mut().take(rn).enumerate() {
+                    let wv = _mm256_cvtepu8_epi16(_mm_loadu_si128(
+                        wt.as_ptr().add(r * stride + p) as *const __m128i));
+                    *vr = _mm256_add_epi32(*vr, _mm256_madd_epi16(xv, wv));
+                }
+                p += LANE;
             }
-            p += LANE;
-        }
-        for (r, vr) in vacc.iter().take(rn).enumerate() {
-            let mut lanes = [0i32; 8];
-            _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *vr);
-            let mut s: i32 = lanes.iter().sum();
-            for i in p..k {
-                s += a[t * k + i] as i32 * wt[r * stride + i] as i32;
+            for (r, vr) in vacc.iter().take(rn).enumerate() {
+                let mut lanes = [0i32; 8];
+                _mm256_storeu_si256(lanes.as_mut_ptr() as *mut __m256i, *vr);
+                let mut s: i32 = lanes.iter().sum();
+                for i in p..k {
+                    s += a[t * k + i] as i32 * wt[r * stride + i] as i32;
+                }
+                acc[t * 4 + r] = s;
             }
-            acc[t * 4 + r] = s;
         }
     }
 }
 
+/// # Safety
+/// Caller must guarantee SSE2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "sse2")]
 unsafe fn dot_block_u8_sse2(a: &[u8], k: usize, tn: usize, wt: &[u8],
@@ -345,32 +380,38 @@ unsafe fn dot_block_u8_sse2(a: &[u8], k: usize, tn: usize, wt: &[u8],
     debug_assert!(a.len() >= tn * k);
     debug_assert!(wt.len() >= (rn - 1) * stride + k);
     acc.fill(0);
-    let zero = _mm_setzero_si128();
-    for t in 0..tn {
-        let arow = a.as_ptr().add(t * k);
-        let mut vacc = [_mm_setzero_si128(); 4];
-        let mut p = 0usize;
-        while p + LANE <= k {
-            let xv = _mm_loadu_si128(arow.add(p) as *const __m128i);
-            let xlo = _mm_unpacklo_epi8(xv, zero);
-            let xhi = _mm_unpackhi_epi8(xv, zero);
-            for (r, vr) in vacc.iter_mut().take(rn).enumerate() {
-                let wv = _mm_loadu_si128(
-                    wt.as_ptr().add(r * stride + p) as *const __m128i);
-                let lo = _mm_madd_epi16(xlo, _mm_unpacklo_epi8(wv, zero));
-                let hi = _mm_madd_epi16(xhi, _mm_unpackhi_epi8(wv, zero));
-                *vr = _mm_add_epi32(*vr, _mm_add_epi32(lo, hi));
+    // SAFETY: SSE2 is the caller's contract (`# Safety`). The same bounds
+    // argument as `dot_block_u8_avx2`: activation loads stay below
+    // `tn·k <= a.len()`, weight loads below `(rn-1)·stride + k <=
+    // wt.len()` (asserted above); stores hit local arrays only.
+    unsafe {
+        let zero = _mm_setzero_si128();
+        for t in 0..tn {
+            let arow = a.as_ptr().add(t * k);
+            let mut vacc = [_mm_setzero_si128(); 4];
+            let mut p = 0usize;
+            while p + LANE <= k {
+                let xv = _mm_loadu_si128(arow.add(p) as *const __m128i);
+                let xlo = _mm_unpacklo_epi8(xv, zero);
+                let xhi = _mm_unpackhi_epi8(xv, zero);
+                for (r, vr) in vacc.iter_mut().take(rn).enumerate() {
+                    let wv = _mm_loadu_si128(
+                        wt.as_ptr().add(r * stride + p) as *const __m128i);
+                    let lo = _mm_madd_epi16(xlo, _mm_unpacklo_epi8(wv, zero));
+                    let hi = _mm_madd_epi16(xhi, _mm_unpackhi_epi8(wv, zero));
+                    *vr = _mm_add_epi32(*vr, _mm_add_epi32(lo, hi));
+                }
+                p += LANE;
             }
-            p += LANE;
-        }
-        for (r, vr) in vacc.iter().take(rn).enumerate() {
-            let mut lanes = [0i32; 4];
-            _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, *vr);
-            let mut s: i32 = lanes.iter().sum();
-            for i in p..k {
-                s += a[t * k + i] as i32 * wt[r * stride + i] as i32;
+            for (r, vr) in vacc.iter().take(rn).enumerate() {
+                let mut lanes = [0i32; 4];
+                _mm_storeu_si128(lanes.as_mut_ptr() as *mut __m128i, *vr);
+                let mut s: i32 = lanes.iter().sum();
+                for i in p..k {
+                    s += a[t * k + i] as i32 * wt[r * stride + i] as i32;
+                }
+                acc[t * 4 + r] = s;
             }
-            acc[t * 4 + r] = s;
         }
     }
 }
@@ -422,27 +463,35 @@ pub fn sum_sq_scalar(x: &[f32]) -> f32 {
     acc
 }
 
+/// # Safety
+/// Caller must guarantee AVX2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn sum_sq_avx2(x: &[f32]) -> f32 {
-    let k = x.len();
-    let mut vacc = _mm256_setzero_ps();
-    let mut p = 0usize;
-    while p + F32_LANE <= k {
-        let v = _mm256_loadu_ps(x.as_ptr().add(p));
-        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(v, v));
-        p += F32_LANE;
+    // SAFETY: AVX2 is the caller's contract (`# Safety`); each 8-float
+    // load stays in bounds via `p + F32_LANE <= k`, the store targets a
+    // local array.
+    unsafe {
+        let k = x.len();
+        let mut vacc = _mm256_setzero_ps();
+        let mut p = 0usize;
+        while p + F32_LANE <= k {
+            let v = _mm256_loadu_ps(x.as_ptr().add(p));
+            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(v, v));
+            p += F32_LANE;
+        }
+        let mut lanes = [0.0f32; F32_LANE];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+        let mut acc = 0.0f32;
+        for &l in &lanes {
+            acc += l;
+        }
+        for &v in &x[p..] {
+            acc += v * v;
+        }
+        acc
     }
-    let mut lanes = [0.0f32; F32_LANE];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
-    let mut acc = 0.0f32;
-    for &l in &lanes {
-        acc += l;
-    }
-    for &v in &x[p..] {
-        acc += v * v;
-    }
-    acc
 }
 
 /// f32 dot, 8-lane blocked (attention scores).
@@ -484,28 +533,36 @@ pub fn dot_f32_scalar(a: &[f32], b: &[f32]) -> f32 {
     acc
 }
 
+/// # Safety
+/// Caller must guarantee AVX2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dot_f32_avx2(a: &[f32], b: &[f32]) -> f32 {
-    let k = a.len();
-    let mut vacc = _mm256_setzero_ps();
-    let mut p = 0usize;
-    while p + F32_LANE <= k {
-        let va = _mm256_loadu_ps(a.as_ptr().add(p));
-        let vb = _mm256_loadu_ps(b.as_ptr().add(p));
-        vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
-        p += F32_LANE;
+    // SAFETY: AVX2 is the caller's contract (`# Safety`); each 8-float
+    // load stays inside `a`/`b` (same length, asserted by the dispatch
+    // wrapper) via `p + F32_LANE <= k`, the store targets a local array.
+    unsafe {
+        let k = a.len();
+        let mut vacc = _mm256_setzero_ps();
+        let mut p = 0usize;
+        while p + F32_LANE <= k {
+            let va = _mm256_loadu_ps(a.as_ptr().add(p));
+            let vb = _mm256_loadu_ps(b.as_ptr().add(p));
+            vacc = _mm256_add_ps(vacc, _mm256_mul_ps(va, vb));
+            p += F32_LANE;
+        }
+        let mut lanes = [0.0f32; F32_LANE];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
+        let mut acc = 0.0f32;
+        for &l in &lanes {
+            acc += l;
+        }
+        for i in p..k {
+            acc += a[i] * b[i];
+        }
+        acc
     }
-    let mut lanes = [0.0f32; F32_LANE];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), vacc);
-    let mut acc = 0.0f32;
-    for &l in &lanes {
-        acc += l;
-    }
-    for i in p..k {
-        acc += a[i] * b[i];
-    }
-    acc
 }
 
 /// Max over a non-empty slice of non-NaN values (softmax running max).
@@ -531,26 +588,34 @@ pub fn max_f32_scalar(x: &[f32]) -> f32 {
     x.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
 }
 
+/// # Safety
+/// Caller must guarantee AVX2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn max_f32_avx2(x: &[f32]) -> f32 {
-    let k = x.len();
-    let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
-    let mut p = 0usize;
-    while p + F32_LANE <= k {
-        vmax = _mm256_max_ps(vmax, _mm256_loadu_ps(x.as_ptr().add(p)));
-        p += F32_LANE;
+    // SAFETY: AVX2 is the caller's contract (`# Safety`); each 8-float
+    // load stays in bounds via `p + F32_LANE <= k`, the store targets a
+    // local array.
+    unsafe {
+        let k = x.len();
+        let mut vmax = _mm256_set1_ps(f32::NEG_INFINITY);
+        let mut p = 0usize;
+        while p + F32_LANE <= k {
+            vmax = _mm256_max_ps(vmax, _mm256_loadu_ps(x.as_ptr().add(p)));
+            p += F32_LANE;
+        }
+        let mut lanes = [0.0f32; F32_LANE];
+        _mm256_storeu_ps(lanes.as_mut_ptr(), vmax);
+        let mut mx = f32::NEG_INFINITY;
+        for &l in &lanes {
+            mx = mx.max(l);
+        }
+        for &v in &x[p..] {
+            mx = mx.max(v);
+        }
+        mx
     }
-    let mut lanes = [0.0f32; F32_LANE];
-    _mm256_storeu_ps(lanes.as_mut_ptr(), vmax);
-    let mut mx = f32::NEG_INFINITY;
-    for &l in &lanes {
-        mx = mx.max(l);
-    }
-    for &v in &x[p..] {
-        mx = mx.max(v);
-    }
-    mx
 }
 
 /// `out[i] += w·v[i]` (attention weighted-V). Purely elementwise — one
@@ -579,21 +644,29 @@ pub fn axpy_scalar(w: f32, v: &[f32], out: &mut [f32]) {
     }
 }
 
+/// # Safety
+/// Caller must guarantee AVX2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn axpy_avx2(w: f32, v: &[f32], out: &mut [f32]) {
-    let k = v.len();
-    let vw = _mm256_set1_ps(w);
-    let mut p = 0usize;
-    while p + F32_LANE <= k {
-        let vo = _mm256_loadu_ps(out.as_ptr().add(p));
-        let vv = _mm256_loadu_ps(v.as_ptr().add(p));
-        _mm256_storeu_ps(out.as_mut_ptr().add(p),
-                         _mm256_add_ps(vo, _mm256_mul_ps(vw, vv)));
-        p += F32_LANE;
-    }
-    for i in p..k {
-        out[i] += w * v[i];
+    // SAFETY: AVX2 is the caller's contract (`# Safety`); loads and the
+    // store stay inside `v`/`out` (same length, asserted by the dispatch
+    // wrapper) via `p + F32_LANE <= k`.
+    unsafe {
+        let k = v.len();
+        let vw = _mm256_set1_ps(w);
+        let mut p = 0usize;
+        while p + F32_LANE <= k {
+            let vo = _mm256_loadu_ps(out.as_ptr().add(p));
+            let vv = _mm256_loadu_ps(v.as_ptr().add(p));
+            _mm256_storeu_ps(out.as_mut_ptr().add(p),
+                             _mm256_add_ps(vo, _mm256_mul_ps(vw, vv)));
+            p += F32_LANE;
+        }
+        for i in p..k {
+            out[i] += w * v[i];
+        }
     }
 }
 
@@ -624,24 +697,32 @@ pub fn dequant_scalar(codes: &[u8], s: f32, z: f32, out: &mut [f32]) {
     }
 }
 
+/// # Safety
+/// Caller must guarantee AVX2 is available (the dispatch match re-checks
+/// with `is_x86_feature_detected!`).
 #[cfg(target_arch = "x86_64")]
 #[target_feature(enable = "avx2")]
 unsafe fn dequant_avx2(codes: &[u8], s: f32, z: f32, out: &mut [f32]) {
-    let k = codes.len();
-    let vs = _mm256_set1_ps(s);
-    let vz = _mm256_set1_ps(z);
-    let mut p = 0usize;
-    while p + F32_LANE <= k {
-        // 8 codes zero-extended to i32, converted exactly to f32
-        let c = _mm256_cvtepu8_epi32(
-            _mm_loadl_epi64(codes.as_ptr().add(p) as *const __m128i));
-        let f = _mm256_cvtepi32_ps(c);
-        _mm256_storeu_ps(out.as_mut_ptr().add(p),
-                         _mm256_mul_ps(_mm256_sub_ps(f, vz), vs));
-        p += F32_LANE;
-    }
-    for i in p..k {
-        out[i] = (codes[i] as f32 - z) * s;
+    // SAFETY: AVX2 is the caller's contract (`# Safety`); the 8-byte
+    // load and 8-float store stay inside `codes`/`out` (same length,
+    // asserted by the dispatch wrapper) via `p + F32_LANE <= k`.
+    unsafe {
+        let k = codes.len();
+        let vs = _mm256_set1_ps(s);
+        let vz = _mm256_set1_ps(z);
+        let mut p = 0usize;
+        while p + F32_LANE <= k {
+            // 8 codes zero-extended to i32, converted exactly to f32
+            let c = _mm256_cvtepu8_epi32(
+                _mm_loadl_epi64(codes.as_ptr().add(p) as *const __m128i));
+            let f = _mm256_cvtepi32_ps(c);
+            _mm256_storeu_ps(out.as_mut_ptr().add(p),
+                             _mm256_mul_ps(_mm256_sub_ps(f, vz), vs));
+            p += F32_LANE;
+        }
+        for i in p..k {
+            out[i] = (codes[i] as f32 - z) * s;
+        }
     }
 }
 

@@ -23,12 +23,19 @@
 //! See `DESIGN.md` for the full system inventory and the experiment index
 //! mapping every paper table/figure to a module and bench target.
 
+// Every unsafe operation inside an `unsafe fn` must sit in its own
+// `unsafe {}` block with a SAFETY comment — `lrq lint` and clippy's
+// `undocumented_unsafe_blocks` enforce the comments, this makes the
+// blocks themselves non-optional (DESIGN.md §12).
+#![deny(unsafe_op_in_unsafe_fn)]
+
 pub mod bench;
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod infer;
+pub mod lint;
 pub mod loadgen;
 pub mod methods;
 pub mod model;

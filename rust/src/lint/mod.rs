@@ -1,0 +1,631 @@
+//! `lrq lint` — the repo-native invariant linter (DESIGN.md §12).
+//!
+//! The engine's headline claims — bit-exact SIMD-vs-scalar kernels, a
+//! contractually *sequential* weight-only f32 GEMM, lock-free telemetry on
+//! relaxed atomics, a panic-free request path — are invariants that tests
+//! can only witness and comments can only describe. This module makes them
+//! machine-checked: a hand-rolled lexer ([`scan`]) feeds six rules driven
+//! by an allowlist config (`rust/lint.toml`), findings render as human
+//! text and as `LINT.json`, and the `lrq lint` subcommand exits nonzero on
+//! any violation (a blocking CI step). The rules:
+//!
+//! * **unsafe-confinement** — `unsafe` appears only in the allowlisted
+//!   module set (`[unsafe] allow`).
+//! * **undocumented-unsafe** — every `unsafe` carries a `// SAFETY:` (or
+//!   `/// # Safety`) comment.
+//! * **forbidden-intrinsic** — no identifier matches a forbidden pattern
+//!   (the saturating `maddubs` family, `[intrinsics] forbidden`).
+//! * **sequential-f32** — the contracted weight-only f32 kernels contain
+//!   no iterator reductions, chunking, or SIMD (`[sequential_f32]`).
+//! * **atomic-ordering** — `Ordering::{Relaxed,Acquire,Release,AcqRel}`
+//!   outside the exempt files needs a nearby justification comment.
+//! * **serving-panic** — no `unwrap()`/`expect()`/`panic!` in the
+//!   request-reachable serving path without a `// PANIC:` justification.
+//!
+//! Seeded-violation fixtures under `rust/lint_fixtures/` prove each rule
+//! fires (see the tests below); the real `src/` tree must stay clean.
+
+mod scan;
+
+use crate::{anyhow, bail, Context, Result};
+use scan::Scanned;
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+pub const UNSAFE_CONFINEMENT: &str = "unsafe-confinement";
+pub const UNDOCUMENTED_UNSAFE: &str = "undocumented-unsafe";
+pub const FORBIDDEN_INTRINSIC: &str = "forbidden-intrinsic";
+pub const SEQUENTIAL_F32: &str = "sequential-f32";
+pub const ATOMIC_ORDERING: &str = "atomic-ordering";
+pub const SERVING_PANIC: &str = "serving-panic";
+
+/// Every rule id, in report order.
+pub const RULES: &[&str] = &[
+    UNSAFE_CONFINEMENT,
+    UNDOCUMENTED_UNSAFE,
+    FORBIDDEN_INTRINSIC,
+    SEQUENTIAL_F32,
+    ATOMIC_ORDERING,
+    SERVING_PANIC,
+];
+
+/// How far a `SAFETY` comment may sit above its `unsafe` (doc comments on
+/// an attributed fn cross several attribute lines).
+const SAFETY_WALK: usize = 12;
+/// How far ordering / panic justifications may sit above their line.
+const NEAR_WALK: usize = 3;
+
+#[derive(Debug, Clone, Default)]
+pub struct LintConfig {
+    /// Files (relative to the scan root) where `unsafe` may appear.
+    pub unsafe_allow: Vec<String>,
+    /// Substring patterns no identifier may match.
+    pub forbidden_idents: Vec<String>,
+    /// Contractually-sequential fns as `(file, fn_name)`.
+    pub seq_fns: Vec<(String, String)>,
+    /// Method names (after `.`) forbidden inside those fns.
+    pub seq_methods: Vec<String>,
+    /// Bare identifiers forbidden inside those fns.
+    pub seq_idents: Vec<String>,
+    /// Identifier prefixes forbidden inside those fns.
+    pub seq_prefixes: Vec<String>,
+    /// Files exempt from the atomic-ordering rule.
+    pub ordering_exempt: Vec<String>,
+    /// Request-reachable paths (`dir/` prefix or exact file).
+    pub panic_paths: Vec<String>,
+}
+
+impl LintConfig {
+    /// Hand-rolled parser for the subset of TOML `lint.toml` uses:
+    /// `[section]` headers, `#` comments, and `key = ["…", …]` string
+    /// arrays (single- or multi-line). Unknown keys are errors so a typo
+    /// cannot silently disable a rule.
+    pub fn parse(text: &str) -> Result<LintConfig> {
+        let mut cfg = LintConfig::default();
+        let mut section = String::new();
+        let mut lines = text.lines().enumerate();
+        while let Some((ln, raw)) = lines.next() {
+            let line = strip_toml_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) =
+                line.strip_prefix('[').and_then(|s| s.strip_suffix(']'))
+            {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, mut val) = line
+                .split_once('=')
+                .map(|(k, v)| (k.trim().to_string(), v.trim().to_string()))
+                .ok_or_else(|| {
+                    anyhow!("lint.toml:{}: expected `key = [..]`", ln + 1)
+                })?;
+            while val.matches('[').count() > val.matches(']').count() {
+                let (_, cont) = lines.next().ok_or_else(|| {
+                    anyhow!("lint.toml:{}: unterminated array", ln + 1)
+                })?;
+                val.push(' ');
+                val.push_str(strip_toml_comment(cont).trim());
+            }
+            let items = parse_string_array(&val)
+                .with_context(|| format!("lint.toml:{}: key `{key}`", ln + 1))?;
+            match (section.as_str(), key.as_str()) {
+                ("unsafe", "allow") => cfg.unsafe_allow = items,
+                ("intrinsics", "forbidden") => cfg.forbidden_idents = items,
+                ("sequential_f32", "functions") => {
+                    for it in items {
+                        let (f, name) = it.split_once("::").ok_or_else(|| {
+                            anyhow!(
+                                "lint.toml:{}: expected `file.rs::fn_name`, \
+                                 got `{it}`",
+                                ln + 1
+                            )
+                        })?;
+                        cfg.seq_fns.push((f.to_string(), name.to_string()));
+                    }
+                }
+                ("sequential_f32", "methods") => cfg.seq_methods = items,
+                ("sequential_f32", "idents") => cfg.seq_idents = items,
+                ("sequential_f32", "prefixes") => cfg.seq_prefixes = items,
+                ("atomics", "exempt") => cfg.ordering_exempt = items,
+                ("serving", "paths") => cfg.panic_paths = items,
+                _ => bail!(
+                    "lint.toml:{}: unknown key `[{section}] {key}`",
+                    ln + 1
+                ),
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+fn strip_toml_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_string_array(val: &str) -> Result<Vec<String>> {
+    let inner = val
+        .trim()
+        .strip_prefix('[')
+        .and_then(|s| s.strip_suffix(']'))
+        .ok_or_else(|| anyhow!("expected a [\"…\", …] array, got `{val}`"))?;
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        let s = p
+            .strip_prefix('"')
+            .and_then(|s| s.strip_suffix('"'))
+            .ok_or_else(|| anyhow!("expected a quoted string, got `{p}`"))?;
+        out.push(s.to_string());
+    }
+    Ok(out)
+}
+
+#[derive(Debug, Clone)]
+pub struct Violation {
+    pub rule: &'static str,
+    /// Path relative to the scan root.
+    pub file: String,
+    /// 1-based line; 0 for file-level findings.
+    pub line: usize,
+    pub message: String,
+}
+
+#[derive(Debug)]
+pub struct LintReport {
+    pub root: String,
+    pub files: usize,
+    pub violations: Vec<Violation>,
+}
+
+impl LintReport {
+    pub fn counts(&self) -> BTreeMap<&'static str, usize> {
+        let mut m = BTreeMap::new();
+        for v in &self.violations {
+            *m.entry(v.rule).or_insert(0) += 1;
+        }
+        m
+    }
+
+    pub fn render_text(&self) -> String {
+        let mut s = String::new();
+        for v in &self.violations {
+            s.push_str(&format!("{}:{}: [{}] {}\n", v.file, v.line, v.rule,
+                                v.message));
+        }
+        if self.violations.is_empty() {
+            s.push_str(&format!(
+                "lint: clean — {} files under {}, 0 violations\n",
+                self.files, self.root
+            ));
+        } else {
+            s.push_str(&format!(
+                "lint: {} violation(s) across {} files under {}:",
+                self.violations.len(),
+                self.files,
+                self.root
+            ));
+            for (rule, n) in self.counts() {
+                s.push_str(&format!(" {rule}={n}"));
+            }
+            s.push('\n');
+        }
+        s
+    }
+
+    /// Hand-rolled JSON (the build image has no serde): the `LINT.json`
+    /// CI artifact. Every rule appears in `by_rule` (zero-filled) so a
+    /// dashboard can chart rules that never fire.
+    pub fn render_json(&self) -> String {
+        let counts = self.counts();
+        let mut s = String::from("{\n");
+        s.push_str(&format!("  \"root\": \"{}\",\n", esc(&self.root)));
+        s.push_str(&format!("  \"files_scanned\": {},\n", self.files));
+        s.push_str(&format!("  \"total\": {},\n", self.violations.len()));
+        s.push_str("  \"by_rule\": {");
+        for (i, rule) in RULES.iter().enumerate() {
+            if i > 0 {
+                s.push_str(", ");
+            }
+            s.push_str(&format!("\"{rule}\": {}",
+                                counts.get(rule).copied().unwrap_or(0)));
+        }
+        s.push_str("},\n  \"violations\": [\n");
+        for (i, v) in self.violations.iter().enumerate() {
+            let sep = if i + 1 == self.violations.len() { "" } else { "," };
+            s.push_str(&format!(
+                "    {{\"rule\": \"{}\", \"file\": \"{}\", \"line\": {}, \
+                 \"message\": \"{}\"}}{sep}\n",
+                v.rule,
+                esc(&v.file),
+                v.line,
+                esc(&v.message)
+            ));
+        }
+        s.push_str("  ]\n}\n");
+        s
+    }
+}
+
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32));
+            }
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Scan every `.rs` file under `root` and apply the rules.
+pub fn run(root: &Path, cfg: &LintConfig) -> Result<LintReport> {
+    let mut files: Vec<(String, PathBuf)> = Vec::new();
+    collect_rs(root, root, &mut files)?;
+    files.sort();
+    if files.is_empty() {
+        bail!("no .rs files under {}", root.display());
+    }
+    let mut violations = Vec::new();
+    let mut seen_rels: Vec<String> = Vec::new();
+    for (rel, path) in &files {
+        let src = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let sc = scan::scan(rel, &src);
+        seen_rels.push(rel.clone());
+        check_unsafe(&sc, cfg, &mut violations);
+        check_intrinsics(&sc, cfg, &mut violations);
+        check_sequential(&sc, cfg, &mut violations);
+        check_ordering(&sc, cfg, &mut violations);
+        check_serving_panic(&sc, cfg, &mut violations);
+    }
+    // a contracted fn's file going missing must fail loudly, not silently
+    // stop being checked
+    for (file, name) in &cfg.seq_fns {
+        if !seen_rels.iter().any(|r| r == file) {
+            violations.push(Violation {
+                rule: SEQUENTIAL_F32,
+                file: file.clone(),
+                line: 0,
+                message: format!(
+                    "contracted file not found under the scan root \
+                     (fn `{name}`) — if it moved, update lint.toml"
+                ),
+            });
+        }
+    }
+    violations.sort_by(|a, b| {
+        (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule))
+    });
+    Ok(LintReport {
+        root: root.display().to_string(),
+        files: files.len(),
+        violations,
+    })
+}
+
+fn collect_rs(root: &Path, dir: &Path,
+              out: &mut Vec<(String, PathBuf)>) -> Result<()> {
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        if path.is_dir() {
+            if path.file_name().is_some_and(|n| n == "target") {
+                continue;
+            }
+            collect_rs(root, &path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy().into_owned())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push((rel, path));
+        }
+    }
+    Ok(())
+}
+
+fn v(rule: &'static str, sc: &Scanned, line: usize,
+     message: String) -> Violation {
+    Violation { rule, file: sc.rel.clone(), line, message }
+}
+
+/// Rules 1+2 of the unsafe contract: confinement to the allowlisted
+/// modules, and a `SAFETY` justification on every occurrence (test code
+/// included — a test touching raw pointers owes the same explanation).
+fn check_unsafe(sc: &Scanned, cfg: &LintConfig, out: &mut Vec<Violation>) {
+    let allowed = cfg.unsafe_allow.iter().any(|a| a == &sc.rel);
+    for t in &sc.tokens {
+        if !t.is_ident("unsafe") {
+            continue;
+        }
+        if !allowed {
+            out.push(v(
+                UNSAFE_CONFINEMENT,
+                sc,
+                t.line,
+                format!(
+                    "`unsafe` outside the allowlisted modules ({}) — keep \
+                     raw-pointer and intrinsic code confined, or extend \
+                     [unsafe] allow in lint.toml",
+                    cfg.unsafe_allow.join(", ")
+                ),
+            ));
+        }
+        if !sc.justified(t.line, Some("safety"), SAFETY_WALK) {
+            out.push(v(
+                UNDOCUMENTED_UNSAFE,
+                sc,
+                t.line,
+                "`unsafe` without a `// SAFETY:` (or `/// # Safety`) \
+                 comment explaining why the contract holds"
+                    .into(),
+            ));
+        }
+    }
+}
+
+fn check_intrinsics(sc: &Scanned, cfg: &LintConfig,
+                    out: &mut Vec<Violation>) {
+    for t in &sc.tokens {
+        let Some(id) = t.ident() else { continue };
+        let low = id.to_lowercase();
+        for pat in &cfg.forbidden_idents {
+            if low.contains(pat.as_str()) {
+                out.push(v(
+                    FORBIDDEN_INTRINSIC,
+                    sc,
+                    t.line,
+                    format!(
+                        "identifier `{id}` matches forbidden intrinsic \
+                         pattern `{pat}` — the saturating multiply-add \
+                         family breaks the integer exactness contract \
+                         (DESIGN.md §11)"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn check_sequential(sc: &Scanned, cfg: &LintConfig,
+                    out: &mut Vec<Violation>) {
+    for (file, name) in &cfg.seq_fns {
+        if file != &sc.rel {
+            continue;
+        }
+        let Some((b, e)) = sc.fn_body(name) else {
+            out.push(v(
+                SEQUENTIAL_F32,
+                sc,
+                0,
+                format!(
+                    "contracted fn `{name}` not found in {} — if it was \
+                     renamed, update lint.toml",
+                    sc.rel
+                ),
+            ));
+            continue;
+        };
+        for idx in b..e.min(sc.tokens.len()) {
+            let t = &sc.tokens[idx];
+            let Some(id) = t.ident() else { continue };
+            let after_dot = idx > 0 && sc.tokens[idx - 1].is_punct('.');
+            if after_dot && cfg.seq_methods.iter().any(|m| m == id) {
+                out.push(v(
+                    SEQUENTIAL_F32,
+                    sc,
+                    t.line,
+                    format!(
+                        "`.{id}(…)` inside contractually-sequential \
+                         `{name}` — iterator/chunked reductions \
+                         reassociate the f32 accumulation that planned == \
+                         reference bit-equality depends on (DESIGN.md §11)"
+                    ),
+                ));
+            }
+            if cfg.seq_idents.iter().any(|m| m == id)
+                || cfg.seq_prefixes.iter().any(|p| id.starts_with(p.as_str()))
+            {
+                out.push(v(
+                    SEQUENTIAL_F32,
+                    sc,
+                    t.line,
+                    format!(
+                        "`{id}` inside contractually-sequential `{name}` — \
+                         no SIMD in the sequential f32 path"
+                    ),
+                ));
+            }
+        }
+    }
+}
+
+fn check_ordering(sc: &Scanned, cfg: &LintConfig, out: &mut Vec<Violation>) {
+    if cfg.ordering_exempt.iter().any(|e| e == &sc.rel) {
+        return;
+    }
+    const MODES: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel"];
+    let ts = &sc.tokens;
+    for i in 0..ts.len().saturating_sub(3) {
+        if !(ts[i].is_ident("Ordering") && ts[i + 1].is_punct(':')
+            && ts[i + 2].is_punct(':'))
+        {
+            continue;
+        }
+        let Some(mode) = ts[i + 3].ident() else { continue };
+        if !MODES.contains(&mode) {
+            continue;
+        }
+        let line = ts[i + 3].line;
+        if sc.in_test(line) {
+            continue;
+        }
+        if !sc.justified(line, None, NEAR_WALK) {
+            out.push(v(
+                ATOMIC_ORDERING,
+                sc,
+                line,
+                format!(
+                    "`Ordering::{mode}` without a nearby justification \
+                     comment — say why the weak ordering is sound here \
+                     (obs/registry.rs documents the one exempt lock-free \
+                     core)"
+                ),
+            ));
+        }
+    }
+}
+
+fn check_serving_panic(sc: &Scanned, cfg: &LintConfig,
+                       out: &mut Vec<Violation>) {
+    let scoped = cfg.panic_paths.iter().any(|p| {
+        if p.ends_with('/') {
+            sc.rel.starts_with(p.as_str())
+        } else {
+            &sc.rel == p
+        }
+    });
+    if !scoped {
+        return;
+    }
+    let ts = &sc.tokens;
+    for i in 0..ts.len() {
+        let Some(id) = ts[i].ident() else { continue };
+        let flagged = match id {
+            "unwrap" | "expect" => i > 0 && ts[i - 1].is_punct('.'),
+            "panic" | "unreachable" | "todo" | "unimplemented" => {
+                ts.get(i + 1).is_some_and(|t| t.is_punct('!'))
+            }
+            _ => false,
+        };
+        if !flagged {
+            continue;
+        }
+        let line = ts[i].line;
+        if sc.in_test(line) {
+            continue;
+        }
+        if !sc.justified(line, Some("panic:"), NEAR_WALK) {
+            out.push(v(
+                SERVING_PANIC,
+                sc,
+                line,
+                format!(
+                    "`{id}` in request-reachable serving code — propagate \
+                     an error onto the reject/error lifecycle events \
+                     instead, or justify with `// PANIC:`"
+                ),
+            ));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    fn repo_config() -> LintConfig {
+        let p = concat!(env!("CARGO_MANIFEST_DIR"), "/lint.toml");
+        LintConfig::parse(&std::fs::read_to_string(p).unwrap()).unwrap()
+    }
+
+    #[test]
+    fn config_parses_every_section() {
+        let cfg = repo_config();
+        assert!(cfg.unsafe_allow.contains(&"infer/simd.rs".to_string()));
+        assert!(!cfg.forbidden_idents.is_empty());
+        assert!(cfg.seq_fns.iter().any(|(f, n)| f == "infer/kernels.rs"
+            && n == "dot_f32_u8"));
+        assert!(!cfg.seq_methods.is_empty());
+        assert!(cfg.ordering_exempt.contains(&"obs/registry.rs".to_string()));
+        assert!(cfg.panic_paths.contains(&"serve/".to_string()));
+    }
+
+    #[test]
+    fn config_rejects_unknown_keys() {
+        assert!(LintConfig::parse("[unsafe]\ntypo = [\"x\"]\n").is_err());
+        assert!(LintConfig::parse("[serving]\npaths = [unquoted]\n").is_err());
+    }
+
+    #[test]
+    fn the_tree_as_merged_is_clean() {
+        let root = concat!(env!("CARGO_MANIFEST_DIR"), "/src");
+        let rep = run(Path::new(root), &repo_config()).unwrap();
+        assert!(rep.violations.is_empty(),
+                "src/ must lint clean:\n{}", rep.render_text());
+        assert!(rep.files >= 12, "expected the whole tree to be scanned");
+    }
+
+    #[test]
+    fn every_rule_fires_on_its_seeded_fixture() {
+        let root = concat!(env!("CARGO_MANIFEST_DIR"), "/lint_fixtures");
+        let rep = run(Path::new(root), &repo_config()).unwrap();
+        let counts = rep.counts();
+        for rule in RULES {
+            assert!(
+                counts.get(rule).copied().unwrap_or(0) > 0,
+                "rule {rule} never fired on the fixtures:\n{}",
+                rep.render_text()
+            );
+        }
+        // the `// PANIC:` escape hatch: bad.rs seeds two unjustified
+        // panic sites plus one justified site that must NOT fire
+        assert_eq!(counts[SERVING_PANIC], 2, "{}", rep.render_text());
+        // the allowlisted fixture with a SAFETY comment must not also
+        // trip undocumented-unsafe (ops.rs is confinement-only)
+        assert!(!rep.violations.iter().any(|f| f.rule == UNDOCUMENTED_UNSAFE
+            && f.file == "infer/ops.rs"), "{}", rep.render_text());
+        let json = rep.render_json();
+        for rule in RULES {
+            assert!(json.contains(rule));
+        }
+        assert!(json.contains("\"total\""));
+    }
+
+    #[test]
+    fn report_renders_clean_and_dirty() {
+        let rep = LintReport {
+            root: "src".into(),
+            files: 3,
+            violations: vec![],
+        };
+        assert!(rep.render_text().contains("clean"));
+        assert!(rep.render_json().contains("\"total\": 0"));
+        let rep = LintReport {
+            root: "src".into(),
+            files: 3,
+            violations: vec![Violation {
+                rule: SERVING_PANIC,
+                file: "serve/mod.rs".into(),
+                line: 7,
+                message: "say \"why\"".into(),
+            }],
+        };
+        assert!(rep.render_text().contains("serve/mod.rs:7"));
+        // quotes in messages must stay valid JSON
+        assert!(rep.render_json().contains("say \\\"why\\\""));
+    }
+}

@@ -1,0 +1,586 @@
+//! A minimal Rust lexer for `lrq lint` (DESIGN.md §12).
+//!
+//! The build image has no crates.io, so the linter cannot lean on `syn`;
+//! instead this module splits a source file into just enough structure
+//! for the rules to anchor on without a real parser:
+//!
+//! * a flat stream of **code tokens** ([`Tok`]: identifiers, single
+//!   punctuation characters, numeric literals) with 1-based line numbers.
+//!   String literals, char literals, lifetimes and comments are consumed
+//!   but emit nothing, so brace matching over the stream is reliable and
+//!   a `"maddubs"` inside a doc string can never trip a rule;
+//! * per-line structure ([`LineInfo`]): does the line hold code, is its
+//!   first code token a `#` (attribute lines are transparent to the
+//!   justification walks), and the concatenated text of every comment
+//!   touching the line — the raw material for the `SAFETY:` / `PANIC:` /
+//!   ordering-justification walks;
+//! * the line ranges of `#[cfg(test)] mod … { … }` bodies, so rules can
+//!   exempt test code.
+
+/// One code token. `::` arrives as two `:` puncts; the rules match on
+/// short token sequences instead of grammar.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TokKind {
+    /// Identifier or keyword.
+    Ident(String),
+    /// A single punctuation character.
+    Punct(char),
+    /// A numeric literal (the value is irrelevant to every rule).
+    Num,
+}
+
+#[derive(Debug, Clone)]
+pub struct Tok {
+    /// 1-based source line.
+    pub line: usize,
+    pub kind: TokKind,
+}
+
+impl Tok {
+    pub fn is_ident(&self, s: &str) -> bool {
+        matches!(&self.kind, TokKind::Ident(t) if t == s)
+    }
+
+    pub fn is_punct(&self, c: char) -> bool {
+        self.kind == TokKind::Punct(c)
+    }
+
+    pub fn ident(&self) -> Option<&str> {
+        match &self.kind {
+            TokKind::Ident(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct LineInfo {
+    pub has_code: bool,
+    /// The first code token on the line is `#` — an attribute (or the
+    /// crate-level `#![…]` form).
+    pub is_attr: bool,
+    /// Concatenated text of every comment that touches this line.
+    pub comment: Option<String>,
+}
+
+#[derive(Debug)]
+pub struct Scanned {
+    /// Path relative to the scan root, `/`-separated.
+    pub rel: String,
+    pub tokens: Vec<Tok>,
+    /// 1-based: `lines[0]` is a placeholder.
+    pub lines: Vec<LineInfo>,
+    /// Inclusive line ranges of `#[cfg(test)] mod … { … }` bodies.
+    pub test_ranges: Vec<(usize, usize)>,
+}
+
+impl Scanned {
+    pub fn in_test(&self, line: usize) -> bool {
+        self.test_ranges.iter().any(|&(s, e)| line >= s && line <= e)
+    }
+
+    /// The justification walk shared by the comment-anchored rules: a
+    /// marker comment (`marker == None` accepts *any* comment) counts if
+    /// it sits on `line` itself or within `max_up` lines above, with only
+    /// blank lines, attribute lines and other comment lines in between.
+    /// The first real code line above ends the walk — a comment separated
+    /// from its subject by code justifies nothing. Markers are matched
+    /// case-insensitively, so `// SAFETY:` and `/// # Safety` both hit
+    /// `"safety"`.
+    pub fn justified(&self, line: usize, marker: Option<&str>,
+                     max_up: usize) -> bool {
+        let hit = |l: usize| -> bool {
+            let comment = self.lines.get(l).and_then(|i| i.comment.as_deref());
+            match (comment, marker) {
+                (Some(c), Some(m)) => c.to_lowercase().contains(m),
+                (Some(_), None) => true,
+                (None, _) => false,
+            }
+        };
+        if hit(line) {
+            return true;
+        }
+        let mut l = line;
+        for _ in 0..max_up {
+            if l <= 1 {
+                break;
+            }
+            l -= 1;
+            if hit(l) {
+                return true;
+            }
+            if let Some(info) = self.lines.get(l) {
+                if info.has_code && !info.is_attr {
+                    return false;
+                }
+            }
+        }
+        false
+    }
+
+    /// Token-index range (exclusive of the braces) of the body of the
+    /// first `fn <name>` in the stream. `None` if the fn is absent or is
+    /// a bodyless trait declaration.
+    pub fn fn_body(&self, name: &str) -> Option<(usize, usize)> {
+        let ts = &self.tokens;
+        let n = ts.len();
+        for i in 0..n.saturating_sub(1) {
+            if !(ts[i].is_ident("fn") && ts[i + 1].is_ident(name)) {
+                continue;
+            }
+            let mut b = i + 2;
+            while b < n && !ts[b].is_punct('{') {
+                if ts[b].is_punct(';') {
+                    return None;
+                }
+                b += 1;
+            }
+            if b >= n {
+                return None;
+            }
+            let mut depth = 1usize;
+            let mut e = b + 1;
+            while e < n && depth > 0 {
+                if ts[e].is_punct('{') {
+                    depth += 1;
+                } else if ts[e].is_punct('}') {
+                    depth -= 1;
+                }
+                e += 1;
+            }
+            return Some((b + 1, e.saturating_sub(1)));
+        }
+        None
+    }
+}
+
+fn note_comment(lines: &mut [LineInfo], l: usize, text: &str) {
+    if let Some(info) = lines.get_mut(l) {
+        match &mut info.comment {
+            Some(c) => {
+                c.push(' ');
+                c.push_str(text);
+            }
+            None => info.comment = Some(text.to_string()),
+        }
+    }
+}
+
+fn note_code(lines: &mut [LineInfo], l: usize, first_is_hash: bool) {
+    if let Some(info) = lines.get_mut(l) {
+        if !info.has_code {
+            info.has_code = true;
+            info.is_attr = first_is_hash;
+        }
+    }
+}
+
+fn push_tok(tokens: &mut Vec<Tok>, lines: &mut [LineInfo], line: usize,
+            kind: TokKind) {
+    note_code(lines, line, kind == TokKind::Punct('#'));
+    tokens.push(Tok { line, kind });
+}
+
+/// Consume a `"…"` string (escapes, multi-line) starting at the opening
+/// quote; returns the index just past the closing quote.
+fn consume_str(chars: &[char], mut i: usize, line: &mut usize,
+               lines: &mut [LineInfo]) -> usize {
+    let n = chars.len();
+    i += 1;
+    while i < n {
+        match chars[i] {
+            '\\' => {
+                if chars.get(i + 1) == Some(&'\n') {
+                    *line += 1;
+                    note_code(lines, *line, false);
+                }
+                i += 2;
+            }
+            '"' => return i + 1,
+            '\n' => {
+                *line += 1;
+                note_code(lines, *line, false);
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Consume a raw string starting at its opening quote; ends at `"` followed
+/// by `hashes` `#`s.
+fn consume_raw_str(chars: &[char], mut i: usize, hashes: usize,
+                   line: &mut usize, lines: &mut [LineInfo]) -> usize {
+    let n = chars.len();
+    i += 1;
+    while i < n {
+        match chars[i] {
+            '\n' => {
+                *line += 1;
+                note_code(lines, *line, false);
+                i += 1;
+            }
+            '"' => {
+                let mut k = 0;
+                while k < hashes && chars.get(i + 1 + k) == Some(&'#') {
+                    k += 1;
+                }
+                if k == hashes {
+                    return i + 1 + hashes;
+                }
+                i += 1;
+            }
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+/// Consume a char-literal body starting just past the opening `'`.
+fn consume_char_lit(chars: &[char], mut i: usize) -> usize {
+    let n = chars.len();
+    while i < n {
+        match chars[i] {
+            '\\' => i += 2,
+            '\'' => return i + 1,
+            _ => i += 1,
+        }
+    }
+    i
+}
+
+pub fn scan(rel: &str, src: &str) -> Scanned {
+    let chars: Vec<char> = src.chars().collect();
+    let n = chars.len();
+    let nlines = src.lines().count().max(1);
+    let mut lines = vec![LineInfo::default(); nlines + 2];
+    let mut tokens: Vec<Tok> = Vec::new();
+    let mut line = 1usize;
+    let mut i = 0usize;
+
+    while i < n {
+        let c = chars[i];
+        if c == '\n' {
+            line += 1;
+            i += 1;
+            continue;
+        }
+        if c.is_whitespace() {
+            i += 1;
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '/' {
+            let start = i;
+            while i < n && chars[i] != '\n' {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            note_comment(&mut lines, line, text.trim());
+            continue;
+        }
+        if c == '/' && i + 1 < n && chars[i + 1] == '*' {
+            // block comment, nesting per the Rust grammar
+            let mut depth = 1usize;
+            let mut seg = String::new();
+            i += 2;
+            while i < n && depth > 0 {
+                if chars[i] == '\n' {
+                    note_comment(&mut lines, line, seg.trim());
+                    seg.clear();
+                    line += 1;
+                    i += 1;
+                } else if chars[i] == '/' && i + 1 < n && chars[i + 1] == '*' {
+                    depth += 1;
+                    seg.push_str("/*");
+                    i += 2;
+                } else if chars[i] == '*' && i + 1 < n && chars[i + 1] == '/' {
+                    depth -= 1;
+                    i += 2;
+                } else {
+                    seg.push(chars[i]);
+                    i += 1;
+                }
+            }
+            note_comment(&mut lines, line, seg.trim());
+            continue;
+        }
+        if c == '"' {
+            note_code(&mut lines, line, false);
+            i = consume_str(&chars, i, &mut line, &mut lines);
+            continue;
+        }
+        if c == '\'' {
+            // lifetime vs char literal: `'a>` is a lifetime, `'a'` a char
+            let c1 = chars.get(i + 1).copied();
+            let c2 = chars.get(i + 2).copied();
+            let lifetime = matches!(c1, Some(x) if x == '_' || x.is_alphabetic())
+                && c2 != Some('\'');
+            note_code(&mut lines, line, false);
+            if lifetime {
+                i += 2;
+                while i < n && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                    i += 1;
+                }
+            } else {
+                i = consume_char_lit(&chars, i + 1);
+            }
+            continue;
+        }
+        if c == 'r' || c == 'b' {
+            // the literal prefixes: b'…', b"…", r"…", br"…", r#"…"#,
+            // br#"…"#, and raw identifiers r#foo
+            let c1 = chars.get(i + 1).copied();
+            if c == 'b' && c1 == Some('\'') {
+                note_code(&mut lines, line, false);
+                i = consume_char_lit(&chars, i + 2);
+                continue;
+            }
+            if c1 == Some('"') {
+                note_code(&mut lines, line, false);
+                i = consume_str(&chars, i + 1, &mut line, &mut lines);
+                continue;
+            }
+            let (pref, rest) = if c == 'b' && c1 == Some('r') {
+                (2usize, chars.get(i + 2).copied())
+            } else {
+                (1usize, c1)
+            };
+            if pref == 2 && rest == Some('"') {
+                note_code(&mut lines, line, false);
+                i = consume_str(&chars, i + pref, &mut line, &mut lines);
+                continue;
+            }
+            if rest == Some('#') {
+                let mut h = i + pref;
+                let mut hashes = 0usize;
+                while chars.get(h) == Some(&'#') {
+                    h += 1;
+                    hashes += 1;
+                }
+                if chars.get(h) == Some(&'"') {
+                    note_code(&mut lines, line, false);
+                    i = consume_raw_str(&chars, h, hashes, &mut line,
+                                        &mut lines);
+                    continue;
+                }
+                if c == 'r' && hashes == 1
+                    && matches!(chars.get(h),
+                                Some(x) if *x == '_' || x.is_alphabetic())
+                {
+                    // raw identifier r#foo lexes as the ident `foo`
+                    let start = h;
+                    let mut j = h;
+                    while j < n && (chars[j] == '_' || chars[j].is_alphanumeric())
+                    {
+                        j += 1;
+                    }
+                    let text: String = chars[start..j].iter().collect();
+                    push_tok(&mut tokens, &mut lines, line,
+                             TokKind::Ident(text));
+                    i = j;
+                    continue;
+                }
+            }
+            // plain identifier that happens to start with r/b
+        }
+        if c == '_' || c.is_alphabetic() {
+            let start = i;
+            while i < n && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                i += 1;
+            }
+            let text: String = chars[start..i].iter().collect();
+            push_tok(&mut tokens, &mut lines, line, TokKind::Ident(text));
+            continue;
+        }
+        if c.is_ascii_digit() {
+            // loose: suffixes and hex digits ride along, `.` does not (so
+            // `0..k` and tuple access stay puncts)
+            while i < n && (chars[i] == '_' || chars[i].is_alphanumeric()) {
+                i += 1;
+            }
+            push_tok(&mut tokens, &mut lines, line, TokKind::Num);
+            continue;
+        }
+        push_tok(&mut tokens, &mut lines, line, TokKind::Punct(c));
+        i += 1;
+    }
+
+    let test_ranges = test_regions(&tokens);
+    Scanned { rel: rel.to_string(), tokens, lines, test_ranges }
+}
+
+/// `start` indexes the `[` of an attribute; returns the index just past
+/// the matching `]` and whether the attribute tokens contain a literal
+/// `cfg ( test )` sequence (`cfg(not(test))` deliberately does not match).
+fn scan_attr(tokens: &[Tok], start: usize) -> (usize, bool) {
+    let n = tokens.len();
+    let mut depth = 0usize;
+    let mut j = start;
+    let mut end = n;
+    while j < n {
+        if tokens[j].is_punct('[') {
+            depth += 1;
+        } else if tokens[j].is_punct(']') {
+            depth = depth.saturating_sub(1);
+            if depth == 0 {
+                end = j + 1;
+                break;
+            }
+        }
+        j += 1;
+    }
+    let attr = &tokens[start..end.min(n)];
+    let mut cfg_test = false;
+    for w in 0..attr.len().saturating_sub(3) {
+        if attr[w].is_ident("cfg") && attr[w + 1].is_punct('(')
+            && attr[w + 2].is_ident("test") && attr[w + 3].is_punct(')')
+        {
+            cfg_test = true;
+            break;
+        }
+    }
+    (end.min(n), cfg_test)
+}
+
+fn test_regions(tokens: &[Tok]) -> Vec<(usize, usize)> {
+    let mut out = Vec::new();
+    let n = tokens.len();
+    let mut i = 0usize;
+    while i < n {
+        if !(tokens[i].is_punct('#') && i + 1 < n && tokens[i + 1].is_punct('['))
+        {
+            i += 1;
+            continue;
+        }
+        let (attr_end, is_cfg_test) = scan_attr(tokens, i + 1);
+        if !is_cfg_test {
+            i = attr_end;
+            continue;
+        }
+        // skip further attributes stacked between cfg(test) and the item
+        let mut k = attr_end;
+        while k + 1 < n && tokens[k].is_punct('#') && tokens[k + 1].is_punct('[')
+        {
+            let (e, _) = scan_attr(tokens, k + 1);
+            k = e;
+        }
+        if k < n && tokens[k].is_ident("mod") {
+            let mut b = k + 1;
+            while b < n && !tokens[b].is_punct('{') && !tokens[b].is_punct(';')
+            {
+                b += 1;
+            }
+            if b < n && tokens[b].is_punct('{') {
+                let start_line = tokens[b].line;
+                let mut depth = 1usize;
+                let mut e = b + 1;
+                while e < n && depth > 0 {
+                    if tokens[e].is_punct('{') {
+                        depth += 1;
+                    } else if tokens[e].is_punct('}') {
+                        depth -= 1;
+                    }
+                    e += 1;
+                }
+                let end_line = tokens[e.saturating_sub(1).min(n - 1)].line;
+                out.push((start_line, end_line));
+                i = e;
+                continue;
+            }
+        }
+        i = attr_end;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strings_comments_and_lifetimes_emit_no_tokens() {
+        let src = "fn f<'a>(x: &'a str) -> char {\n\
+                   let s = \"unsafe // not code\"; // trailing\n\
+                   let r = r#\"raw \"quoted\" body\"#;\n\
+                   let b = b\"bytes\";\n\
+                   /* block /* nested */ comment */\n\
+                   let c = 'x'; let nl = '\\n';\n\
+                   'y'\n}\n";
+        let sc = scan("t.rs", src);
+        assert!(!sc.tokens.iter().any(|t| t.is_ident("unsafe")),
+                "string contents leaked into the token stream");
+        assert!(!sc.tokens.iter().any(|t| t.is_ident("trailing")));
+        assert!(!sc.tokens.iter().any(|t| t.is_ident("nested")));
+        assert!(!sc.tokens.iter().any(|t| t.is_ident("quoted")));
+        // lifetime idents are consumed, the fn/let skeleton survives
+        assert!(sc.tokens.iter().any(|t| t.is_ident("fn")));
+        assert!(sc.tokens.iter().filter(|t| t.is_ident("let")).count() == 5);
+        // trailing comment landed on line 2
+        assert!(sc.lines[2].comment.as_deref().unwrap().contains("trailing"));
+        assert!(sc.lines[2].has_code);
+    }
+
+    #[test]
+    fn line_numbers_survive_multiline_strings() {
+        let src = "let a = \"line one\n line two\";\nfn marker() {}\n";
+        let sc = scan("t.rs", src);
+        let m = sc.tokens.iter().find(|t| t.is_ident("marker")).unwrap();
+        assert_eq!(m.line, 3);
+        assert!(sc.lines[2].has_code, "string continuation counts as code");
+    }
+
+    #[test]
+    fn cfg_test_mod_region_is_detected() {
+        let src = "fn live() {}\n\
+                   #[cfg(test)]\n\
+                   #[allow(dead_code)]\n\
+                   mod tests {\n\
+                   fn t() { x.unwrap(); }\n\
+                   }\n\
+                   fn after() {}\n";
+        let sc = scan("t.rs", src);
+        assert_eq!(sc.test_ranges, vec![(4, 6)]);
+        assert!(sc.in_test(5));
+        assert!(!sc.in_test(1));
+        assert!(!sc.in_test(7));
+    }
+
+    #[test]
+    fn cfg_not_test_is_not_a_test_region() {
+        let src = "#[cfg(not(test))]\nmod real { fn f() {} }\n";
+        let sc = scan("t.rs", src);
+        assert!(sc.test_ranges.is_empty());
+    }
+
+    #[test]
+    fn justification_walk_skips_attrs_and_stops_at_code() {
+        let src = "// SAFETY: top comment\n\
+                   #[inline]\n\
+                   fn a() {}\n\
+                   fn b() {}\n";
+        let sc = scan("t.rs", src);
+        // line 3 (fn a): walk crosses the attr on line 2 to the comment
+        assert!(sc.justified(3, Some("safety"), 3));
+        // line 4 (fn b): line 3 is real code — the walk must stop
+        assert!(!sc.justified(4, Some("safety"), 8));
+        // marker=None accepts any comment
+        assert!(sc.justified(3, None, 3));
+        assert!(!sc.justified(4, None, 2));
+    }
+
+    #[test]
+    fn fn_body_brace_matching() {
+        let src = "fn outer(x: usize) -> usize {\n\
+                   if x > 0 { inner() } else { 0 }\n\
+                   }\n\
+                   fn tail() { other.sum() }\n";
+        let sc = scan("t.rs", src);
+        let (b, e) = sc.fn_body("outer").unwrap();
+        let body = &sc.tokens[b..e];
+        assert!(body.iter().any(|t| t.is_ident("inner")));
+        assert!(!body.iter().any(|t| t.is_ident("sum")),
+                "body range leaked into the next fn");
+        assert!(sc.fn_body("missing").is_none());
+    }
+}

@@ -68,6 +68,7 @@ fn dispatch(args: &Args) -> Result<()> {
             tables::run_table(id, args)
         }
         "report" => tables::run_all(args),
+        "lint" => lint_cmd(args),
         "debug-loss" => debug_loss(args),
         _ => {
             println!("{}", HELP);
@@ -124,6 +125,10 @@ commands:
                                      (fig1 fig2 fig3 fig4a fig4b fig5
                                       t1 t3 t5 t7 t9 t13 t29 t30 t31 kvq)
   report                             regenerate all tables/figures
+  lint     [--root DIR] [--config lint.toml] [--json LINT.json]
+           run the repo invariant linter (DESIGN.md §12) over --root
+           (default src, relative to the rust/ crate dir); prints findings,
+           writes the JSON report, exits nonzero on any violation
 
 common flags: --artifacts DIR (default ./artifacts), --seed S
 observability (serve-native / generate-native / stats):
@@ -796,6 +801,27 @@ fn stats(args: &Args) -> Result<()> {
 
 /// Consistency probe: loss reported by the train_step artifact (lr=0) vs the
 /// chained embed→block→head engine on the same weights and batch.
+/// `lrq lint`: run the invariant linter (DESIGN.md §12) and fail the
+/// process on any violation — the blocking CI step.
+fn lint_cmd(args: &Args) -> Result<()> {
+    let root = args.get_or("root", "src");
+    let config = args.get_or("config", "lint.toml");
+    let json_out = args.get_or("json", "LINT.json");
+    let cfg_text = std::fs::read_to_string(&config)
+        .with_context(|| format!("reading lint config {config} (run from \
+                                  the rust/ crate dir, or pass --config)"))?;
+    let cfg = lrq::lint::LintConfig::parse(&cfg_text)?;
+    let report = lrq::lint::run(Path::new(&root), &cfg)?;
+    print!("{}", report.render_text());
+    std::fs::write(&json_out, report.render_json())
+        .with_context(|| format!("writing {json_out}"))?;
+    println!("wrote {json_out}");
+    if !report.violations.is_empty() {
+        anyhow::bail!("{} lint violation(s)", report.violations.len());
+    }
+    Ok(())
+}
+
 fn debug_loss(args: &Args) -> Result<()> {
     use lrq::runtime::{ids_lit, scalar_from_lit, scalar_lit, to_lit};
     let rt = load_runtime(args)?;

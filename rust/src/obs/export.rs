@@ -3,6 +3,8 @@
 
 use std::io::{Read, Write};
 use std::net::{SocketAddr, TcpListener};
+// Relaxed: the exporter's stop flag is an independent latch polled once per
+// accept timeout — no other memory is published through it.
 use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::Arc;
 use std::thread::JoinHandle;

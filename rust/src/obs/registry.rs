@@ -383,6 +383,70 @@ mod tests {
         assert!(txt.contains("lrq_test_lat_us_count 3"), "{txt}");
     }
 
+    /// TSan-facing hammer: 8 threads pound one counter, one gauge, and one
+    /// histogram through their `Arc` handles while a 9th keeps rendering
+    /// snapshots. Totals must be exact — lost updates or torn reads under
+    /// contention are precisely what this lane exists to catch.
+    #[test]
+    fn concurrent_hammer_keeps_exact_totals() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        const THREADS: usize = 8;
+        const OPS: u64 = 2_000;
+
+        let r = Arc::new(Registry::new());
+        let c = r.counter("lrq_hammer_total", "hammered counter");
+        let g = r.gauge("lrq_hammer_depth", "hammered gauge");
+        let h = r.histogram("lrq_hammer_lat_us", "hammered hist",
+                            &[10, 100, 1000]);
+
+        let stop = Arc::new(AtomicBool::new(false));
+        let reader = {
+            let (r, stop) = (r.clone(), stop.clone());
+            std::thread::spawn(move || {
+                let mut snaps = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    // concurrent renders must never tear or panic
+                    let txt = r.render();
+                    assert!(txt.contains("lrq_hammer_total"), "{txt}");
+                    snaps += 1;
+                }
+                snaps
+            })
+        };
+
+        let workers: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let (c, g, h) = (c.clone(), g.clone(), h.clone());
+                std::thread::spawn(move || {
+                    for i in 0..OPS {
+                        c.inc();
+                        g.add(1);
+                        h.record(i % 2_000);
+                        g.add(-1);
+                    }
+                })
+            })
+            .collect();
+        for w in workers {
+            w.join().expect("hammer worker panicked");
+        }
+        stop.store(true, Ordering::SeqCst);
+        assert!(reader.join().expect("render reader panicked") > 0);
+
+        let n = THREADS as u64 * OPS;
+        assert_eq!(c.get(), n);
+        assert_eq!(g.get(), 0, "every add(1) was matched by add(-1)");
+        assert_eq!(h.count(), n);
+        // each thread records 0..OPS once: sum = THREADS * OPS*(OPS-1)/2
+        assert_eq!(h.sum(), THREADS as u64 * (OPS * (OPS - 1) / 2));
+        let txt = r.render();
+        assert!(txt.contains(&format!("lrq_hammer_total {n}")), "{txt}");
+        assert!(txt.contains(&format!("lrq_hammer_lat_us_count {n}")),
+                "{txt}");
+    }
+
     #[test]
     fn engine_counters_render_and_accumulate() {
         let before = engine::TILES_EXECUTED.get();

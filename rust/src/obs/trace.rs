@@ -49,6 +49,8 @@ thread_local! {
     static TL: (u64, Buf) = {
         let buf: Buf = Arc::new(Mutex::new(Vec::new()));
         BUFS.lock().unwrap().push(buf.clone());
+        // Relaxed: a uniqueness tick for thread ids — no other memory is
+        // published through it, the buffer itself travels via the mutex.
         (NEXT_TID.fetch_add(1, Ordering::Relaxed), buf)
     };
 }
@@ -125,6 +127,8 @@ pub fn init(path: &Path) -> Result<()> {
     // belong to the old trace
     drain_all();
     let _ = epoch();
+    // Release: publishes the sink + epoch initialised above to any thread
+    // whose relaxed probe observes the flag flip and starts emitting.
     ENABLED.store(true, Ordering::Release);
     Ok(())
 }
@@ -132,6 +136,8 @@ pub fn init(path: &Path) -> Result<()> {
 /// Is tracing active? One relaxed load — the universal probe gate.
 #[inline]
 pub fn enabled() -> bool {
+    // Relaxed: a stale read only costs one dropped/extra event; emitters
+    // take the sink mutex before writing, which orders the actual data.
     ENABLED.load(Ordering::Relaxed)
 }
 

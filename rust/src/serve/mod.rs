@@ -58,7 +58,16 @@ pub use metrics::Metrics;
 static NEXT_RID: AtomicU64 = AtomicU64::new(1);
 
 fn next_rid() -> u64 {
+    // Relaxed: a uniqueness tick — no other memory is published with it.
     NEXT_RID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Poison-tolerant metrics access for the serving path. A thread that
+/// panicked while holding the lock leaves plain accumulator state behind —
+/// still safe to read and update — and losing telemetry must never take
+/// the batch loop (and every in-flight request) down with it.
+fn lock_metrics(m: &Mutex<Metrics>) -> std::sync::MutexGuard<'_, Metrics> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
 }
 
 /// Engine-side handle of an active decode sequence (its KV cache lives
@@ -286,17 +295,24 @@ impl Server {
         Ok(Server { tx: Some(tx), handle: Some(handle), metrics })
     }
 
+    /// A submission handle. After [`Server::shutdown`] the handle is wired
+    /// to a closed channel, so every submit reports "server stopped"
+    /// (recorded as a Reject on the event log) instead of panicking in
+    /// the caller's thread.
     pub fn client(&self) -> Client {
-        Client {
-            tx: self.tx.as_ref().expect("server running").clone(),
-            events: self.metrics.lock().unwrap().events(),
-        }
+        let tx = match self.tx.as_ref() {
+            Some(tx) => tx.clone(),
+            // dropping the receiver half makes every send fail, which
+            // submit/submit_generate map onto the error path
+            None => channel().0,
+        };
+        Client { tx, events: lock_metrics(&self.metrics).events() }
     }
 
     /// The server's lifecycle event log (for JSONL export, stuck-sequence
     /// checks, and SLO aggregation after shutdown).
     pub fn events(&self) -> Arc<EventLog> {
-        self.metrics.lock().unwrap().events()
+        lock_metrics(&self.metrics).events()
     }
 
     /// Stop the engine and join. Active decode sequences are drained first
@@ -348,7 +364,7 @@ struct ScoreRows {
 
 fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
                rx: Receiver<Request>, metrics: Arc<Mutex<Metrics>>) {
-    let events = metrics.lock().unwrap().events();
+    let events = lock_metrics(&metrics).events();
     let bcap = cfg.max_batch.min(scorer.batch_size()).max(1);
     let seq = scorer.seq_len();
     let mut rows = ScoreRows::default();
@@ -398,7 +414,7 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
         }
         if !open && scores.is_empty() && gens.is_empty() && active.is_empty()
         {
-            metrics.lock().unwrap().set_occupancy(0, 0);
+            lock_metrics(&metrics).set_occupancy(0, 0);
             return;
         }
         // ---- one score batch ----
@@ -424,7 +440,7 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
         if !active.is_empty() {
             decode_round(scorer, &mut active, bcap, &metrics, &events);
         }
-        metrics.lock().unwrap().set_occupancy(active.len(), gens.len());
+        lock_metrics(&metrics).set_occupancy(active.len(), gens.len());
     }
 }
 
@@ -481,7 +497,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
     trace::complete_at(t0, exec_time, || {
         ("score_batch".to_string(), Some(format!("{{\"rows\":{n}}}")))
     });
-    metrics.lock().unwrap().record_batch(exec_time, n);
+    lock_metrics(metrics).record_batch(exec_time, n);
     let exec_us = exec_time.as_micros() as u64;
     match scored {
         Ok(logp) => {
@@ -489,7 +505,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
                 let row = &logp[i * seq..(i + 1) * seq];
                 let sum: f32 = row[..rows.lens[i] - 1].iter().sum();
                 let latency = r.submitted.elapsed();
-                metrics.lock().unwrap().record(latency);
+                lock_metrics(metrics).record(latency);
                 events.record(r.rid, ReqKind::Score, EventKind::Exec,
                               exec_us);
                 let sent = r.resp.send(Ok(ScoreResponse {
@@ -510,7 +526,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
             // and exec metrics still count
             let msg = format!("{e:#}");
             for r in valid {
-                metrics.lock().unwrap().record(r.submitted.elapsed());
+                lock_metrics(metrics).record(r.submitted.elapsed());
                 events.record(r.rid, ReqKind::Score, EventKind::Exec,
                               exec_us);
                 let sent = r.resp.send(Err(msg.clone()));
@@ -558,7 +574,7 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
         Err(e) => {
             // engine-error path: the prefill executed (and failed) — the
             // request still counts, like the score-batch error path
-            metrics.lock().unwrap().record(g.submitted.elapsed());
+            lock_metrics(metrics).record(g.submitted.elapsed());
             let sent = g.resp.send(Err(format!("{e:#}")));
             trace::async_end("generate", g.rid);
             events.record(g.rid, ReqKind::Generate,
@@ -597,7 +613,7 @@ fn finish(scorer: &mut dyn BatchScorer, a: ActiveSeq,
     scorer.end_decode(a.sid);
     let latency = a.submitted.elapsed();
     let n_tokens = a.tokens.len();
-    metrics.lock().unwrap().record_gen(latency, n_tokens);
+    lock_metrics(metrics).record_gen(latency, n_tokens);
     let sent = a.resp.send(Ok(GenerateResponse {
         tokens: a.tokens,
         latency,
@@ -616,10 +632,33 @@ fn finish(scorer: &mut dyn BatchScorer, a: ActiveSeq,
 fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
                 bcap: usize, metrics: &Arc<Mutex<Metrics>>,
                 events: &EventLog) {
+    // admit() guarantees every active sequence carries >= 1 sampled token;
+    // if that invariant ever breaks, fail the sequence onto its event log
+    // instead of panicking the batch loop for every in-flight request
+    let mut idx = 0usize;
+    while idx < active.len() {
+        if active[idx].tokens.is_empty() {
+            let a = active.remove(idx);
+            scorer.end_decode(a.sid);
+            lock_metrics(metrics).record(a.submitted.elapsed());
+            let sent = a.resp.send(Err(
+                "internal: sequence lost its sampling state".into()));
+            trace::async_end("generate", a.rid);
+            events.record(a.rid, ReqKind::Generate,
+                          if sent.is_ok() { EventKind::Reject }
+                          else { EventKind::Disconnect },
+                          0);
+        } else {
+            idx += 1;
+        }
+    }
+    if active.is_empty() {
+        return;
+    }
     let n = active.len().min(bcap);
     let batch: Vec<(SeqId, i32)> = active[..n]
         .iter()
-        .map(|a| (a.sid, *a.tokens.last().expect("admitted with a token")))
+        .map(|a| (a.sid, a.tokens.last().copied().unwrap_or(0)))
         .collect();
     let t0 = Instant::now();
     let stepped = scorer.decode_step(&batch);
@@ -630,7 +669,7 @@ fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
     match stepped {
         Ok(all_logits) => {
             // recorded only on success: a failed step produced no tokens
-            metrics.lock().unwrap().record_decode(n, exec);
+            lock_metrics(metrics).record_decode(n, exec);
             debug_assert_eq!(all_logits.len(), n);
             let mut done: Vec<usize> = Vec::new();
             for (i, logits) in all_logits.iter().enumerate().take(n) {
@@ -660,7 +699,7 @@ fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
             let msg = format!("{e:#}");
             for a in active.drain(..n) {
                 scorer.end_decode(a.sid);
-                metrics.lock().unwrap().record(a.submitted.elapsed());
+                lock_metrics(metrics).record(a.submitted.elapsed());
                 let sent = a.resp.send(Err(msg.clone()));
                 trace::async_end("generate", a.rid);
                 events.record(a.rid, ReqKind::Generate,
