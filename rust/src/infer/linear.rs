@@ -37,7 +37,7 @@ use crate::tensor::Tensor;
 use super::kernels::{check_dot_k, dot_block_f32_u8_scalar, dot_f32_u8,
                      dot_u8, shard_ranges, unpack_rows, QuantActs};
 use super::plan::{Exec, ExecMode, TilePlan, MR};
-use super::pool::{OutSlice, WorkerPool};
+use super::pool::{JobPanicked, OutSlice, WorkerPool};
 use super::simd::{self, Backend};
 
 /// Reference-path tile height: 16 rows × Cin bytes stays L1-resident for
@@ -108,11 +108,12 @@ impl QuantLinear {
         let mut out = exec.scratch.zeroed(rows * self.cout);
         let (p0, s0) = (exec.prof.t0(), trace::begin());
         let backend = exec.backend;
+        let mut pool_err: Option<JobPanicked> = None;
         match exec.mode {
             ExecMode::Planned => {
-                self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
+                pool_err = self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
                     self.gemm_q_tiles(backend, acts, t0, t1, o);
-                });
+                }).err();
             }
             ExecMode::Reference => self.gemm_q_ref(acts, &mut out),
         }
@@ -121,6 +122,12 @@ impl QuantLinear {
             (format!("gemm{}x{}", self.cout, self.cin),
              Some(format!("{{\"rows\":{rows}}}")))
         });
+        if let Some(e) = pool_err {
+            // supervision (DESIGN.md §13): a panicked GEMM shard fails this
+            // batch with an error the serving layer turns into per-request
+            // rejections — it never unwinds through the engine
+            bail!("gemm {}x{}: {e}; batch discarded", self.cout, self.cin);
+        }
         Ok(Tensor::new(vec![rows, self.cout], out))
     }
 
@@ -152,11 +159,12 @@ impl QuantLinear {
         }
         let mut out = exec.scratch.zeroed(rows * self.cout);
         let (p0, s0) = (exec.prof.t0(), trace::begin());
+        let mut pool_err: Option<JobPanicked> = None;
         match exec.mode {
             ExecMode::Planned => {
-                self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
+                pool_err = self.run_planned(exec.pool, &mut out, &|t0, t1, o| {
                     self.gemm_fp_tiles(x, rows, &xsum, t0, t1, o);
-                });
+                }).err();
             }
             ExecMode::Reference => self.gemm_fp_ref(x, rows, &xsum, &mut out),
         }
@@ -166,19 +174,29 @@ impl QuantLinear {
              Some(format!("{{\"rows\":{rows}}}")))
         });
         exec.scratch.put(xsum);
+        if let Some(e) = pool_err {
+            // see forward_q: fail the batch, keep the engine thread alive
+            bail!("gemm_fp {}x{}: {e}; batch discarded", self.cout, self.cin);
+        }
         Ok(Tensor::new(vec![rows, self.cout], out))
     }
 
     /// Shard the tile range across the persistent pool; every shard writes
-    /// its (disjoint) output columns directly into `out`.
+    /// its (disjoint) output columns directly into `out`. A panicking shard
+    /// (pooled or inline) is reported as `Err` — the engine thread never
+    /// unwinds through a GEMM.
     fn run_planned(&self, pool: &WorkerPool, out: &mut [f32],
-                   body: &(dyn Fn(usize, usize, OutSlice) + Sync)) {
+                   body: &(dyn Fn(usize, usize, OutSlice) + Sync))
+                   -> Result<(), JobPanicked> {
         let tiles = self.plan.n_tiles();
         let o = OutSlice::new(out);
         let shards = pool.threads().min(tiles).max(1);
         if shards <= 1 {
-            body(0, tiles, o);
-            return;
+            return match std::panic::catch_unwind(
+                std::panic::AssertUnwindSafe(|| body(0, tiles, o))) {
+                Ok(()) => Ok(()),
+                Err(_) => Err(JobPanicked),
+            };
         }
         let ranges = shard_ranges(tiles, shards);
         pool.run(ranges.len(), |i| {
@@ -190,7 +208,7 @@ impl QuantLinear {
             body(t0, t1, o);
             #[cfg(feature = "obs-trace")]
             trace::complete(sp, || (format!("shard[{t0},{t1})"), None));
-        });
+        })
     }
 
     /// Planned integer GEMM over weight tiles `[t0, t1)`: streams

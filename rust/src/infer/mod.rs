@@ -93,4 +93,5 @@ pub use simd::{Backend, KernelChoice};
 pub use pool::WorkerPool;
 pub use quantize::{calibrate_stats, prepare_native, prepare_native_from,
                    quantize_weights, ScaleInit};
-pub use scorer::{start_native_server, NativeScorer};
+pub use scorer::{start_native_server, start_native_server_with,
+                 NativeScorer};

@@ -11,6 +11,13 @@
 //! every job has finished — the barrier that makes lending stack-borrowed
 //! closures to long-lived threads sound.
 //!
+//! Supervision (DESIGN.md §13): a panicking job is caught at the job
+//! boundary and reported as [`JobPanicked`] from `run` — it never unwinds
+//! through the pool, never poisons a later epoch, and never aborts the
+//! process. Workers that exit for any reason are respawned lazily at the
+//! next `run`, so a pool survives arbitrary job failures with its full
+//! width restored.
+//!
 //! Shard outputs are written straight into the final `[rows, cout]` buffer
 //! through [`OutSlice`] (each shard owns a disjoint set of output columns),
 //! which deletes the per-shard chunk allocation *and* the stitch copy the
@@ -22,8 +29,23 @@
 //! and sharded outputs stay bit-identical to the single-thread result.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 use std::thread::JoinHandle;
+
+/// At least one job of a [`WorkerPool::run`] epoch panicked. The epoch
+/// still completed its barrier (every job was claimed and either finished
+/// or unwound), so the pool stays usable — but the panicked jobs' outputs
+/// are unspecified and the caller must discard the whole batch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct JobPanicked;
+
+impl std::fmt::Display for JobPanicked {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "worker pool job panicked")
+    }
+}
+
+impl std::error::Error for JobPanicked {}
 
 /// The caller's job body with its borrow lifetime erased. Sound because
 /// [`WorkerPool::run`] blocks until every claimed job has completed, and
@@ -43,6 +65,9 @@ struct State {
     body: Option<Body>,
     panicked: bool,
     shutdown: bool,
+    /// chaos hook: idle workers consume one unit each and exit
+    /// ([`WorkerPool::chaos_kill_worker`])
+    die: usize,
 }
 
 struct Shared {
@@ -59,7 +84,8 @@ pub struct WorkerPool {
     shared: Arc<Shared>,
     /// serializes concurrent `run` calls (model clones share the pool)
     submit: Mutex<()>,
-    workers: Vec<JoinHandle<()>>,
+    /// live worker handles; dead entries are respawned at the next `run`
+    workers: Mutex<Vec<JoinHandle<()>>>,
 }
 
 impl WorkerPool {
@@ -75,6 +101,7 @@ impl WorkerPool {
                 body: None,
                 panicked: false,
                 shutdown: false,
+                die: 0,
             }),
             go: Condvar::new(),
             done: Condvar::new(),
@@ -85,32 +112,93 @@ impl WorkerPool {
                 std::thread::Builder::new()
                     .name(format!("lrq-gemm-{i}"))
                     .spawn(move || worker_loop(&sh))
+                    // PANIC: startup-only — spawning the initial pool at
+                    // model load; nothing is serving yet
                     .expect("spawn pool worker")
             })
             .collect();
-        WorkerPool { shared, submit: Mutex::new(()), workers }
+        WorkerPool {
+            shared,
+            submit: Mutex::new(()),
+            workers: Mutex::new(workers),
+        }
+    }
+
+    /// Poison-tolerant state lock. Jobs execute with the lock released, so
+    /// a poisoned state mutex carries no torn invariants — recover it.
+    fn state(&self) -> MutexGuard<'_, State> {
+        self.shared.state.lock().unwrap_or_else(|e| e.into_inner())
     }
 
     /// Total executor count: spawned workers + the submitting thread.
     pub fn threads(&self) -> usize {
-        self.workers.len() + 1
+        let ws = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        ws.len() + 1
+    }
+
+    /// Workers whose threads have exited (candidates for respawn). A
+    /// healthy pool reports 0.
+    pub fn dead_workers(&self) -> usize {
+        let ws = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        ws.iter().filter(|h| h.is_finished()).count()
+    }
+
+    /// Chaos hook: ask one idle worker to exit (it consumes the marker the
+    /// next time it reaches the dispatch loop). Used by the chaos tests to
+    /// prove the respawn path; never called in production serving.
+    pub fn chaos_kill_worker(&self) {
+        let mut st = self.state();
+        st.die += 1;
+        self.shared.go.notify_all();
+    }
+
+    /// Replace any worker thread that has exited (job-induced death, chaos
+    /// kill). Best-effort: if the OS refuses a spawn the pool still makes
+    /// progress because the submitting thread claims unclaimed jobs itself.
+    fn respawn_dead(&self) {
+        let mut ws = self.workers.lock().unwrap_or_else(|e| e.into_inner());
+        for slot in ws.iter_mut() {
+            if !slot.is_finished() {
+                continue;
+            }
+            let sh = self.shared.clone();
+            let spawned = std::thread::Builder::new()
+                .name("lrq-gemm-respawn".to_string())
+                .spawn(move || worker_loop(&sh));
+            if let Ok(h) = spawned {
+                let dead = std::mem::replace(slot, h);
+                let _ = dead.join();
+            }
+        }
     }
 
     /// Execute `body(0)`, `body(1)`, ..., `body(jobs - 1)` across the pool
     /// and the calling thread; returns after **all** jobs completed (the
     /// barrier). Jobs may run in any order and must not call `run`
-    /// re-entrantly. Panics in any job are re-raised here after the barrier.
-    pub fn run<F: Fn(usize) + Sync>(&self, jobs: usize, body: F) {
+    /// re-entrantly. A panic in any job is caught at the job boundary and
+    /// reported as `Err(JobPanicked)` after the barrier — the pool itself
+    /// stays healthy and the caller decides what to fail (DESIGN.md §13).
+    pub fn run<F: Fn(usize) + Sync>(&self, jobs: usize, body: F)
+        -> Result<(), JobPanicked> {
         if jobs == 0 {
-            return;
+            return Ok(());
         }
         crate::obs::registry::engine::POOL_JOBS.add(jobs as u64);
-        if jobs == 1 || self.workers.is_empty() {
-            // inline fast path: no locks, no wakeups
+        let no_workers = {
+            let ws =
+                self.workers.lock().unwrap_or_else(|e| e.into_inner());
+            ws.is_empty()
+        };
+        if jobs == 1 || no_workers {
+            // inline fast path: no locks, no wakeups — but the same
+            // no-unwind contract as the pooled path
+            let mut panicked = false;
             for i in 0..jobs {
-                body(i);
+                if catch_unwind(AssertUnwindSafe(|| body(i))).is_err() {
+                    panicked = true;
+                }
             }
-            return;
+            return if panicked { Err(JobPanicked) } else { Ok(()) };
         }
         let wide: &(dyn Fn(usize) + Sync) = &body;
         // SAFETY: lifetime erasure only — the barrier below guarantees no
@@ -121,14 +209,16 @@ impl WorkerPool {
             std::mem::transmute::<&(dyn Fn(usize) + Sync),
                                   &'static (dyn Fn(usize) + Sync)>(wide)
         };
-        // a panicking job unwinds through `run` with this guard held,
-        // poisoning the mutex — recover the lock rather than bricking the
-        // pool for every model clone (pool state is reset by the barrier
-        // logic itself, not protected by this guard)
+        // historical note: `run` used to re-raise job panics and could
+        // unwind through this guard, poisoning the mutex — recovery is kept
+        // so a pool shared by model clones never bricks on a stale poison
         let _epoch =
             self.submit.lock().unwrap_or_else(|e| e.into_inner());
+        // restore full width before publishing the epoch (workers may have
+        // died to a chaos kill or an earlier failure)
+        self.respawn_dead();
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.state();
             debug_assert_eq!(st.active, 0, "pool run while a run is active");
             st.jobs = jobs;
             st.next = 0;
@@ -139,14 +229,14 @@ impl WorkerPool {
         // the submitting thread claims jobs like any worker, then becomes
         // the barrier waiter once everything is claimed
         let panicked = loop {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.state();
             if st.next < st.jobs {
                 let i = st.next;
                 st.next += 1;
                 drop(st);
                 let ok =
                     catch_unwind(AssertUnwindSafe(|| body(i))).is_ok();
-                let mut st = self.shared.state.lock().unwrap();
+                let mut st = self.state();
                 if !ok {
                     st.panicked = true;
                 }
@@ -156,7 +246,11 @@ impl WorkerPool {
                 }
             } else {
                 while st.active > 0 {
-                    st = self.shared.done.wait(st).unwrap();
+                    st = self
+                        .shared
+                        .done
+                        .wait(st)
+                        .unwrap_or_else(|e| e.into_inner());
                 }
                 st.body = None;
                 st.jobs = 0;
@@ -166,9 +260,7 @@ impl WorkerPool {
                 break p;
             }
         };
-        if panicked {
-            panic!("worker pool job panicked");
-        }
+        if panicked { Err(JobPanicked) } else { Ok(()) }
     }
 }
 
@@ -183,29 +275,39 @@ impl std::fmt::Debug for WorkerPool {
 impl Drop for WorkerPool {
     fn drop(&mut self) {
         {
-            let mut st = self.shared.state.lock().unwrap();
+            let mut st = self.state();
             st.shutdown = true;
             self.shared.go.notify_all();
         }
-        for h in self.workers.drain(..) {
+        let ws = self.workers.get_mut().unwrap_or_else(|e| e.into_inner());
+        for h in ws.drain(..) {
             let _ = h.join();
         }
     }
 }
 
 fn worker_loop(shared: &Shared) {
-    let mut st = shared.state.lock().unwrap();
+    let mut st =
+        shared.state.lock().unwrap_or_else(|e| e.into_inner());
     loop {
         if st.shutdown {
+            return;
+        }
+        if st.die > 0 {
+            // chaos kill: exit between jobs, never mid-barrier — the
+            // submitting thread claims whatever this worker would have
+            st.die -= 1;
             return;
         }
         if st.next < st.jobs {
             let i = st.next;
             st.next += 1;
+            // PANIC: invariant — `body` is published before `jobs` under
+            // the same lock and cleared only after the barrier drains
             let body = st.body.expect("job body published while claims remain");
             drop(st);
             let ok = catch_unwind(AssertUnwindSafe(|| (body.0)(i))).is_ok();
-            st = shared.state.lock().unwrap();
+            st = shared.state.lock().unwrap_or_else(|e| e.into_inner());
             if !ok {
                 st.panicked = true;
             }
@@ -214,7 +316,7 @@ fn worker_loop(shared: &Shared) {
                 shared.done.notify_all();
             }
         } else {
-            st = shared.go.wait(st).unwrap();
+            st = shared.go.wait(st).unwrap_or_else(|e| e.into_inner());
         }
     }
 }
@@ -270,7 +372,7 @@ mod tests {
                 (0..jobs).map(|_| AtomicUsize::new(0)).collect();
             pool.run(jobs, |i| {
                 hits[i].fetch_add(1, Ordering::SeqCst);
-            });
+            }).unwrap();
             for (i, h) in hits.iter().enumerate() {
                 assert_eq!(h.load(Ordering::SeqCst), 1, "jobs {jobs} i {i}");
             }
@@ -284,7 +386,7 @@ mod tests {
         let hits = AtomicUsize::new(0);
         pool.run(5, |_| {
             hits.fetch_add(1, Ordering::SeqCst);
-        });
+        }).unwrap();
         assert_eq!(hits.load(Ordering::SeqCst), 5);
     }
 
@@ -299,27 +401,52 @@ mod tests {
             for (k, v) in s.iter_mut().enumerate() {
                 *v = (i * 6 + k) as f32;
             }
-        });
+        }).unwrap();
         for (k, &v) in buf.iter().enumerate() {
             assert_eq!(v, k as f32);
         }
     }
 
     #[test]
-    #[should_panic(expected = "worker pool job panicked")]
-    fn job_panic_propagates_after_barrier() {
+    fn job_panic_reported_after_barrier_not_raised() {
+        // the supervision contract: a panicking job surfaces as an Err
+        // return after the barrier — `run` itself never unwinds
         let pool = WorkerPool::new(2);
-        pool.run(4, |i| {
+        let hits = AtomicUsize::new(0);
+        let r = pool.run(4, |i| {
             if i == 2 {
                 panic!("boom");
             }
+            hits.fetch_add(1, Ordering::SeqCst);
         });
+        assert_eq!(r, Err(JobPanicked));
+        // the barrier still ran every other job to completion
+        assert_eq!(hits.load(Ordering::SeqCst), 3);
+    }
+
+    #[test]
+    fn inline_path_reports_panics_too() {
+        // jobs == 1 and width-1 pools take the lock-free inline path; the
+        // no-unwind contract must hold there as well
+        let pool = WorkerPool::new(1);
+        assert_eq!(pool.run(3, |i| {
+            if i == 0 {
+                panic!("boom");
+            }
+        }), Err(JobPanicked));
+        let wide = WorkerPool::new(4);
+        assert_eq!(wide.run(1, |_| panic!("boom")), Err(JobPanicked));
+        // both pools remain usable
+        let hits = AtomicUsize::new(0);
+        pool.run(2, |_| { hits.fetch_add(1, Ordering::SeqCst); }).unwrap();
+        wide.run(2, |_| { hits.fetch_add(1, Ordering::SeqCst); }).unwrap();
+        assert_eq!(hits.load(Ordering::SeqCst), 4);
     }
 
     #[test]
     fn zero_jobs_is_a_noop() {
         let pool = WorkerPool::new(2);
-        pool.run(0, |_| panic!("must not run"));
+        pool.run(0, |_| panic!("must not run")).unwrap();
     }
 
     #[test]
@@ -335,7 +462,7 @@ mod tests {
                         (0..jobs).map(|_| AtomicUsize::new(0)).collect();
                     pool.run(jobs, |i| {
                         hits[i].fetch_add(1, Ordering::SeqCst);
-                    });
+                    }).unwrap();
                     for (i, h) in hits.iter().enumerate() {
                         assert_eq!(h.load(Ordering::SeqCst), 1,
                                    "round {round} width {width} jobs \
@@ -362,7 +489,7 @@ mod tests {
                 for _ in 0..25 {
                     pool.run(5, |_| {
                         total.fetch_add(1, Ordering::SeqCst);
-                    });
+                    }).unwrap();
                 }
             }));
         }
@@ -374,22 +501,53 @@ mod tests {
 
     #[test]
     fn pool_survives_a_job_panic() {
-        // a panicking job must not brick the pool (shared by model clones):
-        // the barrier drains the epoch, the submit lock recovers from
-        // poisoning, and the next run proceeds normally
+        // regression (the old `run` re-panicked and could poison the submit
+        // lock): after a panicked epoch the very next run must produce
+        // bit-correct results — checked by value, not just by count
         let pool = WorkerPool::new(2);
-        let caught = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            pool.run(3, |i| {
-                if i == 1 {
-                    panic!("boom");
-                }
-            });
-        }));
-        assert!(caught.is_err());
-        let hits = AtomicUsize::new(0);
-        pool.run(3, |_| {
-            hits.fetch_add(1, Ordering::SeqCst);
-        });
-        assert_eq!(hits.load(Ordering::SeqCst), 3);
+        assert_eq!(pool.run(3, |i| {
+            if i == 1 {
+                panic!("boom");
+            }
+        }), Err(JobPanicked));
+        let mut buf = vec![0.0f32; 12];
+        let out = OutSlice::new(&mut buf);
+        pool.run(4, |i| {
+            // SAFETY: job i owns [3i, 3i + 3) — disjoint and in bounds
+            let s = unsafe { out.slice(i * 3, 3) };
+            for (k, v) in s.iter_mut().enumerate() {
+                *v = (i * 3 + k) as f32;
+            }
+        }).unwrap();
+        for (k, &v) in buf.iter().enumerate() {
+            assert_eq!(v, k as f32, "wrong value after panicked epoch");
+        }
+        assert_eq!(pool.dead_workers(), 0);
+    }
+
+    #[test]
+    fn chaos_killed_workers_are_respawned() {
+        let pool = WorkerPool::new(3);
+        pool.chaos_kill_worker();
+        // the marked worker exits the next time it reaches its dispatch
+        // loop; give it a bounded moment to actually die
+        let deadline = std::time::Instant::now()
+            + std::time::Duration::from_secs(5);
+        while pool.dead_workers() == 0
+            && std::time::Instant::now() < deadline {
+            std::thread::yield_now();
+        }
+        assert_eq!(pool.dead_workers(), 1, "worker did not exit");
+        // the next run respawns to full width and completes every job
+        let hits: Vec<AtomicUsize> =
+            (0..16).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(16, |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        }).unwrap();
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "job {i}");
+        }
+        assert_eq!(pool.dead_workers(), 0, "respawn did not happen");
+        assert_eq!(pool.threads(), 3);
     }
 }

@@ -14,17 +14,25 @@
 //! (no per-call thread spawns — see `infer::pool`).
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
 use anyhow::{bail, Result};
 
 use crate::obs::trace;
-use crate::serve::{BatchScorer, SeqId, Server, ServerConfig};
+use crate::serve::{BatchScorer, ChaosScorer, FaultPlan, SeqId, Server,
+                   ServerConfig};
 
 use super::block::NativeModel;
 use super::decode::KvCache;
 
 pub struct NativeScorer {
     pub model: NativeModel,
+    /// cheaper pre-built plan for load-shed downshifts (e.g. the same
+    /// checkpoint packed at W4A8 next to a W8A8 primary); `None` disables
+    /// degraded mode
+    degraded_model: Option<NativeModel>,
+    /// whether work is currently routed through the degraded plan
+    use_degraded: bool,
     batch: usize,
     /// engine-owned KV caches of active decode sequences
     seqs: HashMap<SeqId, KvCache>,
@@ -36,7 +44,8 @@ impl NativeScorer {
     /// the PJRT `EngineScorer`).
     pub fn new(model: NativeModel) -> Self {
         let batch = model.dim.calib_batch.max(1);
-        NativeScorer { model, batch, seqs: HashMap::new(), next_seq: 0 }
+        NativeScorer { model, degraded_model: None, use_degraded: false,
+                       batch, seqs: HashMap::new(), next_seq: 0 }
     }
 
     /// Override the rows-per-execution capacity (the native engine has no
@@ -44,6 +53,38 @@ impl NativeScorer {
     pub fn with_batch(mut self, batch: usize) -> Self {
         self.batch = batch.max(1);
         self
+    }
+
+    /// Attach a cheaper pre-built plan the serve loop may downshift to
+    /// under load (DESIGN.md §13). The two models must share dimensions and
+    /// KV-cache scheme: live caches keep decoding across a switch, so a
+    /// cache written by one plan must be readable by the other (the KV grid
+    /// math depends only on `kv_quant`/`kv_bits`, not the weight bits).
+    pub fn with_degraded(mut self, degraded: NativeModel) -> Result<Self> {
+        if degraded.dim != self.model.dim {
+            bail!("degraded plan dims {:?} differ from primary {:?}",
+                  degraded.dim.name, self.model.dim.name);
+        }
+        if degraded.scheme.kv_quant != self.model.scheme.kv_quant
+            || degraded.scheme.kv_bits != self.model.scheme.kv_bits
+            || degraded.blocks.len() != self.model.blocks.len() {
+            bail!("degraded plan KV scheme (kv_quant={} kv_bits={} layers={})\
+                   is incompatible with primary (kv_quant={} kv_bits={} \
+                   layers={}): live caches could not survive a downshift",
+                  degraded.scheme.kv_quant, degraded.scheme.kv_bits,
+                  degraded.blocks.len(), self.model.scheme.kv_quant,
+                  self.model.scheme.kv_bits, self.model.blocks.len());
+        }
+        self.degraded_model = Some(degraded);
+        Ok(self)
+    }
+
+    /// The plan current work routes through.
+    fn active(&self) -> &NativeModel {
+        match (&self.degraded_model, self.use_degraded) {
+            (Some(m), true) => m,
+            _ => &self.model,
+        }
     }
 
     /// Active decode sequences currently holding a KV cache.
@@ -68,7 +109,7 @@ impl BatchScorer for NativeScorer {
     }
 
     fn score(&mut self, ids: &[i32], targets: &[i32]) -> Result<Vec<f32>> {
-        let (_, logp) = self.model.forward(ids, targets)?;
+        let (_, logp) = self.active().forward(ids, targets)?;
         Ok(logp.data)
     }
 
@@ -78,8 +119,8 @@ impl BatchScorer for NativeScorer {
 
     fn begin_decode(&mut self, prompt: &[i32]) -> Result<(SeqId, Vec<f32>)> {
         let sp = trace::begin();
-        let mut cache = self.model.new_cache();
-        let logits = self.model.prefill(prompt, &mut cache)?;
+        let mut cache = self.active().new_cache();
+        let logits = self.active().prefill(prompt, &mut cache)?;
         let sid = self.next_seq;
         self.next_seq += 1;
         self.seqs.insert(sid, cache);
@@ -119,7 +160,7 @@ impl BatchScorer for NativeScorer {
                 }
             }
         }
-        let stepped = self.model.decode_step(&toks, &mut caches);
+        let stepped = self.active().decode_step(&toks, &mut caches);
         for (sid, cache) in sids.into_iter().zip(caches) {
             self.seqs.insert(sid, cache);
         }
@@ -132,6 +173,21 @@ impl BatchScorer for NativeScorer {
     fn end_decode(&mut self, sid: SeqId) {
         self.seqs.remove(&sid);
     }
+
+    fn supports_degrade(&self) -> bool {
+        self.degraded_model.is_some()
+    }
+
+    /// Route subsequent work through the degraded plan. Live KV caches stay
+    /// valid: `with_degraded` enforced an identical cache scheme, so active
+    /// sequences keep decoding through the cheaper weights.
+    fn set_degraded(&mut self, on: bool) {
+        self.use_degraded = on && self.degraded_model.is_some();
+    }
+
+    fn degraded(&self) -> bool {
+        self.use_degraded
+    }
 }
 
 /// Start the dynamic batcher over a native model. The model is built here,
@@ -141,6 +197,100 @@ impl BatchScorer for NativeScorer {
 /// fixed-shape artifacts, so the batching knob is fully honored).
 pub fn start_native_server(model: NativeModel, cfg: ServerConfig)
                            -> Result<Server> {
-    let scorer = NativeScorer::new(model).with_batch(cfg.max_batch);
-    Server::start(cfg, move || Ok(Box::new(scorer) as Box<dyn BatchScorer>))
+    start_native_server_with(model, None, cfg, None)
+}
+
+/// [`start_native_server`] with the overload-and-failure extras wired in:
+/// an optional pre-built `degraded` plan (enables `cfg.degrade` downshifts)
+/// and an optional fault-injection plan (`lrq soak --chaos` wraps the
+/// scorer in a [`ChaosScorer`] so injected faults travel the production
+/// failure paths).
+pub fn start_native_server_with(model: NativeModel,
+                                degraded: Option<NativeModel>,
+                                cfg: ServerConfig,
+                                fault: Option<Arc<FaultPlan>>)
+                                -> Result<Server> {
+    let mut scorer = NativeScorer::new(model).with_batch(cfg.max_batch);
+    if let Some(d) = degraded {
+        scorer = scorer.with_degraded(d)?;
+    }
+    let chaos = fault.clone();
+    Server::start_with(cfg, fault, move || {
+        let mut inner = Box::new(scorer) as Box<dyn BatchScorer>;
+        if let Some(plan) = chaos {
+            inner = Box::new(ChaosScorer::new(inner, plan));
+        }
+        Ok(inner)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ActScheme, Scheme};
+    use crate::data::{Corpus, CorpusConfig};
+    use crate::infer::quantize::{prepare_native, ScaleInit};
+    use crate::model::{ModelDim, Weights};
+    use crate::rng::Rng;
+
+    fn micro_model(w_bits: u32, kv_bits: u32) -> NativeModel {
+        let dim = ModelDim::builtin("micro").expect("micro builtin");
+        // per-token activations: no calibration pass needed
+        let scheme = Scheme { w_bits, act: ActScheme::PerToken, a_bits: 8,
+                              kv_quant: true, kv_bits };
+        let w = Weights::init(&dim, &mut Rng::new(7));
+        let corpus = Corpus::new(CorpusConfig::with_seed(dim.vocab, 7));
+        prepare_native(&w, scheme, ScaleInit::Rtn, &corpus, 1, 7, 1)
+            .expect("prepare micro model")
+    }
+
+    #[test]
+    fn degraded_plan_routes_and_keeps_live_caches_decoding() {
+        // W8A8 primary + W4A8 degraded built from the same weights: the
+        // LRQ serving premise behind the downshift (low-bit configs retain
+        // near-full accuracy, so shedding quality beats shedding requests)
+        let mut sc = NativeScorer::new(micro_model(8, 8))
+            .with_batch(2)
+            .with_degraded(micro_model(4, 8))
+            .expect("compatible degraded plan");
+        assert!(sc.supports_degrade());
+        assert!(!sc.degraded());
+
+        // begin a sequence on the primary plan...
+        let (sid, logits) = sc.begin_decode(&[1, 2, 3]).unwrap();
+        assert!(logits.iter().all(|v| v.is_finite()));
+
+        // ...downshift, and keep decoding the same live cache
+        sc.set_degraded(true);
+        assert!(sc.degraded());
+        let next = sc.decode_step(&[(sid, 4)]).unwrap();
+        assert_eq!(next.len(), 1);
+        assert!(next[0].iter().all(|v| v.is_finite()));
+
+        // restore and take one more step — still the same sequence
+        sc.set_degraded(false);
+        assert!(!sc.degraded());
+        let last = sc.decode_step(&[(sid, 5)]).unwrap();
+        assert!(last[0].iter().all(|v| v.is_finite()));
+        sc.end_decode(sid);
+        assert_eq!(sc.active_seqs(), 0);
+    }
+
+    #[test]
+    fn incompatible_kv_scheme_is_rejected() {
+        // a degraded plan whose KV grid differs would corrupt live caches
+        // on downshift — with_degraded must refuse it up front
+        let err = NativeScorer::new(micro_model(8, 8))
+            .with_degraded(micro_model(4, 4))
+            .unwrap_err();
+        assert!(format!("{err}").contains("incompatible"), "{err}");
+    }
+
+    #[test]
+    fn set_degraded_without_plan_is_inert() {
+        let mut sc = NativeScorer::new(micro_model(8, 8));
+        assert!(!sc.supports_degrade());
+        sc.set_degraded(true);
+        assert!(!sc.degraded());
+    }
 }

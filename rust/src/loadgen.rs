@@ -30,7 +30,7 @@ use std::time::{Duration, Instant};
 use crate::obs::events::percentile_us;
 use crate::obs::EventAgg;
 use crate::rng::Rng;
-use crate::serve::Server;
+use crate::serve::{Server, EXPIRED_PREFIX, SHED_PREFIX};
 
 /// How workers pace their submissions.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -74,6 +74,9 @@ pub struct LoadSpec {
     pub seed: u64,
     /// open-loop: how long to wait for each pending response at drain time
     pub drain_timeout: Duration,
+    /// per-request deadline (ms) attached to every submission
+    /// ([`crate::serve::Client::with_deadline`]); `None` = no deadline
+    pub deadline_ms: Option<u64>,
 }
 
 impl Default for LoadSpec {
@@ -95,6 +98,7 @@ impl Default for LoadSpec {
             seq: 32,
             seed: 0x50AB,
             drain_timeout: Duration::from_secs(30),
+            deadline_ms: None,
         }
     }
 }
@@ -108,6 +112,13 @@ pub struct LoadOutcome {
     pub ok: u64,
     /// error responses received (validation or engine failure)
     pub rejected: u64,
+    /// deadline-expiry responses (the answer starts with
+    /// [`EXPIRED_PREFIX`]) — counted apart from `rejected` because they are
+    /// a latency outcome, not a validation failure
+    pub expired: u64,
+    /// shed-load responses (the answer starts with [`SHED_PREFIX`]) — fast
+    /// retriable rejections from admission control
+    pub shed: u64,
     /// receivers we deliberately dropped (injected disconnects)
     pub disconnected: u64,
     /// responses that never arrived (server dropped the request, or the
@@ -124,6 +135,8 @@ impl LoadOutcome {
         self.submitted += o.submitted;
         self.ok += o.ok;
         self.rejected += o.rejected;
+        self.expired += o.expired;
+        self.shed += o.shed;
         self.disconnected += o.disconnected;
         self.lost += o.lost;
         self.gen_tokens += o.gen_tokens;
@@ -196,7 +209,11 @@ pub fn run(server: &Server, spec: &LoadSpec) -> LoadOutcome {
     let mut outcome = LoadOutcome::default();
     let mut handles = Vec::new();
     for k in 0..spec.clients.max(1) {
-        let client = server.client();
+        let client = match spec.deadline_ms {
+            Some(ms) => server.client()
+                .with_deadline(Duration::from_millis(ms)),
+            None => server.client(),
+        };
         let spec = spec.clone();
         handles.push(std::thread::spawn(move || {
             let mut rng =
@@ -274,7 +291,7 @@ fn absorb_response(out: &mut LoadOutcome, p: Pending, timeout: Duration) {
     match p {
         Pending::Score(rx) => match rx.recv_timeout(timeout) {
             Ok(Ok(_)) => out.ok += 1,
-            Ok(Err(_)) => out.rejected += 1,
+            Ok(Err(msg)) => absorb_error(out, &msg),
             Err(RecvTimeoutError::Timeout)
             | Err(RecvTimeoutError::Disconnected) => out.lost += 1,
         },
@@ -283,10 +300,24 @@ fn absorb_response(out: &mut LoadOutcome, p: Pending, timeout: Duration) {
                 out.ok += 1;
                 out.gen_tokens += r.tokens.len() as u64;
             }
-            Ok(Err(_)) => out.rejected += 1,
+            Ok(Err(msg)) => absorb_error(out, &msg),
             Err(RecvTimeoutError::Timeout)
             | Err(RecvTimeoutError::Disconnected) => out.lost += 1,
         },
+    }
+}
+
+/// Classify an error response by its stable message prefix: deadline
+/// expiries and shed-load rejections are distinct client-visible outcomes
+/// (an expiry means "too slow", a shed means "retry later"); everything
+/// else is a plain reject.
+fn absorb_error(out: &mut LoadOutcome, msg: &str) {
+    if msg.starts_with(EXPIRED_PREFIX) {
+        out.expired += 1;
+    } else if msg.starts_with(SHED_PREFIX) {
+        out.shed += 1;
+    } else {
+        out.rejected += 1;
     }
 }
 
@@ -306,6 +337,10 @@ pub struct SloSpec {
     pub queue_p99_ms: Option<f64>,
     /// max rejected / answered (injected oversized traffic budgets this)
     pub max_error_rate: Option<f64>,
+    /// max expired / answered (deadline misses under the offered load)
+    pub max_expire_rate: Option<f64>,
+    /// max shed / answered (admission-control rejections under overload)
+    pub max_shed_rate: Option<f64>,
     /// max requests left without a terminal event (stuck sequences)
     pub max_stuck: u64,
 }
@@ -366,6 +401,8 @@ impl SloSpec {
         push("queue_p99_ms", self.queue_p99_ms,
              ms(percentile_us(&agg.queue_us, 0.99)));
         push("error_rate", self.max_error_rate, agg.error_rate());
+        push("expire_rate", self.max_expire_rate, agg.expire_rate());
+        push("shed_rate", self.max_shed_rate, agg.shed_rate());
         // zero-stuck is the one non-optional SLO: a stuck sequence is a
         // leaked KV cache and an unanswered client
         checks.push(SloCheck {
@@ -393,6 +430,12 @@ pub struct ServeBenchRow {
     pub ttft_p99_ms: f64,
     pub queue_p99_ms: f64,
     pub error_rate: f64,
+    /// deadline-expiry fraction of answered requests
+    pub expire_rate: f64,
+    /// admission-control shed fraction of answered requests
+    pub shed_rate: f64,
+    /// degraded-plan downshift/restore transitions during the run
+    pub degrade_shifts: u64,
     pub stuck: u64,
 }
 
@@ -412,9 +455,11 @@ pub fn render_bench_serve(smoke: bool, cfg: &str, rows: &[ServeBenchRow])
              \"decode_tok_s\": {:.1}, \"p50_ms\": {:.2}, \
              \"p99_ms\": {:.2}, \"ttft_p99_ms\": {:.2}, \
              \"queue_p99_ms\": {:.2}, \"error_rate\": {:.4}, \
-             \"stuck\": {}}}{}\n",
+             \"expire_rate\": {:.4}, \"shed_rate\": {:.4}, \
+             \"degrade_shifts\": {}, \"stuck\": {}}}{}\n",
             r.w_bits, r.req_s, r.decode_tok_s, r.p50_ms, r.p99_ms,
-            r.ttft_p99_ms, r.queue_p99_ms, r.error_rate, r.stuck,
+            r.ttft_p99_ms, r.queue_p99_ms, r.error_rate, r.expire_rate,
+            r.shed_rate, r.degrade_shifts, r.stuck,
             if i + 1 < rows.len() { "," } else { "" }));
     }
     s.push_str("  ]\n}\n");
@@ -431,6 +476,7 @@ mod tests {
             ServerConfig {
                 max_batch: 8,
                 max_wait: Duration::from_millis(2),
+                ..Default::default()
             },
             || Ok(Box::new(MockScorer { batch: 8, seq: 32, calls: 0 })),
         )
@@ -600,6 +646,77 @@ mod tests {
     }
 
     #[test]
+    fn zero_deadline_requests_all_terminate_as_expiries() {
+        let mut server = mock_server();
+        let spec = LoadSpec {
+            clients: 2,
+            requests: 5,
+            score_frac: 1.0,
+            deadline_ms: Some(0), // expires the instant it is submitted
+            ..LoadSpec::default()
+        };
+        let out = run(&server, &spec);
+        assert_eq!(out.submitted, 10);
+        assert_eq!(out.expired, 10, "zero deadline must expire everything");
+        assert_eq!((out.ok, out.rejected, out.shed, out.lost), (0, 0, 0, 0));
+        server.shutdown();
+        let ev = server.events();
+        assert!(ev.stuck().is_empty(), "stuck {:?}", ev.stuck());
+        let agg = ev.agg();
+        assert_eq!(agg.expired, 10);
+        assert!(agg.expire_rate() > 0.99);
+        // the stage identity holds for Expire outcomes too: expiry closes
+        // the queue stage, so attributed stages never exceed the total
+        for s in ev.summaries() {
+            assert_eq!(s.outcome, crate::obs::events::EventKind::Expire,
+                       "rid {} ended as {:?}", s.rid, s.outcome);
+            assert!(s.queue_us + s.exec_us <= s.total_us,
+                    "rid {}: queue {} + exec {} > total {}",
+                    s.rid, s.queue_us, s.exec_us, s.total_us);
+        }
+    }
+
+    #[test]
+    fn chaos_dropped_responses_account_for_every_loss() {
+        use crate::serve::FaultPlan;
+        use std::sync::Arc;
+        let mut p = FaultPlan::new();
+        p.drop_response = Some(3);
+        let plan = Arc::new(p);
+        let mut server = Server::start_with(
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+            Some(plan.clone()),
+            || Ok(Box::new(MockScorer { batch: 8, seq: 32, calls: 0 })),
+        )
+        .unwrap();
+        let spec = LoadSpec {
+            clients: 2,
+            requests: 6,
+            score_frac: 1.0,
+            // a dropped response otherwise burns the full drain timeout
+            drain_timeout: Duration::from_millis(200),
+            ..LoadSpec::default()
+        };
+        let out = run(&server, &spec);
+        assert_eq!(out.submitted, 12);
+        // the chaos ledger accounts for every loss the clients saw
+        assert_eq!(out.lost, plan.drops_fired(),
+                   "losses {} vs drops fired {}", out.lost,
+                   plan.drops_fired());
+        assert_eq!(out.lost, 1);
+        assert_eq!(out.ok, 11);
+        server.shutdown();
+        // the drop is a terminal Disconnect server-side — never stuck
+        let ev = server.events();
+        assert!(ev.stuck().is_empty(), "stuck {:?}", ev.stuck());
+        assert_eq!(ev.agg().disconnected, 1);
+    }
+
+    #[test]
     fn slo_evaluation_passes_and_fails() {
         let agg = EventAgg {
             responded: 99,
@@ -616,11 +733,13 @@ mod tests {
             ttft_p99_ms: Some(15.0),
             queue_p99_ms: Some(2.0),
             max_error_rate: Some(0.05),
+            max_expire_rate: Some(0.0),
+            max_shed_rate: Some(0.0),
             max_stuck: 0,
         }
         .evaluate(&agg, 0);
         assert!(ok.passed(), "{}", ok.render());
-        assert_eq!(ok.checks.len(), 6);
+        assert_eq!(ok.checks.len(), 8);
         // p99 of the 1..100ms ladder is 99ms: a 50ms ceiling must fail,
         // and one stuck sequence must fail the zero-stuck default
         let bad = SloSpec {

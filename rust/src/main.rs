@@ -22,13 +22,15 @@ use lrq::coordinator::{pretrain, quantize_model, Engine};
 use lrq::data::{Corpus, CorpusConfig, TaskKind, TaskSet};
 use lrq::eval::{evaluate, ModelView};
 use lrq::infer::{prepare_native, prepare_native_from, simd,
-                 start_native_server, KernelChoice, NativeModel, ScaleInit};
+                 start_native_server, start_native_server_with,
+                 KernelChoice, NativeModel, ScaleInit};
 use lrq::loadgen::{self, LoadMode, LoadSpec, ServeBenchRow, SloSpec};
 use lrq::model::{ModelDim, QuantizedModel, Weights};
 use lrq::obs::{export, trace, HttpExporter};
 use lrq::rng::Rng;
 use lrq::runtime::{Manifest, Runtime};
-use lrq::serve::ServerConfig;
+use lrq::serve::{FaultPlan, ServerConfig, Watermarks, EXPIRED_PREFIX,
+                 SHED_PREFIX};
 use lrq::tables;
 
 fn main() -> ExitCode {
@@ -105,17 +107,23 @@ commands:
            [...same engine flags as serve-native]
            token-by-token generation through the dynamic batcher with a
            quantized KV cache (decode steps batched across sequences)
-  soak     [--smoke] [--cfg C] [--bits 3,4,8] [--mode closed|open]
-           [--clients N] [--requests N] [--rate R] [--max-new N]
-           [--oversized F] [--disconnect F] [--straggler F]
+  soak     [--smoke] [--chaos] [--cfg C] [--bits 3,4,8]
+           [--mode closed|open] [--clients N] [--requests N] [--rate R]
+           [--max-new N] [--oversized F] [--disconnect F] [--straggler F]
            [--slo-p50-ms MS] [--slo-p99-ms MS] [--slo-ttft-ms MS]
-           [--slo-queue-ms MS] [--slo-err F]
-           [--out BENCH_serve.json] [--events-out soak_events.jsonl]
-           [--compare BASELINE.json]
+           [--slo-queue-ms MS] [--slo-err F] [--slo-expire F]
+           [--slo-shed F] [--out BENCH_serve.json]
+           [--events-out soak_events.jsonl] [--compare BASELINE.json]
            sustained mixed score/generate load against serve-native per
            bit-width, asserting latency/TTFT/queue/error SLOs and zero
            stuck sequences; emits BENCH_serve.json + a request-lifecycle
-           JSONL (--smoke: the fast CI configuration on the micro model)
+           JSONL (--smoke: the fast CI configuration on the micro model);
+           --chaos additionally injects a worker-pool job panic, an
+           engine-thread panic, a kernel stall, and a dropped response
+           through the live server, then forces an overload burst — the
+           run must come back with zero stuck/lost, every injected fault
+           surfaced as a terminal event, shed-then-recover, and (for
+           w_bits > 4) a degraded-plan downshift-then-restore
   stats    --cfg C [--requests N] [--prompt-len N] [--max-new N]
            [...same engine flags as serve-native]
            run a profiled generate workload on the native engine and print
@@ -131,6 +139,20 @@ commands:
            writes the JSON report, exits nonzero on any violation
 
 common flags: --artifacts DIR (default ./artifacts), --seed S
+overload policy (serve-native / generate-native / soak; DESIGN.md §13):
+  --deadline-ms MS    per-request deadline measured from submission;
+                      enforced wherever the request is when it passes —
+                      queued, awaiting admission, or mid-decode
+  --shed-at H[,L]     admission control: shed new work with a fast
+                      retriable error while queue depth or KV pressure is
+                      at/above H, re-admit once back at/below L
+                      (L defaults to H/2)
+  --degrade H[,L]     downshift decode to a cheaper pre-built plan at
+                      queue depth H, restore at/below L (soak builds the
+                      same checkpoint at W4 as the degraded plan when
+                      w_bits > 4)
+  --drain-ms MS       shutdown bound on draining in-flight decodes;
+                      stragglers past it are expired (default 5000)
 observability (serve-native / generate-native / stats):
   --trace PATH        record a chrome://tracing JSON trace of the run
   --profile           enable the per-layer/per-kernel profiler, print report
@@ -442,6 +464,45 @@ fn print_profile(prof: &lrq::obs::Profiler, wall: Duration) {
     );
 }
 
+/// Parse a `HIGH[,LOW]` hysteresis watermark flag; `LOW` defaults to
+/// `HIGH/2` so a bare `--shed-at 64` still gets a real recovery band.
+fn watermarks_from(args: &Args, key: &str) -> Result<Option<Watermarks>> {
+    let Some(spec) = args.get(key) else {
+        return Ok(None);
+    };
+    let mut parts = spec.splitn(2, ',');
+    let high: usize = parts.next().unwrap_or("").trim().parse()
+        .map_err(|e| anyhow::anyhow!("bad --{key} {spec:?}: {e}"))?;
+    let low = match parts.next() {
+        Some(s) => s.trim().parse()
+            .map_err(|e| anyhow::anyhow!("bad --{key} {spec:?}: {e}"))?,
+        None => high / 2,
+    };
+    Ok(Some(Watermarks::new(high, low)))
+}
+
+/// The overload-policy server configuration shared by the serving
+/// commands (DESIGN.md §13): `--deadline-ms`, `--shed-at` (applied to both
+/// the queue-depth and KV-pressure signals), `--degrade`, `--drain-ms`.
+fn server_config_from(args: &Args, max_batch: usize)
+                      -> Result<ServerConfig> {
+    let shed = watermarks_from(args, "shed-at")?;
+    Ok(ServerConfig {
+        max_batch,
+        max_wait: Duration::from_millis(2),
+        default_deadline: match args.get("deadline-ms") {
+            Some(_) => Some(Duration::from_millis(
+                args.parse_as("deadline-ms", 0u64)?)),
+            None => None,
+        },
+        shed_queue: shed,
+        shed_kv: shed,
+        degrade: watermarks_from(args, "degrade")?,
+        drain_deadline: Duration::from_millis(
+            args.parse_as("drain-ms", 5_000u64)?),
+    })
+}
+
 /// `serve-native`: serve a packed checkpoint through the dynamic batcher
 /// with the pure-Rust integer engine — no PJRT, no AOT artifacts.
 fn serve_native(args: &Args) -> Result<()> {
@@ -456,10 +517,8 @@ fn serve_native(args: &Args) -> Result<()> {
         prof.set_enabled(true);
     }
     let trace_on = trace_from(args)?;
-    let server = start_native_server(
-        model,
-        ServerConfig { max_batch, max_wait: Duration::from_millis(2) },
-    )?;
+    let server =
+        start_native_server(model, server_config_from(args, max_batch)?)?;
     let exporter =
         exporter_from(args, server.metrics.lock().unwrap().registry())?;
     let t1 = Instant::now();
@@ -532,10 +591,8 @@ fn generate_native(args: &Args) -> Result<()> {
         prof.set_enabled(true);
     }
     let trace_on = trace_from(args)?;
-    let server = start_native_server(
-        model,
-        ServerConfig { max_batch, max_wait: Duration::from_millis(2) },
-    )?;
+    let server =
+        start_native_server(model, server_config_from(args, max_batch)?)?;
     let exporter =
         exporter_from(args, server.metrics.lock().unwrap().registry())?;
     let t1 = Instant::now();
@@ -603,6 +660,7 @@ fn generate_native(args: &Args) -> Result<()> {
 /// on any SLO violation, stuck sequence, or lost response.
 fn soak(args: &Args) -> Result<()> {
     let smoke = args.flag("smoke");
+    let chaos = args.flag("chaos");
     // --smoke is the CI configuration: micro model, few requests, seconds
     // of wall clock; defaults below scale up for a real soak
     let bits_str = args.get_or("bits", if smoke { "4,8" } else { "3,4,8" });
@@ -631,15 +689,35 @@ fn soak(args: &Args) -> Result<()> {
     let straggler: f32 = args.parse_as("straggler", 0.1)?;
     let seed: u64 = args.parse_as("seed", 1234)?;
     // SLO ceilings: CI-safe defaults (micro model on shared runners), all
-    // overridable; the error budget covers the injected oversized traffic
+    // overridable; the error budget covers the injected oversized traffic.
+    // --chaos widens it further because each injected pool/engine panic
+    // rejects its whole batch by design — the chaos lane's hard gates are
+    // zero stuck/lost and the fault-to-terminal-event audit, not the
+    // error budget
+    let err_budget =
+        if chaos { 0.9 } else { (oversized as f64) * 2.0 + 0.05 };
     let slo = SloSpec {
         p50_ms: Some(args.parse_as("slo-p50-ms", 2_000.0)?),
         p99_ms: Some(args.parse_as("slo-p99-ms", 10_000.0)?),
         ttft_p99_ms: Some(args.parse_as("slo-ttft-ms", 10_000.0)?),
         queue_p99_ms: Some(args.parse_as("slo-queue-ms", 10_000.0)?),
-        max_error_rate: Some(args.parse_as(
-            "slo-err", (oversized as f64) * 2.0 + 0.05)?),
+        max_error_rate: Some(args.parse_as("slo-err", err_budget)?),
+        max_expire_rate: match args.get("slo-expire") {
+            Some(_) => Some(args.parse_as("slo-expire", 0.0)?),
+            None => None,
+        },
+        max_shed_rate: match args.get("slo-shed") {
+            Some(_) => Some(args.parse_as("slo-shed", 0.0)?),
+            None => None,
+        },
         max_stuck: 0,
+    };
+    // per-request deadline attached to every loadgen submission (the
+    // engine-side enforcement path is exercised wherever the request is
+    // when it passes: queued, awaiting admission, or mid-decode)
+    let deadline_ms: Option<u64> = match args.get("deadline-ms") {
+        Some(_) => Some(args.parse_as("deadline-ms", 0u64)?),
+        None => None,
     };
 
     let mut rows: Vec<ServeBenchRow> = Vec::new();
@@ -648,13 +726,53 @@ fn soak(args: &Args) -> Result<()> {
     let mut cfg_name = String::new();
     for &w_bits in &bits {
         let scheme = Scheme { w_bits, ..scheme_from(args)? };
-        let (dim, model) = native_model_with_scheme(
-            args, scheme, if smoke { "micro" } else { "tiny" })?;
+        let default_cfg = if smoke { "micro" } else { "tiny" };
+        let (dim, model) =
+            native_model_with_scheme(args, scheme, default_cfg)?;
         cfg_name = dim.name.clone();
-        let mut server = start_native_server(
-            model,
-            ServerConfig { max_batch, max_wait: Duration::from_millis(2) },
-        )?;
+
+        // degraded plan: the same checkpoint packed at W4 next to the
+        // primary — the LRQ premise that low-bit configs retain near-full
+        // accuracy makes shedding quality cheaper than shedding requests
+        let want_degrade = chaos || args.get("degrade").is_some();
+        let degraded = if want_degrade && w_bits > 4 {
+            let (_, d) = native_model_with_scheme(
+                args, Scheme { w_bits: 4, ..scheme }, default_cfg)?;
+            Some(d)
+        } else {
+            None
+        };
+        let has_degraded = degraded.is_some();
+
+        let mut cfg = server_config_from(args, max_batch)?;
+        if chaos {
+            // chaos defaults (explicit flags win): watermarks low enough
+            // that the forced burst below must trip both controllers
+            if cfg.shed_queue.is_none() {
+                cfg.shed_queue = Some(Watermarks::new(4, 1));
+                cfg.shed_kv = Some(Watermarks::new(4, 1));
+            }
+            if cfg.degrade.is_none() {
+                cfg.degrade = Some(Watermarks::new(2, 0));
+            }
+        }
+
+        // the chaos fault plan: one of each injected failure, at call /
+        // response indices the warm-up traffic is guaranteed to reach
+        let plan = if chaos {
+            let mut p = FaultPlan::new();
+            p.pool_panic_call = Some(2);
+            p.engine_panic_call = Some(5);
+            p.stall_call = Some(8);
+            p.stall = Duration::from_millis(400);
+            p.drop_response = Some(3);
+            Some(std::sync::Arc::new(p))
+        } else {
+            None
+        };
+
+        let mut server =
+            start_native_server_with(model, degraded, cfg, plan.clone())?;
         let spec = LoadSpec {
             mode,
             clients,
@@ -672,10 +790,15 @@ fn soak(args: &Args) -> Result<()> {
             seq: dim.seq,
             seed: seed ^ w_bits as u64,
             drain_timeout: Duration::from_secs(60),
+            deadline_ms,
         };
         println!("\n== soak W{w_bits} ({}, {:?}, {clients} clients x \
                   {requests} reqs) ==", dim.name, mode);
         let out = loadgen::run(&server, &spec);
+        if let Some(plan) = &plan {
+            chaos_audit(&server, plan, &out, dim.vocab, w_bits,
+                        has_degraded, &mut failures)?;
+        }
         let m = server.metrics.lock().unwrap().clone();
         let ev = server.events();
         server.shutdown();
@@ -683,16 +806,19 @@ fn soak(args: &Args) -> Result<()> {
         let agg = ev.agg();
         let report = slo.evaluate(&agg, stuck.len() as u64);
         println!("{}", m.summary(out.wall));
-        println!("submitted {} ok {} rejected {} disconnected {} lost {} \
-                  in {:.2}s ({:.1} req/s)",
-                 out.submitted, out.ok, out.rejected, out.disconnected,
-                 out.lost, out.wall.as_secs_f64(), out.req_per_sec());
+        println!("submitted {} ok {} rejected {} expired {} shed {} \
+                  disconnected {} lost {} in {:.2}s ({:.1} req/s)",
+                 out.submitted, out.ok, out.rejected, out.expired,
+                 out.shed, out.disconnected, out.lost,
+                 out.wall.as_secs_f64(), out.req_per_sec());
         print!("{}", report.render());
         if !stuck.is_empty() {
             failures.push(format!(
                 "W{w_bits}: {} stuck sequence(s): {stuck:?}", stuck.len()));
         }
-        if out.lost > 0 {
+        // under --chaos a lost response is legitimate exactly when the
+        // fault plan dropped it; chaos_audit holds that equality
+        if plan.is_none() && out.lost > 0 {
             failures.push(format!(
                 "W{w_bits}: {} response(s) lost", out.lost));
         }
@@ -712,6 +838,9 @@ fn soak(args: &Args) -> Result<()> {
             queue_p99_ms:
                 ms(lrq::obs::events::percentile_us(&agg.queue_us, 0.99)),
             error_rate: agg.error_rate(),
+            expire_rate: agg.expire_rate(),
+            shed_rate: agg.shed_rate(),
+            degrade_shifts: m.degrade_shifts() as u64,
             stuck: stuck.len() as u64,
         });
     }
@@ -749,7 +878,121 @@ fn soak(args: &Args) -> Result<()> {
         }
         anyhow::bail!("{} soak failure(s)", failures.len());
     }
-    println!("soak: all SLOs passed, zero stuck sequences");
+    println!("soak: all SLOs passed, zero stuck sequences{}",
+             if chaos { ", chaos faults contained" } else { "" });
+    Ok(())
+}
+
+/// The chaos lane's in-vivo audit (DESIGN.md §13), run against the live
+/// server after the warm-up soak traffic: every injected fault must have
+/// fired exactly once and be accounted for by a terminal outcome, a forced
+/// overload burst must trip shed-then-recover, zero-deadline probes must
+/// all expire, and — when a degraded plan is attached — the burst must
+/// drive a downshift-then-restore of the decode plan.
+fn chaos_audit(server: &lrq::serve::Server, plan: &FaultPlan,
+               out: &loadgen::LoadOutcome, vocab: usize, w_bits: u32,
+               has_degraded: bool, failures: &mut Vec<String>)
+               -> Result<()> {
+    let fired = plan.fired();
+    for (what, got) in [("pool-job panic", fired.pool_panics),
+                        ("engine panic", fired.engine_panics),
+                        ("kernel stall", fired.stalls),
+                        ("response drop", fired.drops)] {
+        if got != 1 {
+            failures.push(format!(
+                "W{w_bits} chaos: injected {what} fired {got}x, want 1 \
+                 (warm-up traffic too small for the fault plan?)"));
+        }
+    }
+    // zero-lost: a response may vanish only because the plan dropped it
+    if out.lost != plan.drops_fired() {
+        failures.push(format!(
+            "W{w_bits} chaos: {} lost response(s) vs {} injected drop(s)",
+            out.lost, plan.drops_fired()));
+    }
+
+    // forced overload burst: submit far past the shed watermark before
+    // reading any response, so admission control must arm (and the
+    // degrade controller downshift) while the backlog drains
+    let c = server.client();
+    let mut pending = Vec::new();
+    for i in 0..64u64 {
+        let ids: Vec<i32> = (0..6)
+            .map(|t| ((i * 7 + t) % vocab.min(61) as u64) as i32)
+            .collect();
+        pending.push(c.submit(ids)?);
+    }
+    let (mut served, mut shed, mut other) = (0u64, 0u64, 0u64);
+    for rx in pending {
+        match rx.recv() {
+            Ok(Ok(_)) => served += 1,
+            Ok(Err(msg)) if msg.starts_with(SHED_PREFIX) => shed += 1,
+            _ => other += 1,
+        }
+    }
+    if shed == 0 {
+        failures.push(format!(
+            "W{w_bits} chaos: overload burst tripped no shedding"));
+    }
+    if served == 0 {
+        failures.push(format!(
+            "W{w_bits} chaos: overload burst starved every request"));
+    }
+    if other != 0 {
+        failures.push(format!(
+            "W{w_bits} chaos: {other} burst request(s) ended neither \
+             served nor shed"));
+    }
+
+    // zero-deadline probes, submitted after the backlog cleared so they
+    // reach the queue (instead of being shed) and must all expire
+    let zc = c.clone().with_deadline(Duration::ZERO);
+    let probes: Vec<_> = (0..4)
+        .map(|_| zc.submit(vec![1, 2, 3]))
+        .collect::<Result<_>>()?;
+    let expired = probes
+        .into_iter()
+        .filter(|rx| matches!(rx.recv(),
+                              Ok(Err(msg)) if msg.starts_with(EXPIRED_PREFIX)))
+        .count();
+    if expired != 4 {
+        failures.push(format!(
+            "W{w_bits} chaos: {expired}/4 zero-deadline probes expired"));
+    }
+
+    // recovery: shedding must have disarmed once the burst drained — a
+    // fresh request is served normally
+    if let Err(e) = c.score(vec![1, 2, 3, 4]) {
+        failures.push(format!(
+            "W{w_bits} chaos: no recovery after the burst: {e}"));
+    }
+
+    // downshift-then-restore: the burst pushed the queue past the degrade
+    // watermark, and once idle the controller must restore the primary
+    // plan (the restore lands on an idle controller pass, so poll)
+    if has_degraded {
+        let poll_deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let (shifts, on) = {
+                let m = server.metrics.lock().unwrap();
+                (m.degrade_shifts(), m.is_degraded())
+            };
+            if shifts >= 2 && !on {
+                println!("chaos: degrade downshift-then-restore observed \
+                          ({shifts} transitions)");
+                break;
+            }
+            if Instant::now() >= poll_deadline {
+                failures.push(format!(
+                    "W{w_bits} chaos: no downshift-then-restore \
+                     ({shifts} transition(s), degraded={on})"));
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+    }
+    println!("chaos burst: {served} served, {shed} shed, {expired}/4 \
+              probes expired; faults fired {fired:?}");
     Ok(())
 }
 

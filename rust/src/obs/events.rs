@@ -12,8 +12,9 @@
 //!
 //! Lifecycle contract (enforced by tests):
 //! * every request that reaches the server gets exactly one terminal event
-//!   (`respond`, `reject`, or `disconnect`) — a request still open after
-//!   server shutdown is a **stuck sequence**, surfaced by [`EventLog::stuck`];
+//!   (`respond`, `reject`, `expire`, `shed`, or `disconnect`) — a request
+//!   still open after server shutdown is a **stuck sequence**, surfaced by
+//!   [`EventLog::stuck`];
 //! * per completed request `queue_us + exec_us <= total_us` (the remainder
 //!   is batcher overhead: response fan-out, channel hops);
 //! * the ring is bounded ([`EventLog::new`]'s `cap`): under sustained load
@@ -22,7 +23,7 @@
 //!   of requests actually in flight.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, MutexGuard};
 use std::time::Instant;
 
 use super::registry::{Counter, Histogram, Registry};
@@ -67,6 +68,11 @@ pub enum EventKind {
     Respond,
     /// answered with an error (validation, engine failure)
     Reject,
+    /// deadline exceeded: expired in queue or evicted mid-decode
+    Expire,
+    /// shed by admission control under overload (fast retriable rejection,
+    /// distinct from the invalid-request `Reject`)
+    Shed,
     /// client dropped its response channel before the answer landed
     Disconnect,
 }
@@ -81,6 +87,8 @@ impl EventKind {
             EventKind::FirstToken => "first_token",
             EventKind::Respond => "respond",
             EventKind::Reject => "reject",
+            EventKind::Expire => "expire",
+            EventKind::Shed => "shed",
             EventKind::Disconnect => "disconnect",
         }
     }
@@ -88,6 +96,7 @@ impl EventKind {
     /// Does this event end the request's lifecycle?
     pub fn is_terminal(&self) -> bool {
         matches!(self, EventKind::Respond | EventKind::Reject
+                 | EventKind::Expire | EventKind::Shed
                  | EventKind::Disconnect)
     }
 }
@@ -108,7 +117,7 @@ pub struct Event {
 pub struct RequestSummary {
     pub rid: u64,
     pub req: ReqKind,
-    /// `Respond`, `Reject`, or `Disconnect`
+    /// `Respond`, `Reject`, `Expire`, `Shed`, or `Disconnect`
     pub outcome: EventKind,
     /// enqueue → admit/batch-join (time spent waiting for the engine)
     pub queue_us: u64,
@@ -148,13 +157,15 @@ pub struct EventLog {
     ttft_hist: Arc<Histogram>,
     responded: Arc<Counter>,
     rejected: Arc<Counter>,
+    expired: Arc<Counter>,
+    shed: Arc<Counter>,
     disconnected: Arc<Counter>,
     dropped: Arc<Counter>,
 }
 
 impl std::fmt::Debug for EventLog {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         write!(f, "EventLog({} events, {} open, {} done)", g.events.len(),
                g.open.len(), g.done.len())
     }
@@ -166,6 +177,8 @@ impl std::fmt::Debug for EventLog {
 pub struct EventAgg {
     pub responded: u64,
     pub rejected: u64,
+    pub expired: u64,
+    pub shed: u64,
     pub disconnected: u64,
     pub queue_us: Vec<u64>,
     pub exec_us: Vec<u64>,
@@ -176,17 +189,38 @@ pub struct EventAgg {
 impl EventAgg {
     /// Completed requests (all outcomes).
     pub fn completed(&self) -> u64 {
-        self.responded + self.rejected + self.disconnected
+        self.responded + self.rejected + self.expired + self.shed
+            + self.disconnected
     }
 
     /// Server-side error rate: rejected / answered. Disconnects are
-    /// client-caused and excluded from the error budget.
+    /// client-caused; expiries and sheds are load-induced and budgeted
+    /// separately ([`EventAgg::expire_rate`], [`EventAgg::shed_rate`]) —
+    /// all three are excluded from the error budget.
     pub fn error_rate(&self) -> f64 {
         let answered = self.responded + self.rejected;
         if answered == 0 {
             return 0.0;
         }
         self.rejected as f64 / answered as f64
+    }
+
+    /// Deadline-miss rate: expired / completed.
+    pub fn expire_rate(&self) -> f64 {
+        let done = self.completed();
+        if done == 0 {
+            return 0.0;
+        }
+        self.expired as f64 / done as f64
+    }
+
+    /// Load-shed rate: shed / completed.
+    pub fn shed_rate(&self) -> f64 {
+        let done = self.completed();
+        if done == 0 {
+            return 0.0;
+        }
+        self.shed as f64 / done as f64
     }
 }
 
@@ -233,6 +267,12 @@ impl EventLog {
             rejected: registry.counter(
                 "lrq_requests_rejected_total",
                 "requests answered with an error"),
+            expired: registry.counter(
+                "lrq_requests_expired_total",
+                "requests whose deadline passed before completion"),
+            shed: registry.counter(
+                "lrq_requests_shed_total",
+                "requests shed by admission control under overload"),
             disconnected: registry.counter(
                 "lrq_requests_disconnected_total",
                 "requests whose client disconnected before the answer"),
@@ -247,13 +287,20 @@ impl EventLog {
         self.epoch.elapsed().as_micros() as u64
     }
 
+    /// Poison-tolerant lock: the inner state is a plain event ring — if a
+    /// recording thread panicked mid-`record` the worst case is one partial
+    /// event, never an invariant the rest of the server depends on.
+    fn guard(&self) -> MutexGuard<'_, Inner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
     /// Record one lifecycle event. Terminal events close the request's open
     /// state, derive its [`RequestSummary`], and feed the stage histograms.
     pub fn record(&self, rid: u64, req: ReqKind, kind: EventKind,
                   detail: u64) {
         let t_us = self.now_us();
         let ev = Event { rid, req, kind, t_us, detail };
-        let mut g = self.inner.lock().unwrap();
+        let mut g = self.guard();
         if g.events.len() >= self.cap {
             g.events.pop_front();
             self.dropped.inc();
@@ -284,8 +331,8 @@ impl EventLog {
                     o.first_us.get_or_insert(t_us);
                 }
             }
-            EventKind::Respond | EventKind::Reject
-            | EventKind::Disconnect => {
+            EventKind::Respond | EventKind::Reject | EventKind::Expire
+            | EventKind::Shed | EventKind::Disconnect => {
                 let Some(o) = g.open.remove(&rid) else { return };
                 let total_us = t_us.saturating_sub(o.enqueue_us);
                 let queue_us = o
@@ -313,6 +360,8 @@ impl EventLog {
                 match kind {
                     EventKind::Respond => self.responded.inc(),
                     EventKind::Reject => self.rejected.inc(),
+                    EventKind::Expire => self.expired.inc(),
+                    EventKind::Shed => self.shed.inc(),
                     _ => self.disconnected.inc(),
                 }
                 // stage histograms cover answered work (reject included:
@@ -332,14 +381,14 @@ impl EventLog {
 
     /// Completed-request summaries currently retained (oldest first).
     pub fn summaries(&self) -> Vec<RequestSummary> {
-        self.inner.lock().unwrap().done.iter().copied().collect()
+        self.guard().done.iter().copied().collect()
     }
 
     /// Request IDs that saw an `enqueue` but no terminal event yet. After
     /// server shutdown this must be empty — anything left is a stuck
     /// sequence (a leaked KV cache or an unanswered client).
     pub fn stuck(&self) -> Vec<u64> {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         let mut rids: Vec<u64> = g.open.keys().copied().collect();
         rids.sort_unstable();
         rids
@@ -347,10 +396,12 @@ impl EventLog {
 
     /// Aggregate every retained summary for SLO evaluation.
     pub fn agg(&self) -> EventAgg {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         let mut a = EventAgg {
             responded: self.responded.get(),
             rejected: self.rejected.get(),
+            expired: self.expired.get(),
+            shed: self.shed.get(),
             disconnected: self.disconnected.get(),
             ..EventAgg::default()
         };
@@ -377,7 +428,7 @@ impl EventLog {
     /// Render the retained events as JSON Lines, one event per line, each
     /// tagged with `run` (e.g. the bit-width label of a soak phase).
     pub fn jsonl(&self, run: &str) -> String {
-        let g = self.inner.lock().unwrap();
+        let g = self.guard();
         let mut out = String::new();
         for e in g.events.iter() {
             out.push_str(&format!(
@@ -452,6 +503,65 @@ mod tests {
         assert_eq!(agg.completed(), 2);
         // errors = rejected / answered; the disconnect is excluded
         assert!((agg.error_rate() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expire_before_admission_keeps_identity() {
+        // a request that dies in the queue: no admit, no exec — all its
+        // latency is queue time and the stage identity still holds
+        let (l, _r) = log();
+        l.record(11, ReqKind::Score, EventKind::Enqueue, 4);
+        l.record(11, ReqKind::Score, EventKind::Expire, 0);
+        let s = l.summaries()[0];
+        assert_eq!(s.outcome, EventKind::Expire);
+        assert_eq!(s.exec_us, 0);
+        assert_eq!(s.queue_us, s.total_us);
+        assert!(s.queue_us + s.exec_us <= s.total_us);
+        let agg = l.agg();
+        assert_eq!(agg.expired, 1);
+        assert_eq!(agg.completed(), 1);
+        // expiries are not server errors: the error budget ignores them
+        assert!(agg.error_rate().abs() < 1e-9);
+        assert!((agg.expire_rate() - 1.0).abs() < 1e-9);
+        assert!(l.stuck().is_empty());
+    }
+
+    #[test]
+    fn expire_mid_decode_keeps_identity() {
+        // evicted after admission: engine-resident time counts as exec and
+        // queue + exec still never exceeds total
+        let (l, _r) = log();
+        l.record(12, ReqKind::Generate, EventKind::Enqueue, 4);
+        l.record(12, ReqKind::Generate, EventKind::Admit, 4);
+        l.record(12, ReqKind::Generate, EventKind::FirstToken, 0);
+        l.record(12, ReqKind::Generate, EventKind::Expire, 2);
+        let s = l.summaries()[0];
+        assert_eq!(s.outcome, EventKind::Expire);
+        assert!(s.queue_us + s.exec_us <= s.total_us,
+                "queue {} + exec {} vs total {}", s.queue_us, s.exec_us,
+                s.total_us);
+        assert!(s.ttft_us.is_some());
+        assert_eq!(l.agg().expired, 1);
+        assert!(l.stuck().is_empty());
+    }
+
+    #[test]
+    fn shed_is_terminal_and_not_an_error() {
+        let (l, _r) = log();
+        l.record(21, ReqKind::Score, EventKind::Enqueue, 4);
+        l.record(21, ReqKind::Score, EventKind::Shed, 0);
+        l.record(22, ReqKind::Score, EventKind::Enqueue, 4);
+        l.record(22, ReqKind::Score, EventKind::BatchJoin, 1);
+        l.record(22, ReqKind::Score, EventKind::Respond, 0);
+        let agg = l.agg();
+        assert_eq!(agg.shed, 1);
+        assert_eq!(agg.responded, 1);
+        assert_eq!(agg.completed(), 2);
+        assert!(agg.error_rate().abs() < 1e-9);
+        assert!((agg.shed_rate() - 0.5).abs() < 1e-9);
+        assert!(l.stuck().is_empty());
+        let txt = l.jsonl("w4");
+        assert!(txt.contains("\"event\":\"shed\""), "{txt}");
     }
 
     #[test]

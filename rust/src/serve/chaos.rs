@@ -1,0 +1,310 @@
+//! Server-side fault injection for the chaos harness (DESIGN.md §13).
+//!
+//! A [`FaultPlan`] counts engine calls and fires configured faults at exact
+//! call indices: a worker-pool job panic (surfacing through `JobPanicked`
+//! as a failed batch, exercising the pool's containment contract end to
+//! end), a direct engine-thread panic (absorbed by the serve layer's
+//! unwind guards), a kernel stall (a stand-in for a hung kernel — long
+//! enough to trip request deadlines), and a dropped response send (a
+//! client whose answer vanishes in flight). [`ChaosScorer`] wraps any
+//! [`BatchScorer`] and consults the plan before every delegated engine
+//! call; `lrq soak --chaos` wires one into a live server and asserts zero
+//! stuck and zero lost requests afterwards, with every injected failure
+//! mapped to a terminal lifecycle event.
+//!
+//! The plan's counters are all `SeqCst` atomics so a single `Arc<FaultPlan>`
+//! can be shared between the engine thread (which fires faults) and the
+//! soak driver (which audits [`FaultPlan::fired`] after shutdown).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use crate::infer::WorkerPool;
+
+use super::{BatchScorer, SeqId};
+
+/// Which engine calls / responses should fail, and how. Call indices are
+/// 1-based over the wrapped scorer's fallible calls (`score`,
+/// `begin_decode`, `decode_step`); the response index is 1-based over
+/// successful response sends. Construct with [`FaultPlan::new`] and assign
+/// the public fields, then share via `Arc`.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Panic the Nth engine call from inside a worker-pool job: the pool
+    /// reports `JobPanicked`, the batch fails with an error response, the
+    /// server keeps serving.
+    pub pool_panic_call: Option<u64>,
+    /// Panic the Nth engine call directly on the engine thread: the serve
+    /// layer's `guarded` wrapper converts it to an error response.
+    pub engine_panic_call: Option<u64>,
+    /// Stall the Nth engine call for [`FaultPlan::stall`] before running it
+    /// (it still completes — the fault is latency, not failure).
+    pub stall_call: Option<u64>,
+    /// Duration of an injected stall (default zero).
+    pub stall: Duration,
+    /// Drop the Nth successful response instead of sending it: the client
+    /// observes a closed channel, the engine records a Disconnect.
+    pub drop_response: Option<u64>,
+    calls: AtomicU64,
+    responses: AtomicU64,
+    pool_panics: AtomicU64,
+    engine_panics: AtomicU64,
+    stalls: AtomicU64,
+    drops: AtomicU64,
+}
+
+/// Audit of which faults actually fired — the chaos soak's ledger for
+/// asserting every configured fault was exercised and every lost response
+/// is accounted for.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultsFired {
+    pub pool_panics: u64,
+    pub engine_panics: u64,
+    pub stalls: u64,
+    pub drops: u64,
+}
+
+impl FaultsFired {
+    pub fn total(&self) -> u64 {
+        self.pool_panics + self.engine_panics + self.stalls + self.drops
+    }
+}
+
+impl FaultPlan {
+    pub fn new() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Fallible engine calls observed so far.
+    pub fn calls(&self) -> u64 {
+        self.calls.load(Ordering::SeqCst)
+    }
+
+    /// Audit of which faults have actually fired so far.
+    pub fn fired(&self) -> FaultsFired {
+        FaultsFired {
+            pool_panics: self.pool_panics.load(Ordering::SeqCst),
+            engine_panics: self.engine_panics.load(Ordering::SeqCst),
+            stalls: self.stalls.load(Ordering::SeqCst),
+            drops: self.drops.load(Ordering::SeqCst),
+        }
+    }
+
+    /// How many responses the engine dropped on this plan's instruction —
+    /// the exact number of requests a chaos client should count as lost.
+    pub fn drops_fired(&self) -> u64 {
+        self.drops.load(Ordering::SeqCst)
+    }
+
+    /// Count one successful response; `true` if the plan says to drop it.
+    /// Called by the engine at each response-send site when chaos is wired.
+    pub fn should_drop_response(&self) -> bool {
+        let n = self.responses.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.drop_response == Some(n) {
+            self.drops.fetch_add(1, Ordering::SeqCst);
+            return true;
+        }
+        false
+    }
+}
+
+/// A [`BatchScorer`] decorator that consults a [`FaultPlan`] before every
+/// delegated fallible call. Faults are injected through the same machinery
+/// production failures would take: the pool panic runs on a real
+/// [`WorkerPool`], the engine panic unwinds into the serve layer's guards,
+/// the stall burns wall-clock against real deadlines.
+pub struct ChaosScorer {
+    inner: Box<dyn BatchScorer>,
+    plan: Arc<FaultPlan>,
+    /// a real two-thread pool, so an injected job panic exercises the
+    /// production `JobPanicked` containment path rather than simulating it
+    pool: WorkerPool,
+}
+
+impl ChaosScorer {
+    pub fn new(inner: Box<dyn BatchScorer>, plan: Arc<FaultPlan>)
+               -> ChaosScorer {
+        ChaosScorer { inner, plan, pool: WorkerPool::new(2) }
+    }
+
+    /// Count one fallible call and fire any fault scheduled for it. Returns
+    /// an error when the fault surfaces as one (the pool-job panic); the
+    /// engine panic unwinds from here by design.
+    fn fault(&self) -> Result<()> {
+        let call = self.plan.calls.fetch_add(1, Ordering::SeqCst) + 1;
+        if self.plan.stall_call == Some(call) {
+            self.plan.stalls.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(self.plan.stall);
+        }
+        if self.plan.pool_panic_call == Some(call) {
+            self.plan.pool_panics.fetch_add(1, Ordering::SeqCst);
+            let r = self.pool.run(2, |i| {
+                if i == 1 {
+                    // PANIC: chaos fault injection — deliberately panics a
+                    // pool job to prove the pool contains it (DESIGN.md §13)
+                    panic!("chaos: injected pool-job panic");
+                }
+            });
+            if let Err(e) = r {
+                return Err(anyhow!("chaos pool fault: {e}; batch discarded"));
+            }
+        }
+        if self.plan.engine_panic_call == Some(call) {
+            self.plan.engine_panics.fetch_add(1, Ordering::SeqCst);
+            // PANIC: chaos fault injection — deliberately unwinds into the
+            // serve layer's `guarded` wrapper to prove unwind isolation
+            panic!("chaos: injected engine panic");
+        }
+        Ok(())
+    }
+}
+
+impl BatchScorer for ChaosScorer {
+    fn batch_size(&self) -> usize {
+        self.inner.batch_size()
+    }
+    fn seq_len(&self) -> usize {
+        self.inner.seq_len()
+    }
+    fn variable_batch(&self) -> bool {
+        self.inner.variable_batch()
+    }
+    fn score(&mut self, ids: &[i32], targets: &[i32]) -> Result<Vec<f32>> {
+        self.fault()?;
+        self.inner.score(ids, targets)
+    }
+    fn supports_decode(&self) -> bool {
+        self.inner.supports_decode()
+    }
+    fn begin_decode(&mut self, prompt: &[i32]) -> Result<(SeqId, Vec<f32>)> {
+        self.fault()?;
+        self.inner.begin_decode(prompt)
+    }
+    fn decode_step(&mut self, batch: &[(SeqId, i32)])
+                   -> Result<Vec<Vec<f32>>> {
+        self.fault()?;
+        self.inner.decode_step(batch)
+    }
+    fn end_decode(&mut self, seq: SeqId) {
+        // cleanup is never fault-injected: a fault here could leak KV state
+        // and turn every injected failure into a stuck sequence
+        self.inner.end_decode(seq)
+    }
+    fn supports_degrade(&self) -> bool {
+        self.inner.supports_degrade()
+    }
+    fn set_degraded(&mut self, on: bool) {
+        self.inner.set_degraded(on)
+    }
+    fn degraded(&self) -> bool {
+        self.inner.degraded()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{MockScorer, Server, ServerConfig};
+    use super::*;
+
+    fn mock() -> Box<dyn BatchScorer> {
+        Box::new(MockScorer { batch: 4, seq: 8, calls: 0 })
+    }
+
+    #[test]
+    fn pool_panic_fires_once_at_exact_call() {
+        let plan = Arc::new(FaultPlan {
+            pool_panic_call: Some(2),
+            ..FaultPlan::default()
+        });
+        let mut cs = ChaosScorer::new(mock(), plan.clone());
+        assert!(cs.score(&[1, 2], &[2, 0]).is_ok()); // call 1: healthy
+        let err = cs.score(&[1, 2], &[2, 0]).unwrap_err(); // call 2: fault
+        assert!(format!("{err}").contains("chaos pool fault"), "{err}");
+        assert!(cs.score(&[1, 2], &[2, 0]).is_ok()); // call 3: healthy again
+        let f = plan.fired();
+        assert_eq!(f.pool_panics, 1);
+        assert_eq!(f.total(), 1);
+        assert_eq!(plan.calls(), 3);
+    }
+
+    #[test]
+    fn stall_and_drop_fire_and_count() {
+        let mut p = FaultPlan::new();
+        p.stall_call = Some(1);
+        p.stall = Duration::from_millis(20);
+        p.drop_response = Some(2);
+        let plan = Arc::new(p);
+        let mut cs = ChaosScorer::new(mock(), plan.clone());
+        let t0 = std::time::Instant::now();
+        assert!(cs.score(&[1, 2], &[2, 0]).is_ok());
+        assert!(t0.elapsed() >= Duration::from_millis(20), "stall skipped");
+        assert!(!plan.should_drop_response()); // response 1 passes
+        assert!(plan.should_drop_response()); // response 2 dropped
+        assert!(!plan.should_drop_response()); // response 3 passes
+        let f = plan.fired();
+        assert_eq!((f.stalls, f.drops), (1, 1));
+        assert_eq!(plan.drops_fired(), 1);
+    }
+
+    #[test]
+    fn injected_engine_panic_fails_only_its_batch() {
+        let plan = Arc::new(FaultPlan {
+            engine_panic_call: Some(1),
+            ..FaultPlan::default()
+        });
+        let p2 = plan.clone();
+        let s = Server::start_with(
+            ServerConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            Some(plan.clone()),
+            move || Ok(Box::new(ChaosScorer::new(
+                Box::new(MockScorer { batch: 4, seq: 8, calls: 0 }), p2))),
+        )
+        .unwrap();
+        let c = s.client();
+        // call 1 panics inside the scorer; `guarded` answers with an error
+        let err = c.score(vec![1, 2]).unwrap_err();
+        assert!(format!("{err}").contains("panicked"), "{err}");
+        // the very next request is served normally by the same engine
+        assert_eq!(c.score(vec![1, 3]).unwrap().logp_sum, -3.0);
+        assert_eq!(plan.fired().engine_panics, 1);
+        assert!(s.events().stuck().is_empty());
+    }
+
+    #[test]
+    fn dropped_response_surfaces_as_disconnect_not_stuck() {
+        let plan = Arc::new(FaultPlan {
+            drop_response: Some(1),
+            ..FaultPlan::default()
+        });
+        let p2 = plan.clone();
+        let s = Server::start_with(
+            ServerConfig {
+                max_batch: 2,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            Some(plan.clone()),
+            move || Ok(Box::new(ChaosScorer::new(
+                Box::new(MockScorer { batch: 4, seq: 8, calls: 0 }), p2))),
+        )
+        .unwrap();
+        let c = s.client();
+        // first answer is dropped in flight: the client sees a closed
+        // channel, the event log sees a terminal Disconnect — never stuck
+        let rx = c.submit(vec![1, 2]).unwrap();
+        assert!(rx.recv().is_err(), "dropped response was delivered");
+        // the next request is unaffected
+        assert_eq!(c.score(vec![1, 3]).unwrap().logp_sum, -3.0);
+        assert_eq!(plan.fired().drops, 1);
+        let ev = s.events();
+        assert!(ev.stuck().is_empty());
+        assert_eq!(ev.agg().disconnected, 1);
+    }
+}

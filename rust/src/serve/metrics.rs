@@ -68,6 +68,14 @@ pub struct Metrics {
     active_seqs: Arc<Gauge>,
     /// admitted-but-waiting generate requests
     queued_reqs: Arc<Gauge>,
+    /// admission-control state: 1 while the engine is shedding new arrivals
+    shedding: Arc<Gauge>,
+    /// degrade-controller state: 1 while the cheap (degraded) plan is active
+    degraded: Arc<Gauge>,
+    /// degrade-controller transitions (downshifts + restores)
+    degrade_shifts: Arc<Counter>,
+    /// engine-thread restarts by the unwind-supervision loop
+    engine_restarts: Arc<Counter>,
     /// exact latency samples for nearest-rank percentiles
     latencies_us: Vec<u64>,
     /// first/last record times — the observation window for the built-in
@@ -120,6 +128,18 @@ impl Metrics {
         let queued_reqs = registry.gauge(
             "lrq_queued_requests",
             "generate requests admitted but waiting for a decode slot");
+        let shedding = registry.gauge(
+            "lrq_shedding",
+            "1 while admission control is shedding new arrivals");
+        let degraded = registry.gauge(
+            "lrq_degraded",
+            "1 while the degraded (cheaper) execution plan is active");
+        let degrade_shifts = registry.counter(
+            "lrq_degrade_shifts_total",
+            "degrade-controller plan transitions (downshifts + restores)");
+        let engine_restarts = registry.counter(
+            "lrq_engine_restarts_total",
+            "engine-thread restarts by the unwind-supervision loop");
         Metrics {
             registry,
             requests,
@@ -135,6 +155,10 @@ impl Metrics {
             events,
             active_seqs,
             queued_reqs,
+            shedding,
+            degraded,
+            degrade_shifts,
+            engine_restarts,
             latencies_us: Vec::new(),
             first_record: None,
             last_record: None,
@@ -158,6 +182,42 @@ impl Metrics {
     pub fn set_occupancy(&self, active: usize, queued: usize) {
         self.active_seqs.set(active as i64);
         self.queued_reqs.set(queued as i64);
+    }
+
+    /// Flip the admission-control gauge (DESIGN.md §13).
+    pub fn set_shedding(&self, on: bool) {
+        self.shedding.set(i64::from(on));
+    }
+
+    /// Whether admission control is currently shedding.
+    pub fn is_shedding(&self) -> bool {
+        self.shedding.get() != 0
+    }
+
+    /// Flip the degraded-plan gauge and count the transition.
+    pub fn set_degraded(&self, on: bool) {
+        self.degraded.set(i64::from(on));
+        self.degrade_shifts.inc();
+    }
+
+    /// Whether the degraded execution plan is currently active.
+    pub fn is_degraded(&self) -> bool {
+        self.degraded.get() != 0
+    }
+
+    /// Degrade-controller transitions so far (downshifts + restores).
+    pub fn degrade_shifts(&self) -> usize {
+        self.degrade_shifts.get() as usize
+    }
+
+    /// Count one engine-thread restart by the supervision loop.
+    pub fn record_engine_restart(&self) {
+        self.engine_restarts.inc();
+    }
+
+    /// Engine-thread restarts so far.
+    pub fn engine_restarts(&self) -> usize {
+        self.engine_restarts.get() as usize
     }
 
     fn touch(&mut self) {
@@ -500,6 +560,29 @@ mod tests {
         assert!(txt.contains("lrq_queued_requests 2"), "{txt}");
         assert!(txt.contains("lrq_requests_responded_total 1"), "{txt}");
         assert!(txt.contains("lrq_exec_time_us_sum 25"), "{txt}");
+    }
+
+    #[test]
+    fn overload_gauges_render_and_count() {
+        let m = Metrics::default();
+        assert!(!m.is_shedding());
+        assert!(!m.is_degraded());
+        assert_eq!(m.degrade_shifts(), 0);
+        m.set_shedding(true);
+        m.set_degraded(true);
+        m.set_degraded(false);
+        m.record_engine_restart();
+        assert!(m.is_shedding());
+        assert!(!m.is_degraded());
+        assert_eq!(m.degrade_shifts(), 2);
+        assert_eq!(m.engine_restarts(), 1);
+        let txt = m.render();
+        assert!(txt.contains("lrq_shedding 1"), "{txt}");
+        assert!(txt.contains("lrq_degraded 0"), "{txt}");
+        assert!(txt.contains("lrq_degrade_shifts_total 2"), "{txt}");
+        assert!(txt.contains("lrq_engine_restarts_total 1"), "{txt}");
+        m.set_shedding(false);
+        assert!(m.render().contains("lrq_shedding 0"));
     }
 
     #[test]

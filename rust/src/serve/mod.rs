@@ -35,11 +35,27 @@
 //! which derives per-request queue-time / exec-time / TTFT and detects stuck
 //! sequences — the substrate of the soak harness's SLO evaluator
 //! (DESIGN.md §10).
+//!
+//! Overload & failure model (DESIGN.md §13): requests may carry deadlines —
+//! enforced before batch assembly, before admission, and per decode step,
+//! with expired sequences evicted mid-generation and their KV caches
+//! released ([`EventKind::Expire`]). Admission control sheds arrivals with
+//! a fast retriable rejection ([`EventKind::Shed`], distinct from
+//! invalid-request rejects) when queue-depth / KV-pressure watermarks are
+//! breached, with hysteresis so the controller cannot flap. Under sustained
+//! backlog the engine downshifts to a cheaper pre-built execution plan
+//! ([`BatchScorer::set_degraded`]) and restores on recovery. Every scorer
+//! call is unwind-isolated, so a panicking model (or a panicked worker-pool
+//! job surfacing as an error) fails only the work in that call, never the
+//! engine thread; [`Server::shutdown`] bounds its drain of active sequences
+//! with a deadline. Fault injection for all of this lives in [`chaos`].
 
+pub mod chaos;
 pub mod metrics;
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender,
                       TryRecvError};
 use std::sync::{Arc, Mutex};
@@ -52,7 +68,21 @@ use crate::obs::trace;
 use crate::obs::{EventKind, EventLog, ReqKind};
 use crate::rng::{sample_top_k, Rng};
 
+pub use chaos::{ChaosScorer, FaultPlan, FaultsFired};
 pub use metrics::Metrics;
+
+/// Error-message prefix for deadline expiries. Clients (and the load
+/// generator's outcome classifier) match on it, so it is part of the API.
+pub const EXPIRED_PREFIX: &str = "deadline exceeded";
+
+/// Error-message prefix for retriable overload rejections: admission
+/// control and shutdown-time shedding. Distinct from invalid-request
+/// rejects — the request was fine, the server was not.
+pub const SHED_PREFIX: &str = "overloaded";
+
+/// How often a fully idle engine wakes from its blocking receive to check
+/// for a shutdown request (clients may still hold live senders).
+const IDLE_POLL: Duration = Duration::from_millis(25);
 
 /// Process-unique request trace IDs (the async-envelope key in trace files).
 static NEXT_RID: AtomicU64 = AtomicU64::new(1);
@@ -109,6 +139,21 @@ pub trait BatchScorer {
     }
     /// Release a sequence's KV cache (finished or failed).
     fn end_decode(&mut self, _seq: SeqId) {}
+
+    /// Whether a cheaper pre-built execution plan is available to downshift
+    /// to under load (e.g. the same checkpoint packed at a lower bit-width).
+    /// The remaining degrade methods are only called when this is `true`.
+    fn supports_degrade(&self) -> bool {
+        false
+    }
+    /// Route subsequent score/prefill/decode work through the degraded plan
+    /// (`true`) or the primary (`false`). Live KV caches must stay valid
+    /// across the switch — active sequences keep decoding.
+    fn set_degraded(&mut self, _on: bool) {}
+    /// Whether the degraded plan is currently active.
+    fn degraded(&self) -> bool {
+        false
+    }
 }
 
 /// One scoring request: a token sequence; the response is the total log-prob
@@ -118,6 +163,9 @@ pub struct ScoreRequest {
     pub ids: Vec<i32>,
     resp: Sender<Result<ScoreResponse, String>>,
     submitted: Instant,
+    /// complete-by instant (explicit via [`Client::with_deadline`]; the
+    /// server's `default_deadline` applies at enforcement time otherwise)
+    deadline: Option<Instant>,
     /// trace ID (async-envelope key; assigned at submission)
     rid: u64,
 }
@@ -142,6 +190,9 @@ pub struct GenerateRequest {
     pub seed: u64,
     resp: Sender<Result<GenerateResponse, String>>,
     submitted: Instant,
+    /// complete-by instant (explicit via [`Client::with_deadline`]; the
+    /// server's `default_deadline` applies at enforcement time otherwise)
+    deadline: Option<Instant>,
     /// trace ID (async-envelope key; assigned at submission)
     rid: u64,
 }
@@ -160,15 +211,56 @@ pub enum Request {
     Generate(GenerateRequest),
 }
 
+/// Hysteresis watermark pair for the overload controllers: arm at `high`,
+/// disarm only once the signal is back at/below `low` (DESIGN.md §13).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Watermarks {
+    /// arm the controller when the signal reaches this value
+    pub high: usize,
+    /// disarm once the signal is back at/below this value
+    pub low: usize,
+}
+
+impl Watermarks {
+    /// `high` is floored at 1 and `low` clamped strictly below it, so the
+    /// controller always has a real hysteresis band and cannot flap.
+    pub fn new(high: usize, low: usize) -> Watermarks {
+        let high = high.max(1);
+        Watermarks { high, low: low.min(high - 1) }
+    }
+}
+
 #[derive(Clone, Copy, Debug)]
 pub struct ServerConfig {
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// deadline applied to requests that carry no explicit one (measured
+    /// from submission); `None` = no implicit deadline
+    pub default_deadline: Option<Duration>,
+    /// admission control on engine-owned waiting work (scores + generates)
+    pub shed_queue: Option<Watermarks>,
+    /// admission control on KV pressure (active + waiting generations,
+    /// each of which holds or will hold a KV cache)
+    pub shed_kv: Option<Watermarks>,
+    /// degrade controller on waiting work: downshift to the scorer's
+    /// cheaper plan at `high`, restore at `low` (needs `supports_degrade`)
+    pub degrade: Option<Watermarks>,
+    /// bound on draining active decode sequences at shutdown; stragglers
+    /// past it are evicted with a deadline expiry
+    pub drain_deadline: Duration,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+        ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            default_deadline: None,
+            shed_queue: None,
+            shed_kv: None,
+            degrade: None,
+            drain_deadline: Duration::from_secs(5),
+        }
     }
 }
 
@@ -178,9 +270,19 @@ impl Default for ServerConfig {
 pub struct Client {
     tx: Sender<Request>,
     events: Arc<EventLog>,
+    deadline: Option<Duration>,
 }
 
 impl Client {
+    /// A clone of this handle whose submissions carry `deadline` (measured
+    /// from submission). The engine expires the request wherever it is once
+    /// the deadline passes — queued, awaiting admission, or mid-decode —
+    /// and answers with an [`EXPIRED_PREFIX`] error.
+    pub fn with_deadline(mut self, deadline: Duration) -> Client {
+        self.deadline = Some(deadline);
+        self
+    }
+
     /// Submit a score request without blocking; the response arrives on the
     /// returned channel (dropping it is safe — the engine ignores send
     /// failures, so a disconnected client never poisons its batch).
@@ -191,11 +293,13 @@ impl Client {
         trace::async_begin("score", rid);
         self.events.record(rid, ReqKind::Score, EventKind::Enqueue,
                            ids.len() as u64);
+        let submitted = Instant::now();
         self.tx
             .send(Request::Score(ScoreRequest {
                 ids,
                 resp: tx,
-                submitted: Instant::now(),
+                submitted,
+                deadline: self.deadline.map(|d| submitted + d),
                 rid,
             }))
             .map_err(|_| {
@@ -228,6 +332,7 @@ impl Client {
         trace::async_begin("generate", rid);
         self.events.record(rid, ReqKind::Generate, EventKind::Enqueue,
                            prompt.len() as u64);
+        let submitted = Instant::now();
         self.tx
             .send(Request::Generate(GenerateRequest {
                 prompt,
@@ -235,7 +340,8 @@ impl Client {
                 top_k,
                 seed,
                 resp: tx,
-                submitted: Instant::now(),
+                submitted,
+                deadline: self.deadline.map(|d| submitted + d),
                 rid,
             }))
             .map_err(|_| {
@@ -261,6 +367,7 @@ impl Client {
 pub struct Server {
     tx: Option<Sender<Request>>,
     handle: Option<JoinHandle<()>>,
+    stopping: Arc<AtomicBool>,
     pub metrics: Arc<Mutex<Metrics>>,
 }
 
@@ -271,9 +378,23 @@ impl Server {
     where
         F: FnOnce() -> Result<Box<dyn BatchScorer>> + Send + 'static,
     {
+        Self::start_with(cfg, None, make_scorer)
+    }
+
+    /// [`Server::start`] with an optional fault-injection plan (the chaos
+    /// harness's entry point): the engine consults `chaos` before dropping
+    /// injected responses; scorer-side faults are injected by wrapping the
+    /// scorer in a [`ChaosScorer`] inside `make_scorer`.
+    pub fn start_with<F>(cfg: ServerConfig, chaos: Option<Arc<FaultPlan>>,
+                         make_scorer: F) -> Result<Server>
+    where
+        F: FnOnce() -> Result<Box<dyn BatchScorer>> + Send + 'static,
+    {
         let (tx, rx) = channel::<Request>();
         let metrics = Arc::new(Mutex::new(Metrics::default()));
         let m2 = metrics.clone();
+        let stopping = Arc::new(AtomicBool::new(false));
+        let stop2 = stopping.clone();
         let (ready_tx, ready_rx) = channel::<Result<(), String>>();
         let handle = std::thread::spawn(move || {
             let mut scorer = match make_scorer() {
@@ -286,13 +407,32 @@ impl Server {
                     return;
                 }
             };
-            engine_loop(&mut *scorer, cfg, rx, m2);
+            // supervision: scorer-call panics are caught (and answered)
+            // inside the loop by `guarded`; this outer isolation covers
+            // panics in engine bookkeeping itself. Requests owned by the
+            // panicking iteration lose their response senders — clients
+            // observe a closed channel — but the server keeps serving.
+            loop {
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    engine_loop(&mut *scorer, cfg, &rx, &m2, &stop2,
+                                chaos.as_ref());
+                }));
+                match r {
+                    Ok(()) => break,
+                    Err(_) => {
+                        lock_metrics(&m2).record_engine_restart();
+                        if stop2.load(Ordering::SeqCst) {
+                            break;
+                        }
+                    }
+                }
+            }
         });
         ready_rx
             .recv()
             .map_err(|_| anyhow!("engine thread died"))?
             .map_err(|e| anyhow!(e))?;
-        Ok(Server { tx: Some(tx), handle: Some(handle), metrics })
+        Ok(Server { tx: Some(tx), handle: Some(handle), stopping, metrics })
     }
 
     /// A submission handle. After [`Server::shutdown`] the handle is wired
@@ -306,7 +446,11 @@ impl Server {
             // submit/submit_generate map onto the error path
             None => channel().0,
         };
-        Client { tx, events: lock_metrics(&self.metrics).events() }
+        Client {
+            tx,
+            events: lock_metrics(&self.metrics).events(),
+            deadline: None,
+        }
     }
 
     /// The server's lifecycle event log (for JSONL export, stuck-sequence
@@ -315,10 +459,14 @@ impl Server {
         lock_metrics(&self.metrics).events()
     }
 
-    /// Stop the engine and join. Active decode sequences are drained first
-    /// (their clients still hold response channels).
+    /// Stop the engine and join, with a bounded drain: queued and active
+    /// work keeps executing for up to `drain_deadline`, after which queued
+    /// requests are shed and active decode sequences evicted with a
+    /// deadline expiry — shutdown completes no matter how long a
+    /// generation's `max_new` is.
     pub fn shutdown(&mut self) {
-        self.tx.take(); // close channel → engine loop exits
+        self.stopping.store(true, Ordering::SeqCst);
+        self.tx.take(); // close our sender half too
         if let Some(h) = self.handle.take() {
             let _ = h.join();
         }
@@ -341,6 +489,8 @@ struct ActiveSeq {
     tokens: Vec<i32>,
     resp: Sender<Result<GenerateResponse, String>>,
     submitted: Instant,
+    /// resolved complete-by instant (explicit or server default)
+    deadline: Option<Instant>,
     rid: u64,
 }
 
@@ -363,8 +513,9 @@ struct ScoreRows {
 }
 
 fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
-               rx: Receiver<Request>, metrics: Arc<Mutex<Metrics>>) {
-    let events = lock_metrics(&metrics).events();
+               rx: &Receiver<Request>, metrics: &Arc<Mutex<Metrics>>,
+               stopping: &AtomicBool, chaos: Option<&Arc<FaultPlan>>) {
+    let events = lock_metrics(metrics).events();
     let bcap = cfg.max_batch.min(scorer.batch_size()).max(1);
     let seq = scorer.seq_len();
     let mut rows = ScoreRows::default();
@@ -372,56 +523,86 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
     let mut gens: VecDeque<GenerateRequest> = VecDeque::new();
     let mut active: Vec<ActiveSeq> = Vec::new();
     let mut open = true;
+    let mut shedding = false;
+    let mut degraded = false;
+    let mut drain_started: Option<Instant> = None;
     loop {
         // ---- intake ----
+        if stopping.load(Ordering::SeqCst) {
+            open = false;
+        }
         if open && scores.is_empty() && gens.is_empty() && active.is_empty()
         {
-            // fully idle: block for the next request
-            match rx.recv() {
-                Ok(r) => sort_request(r, &mut scores, &mut gens),
-                Err(_) => open = false, // all senders dropped
+            // fully idle: block for the next request, waking periodically
+            // so a shutdown request is observed even while clients still
+            // hold live senders
+            match rx.recv_timeout(IDLE_POLL) {
+                Ok(r) => intake(r, &cfg, &mut shedding, &mut scores,
+                                &mut gens, active.len(), metrics, &events),
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => open = false,
+            }
+            if stopping.load(Ordering::SeqCst) {
+                open = false;
             }
         }
-        if open {
-            if active.is_empty() && !(scores.is_empty() && gens.is_empty()) {
-                // batching window: coalesce up to bcap while nothing decodes
-                let deadline = Instant::now() + cfg.max_wait;
-                while scores.len() < bcap && gens.len() < bcap {
-                    let left =
-                        deadline.saturating_duration_since(Instant::now());
-                    match rx.recv_timeout(left) {
-                        Ok(r) => sort_request(r, &mut scores, &mut gens),
-                        Err(RecvTimeoutError::Timeout) => break,
-                        Err(RecvTimeoutError::Disconnected) => {
-                            open = false;
-                            break;
-                        }
-                    }
-                }
-            } else {
-                // decode in flight: take whatever has arrived, don't stall
-                loop {
-                    match rx.try_recv() {
-                        Ok(r) => sort_request(r, &mut scores, &mut gens),
-                        Err(TryRecvError::Empty) => break,
-                        Err(TryRecvError::Disconnected) => {
-                            open = false;
-                            break;
-                        }
+        if open && active.is_empty()
+            && !(scores.is_empty() && gens.is_empty())
+        {
+            // batching window: coalesce up to bcap while nothing decodes
+            let window = Instant::now() + cfg.max_wait;
+            while scores.len() < bcap && gens.len() < bcap {
+                let left = window.saturating_duration_since(Instant::now());
+                match rx.recv_timeout(left) {
+                    Ok(r) => intake(r, &cfg, &mut shedding, &mut scores,
+                                    &mut gens, active.len(), metrics,
+                                    &events),
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        open = false;
+                        break;
                     }
                 }
             }
+        }
+        // drain everything already queued without waiting (even during
+        // shutdown — channel residents must be answered, never stranded):
+        // backlog has to be engine-visible for the admission/degrade
+        // controllers, and a request can only expire once the engine owns
+        // it
+        loop {
+            match rx.try_recv() {
+                Ok(r) => intake(r, &cfg, &mut shedding, &mut scores,
+                                &mut gens, active.len(), metrics, &events),
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => break,
+            }
+        }
+        if !open {
+            // bounded shutdown drain: work keeps executing below until the
+            // drain deadline, after which everything left is flushed
+            drain_on_shutdown(scorer, &cfg, &mut scores, &mut gens,
+                              &mut active, &mut drain_started, metrics,
+                              &events);
         }
         if !open && scores.is_empty() && gens.is_empty() && active.is_empty()
         {
-            lock_metrics(&metrics).set_occupancy(0, 0);
+            let m = lock_metrics(metrics);
+            m.set_occupancy(0, 0);
+            m.set_shedding(false);
             return;
         }
+        // ---- overload controllers (hysteresis; DESIGN.md §13) ----
+        shed_controller(&cfg, &mut shedding, scores.len() + gens.len(),
+                        active.len() + gens.len(), metrics);
+        degrade_controller(scorer, &cfg, &mut degraded,
+                           scores.len() + gens.len(), metrics);
         // ---- one score batch ----
         if !scores.is_empty() {
             let take = scores.len().min(bcap);
             let batch: Vec<ScoreRequest> = scores.drain(..take).collect();
-            run_batch(scorer, seq, batch, &mut rows, &metrics, &events);
+            run_batch(scorer, seq, batch, &mut rows, cfg.default_deadline,
+                      metrics, &events, chaos);
         }
         // ---- admit new generations (validate, prefill, first sample) ----
         // bounded admission: each active sequence pins a KV cache in the
@@ -430,17 +611,174 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
         let max_active = bcap.saturating_mul(4);
         while active.len() < max_active {
             match gens.pop_front() {
-                Some(g) => {
-                    admit(scorer, seq, g, &mut active, &metrics, &events)
-                }
+                Some(g) => admit(scorer, seq, g, cfg.default_deadline,
+                                 &mut active, metrics, &events, chaos),
                 None => break,
             }
         }
         // ---- one decode step across active sequences ----
         if !active.is_empty() {
-            decode_round(scorer, &mut active, bcap, &metrics, &events);
+            decode_round(scorer, &mut active, bcap, metrics, &events, chaos);
         }
-        lock_metrics(&metrics).set_occupancy(active.len(), gens.len());
+        lock_metrics(metrics).set_occupancy(active.len(), gens.len());
+    }
+}
+
+/// Route one arriving request: shed with a fast retriable rejection when
+/// admission control is armed, queue it otherwise. The controller is
+/// re-evaluated per arrival, so a single drained burst sheds its own tail
+/// instead of being admitted wholesale.
+#[allow(clippy::too_many_arguments)]
+fn intake(r: Request, cfg: &ServerConfig, shedding: &mut bool,
+          scores: &mut Vec<ScoreRequest>,
+          gens: &mut VecDeque<GenerateRequest>, active_len: usize,
+          metrics: &Arc<Mutex<Metrics>>, events: &EventLog) {
+    shed_controller(cfg, shedding, scores.len() + gens.len(),
+                    active_len + gens.len(), metrics);
+    if *shedding {
+        shed(r, events);
+    } else {
+        sort_request(r, scores, gens);
+    }
+}
+
+/// Answer one arriving request with the retriable overload rejection and
+/// close its lifecycle with the shed-distinct terminal event.
+fn shed(r: Request, events: &EventLog) {
+    match r {
+        Request::Score(s) => {
+            let _ = s.resp.send(Err(format!("{SHED_PREFIX}: retry later")));
+            trace::async_end("score", s.rid);
+            events.record(s.rid, ReqKind::Score, EventKind::Shed, 0);
+        }
+        Request::Generate(g) => {
+            let _ = g.resp.send(Err(format!("{SHED_PREFIX}: retry later")));
+            trace::async_end("generate", g.rid);
+            events.record(g.rid, ReqKind::Generate, EventKind::Shed, 0);
+        }
+    }
+}
+
+/// Admission-control hysteresis: arm when either watermark's `high` is
+/// breached, disarm only once every configured signal is back at/below its
+/// `low`. `queue_depth` counts engine-owned waiting work; `kv_depth`
+/// counts sequences that hold (active) or will hold (waiting) a KV cache.
+fn shed_controller(cfg: &ServerConfig, shedding: &mut bool,
+                   queue_depth: usize, kv_depth: usize,
+                   metrics: &Arc<Mutex<Metrics>>) {
+    if cfg.shed_queue.is_none() && cfg.shed_kv.is_none() {
+        return;
+    }
+    let want = if *shedding {
+        cfg.shed_queue.is_some_and(|w| queue_depth > w.low)
+            || cfg.shed_kv.is_some_and(|w| kv_depth > w.low)
+    } else {
+        cfg.shed_queue.is_some_and(|w| queue_depth >= w.high)
+            || cfg.shed_kv.is_some_and(|w| kv_depth >= w.high)
+    };
+    if want != *shedding {
+        *shedding = want;
+        lock_metrics(metrics).set_shedding(want);
+    }
+}
+
+/// Degradation hysteresis: downshift the scorer to its cheaper pre-built
+/// plan when the waiting-work signal breaches `high`, restore once it is
+/// back at/below `low`. Transitions flip the `lrq_degraded` gauge, count a
+/// shift, and emit a zero-width trace span so the switch is visible on
+/// timelines.
+fn degrade_controller(scorer: &mut dyn BatchScorer, cfg: &ServerConfig,
+                      degraded: &mut bool, depth: usize,
+                      metrics: &Arc<Mutex<Metrics>>) {
+    let Some(w) = cfg.degrade else { return };
+    if !scorer.supports_degrade() {
+        return;
+    }
+    let want = if *degraded { depth > w.low } else { depth >= w.high };
+    if want != *degraded {
+        *degraded = want;
+        scorer.set_degraded(want);
+        lock_metrics(metrics).set_degraded(want);
+        trace::complete_at(Instant::now(), Duration::ZERO, || {
+            (if want { "degrade_downshift" } else { "degrade_restore" }
+                 .to_string(),
+             None)
+        });
+    }
+}
+
+/// The instant a request must complete by: its explicit per-request
+/// deadline if set, else the server default measured from submission.
+fn deadline_for(submitted: Instant, explicit: Option<Instant>,
+                default: Option<Duration>) -> Option<Instant> {
+    explicit.or_else(|| default.map(|d| submitted + d))
+}
+
+/// Unwind isolation for engine calls: a panic inside the scorer (model
+/// bug, injected fault) becomes an error that fails only the work handed
+/// to this call — the engine thread keeps serving.
+fn guarded<T>(what: &str, f: impl FnOnce() -> Result<T>) -> Result<T> {
+    match catch_unwind(AssertUnwindSafe(f)) {
+        Ok(r) => r,
+        Err(p) => {
+            let msg = p
+                .downcast_ref::<&str>()
+                .map(|s| (*s).to_string())
+                .or_else(|| p.downcast_ref::<String>().cloned())
+                .unwrap_or_else(|| "opaque panic payload".to_string());
+            Err(anyhow!("engine panicked in {what}: {msg}"))
+        }
+    }
+}
+
+/// Evict an admitted sequence whose deadline passed (or that shutdown
+/// could not drain): release its KV cache, answer with the retriable
+/// expiry error, close its lifecycle. Partial work executed, so it still
+/// counts as a completed request, mirroring the scorer-error path.
+fn expire_active(scorer: &mut dyn BatchScorer, a: ActiveSeq, why: &str,
+                 metrics: &Arc<Mutex<Metrics>>, events: &EventLog) {
+    scorer.end_decode(a.sid);
+    lock_metrics(metrics).record(a.submitted.elapsed());
+    let n = a.tokens.len() as u64;
+    let sent = a.resp.send(Err(format!(
+        "{EXPIRED_PREFIX} {why} after {} generated tokens",
+        a.tokens.len())));
+    trace::async_end("generate", a.rid);
+    events.record(a.rid, ReqKind::Generate,
+                  if sent.is_ok() { EventKind::Expire }
+                  else { EventKind::Disconnect },
+                  n);
+}
+
+/// Shutdown drain: within `drain_deadline`, return immediately so queued
+/// and active work keeps executing normally; past it, shed everything
+/// still queued and evict the remaining active sequences — shutdown is
+/// bounded no matter how long a generation's `max_new` is.
+fn drain_on_shutdown(scorer: &mut dyn BatchScorer, cfg: &ServerConfig,
+                     scores: &mut Vec<ScoreRequest>,
+                     gens: &mut VecDeque<GenerateRequest>,
+                     active: &mut Vec<ActiveSeq>,
+                     drain_started: &mut Option<Instant>,
+                     metrics: &Arc<Mutex<Metrics>>, events: &EventLog) {
+    let started = *drain_started.get_or_insert_with(Instant::now);
+    if started.elapsed() < cfg.drain_deadline {
+        return;
+    }
+    for s in scores.drain(..) {
+        let _ = s.resp
+            .send(Err(format!("{SHED_PREFIX}: server shutting down")));
+        trace::async_end("score", s.rid);
+        events.record(s.rid, ReqKind::Score, EventKind::Shed, 0);
+    }
+    for g in gens.drain(..) {
+        let _ = g.resp
+            .send(Err(format!("{SHED_PREFIX}: server shutting down")));
+        trace::async_end("generate", g.rid);
+        events.record(g.rid, ReqKind::Generate, EventKind::Shed, 0);
+    }
+    while let Some(a) = active.pop() {
+        expire_active(scorer, a, "at shutdown (drain deadline)", metrics,
+                      events);
     }
 }
 
@@ -448,13 +786,26 @@ fn engine_loop(scorer: &mut dyn BatchScorer, cfg: ServerConfig,
 /// ([`engine_loop`] admits anything; the length check lives here so tests
 /// can drive it directly) — only valid rows reach the scorer, and
 /// `batch_size` reflects valid rows only.
+#[allow(clippy::too_many_arguments)]
 fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
              batch: Vec<ScoreRequest>, rows: &mut ScoreRows,
-             metrics: &Arc<Mutex<Metrics>>, events: &EventLog) {
+             default_deadline: Option<Duration>,
+             metrics: &Arc<Mutex<Metrics>>, events: &EventLog,
+             chaos: Option<&Arc<FaultPlan>>) {
     // reject invalid requests up front: no batch row, no reported occupancy
+    let now = Instant::now();
     let mut valid: Vec<ScoreRequest> = Vec::with_capacity(batch.len());
     for r in batch {
-        if r.ids.len() < 2 || r.ids.len() > seq {
+        if deadline_for(r.submitted, r.deadline, default_deadline)
+            .is_some_and(|d| now >= d)
+        {
+            // expired in queue: never occupies a batch row, never executes
+            let _ = r.resp.send(Err(format!(
+                "{EXPIRED_PREFIX} in queue after {}us",
+                r.submitted.elapsed().as_micros())));
+            trace::async_end("score", r.rid);
+            events.record(r.rid, ReqKind::Score, EventKind::Expire, 0);
+        } else if r.ids.len() < 2 || r.ids.len() > seq {
             let _ = r.resp.send(Err(format!(
                 "sequence length {} not in [2, {seq}]", r.ids.len())));
             trace::async_end("score", r.rid);
@@ -492,7 +843,7 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
         }
     }
     let t0 = Instant::now();
-    let scored = scorer.score(&rows.ids, &rows.tgt);
+    let scored = guarded("score", || scorer.score(&rows.ids, &rows.tgt));
     let exec_time = t0.elapsed();
     trace::complete_at(t0, exec_time, || {
         ("score_batch".to_string(), Some(format!("{{\"rows\":{n}}}")))
@@ -508,6 +859,15 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
                 lock_metrics(metrics).record(latency);
                 events.record(r.rid, ReqKind::Score, EventKind::Exec,
                               exec_us);
+                if chaos.is_some_and(|p| p.should_drop_response()) {
+                    // injected client-vanish: the answer never leaves the
+                    // engine; the lifecycle still closes terminally
+                    drop(r.resp);
+                    trace::async_end("score", r.rid);
+                    events.record(r.rid, ReqKind::Score,
+                                  EventKind::Disconnect, 0);
+                    continue;
+                }
                 let sent = r.resp.send(Ok(ScoreResponse {
                     logp_sum: sum,
                     latency,
@@ -542,9 +902,21 @@ fn run_batch(scorer: &mut dyn BatchScorer, seq: usize,
 
 /// Validate + prefill one generation request; on success it joins `active`
 /// with its first sampled token (a `max_new == 1` request completes here).
+#[allow(clippy::too_many_arguments)]
 fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
-         active: &mut Vec<ActiveSeq>, metrics: &Arc<Mutex<Metrics>>,
-         events: &EventLog) {
+         default_deadline: Option<Duration>, active: &mut Vec<ActiveSeq>,
+         metrics: &Arc<Mutex<Metrics>>, events: &EventLog,
+         chaos: Option<&Arc<FaultPlan>>) {
+    let deadline = deadline_for(g.submitted, g.deadline, default_deadline);
+    if deadline.is_some_and(|d| Instant::now() >= d) {
+        // expired while waiting for admission: no prefill, no KV cache
+        let _ = g.resp.send(Err(format!(
+            "{EXPIRED_PREFIX} before admission after {}us",
+            g.submitted.elapsed().as_micros())));
+        trace::async_end("generate", g.rid);
+        events.record(g.rid, ReqKind::Generate, EventKind::Expire, 0);
+        return;
+    }
     if g.prompt.is_empty() || g.max_new == 0 {
         let _ = g.resp.send(Err(
             "generate needs a non-empty prompt and max_new >= 1".into()));
@@ -570,7 +942,7 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
     // validated: the request now enters the engine (queue time ends here)
     events.record(g.rid, ReqKind::Generate, EventKind::Admit,
                   g.prompt.len() as u64);
-    match scorer.begin_decode(&g.prompt) {
+    match guarded("prefill", || scorer.begin_decode(&g.prompt)) {
         Err(e) => {
             // engine-error path: the prefill executed (and failed) — the
             // request still counts, like the score-batch error path
@@ -596,10 +968,11 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
                 tokens: vec![first],
                 resp: g.resp,
                 submitted: g.submitted,
+                deadline,
                 rid: g.rid,
             };
             if seq_state.tokens.len() >= seq_state.max_new {
-                finish(scorer, seq_state, metrics, events);
+                finish(scorer, seq_state, metrics, events, chaos);
             } else {
                 active.push(seq_state);
             }
@@ -609,11 +982,21 @@ fn admit(scorer: &mut dyn BatchScorer, seq: usize, g: GenerateRequest,
 
 /// Complete one generation: release its KV cache, record metrics, respond.
 fn finish(scorer: &mut dyn BatchScorer, a: ActiveSeq,
-          metrics: &Arc<Mutex<Metrics>>, events: &EventLog) {
+          metrics: &Arc<Mutex<Metrics>>, events: &EventLog,
+          chaos: Option<&Arc<FaultPlan>>) {
     scorer.end_decode(a.sid);
     let latency = a.submitted.elapsed();
     let n_tokens = a.tokens.len();
     lock_metrics(metrics).record_gen(latency, n_tokens);
+    if chaos.is_some_and(|p| p.should_drop_response()) {
+        // injected client-vanish: the answer never leaves the engine; the
+        // lifecycle still closes terminally
+        drop(a.resp);
+        trace::async_end("generate", a.rid);
+        events.record(a.rid, ReqKind::Generate, EventKind::Disconnect,
+                      n_tokens as u64);
+        return;
+    }
     let sent = a.resp.send(Ok(GenerateResponse {
         tokens: a.tokens,
         latency,
@@ -631,7 +1014,19 @@ fn finish(scorer: &mut dyn BatchScorer, a: ActiveSeq,
 /// sequence gets steps under overload.
 fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
                 bcap: usize, metrics: &Arc<Mutex<Metrics>>,
-                events: &EventLog) {
+                events: &EventLog, chaos: Option<&Arc<FaultPlan>>) {
+    // per-step deadline enforcement: expired sequences are evicted before
+    // the step, so they stop consuming KV memory and decode batch rows
+    let now = Instant::now();
+    let mut idx = 0usize;
+    while idx < active.len() {
+        if active[idx].deadline.is_some_and(|d| now >= d) {
+            let a = active.remove(idx);
+            expire_active(scorer, a, "mid-decode", metrics, events);
+        } else {
+            idx += 1;
+        }
+    }
     // admit() guarantees every active sequence carries >= 1 sampled token;
     // if that invariant ever breaks, fail the sequence onto its event log
     // instead of panicking the batch loop for every in-flight request
@@ -661,7 +1056,7 @@ fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
         .map(|a| (a.sid, a.tokens.last().copied().unwrap_or(0)))
         .collect();
     let t0 = Instant::now();
-    let stepped = scorer.decode_step(&batch);
+    let stepped = guarded("decode_step", || scorer.decode_step(&batch));
     let exec = t0.elapsed();
     trace::complete_at(t0, exec, || {
         ("decode_step".to_string(), Some(format!("{{\"seqs\":{n}}}")))
@@ -683,7 +1078,7 @@ fn decode_round(scorer: &mut dyn BatchScorer, active: &mut Vec<ActiveSeq>,
             let finished = done.len();
             for i in done.into_iter().rev() {
                 let a = active.remove(i);
-                finish(scorer, a, metrics, events);
+                finish(scorer, a, metrics, events, chaos);
             }
             // round-robin fairness across > bcap active sequences: rotate
             // the stepped *survivors* to the back so un-stepped sequences
@@ -742,6 +1137,7 @@ mod tests {
             ServerConfig {
                 max_batch,
                 max_wait: Duration::from_millis(wait_ms),
+                ..Default::default()
             },
             || Ok(Box::new(MockScorer { batch: 8, seq: 16, calls: 0 })),
         )
@@ -853,7 +1249,11 @@ mod tests {
         let rows = Arc::new(Mutex::new(Vec::new()));
         let (c2, r2) = (calls.clone(), rows.clone());
         let s = Server::start(
-            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(50) },
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(50),
+                ..Default::default()
+            },
             move || Ok(Box::new(CountingScorer {
                 seq: 16,
                 calls: c2,
@@ -889,7 +1289,11 @@ mod tests {
         let rows = Arc::new(Mutex::new(Vec::new()));
         let (c2, r2) = (calls.clone(), rows.clone());
         let s = Server::start(
-            ServerConfig { max_batch: 4, max_wait: Duration::from_millis(20) },
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(20),
+                ..Default::default()
+            },
             move || Ok(Box::new(CountingScorer {
                 seq: 16,
                 calls: c2,
@@ -968,6 +1372,8 @@ mod tests {
         next: SeqId,
         caches: HashMap<SeqId, i32>,
         live: Arc<AtomicUsize>,
+        /// artificial per-step latency (drives the deadline/drain tests)
+        step_delay: Duration,
     }
 
     impl GenMock {
@@ -1003,6 +1409,9 @@ mod tests {
         }
         fn decode_step(&mut self, batch: &[(SeqId, i32)])
                        -> Result<Vec<Vec<f32>>> {
+            if !self.step_delay.is_zero() {
+                std::thread::sleep(self.step_delay);
+            }
             batch
                 .iter()
                 .map(|&(sid, tok)| {
@@ -1022,16 +1431,27 @@ mod tests {
         }
     }
 
-    fn start_gen_mock(live: Arc<AtomicUsize>) -> Server {
-        Server::start(
-            ServerConfig { max_batch: 8, max_wait: Duration::from_millis(5) },
-            move || Ok(Box::new(GenMock {
-                next: 0,
-                caches: HashMap::new(),
-                live,
-            })),
-        )
+    fn start_gen_with(live: Arc<AtomicUsize>, cfg: ServerConfig,
+                      step_delay: Duration) -> Server {
+        Server::start(cfg, move || Ok(Box::new(GenMock {
+            next: 0,
+            caches: HashMap::new(),
+            live,
+            step_delay,
+        })))
         .unwrap()
+    }
+
+    fn start_gen_mock(live: Arc<AtomicUsize>) -> Server {
+        start_gen_with(
+            live,
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(5),
+                ..Default::default()
+            },
+            Duration::ZERO,
+        )
     }
 
     #[test]
@@ -1137,5 +1557,383 @@ mod tests {
         assert!(format!("{err}").contains("decode"));
         // score traffic is unaffected
         assert_eq!(c.score(vec![1, 2]).unwrap().logp_sum, -2.0);
+    }
+
+    #[test]
+    fn watermarks_clamp_low_below_high() {
+        let w = Watermarks::new(4, 9);
+        assert_eq!((w.high, w.low), (4, 3));
+        let w = Watermarks::new(0, 0);
+        assert_eq!((w.high, w.low), (1, 0));
+    }
+
+    #[test]
+    fn expired_score_never_executes() {
+        let calls = Arc::new(AtomicUsize::new(0));
+        let rows = Arc::new(Mutex::new(Vec::new()));
+        let (c2, r2) = (calls.clone(), rows.clone());
+        let s = Server::start(
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            move || Ok(Box::new(CountingScorer {
+                seq: 16,
+                calls: c2,
+                rows_seen: r2,
+            })),
+        )
+        .unwrap();
+        let c = s.client().with_deadline(Duration::ZERO);
+        let err = c.score(vec![1, 2, 3]).unwrap_err();
+        assert!(format!("{err}").starts_with(EXPIRED_PREFIX), "{err}");
+        assert_eq!(calls.load(Ordering::SeqCst), 0);
+        let ev = s.events();
+        assert!(ev.stuck().is_empty());
+        let agg = ev.agg();
+        assert_eq!(agg.expired, 1);
+        assert_eq!(agg.rejected, 0);
+        for r in ev.summaries() {
+            assert_eq!(r.outcome, EventKind::Expire);
+            assert_eq!(r.exec_us, 0);
+            assert!(r.queue_us + r.exec_us <= r.total_us,
+                    "rid {}: queue {} + exec {} > total {}",
+                    r.rid, r.queue_us, r.exec_us, r.total_us);
+        }
+    }
+
+    #[test]
+    fn expired_generate_never_admits() {
+        let live = Arc::new(AtomicUsize::new(0));
+        let s = start_gen_mock(live.clone());
+        let c = s.client().with_deadline(Duration::ZERO);
+        let err = c.generate(vec![1], 5, 1, 0).unwrap_err();
+        assert!(format!("{err}").starts_with(EXPIRED_PREFIX), "{err}");
+        // no prefill happened: no KV cache was ever built
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+        assert_eq!(s.events().agg().expired, 1);
+    }
+
+    #[test]
+    fn default_deadline_applies_to_undated_requests() {
+        let s = Server::start(
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                default_deadline: Some(Duration::ZERO),
+                ..Default::default()
+            },
+            || Ok(Box::new(MockScorer { batch: 8, seq: 16, calls: 0 })),
+        )
+        .unwrap();
+        let c = s.client();
+        let err = c.score(vec![1, 2]).unwrap_err();
+        assert!(format!("{err}").starts_with(EXPIRED_PREFIX), "{err}");
+    }
+
+    #[test]
+    fn deadline_evicts_mid_decode() {
+        let live = Arc::new(AtomicUsize::new(0));
+        let s = start_gen_with(
+            live.clone(),
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            Duration::from_millis(10),
+        );
+        let c = s.client().with_deadline(Duration::from_millis(60));
+        // 30 tokens x 10ms/step >> the 60ms deadline: must be evicted
+        let err = c.generate(vec![1], 30, 1, 0).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.starts_with(EXPIRED_PREFIX), "{msg}");
+        assert!(msg.contains("mid-decode"), "{msg}");
+        // the evicted sequence released its KV cache
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+        let ev = s.events();
+        assert!(ev.stuck().is_empty());
+        assert_eq!(ev.agg().expired, 1);
+        // partial work still satisfies the stage-time identity, with TTFT
+        let exp: Vec<_> = ev.summaries().into_iter()
+            .filter(|r| r.outcome == EventKind::Expire).collect();
+        assert_eq!(exp.len(), 1);
+        assert!(exp[0].ttft_us.is_some());
+        assert!(exp[0].queue_us + exp[0].exec_us <= exp[0].total_us);
+    }
+
+    /// A scorer whose score call stalls, so arrivals pile up while one
+    /// batch executes (drives the admission-control tests).
+    struct StallScorer {
+        delay: Duration,
+        started: Arc<AtomicUsize>,
+    }
+
+    impl BatchScorer for StallScorer {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn variable_batch(&self) -> bool {
+            true
+        }
+        fn score(&mut self, _ids: &[i32], targets: &[i32])
+                 -> Result<Vec<f32>> {
+            self.started.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(self.delay);
+            Ok(targets.iter().map(|&t| -(t as f32)).collect())
+        }
+    }
+
+    #[test]
+    fn admission_control_sheds_then_recovers() {
+        let started = Arc::new(AtomicUsize::new(0));
+        let st2 = started.clone();
+        let s = Server::start(
+            ServerConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                shed_queue: Some(Watermarks::new(2, 0)),
+                ..Default::default()
+            },
+            move || Ok(Box::new(StallScorer {
+                delay: Duration::from_millis(60),
+                started: st2,
+            })),
+        )
+        .unwrap();
+        // r1 occupies the engine...
+        let c = s.client();
+        let r1 = c.submit(vec![1, 1]).unwrap();
+        while started.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        // ...then a burst lands while it executes: the first two are
+        // queued (depth 0 and 1 at evaluation), the rest shed with the
+        // retriable overload error
+        let burst: Vec<_> =
+            (0..4).map(|_| c.submit(vec![1, 2]).unwrap()).collect();
+        let mut ok = 0usize;
+        let mut shed = 0usize;
+        for rx in burst {
+            match rx.recv().unwrap() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert!(e.starts_with(SHED_PREFIX), "{e}");
+                    shed += 1;
+                }
+            }
+        }
+        assert!(r1.recv().unwrap().is_ok());
+        assert_eq!((ok, shed), (2, 2));
+        // backlog drained: the controller disarms and serves again
+        assert!(c.score(vec![1, 3]).is_ok());
+        let ev = s.events();
+        assert_eq!(ev.agg().shed, 2);
+        assert!(ev.stuck().is_empty());
+        assert!(!lock_metrics(&s.metrics).is_shedding());
+    }
+
+    #[test]
+    fn kv_pressure_sheds_generates() {
+        let live = Arc::new(AtomicUsize::new(0));
+        let s = start_gen_with(
+            live.clone(),
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(40),
+                shed_kv: Some(Watermarks::new(2, 0)),
+                ..Default::default()
+            },
+            Duration::from_millis(5),
+        );
+        let c = s.client();
+        let rxs: Vec<_> = (0..4)
+            .map(|k| c.submit_generate(vec![k], 8, 1, 0).unwrap())
+            .collect();
+        let mut ok = 0usize;
+        let mut shed = 0usize;
+        for rx in rxs {
+            match rx.recv().unwrap() {
+                Ok(_) => ok += 1,
+                Err(e) => {
+                    assert!(e.starts_with(SHED_PREFIX), "{e}");
+                    shed += 1;
+                }
+            }
+        }
+        assert_eq!((ok, shed), (2, 2));
+        // pressure released: a new generation is admitted again
+        assert!(c.generate(vec![9], 2, 1, 0).is_ok());
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+        assert_eq!(s.events().agg().shed, 2);
+    }
+
+    /// Degrade-capable scorer: score stalls briefly so a burst builds
+    /// backlog; plan switches are recorded for the hysteresis assertions.
+    struct DegradableScorer {
+        delay: Duration,
+        degraded: bool,
+        shifts: Arc<Mutex<Vec<bool>>>,
+        started: Arc<AtomicUsize>,
+    }
+
+    impl BatchScorer for DegradableScorer {
+        fn batch_size(&self) -> usize {
+            1
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn variable_batch(&self) -> bool {
+            true
+        }
+        fn score(&mut self, _ids: &[i32], targets: &[i32])
+                 -> Result<Vec<f32>> {
+            self.started.fetch_add(1, Ordering::SeqCst);
+            std::thread::sleep(self.delay);
+            Ok(targets.iter().map(|&t| -(t as f32)).collect())
+        }
+        fn supports_degrade(&self) -> bool {
+            true
+        }
+        fn set_degraded(&mut self, on: bool) {
+            self.degraded = on;
+            self.shifts.lock().unwrap().push(on);
+        }
+        fn degraded(&self) -> bool {
+            self.degraded
+        }
+    }
+
+    #[test]
+    fn degrade_downshifts_under_backlog_and_restores() {
+        let shifts = Arc::new(Mutex::new(Vec::new()));
+        let started = Arc::new(AtomicUsize::new(0));
+        let (sh2, st2) = (shifts.clone(), started.clone());
+        let s = Server::start(
+            ServerConfig {
+                max_batch: 1,
+                max_wait: Duration::from_millis(1),
+                degrade: Some(Watermarks::new(3, 0)),
+                ..Default::default()
+            },
+            move || Ok(Box::new(DegradableScorer {
+                delay: Duration::from_millis(40),
+                degraded: false,
+                shifts: sh2,
+                started: st2,
+            })),
+        )
+        .unwrap();
+        let c = s.client();
+        let r1 = c.submit(vec![1, 1]).unwrap();
+        while started.load(Ordering::SeqCst) == 0 {
+            std::thread::yield_now();
+        }
+        let burst: Vec<_> =
+            (0..4).map(|_| c.submit(vec![1, 2]).unwrap()).collect();
+        for rx in burst {
+            // nothing is shed: the degrade controller absorbs the burst
+            assert!(rx.recv().unwrap().is_ok());
+        }
+        assert!(r1.recv().unwrap().is_ok());
+        // backlog reached the ceiling -> one downshift; drained ->
+        // restore (lands on the first idle controller pass)
+        let wait_until = Instant::now() + Duration::from_secs(5);
+        loop {
+            let sh = shifts.lock().unwrap().clone();
+            if sh == vec![true, false] {
+                break;
+            }
+            assert!(Instant::now() < wait_until, "shifts {sh:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let m = lock_metrics(&s.metrics);
+        assert_eq!(m.degrade_shifts(), 2);
+        assert!(!m.is_degraded());
+    }
+
+    #[test]
+    fn shutdown_under_load_completes_within_drain_deadline() {
+        let live = Arc::new(AtomicUsize::new(0));
+        let mut s = start_gen_with(
+            live.clone(),
+            ServerConfig {
+                max_batch: 8,
+                max_wait: Duration::from_millis(1),
+                drain_deadline: Duration::from_millis(100),
+                ..Default::default()
+            },
+            Duration::from_millis(10),
+        );
+        let c = s.client();
+        // a long generation: 25 steps x 10ms would hold shutdown ~250ms
+        let rx = c.submit_generate(vec![1], 25, 1, 0).unwrap();
+        std::thread::sleep(Duration::from_millis(30)); // admitted, decoding
+        let t0 = Instant::now();
+        s.shutdown();
+        let took = t0.elapsed();
+        assert!(took < Duration::from_secs(2), "shutdown took {took:?}");
+        // the straggler was evicted with an expiry, not stranded
+        let msg = rx.recv().unwrap().unwrap_err();
+        assert!(msg.starts_with(EXPIRED_PREFIX), "{msg}");
+        assert!(msg.contains("shutdown"), "{msg}");
+        assert_eq!(live.load(Ordering::SeqCst), 0);
+        assert!(s.events().stuck().is_empty());
+    }
+
+    /// Panics on the first score call, then recovers (drives the
+    /// unwind-isolation test).
+    struct PanicOnceScorer {
+        panicked: bool,
+    }
+
+    impl BatchScorer for PanicOnceScorer {
+        fn batch_size(&self) -> usize {
+            4
+        }
+        fn seq_len(&self) -> usize {
+            16
+        }
+        fn variable_batch(&self) -> bool {
+            true
+        }
+        fn score(&mut self, _ids: &[i32], targets: &[i32])
+                 -> Result<Vec<f32>> {
+            if !self.panicked {
+                self.panicked = true;
+                panic!("injected scorer panic");
+            }
+            Ok(targets.iter().map(|&t| -(t as f32)).collect())
+        }
+    }
+
+    #[test]
+    fn scorer_panic_fails_batch_not_server() {
+        let s = Server::start(
+            ServerConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+                ..Default::default()
+            },
+            || Ok(Box::new(PanicOnceScorer { panicked: false })),
+        )
+        .unwrap();
+        let c = s.client();
+        let err = c.score(vec![1, 2]).unwrap_err();
+        assert!(format!("{err}").contains("panicked"), "{err}");
+        // the engine thread survived: the next request serves normally
+        assert_eq!(c.score(vec![1, 5]).unwrap().logp_sum, -5.0);
+        let agg = s.events().agg();
+        assert_eq!(agg.responded, 1);
+        assert_eq!(agg.rejected, 1);
+        // the panic was absorbed by the per-call guard, not the
+        // supervision restart loop
+        assert_eq!(lock_metrics(&s.metrics).engine_restarts(), 0);
+        assert!(s.events().stuck().is_empty());
     }
 }
